@@ -1,0 +1,67 @@
+//! Quickstart: the end-to-end Tier-A driver (DESIGN.md deliverable (b)/(e2e)).
+//!
+//! Loads the real TinyMoE AOT artifacts (built once by `make artifacts`),
+//! serves a batch of requests through the **decomposed serverless path**
+//! (attention → Pallas gate → per-expert serverless function invocations
+//! scaled by Algorithm 1 and placed by Algorithm 2), validates the logits
+//! bit-for-bit-ish against the monolithic compiled model, and reports
+//! throughput + serverless statistics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::time::Instant;
+
+use moeless::config::MoelessParams;
+use moeless::model::{length_mask, monolithic_logits, open_default, DecomposedServer};
+use moeless::util::rng::Pcg;
+
+fn main() {
+    let Some(mut srv) = DecomposedServer::open_default(MoelessParams::default()) else {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    };
+    let d = srv.dims;
+    println!(
+        "TinyMoE over PJRT: {} layers x {} experts (top-{}), batch {}x{} tokens, \
+         expert capacity {}",
+        d.n_layers, d.n_experts, d.top_k, d.batch, d.seq, d.capacity
+    );
+
+    // 1. Validate: decomposed serverless execution == monolithic artifact.
+    let mut rng = Pcg::seeded(7);
+    let tokens: Vec<i32> = (0..d.n_tokens()).map(|_| rng.below(d.vocab) as i32).collect();
+    let lens: Vec<usize> = (0..d.batch).map(|_| rng.range(d.seq / 2, d.seq + 1)).collect();
+    let (deco, stats) = srv.forward(&tokens, &lens).expect("decomposed forward");
+    let (mut store, rt) = open_default().unwrap();
+    let mono = monolithic_logits(&rt, &mut store, &tokens, &length_mask(&lens, d.batch, d.seq))
+        .expect("monolithic forward");
+    let diff = deco.max_abs_diff(&mono);
+    println!(
+        "validation: decomposed vs monolithic max |Δlogit| = {diff:.2e} \
+         ({} expert invocations, {} cold / {} warm starts)",
+        stats.expert_invocations, stats.cold_starts, stats.warm_starts
+    );
+    assert!(diff < 1e-3, "decomposition must be numerically faithful");
+
+    // 2. Serve: auto-regressive generation with serverless experts.
+    let prompts: Vec<Vec<i32>> = (0..d.batch)
+        .map(|_| (0..rng.range(4, d.seq / 2)).map(|_| rng.below(d.vocab) as i32).collect())
+        .collect();
+    let n_new = 8;
+    let t0 = Instant::now();
+    let (seqs, gstats) = srv.generate(&prompts, n_new).expect("generation");
+    let secs = t0.elapsed().as_secs_f64();
+    let produced = seqs.len() * n_new;
+    println!(
+        "served {} requests, {} new tokens in {:.2}s -> {:.1} tok/s \
+         | pred accuracy {:.3} | mispredictions {} | warm fraction {:.3}",
+        seqs.len(),
+        produced,
+        secs,
+        produced as f64 / secs,
+        gstats.pred_accuracy,
+        gstats.mispredictions,
+        srv.manager.warm_fraction()
+    );
+    println!("quickstart OK");
+}

@@ -1,0 +1,46 @@
+//! Sensitivity sweep example: MoEless's two operating knobs — prediction
+//! distance d and CV threshold V — swept on one model/dataset, printing the
+//! Fig. 13/15 trade-off curves (Tier B).
+//!
+//! Run: `cargo run --release --example sensitivity_sweep [-- --model phi-3.5-moe]`
+
+use moeless::baselines::PolicyKind;
+use moeless::config::{DatasetSpec, ModelSpec};
+use moeless::sim::{run, SimConfig};
+use moeless::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let model = ModelSpec::by_name(&args.str("model", "mixtral-8x7b")).expect("unknown model");
+    let dataset = DatasetSpec::by_name(&args.str("dataset", "lmsys")).expect("unknown dataset");
+    let seconds = args.f64("seconds", 60.0);
+
+    let base = |d: usize, v: f64| {
+        let mut cfg = SimConfig::new(model.clone(), dataset.clone(), PolicyKind::Moeless);
+        cfg.duration_s = seconds;
+        cfg.params.prediction_distance = d;
+        cfg.params.cv_threshold = v;
+        run(&cfg)
+    };
+
+    println!("=== prediction distance sweep ({} on {}) ===", model.name, dataset.name);
+    println!("{:>3} {:>12} {:>14} {:>10} {:>8}", "d", "fwd (ms)", "replicas/layer", "accuracy", "cold");
+    for d in 1..=5 {
+        let r = base(d, 0.2);
+        println!(
+            "{d:>3} {:>12.3} {:>14.2} {:>10.3} {:>8}",
+            r.mean_layer_ms(),
+            r.mean_replicas(),
+            r.mean_pred_accuracy(),
+            r.cold_starts
+        );
+    }
+
+    println!("\n=== CV threshold sweep ===");
+    println!("{:>4} {:>12} {:>14}", "V", "fwd (ms)", "replicas/layer");
+    for v10 in [2, 4, 6, 8, 10] {
+        let r = base(1, v10 as f64 / 10.0);
+        println!("{:>4.1} {:>12.3} {:>14.2}", v10 as f64 / 10.0, r.mean_layer_ms(), r.mean_replicas());
+    }
+    println!("\noperating point: d=1, V=0.2 (the paper's §6.4 choice)");
+}

@@ -1,0 +1,44 @@
+//! Trace replay example: serve the paper's three MoE models on an
+//! Azure-style trace with all four policies and print the Fig. 8/10-style
+//! comparison (Tier B).
+//!
+//! Run: `cargo run --release --example serve_trace [-- --seconds 120 --rps 8]`
+
+use moeless::config::{DatasetSpec, ModelSpec};
+use moeless::metrics::reduction_pct;
+use moeless::sim::run_paper_set;
+use moeless::util::benchkit::series_summary;
+use moeless::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let seconds = args.f64("seconds", 90.0);
+    let seed = args.u64("seed", 42);
+
+    for model in ModelSpec::paper_models() {
+        let dataset = DatasetSpec::lmsys();
+        println!("\n=== {} on {} ({seconds:.0}s trace) ===", model.name, dataset.name);
+        let reports = run_paper_set(&model, &dataset, seconds, seed);
+        for r in &reports {
+            series_summary(&model.name, &r.policy, &r.layer_cdf());
+            println!(
+                "   cost {:8.1} GB·s | replicas/layer {:5.1} | completed {:4} reqs \
+                 | warm {:.3}",
+                r.cost_gb_s,
+                r.mean_replicas(),
+                r.completed_requests,
+                r.warm_fraction
+            );
+        }
+        let (meg, orc, eplb, less) = (&reports[0], &reports[1], &reports[2], &reports[3]);
+        println!(
+            "   moeless: latency -{:.1}% vs megatron, -{:.1}% vs eplb; \
+             cost -{:.1}% vs megatron, -{:.1}% vs oracle, -{:.1}% vs eplb",
+            reduction_pct(meg.mean_layer_ms(), less.mean_layer_ms()),
+            reduction_pct(eplb.mean_layer_ms(), less.mean_layer_ms()),
+            reduction_pct(meg.cost_gb_s, less.cost_gb_s),
+            reduction_pct(orc.cost_gb_s, less.cost_gb_s),
+            reduction_pct(eplb.cost_gb_s, less.cost_gb_s),
+        );
+    }
+}

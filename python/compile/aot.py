@@ -1,0 +1,176 @@
+"""AOT pipeline: lower TinyMoE (monolithic + decomposed) to HLO text.
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted into ``artifacts/``:
+
+  tiny_model.hlo.txt    monolithic forward (ground truth for e2e validation)
+  tiny_embed.hlo.txt    tokens -> residual stream
+  tiny_attn.hlo.txt     per-layer attention block -> (h, moe_in)  [shared by
+                        all layers: identical shapes, per-layer weights fed
+                        positionally by the coordinator]
+  tiny_gate.hlo.txt     moe_in -> sparse routing weights (Pallas top-k gate);
+                        doubles as the *predictor* artifact — the speculative
+                        predictor is the same network with fine-tuned weights
+  tiny_expert.hlo.txt   one serverless expert function: [capacity, D] tile
+                        through the Pallas SwiGLU FFN
+  tiny_head.hlo.txt     residual stream -> logits
+  weights.bin           model tensors (manifest-ordered raw f32/i32)
+  manifest.json         config + tensor table + artifact ABI
+
+Run once via ``make artifacts``; Python never runs on the request path.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .iobin import BinWriter, write_json
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_artifacts(cfg: M.TinyMoEConfig):
+    """Lower every component; returns {artifact_name: (hlo_text, abi)}."""
+    b, t, d = cfg.batch, cfg.seq, cfg.d_model
+    n, e, f, v, c = cfg.n_tokens, cfg.n_experts, cfg.d_ff, cfg.vocab, cfg.capacity
+    arts = {}
+
+    def lower(name, fn, runtime_inputs, weight_params, per="model", outputs=1):
+        """runtime_inputs: [(name, shape, dtype)]; weight_params: [(name, shape)]."""
+        in_specs = [_spec(s, dt) for (_, s, dt) in runtime_inputs]
+        w_specs = [_spec(s) for (_, s) in weight_params]
+        lowered = jax.jit(fn).lower(*in_specs, *w_specs)
+        arts[name] = (
+            to_hlo_text(lowered),
+            {
+                "file": f"{name}.hlo.txt",
+                "runtime_inputs": [
+                    {"name": nm, "shape": list(s), "dtype": "i32" if dt == jnp.int32 else "f32"}
+                    for (nm, s, dt) in runtime_inputs
+                ],
+                "weight_params": [
+                    {"name": nm, "shape": list(s)} for (nm, s) in weight_params
+                ],
+                # "model": weights are the named global tensors;
+                # "layer": names are suffixes resolved as layer{l}.<name>;
+                # "expert": names resolved as layer{l}.<name> sliced at [e].
+                "weight_scope": per,
+                "outputs": outputs,
+            },
+        )
+
+    # Monolithic: runtime inputs + every tensor in param_specs order.
+    specs = cfg.param_specs()
+
+    def mono(tokens, len_mask, *flat):
+        params = {nm: w for (nm, _), w in zip(specs, flat)}
+        return M.forward(cfg, params, tokens, len_mask)
+
+    lower(
+        "tiny_model", mono,
+        [("tokens", (b, t), jnp.int32), ("len_mask", (b, t), jnp.float32)],
+        [(nm, sh) for nm, sh in specs],
+    )
+
+    lower(
+        "tiny_embed",
+        lambda tokens, wemb, wpos: M.embed_fn(cfg, tokens, wemb, wpos),
+        [("tokens", (b, t), jnp.int32)],
+        [("wemb", (v, d)), ("wpos", (t, d))],
+    )
+
+    lower(
+        "tiny_attn",
+        lambda x, m, *w: M.attn_fn(cfg, x, m, *w),
+        [("x", (b, t, d), jnp.float32), ("len_mask", (b, t), jnp.float32)],
+        [("ln1.g", (d,)), ("ln1.b", (d,)), ("wq", (d, d)), ("wk", (d, d)),
+         ("wv", (d, d)), ("wo", (d, d)), ("ln2.g", (d,)), ("ln2.b", (d,))],
+        per="layer",
+        outputs=2,
+    )
+
+    lower(
+        "tiny_gate",
+        lambda moe_in, wg: M.gate_fn(cfg, moe_in, wg),
+        [("moe_in", (n, d), jnp.float32)],
+        [("wg", (d, e))],
+        per="layer",
+    )
+
+    lower(
+        "tiny_expert",
+        lambda xc_, w1, w2, w3: M.expert_fn(cfg, xc_, w1, w2, w3),
+        [("xc", (c, d), jnp.float32)],
+        [("w1", (d, f)), ("w2", (f, d)), ("w3", (d, f))],
+        per="expert",
+    )
+
+    lower(
+        "tiny_head",
+        lambda h, g_, b_, wh: M.head_fn(cfg, h, g_, b_, wh),
+        [("h", (b, t, d), jnp.float32)],
+        [("lnf.g", (d,)), ("lnf.b", (d,)), ("whead", (d, v))],
+    )
+
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = M.TinyMoEConfig()
+    params = M.init_params(cfg, seed=args.seed)
+
+    arts = lower_artifacts(cfg)
+    for name, (text, _) in arts.items():
+        path = f"{args.out}/{name}.hlo.txt"
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    w = BinWriter("weights.bin")
+    for name, _ in cfg.param_specs():
+        w.add(name, params[name])
+    w.write(args.out)
+
+    manifest = {
+        "model": {
+            "name": "tiny-moe",
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "n_layers": cfg.n_layers, "n_experts": cfg.n_experts,
+            "top_k": cfg.top_k, "batch": cfg.batch, "seq": cfg.seq,
+            "capacity": cfg.capacity, "seed": args.seed,
+        },
+        "tensors": w.table,
+        "artifacts": {name: abi for name, (_, abi) in arts.items()},
+    }
+    write_json(args.out, "manifest.json", manifest)
+    print(f"wrote {args.out}/weights.bin ({w.offset} bytes), manifest.json")
+
+
+if __name__ == "__main__":
+    main()

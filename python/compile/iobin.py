@@ -1,0 +1,58 @@
+"""Artifact binary I/O shared by aot.py and finetune.py.
+
+Weights interchange format (consumed by ``rust/src/tensor/store.rs``):
+
+* ``<name>.bin``      — concatenated little-endian raw tensor data.
+* ``manifest.json``   — model config, tensor table (name -> dtype, shape,
+                        byte offset, nbytes, which .bin file), and the
+                        artifact table (name -> HLO file, runtime inputs,
+                        ordered weight parameters).
+
+A bespoke format (rather than .npz) keeps the Rust loader dependency-free:
+offsets + raw f32/i32 bytes, nothing else.
+"""
+
+import json
+
+import numpy as np
+
+
+class BinWriter:
+    """Appends tensors to a raw .bin blob and records their table entries."""
+
+    def __init__(self, bin_name: str):
+        self.bin_name = bin_name
+        self.chunks = []
+        self.table = {}
+        self.offset = 0
+
+    def add(self, name: str, arr) -> None:
+        arr = np.asarray(arr)
+        if arr.dtype == np.float64:
+            arr = arr.astype(np.float32)
+        assert arr.dtype in (np.float32, np.int32), f"{name}: {arr.dtype}"
+        data = np.ascontiguousarray(arr).tobytes()
+        self.table[name] = {
+            "dtype": "f32" if arr.dtype == np.float32 else "i32",
+            "shape": list(arr.shape),
+            "offset": self.offset,
+            "nbytes": len(data),
+            "bin": self.bin_name,
+        }
+        self.chunks.append(data)
+        self.offset += len(data)
+
+    def write(self, out_dir: str) -> None:
+        with open(f"{out_dir}/{self.bin_name}", "wb") as f:
+            for c in self.chunks:
+                f.write(c)
+
+
+def write_json(out_dir: str, name: str, obj) -> None:
+    with open(f"{out_dir}/{name}", "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+
+
+def read_json(path: str):
+    with open(path) as f:
+        return json.load(f)

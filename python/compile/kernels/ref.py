@@ -1,0 +1,56 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact pure-jnp twin here; pytest
+asserts allclose between the two across shape/dtype sweeps (hypothesis) and
+the fixed TinyMoE shapes that the AOT pipeline lowers.
+"""
+
+import jax.numpy as jnp
+
+
+def silu(x):
+    """SiLU / swish activation: x * sigmoid(x)."""
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def expert_ffn_ref(x, w1, w2, w3):
+    """SwiGLU expert FFN: (silu(x @ w1) * (x @ w3)) @ w2.
+
+    Args:
+      x:  [C, D] tokens routed to this expert (rows of zeros are inert).
+      w1: [D, F] gate projection.
+      w2: [F, D] down projection.
+      w3: [D, F] up projection.
+    Returns:
+      [C, D] expert output.
+    """
+    h = silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def topk_gate_ref(x, wg, k):
+    """Fused gate: softmax(x @ wg), keep top-k per row, renormalize.
+
+    Ties are broken deterministically toward the lower expert index by
+    subtracting ``index * 1e-7`` from the probabilities before thresholding
+    (the Pallas kernel uses the identical tie-break, so the two are exactly
+    comparable).
+
+    Args:
+      x:  [N, D] flattened token hidden states (post pre-MoE layernorm).
+      wg: [D, E] gate projection.
+      k:  number of experts to keep per token.
+    Returns:
+      [N, E] routing weight matrix; exactly k nonzeros per row, each row
+      sums to 1.
+    """
+    logits = x @ wg
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    exp = jnp.exp(logits)
+    probs = exp / jnp.sum(exp, axis=-1, keepdims=True)
+    e = probs.shape[-1]
+    tb = probs - jnp.arange(e, dtype=probs.dtype) * jnp.asarray(1e-7, probs.dtype)
+    kth = jnp.sort(tb, axis=-1)[..., e - k][..., None]
+    mask = (tb >= kth).astype(probs.dtype)
+    w = probs * mask
+    return w / jnp.sum(w, axis=-1, keepdims=True)

@@ -1,0 +1,71 @@
+"""Pallas kernel: fused gate projection + softmax + top-k + renormalize (L1).
+
+The gate is the routing hot-spot of every MoE layer: for each token it
+produces the sparse expert weight row the coordinator routes on. Fusing the
+[N,D]x[D,E] projection, the row softmax, the top-k mask, and the
+renormalization into one kernel keeps the [block_n, E] logits tile in VMEM
+end-to-end — the paper's all-to-all dispatch then consumes only the final
+sparse weight matrix.
+
+Deterministic tie-break (lower expert index wins) makes the kernel exactly
+comparable to ``ref.topk_gate_ref`` and to the Rust coordinator's routing
+view of the output. ``interpret=True`` per the CPU-PJRT constraint.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_kernel(x_ref, wg_ref, o_ref, *, k):
+    x = x_ref[...]
+    logits = x @ wg_ref[...]
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    exp = jnp.exp(logits)
+    probs = exp / jnp.sum(exp, axis=-1, keepdims=True)
+    e = probs.shape[-1]
+    # Tie-break toward the lower expert index, then threshold on the k-th
+    # largest tie-broken probability per row.
+    tb = probs - jnp.arange(e, dtype=probs.dtype) * jnp.asarray(1e-7, probs.dtype)
+    kth = jnp.sort(tb, axis=-1)[..., e - k][..., None]
+    mask = (tb >= kth).astype(probs.dtype)
+    w = probs * mask
+    o_ref[...] = w / jnp.sum(w, axis=-1, keepdims=True)
+
+
+def _pick_block(n):
+    b = 1
+    while b < 128 and n % (b * 2) == 0:
+        b *= 2
+    return min(b, n)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n"))
+def topk_gate(x, wg, k, block_n=None):
+    """Routing weights for a flattened token batch via a Pallas kernel.
+
+    Args:
+      x:  [N, D] token hidden states (post pre-MoE layernorm).
+      wg: [D, E] gate projection.
+      k:  experts kept per token (static).
+      block_n: token-tile height; must divide N. Default: auto.
+    Returns:
+      [N, E] routing weights; exactly k nonzeros per row summing to 1.
+    """
+    n, d = x.shape
+    e = wg.shape[1]
+    bn = block_n or _pick_block(n)
+    assert n % bn == 0, f"block_n={bn} must divide N={n}"
+    return pl.pallas_call(
+        functools.partial(_gate_kernel, k=k),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, e), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, e), x.dtype),
+        interpret=True,
+    )(x, wg)

@@ -1,0 +1,228 @@
+"""L2: TinyMoE — a real decoder-only MoE transformer in JAX (build-time only).
+
+Two forward formulations over the *same* parameters:
+
+* ``forward``      — monolithic: the whole model as one jit-able function
+                     (lowered to ``tiny_model.hlo.txt``; the Rust runtime uses
+                     it as the numerical ground truth for decomposed serving).
+* component fns    — ``embed_fn`` / ``attn_fn`` / ``gate_fn`` / ``expert_fn``
+                     / ``head_fn``: the decomposition the Rust coordinator
+                     serves. Each expert FFN is its *own* artifact invocation
+                     = one serverless expert function instance (DESIGN.md
+                     key decision 1). The residual combine
+                     ``out = h + sum_e w[:,e] * y_e`` is pure data movement
+                     and is performed by the coordinator in f32, in the same
+                     expert order as the monolithic loop, so the two paths
+                     agree to float tolerance.
+
+Both paths route through the L1 Pallas kernels (``kernels.moe_ffn``,
+``kernels.topk_gate``), so the kernels lower into every emitted HLO artifact.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.moe_ffn import expert_ffn
+from .kernels.topk_gate import topk_gate
+
+
+@dataclass(frozen=True)
+class TinyMoEConfig:
+    """TinyMoE architecture hyperparameters (fixed AOT shapes)."""
+
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 256
+    n_layers: int = 4
+    n_experts: int = 8
+    top_k: int = 2
+    batch: int = 4
+    seq: int = 32
+    # Per-instance token capacity of one serverless expert function. The
+    # coordinator spawns ceil(load / capacity) instances per expert — the
+    # static-shape analogue of GShard capacity factors (DESIGN.md
+    # §Hardware-Adaptation).
+    capacity: int = 64
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_tokens(self) -> int:
+        """Flattened token-batch size routed per MoE layer."""
+        return self.batch * self.seq
+
+    def param_specs(self):
+        """Ordered (name, shape) for every model tensor.
+
+        This order *is* the artifact parameter ABI: the Rust runtime feeds
+        weights positionally from the manifest, so it must never be
+        reordered silently (the manifest records it explicitly).
+        """
+        d, f, e, v = self.d_model, self.d_ff, self.n_experts, self.vocab
+        specs = [("wemb", (v, d)), ("wpos", (self.seq, d))]
+        for l in range(self.n_layers):
+            p = f"layer{l}."
+            specs += [
+                (p + "ln1.g", (d,)),
+                (p + "ln1.b", (d,)),
+                (p + "wq", (d, d)),
+                (p + "wk", (d, d)),
+                (p + "wv", (d, d)),
+                (p + "wo", (d, d)),
+                (p + "ln2.g", (d,)),
+                (p + "ln2.b", (d,)),
+                (p + "wg", (d, e)),
+                (p + "w1", (e, d, f)),
+                (p + "w2", (e, f, d)),
+                (p + "w3", (e, d, f)),
+            ]
+        specs += [("lnf.g", (d,)), ("lnf.b", (d,)), ("whead", (d, v))]
+        return specs
+
+
+def init_params(cfg: TinyMoEConfig, seed: int = 0):
+    """Deterministic scaled-gaussian init; returns {name: array} (f32)."""
+    params = {}
+    key = jax.random.PRNGKey(seed)
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * scale
+    return params
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+# ---------------------------------------------------------------------------
+# Decomposed component functions — one HLO artifact each.
+# ---------------------------------------------------------------------------
+
+
+def embed_fn(cfg, tokens, wemb, wpos):
+    """[B,T] i32 -> [B,T,D]: token embedding + learned positions."""
+    x = jnp.take(wemb, tokens, axis=0)
+    return x + wpos[None, :, :]
+
+
+def attn_fn(cfg, x, len_mask, ln1g, ln1b, wq, wk, wv, wo, ln2g, ln2b):
+    """Pre-LN causal multi-head attention block.
+
+    Args:
+      x:        [B,T,D] block input.
+      len_mask: [B,T] f32, 1.0 for valid tokens.
+    Returns:
+      (h, moe_in): h = x + attn(ln1(x)) is the residual stream [B,T,D];
+      moe_in = ln2(h) flattened to [B*T, D] is the MoE-layer input the gate
+      and the serverless experts consume.
+    """
+    b, t, d = x.shape
+    nh, dh = cfg.n_heads, cfg.d_head
+    xn = layer_norm(x, ln1g, ln1b)
+    q = (xn @ wq).reshape(b, t, nh, dh).transpose(0, 2, 1, 3)
+    k = (xn @ wk).reshape(b, t, nh, dh).transpose(0, 2, 1, 3)
+    v = (xn @ wv).reshape(b, t, nh, dh).transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    causal = jnp.tril(jnp.ones((t, t), x.dtype))
+    mask = causal[None, None, :, :] * len_mask[:, None, None, :]
+    scores = jnp.where(mask > 0, scores, jnp.asarray(-1e9, x.dtype))
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = (attn @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    h = x + ctx @ wo
+    moe_in = layer_norm(h, ln2g, ln2b).reshape(b * t, d)
+    return h, moe_in
+
+
+def gate_fn(cfg, moe_in, wg):
+    """[N,D] -> [N,E] sparse routing weights via the fused Pallas gate."""
+    return topk_gate(moe_in, wg, cfg.top_k)
+
+
+def expert_fn(cfg, xc, w1, w2, w3):
+    """One serverless expert invocation: [C,D] tile via the Pallas FFN."""
+    return expert_ffn(xc, w1, w2, w3)
+
+
+def head_fn(cfg, h, lnfg, lnfb, whead):
+    """[B,T,D] -> [B,T,V] logits (final LN + LM head)."""
+    return layer_norm(h, lnfg, lnfb) @ whead
+
+
+# ---------------------------------------------------------------------------
+# Monolithic forward (ground truth) + intermediates for predictor training.
+# ---------------------------------------------------------------------------
+
+
+def _moe_layer(cfg, moe_in, weights, w1, w2, w3):
+    """Dense-but-exact MoE combine: sum_e w[:,e] * ffn_e(moe_in).
+
+    Non-top-k weights are exactly zero, so computing every expert over every
+    token is numerically identical to the routed/decomposed execution
+    (matmuls are row-independent); the accumulation order over experts
+    matches the Rust coordinator's combine loop.
+    """
+    out = jnp.zeros_like(moe_in)
+    for e in range(cfg.n_experts):
+        y = expert_ffn(moe_in, w1[e], w2[e], w3[e])
+        out = out + weights[:, e : e + 1] * y
+    return out
+
+
+def forward(cfg, params, tokens, len_mask):
+    """Monolithic TinyMoE forward: [B,T] i32, [B,T] f32 -> [B,T,V] logits."""
+    x = embed_fn(cfg, tokens, params["wemb"], params["wpos"])
+    b, t, d = x.shape
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        h, moe_in = attn_fn(
+            cfg, x, len_mask,
+            params[p + "ln1.g"], params[p + "ln1.b"],
+            params[p + "wq"], params[p + "wk"], params[p + "wv"], params[p + "wo"],
+            params[p + "ln2.g"], params[p + "ln2.b"],
+        )
+        weights = gate_fn(cfg, moe_in, params[p + "wg"])
+        moe_out = _moe_layer(cfg, moe_in, weights,
+                             params[p + "w1"], params[p + "w2"], params[p + "w3"])
+        x = h + moe_out.reshape(b, t, d)
+    return head_fn(cfg, x, params["lnf.g"], params["lnf.b"], params["whead"])
+
+
+def forward_with_intermediates(cfg, params, tokens, len_mask):
+    """Forward that also returns per-layer (moe_in, routing weights).
+
+    Used by ``finetune.py`` to build the predictor dataset: the speculative
+    predictor maps layer-l hidden states to layer-(l+d) routing.
+    """
+    x = embed_fn(cfg, tokens, params["wemb"], params["wpos"])
+    b, t, d = x.shape
+    moe_ins, routes = [], []
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        h, moe_in = attn_fn(
+            cfg, x, len_mask,
+            params[p + "ln1.g"], params[p + "ln1.b"],
+            params[p + "wq"], params[p + "wk"], params[p + "wv"], params[p + "wo"],
+            params[p + "ln2.g"], params[p + "ln2.b"],
+        )
+        weights = gate_fn(cfg, moe_in, params[p + "wg"])
+        moe_ins.append(moe_in)
+        routes.append(weights)
+        moe_out = _moe_layer(cfg, moe_in, weights,
+                             params[p + "w1"], params[p + "w2"], params[p + "w3"])
+        x = h + moe_out.reshape(b, t, d)
+    logits = head_fn(cfg, x, params["lnf.g"], params["lnf.b"], params["whead"])
+    return logits, moe_ins, routes

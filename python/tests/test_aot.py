@@ -1,0 +1,129 @@
+"""AOT pipeline: emitted HLO artifacts, manifest ABI, weight binary layout."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import lower_artifacts, to_hlo_text
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+CFG = M.TinyMoEConfig()
+
+EXPECTED = ["tiny_model", "tiny_embed", "tiny_attn", "tiny_gate",
+            "tiny_expert", "tiny_head"]
+
+
+def _have_artifacts():
+    return os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+def test_lowering_emits_hlo_text():
+    """Lower a small component fresh; the output must be parseable HLO text
+    (``HloModule`` header), not a serialized proto."""
+    arts = {}
+    import jax
+
+    lowered = jax.jit(lambda x, wg: M.gate_fn(CFG, x, wg)).lower(
+        jax.ShapeDtypeStruct((CFG.n_tokens, CFG.d_model), np.float32),
+        jax.ShapeDtypeStruct((CFG.d_model, CFG.n_experts), np.float32),
+    )
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+
+
+@pytest.mark.skipif(not _have_artifacts(), reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_artifacts_present(self, manifest):
+        for name in EXPECTED:
+            assert name in manifest["artifacts"]
+            path = os.path.join(ART, manifest["artifacts"][name]["file"])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), name
+
+    def test_tensor_table_matches_bin(self, manifest):
+        size = os.path.getsize(os.path.join(ART, "weights.bin"))
+        end = 0
+        for name, t in manifest["tensors"].items():
+            n = int(np.prod(t["shape"])) if t["shape"] else 1
+            assert t["nbytes"] == n * 4, name
+            end = max(end, t["offset"] + t["nbytes"])
+        assert end == size
+
+    def test_manifest_param_order_is_spec_order(self, manifest):
+        spec_names = [n for n, _ in CFG.param_specs()]
+        mono = manifest["artifacts"]["tiny_model"]["weight_params"]
+        assert [p["name"] for p in mono] == spec_names
+
+    def test_weights_roundtrip(self, manifest):
+        """weights.bin re-read at manifest offsets == init_params output."""
+        params = M.init_params(CFG, seed=manifest["model"]["seed"])
+        blob = open(os.path.join(ART, "weights.bin"), "rb").read()
+        for name in ["wemb", "layer0.wg", "layer3.w2", "whead"]:
+            t = manifest["tensors"][name]
+            arr = np.frombuffer(
+                blob[t["offset"] : t["offset"] + t["nbytes"]], np.float32
+            ).reshape(t["shape"])
+            np.testing.assert_array_equal(arr, np.asarray(params[name]))
+
+    def test_expert_abi_shapes(self, manifest):
+        abi = manifest["artifacts"]["tiny_expert"]
+        assert abi["weight_scope"] == "expert"
+        ri = abi["runtime_inputs"][0]
+        assert ri["shape"] == [CFG.capacity, CFG.d_model]
+
+    def test_gate_and_predictor_share_abi(self, manifest):
+        """The predictor is a gate replica: same artifact, different weights."""
+        abi = manifest["artifacts"]["tiny_gate"]
+        assert abi["weight_scope"] == "layer"
+        assert abi["weight_params"][0]["shape"] == [CFG.d_model, CFG.n_experts]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "predictor_profile.json")),
+    reason="run `make artifacts` first",
+)
+class TestPredictorArtifacts:
+    @pytest.fixture(scope="class")
+    def profile(self):
+        with open(os.path.join(ART, "predictor_profile.json")) as f:
+            return json.load(f)
+
+    def test_profile_covers_all_layer_distance_pairs(self, profile):
+        pairs = {(e["layer"], e["distance"]) for e in profile["entries"]}
+        want = {(l, d) for l in range(CFG.n_layers)
+                for d in range(1, CFG.n_layers - l)}
+        assert pairs == want
+
+    def test_finetune_never_hurts(self, profile):
+        for e in profile["entries"]:
+            assert e["acc_finetuned"] >= e["acc_pretrained"] - 0.02, e
+
+    def test_layer_awareness(self, profile):
+        h = profile["threshold"]
+        for e in profile["entries"]:
+            assert e["finetuned"] == (e["acc_pretrained"] < h)
+
+    def test_predictor_tensors_exist(self, profile):
+        size = os.path.getsize(os.path.join(ART, "predictors.bin"))
+        for name, t in profile["tensors"].items():
+            assert name.startswith("pred.l")
+            assert t["shape"] == [CFG.d_model, CFG.n_experts]
+            assert t["offset"] + t["nbytes"] <= size
+
+    def test_footprint_ratio(self, profile):
+        """Ours == Mixtral-offloading footprint; ProMoE substantially larger
+        (Table 2's shape)."""
+        f = profile["footprints_bytes"]
+        assert f["ours_per_predictor"] == f["mixtral_offloading_per_predictor"]
+        assert f["promoe_per_predictor"] > 5 * f["ours_per_predictor"]

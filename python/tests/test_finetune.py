@@ -1,0 +1,67 @@
+"""Unit tests for the predictor fine-tuning pipeline (metrics + training)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import finetune as F
+from compile import model as M
+
+
+def test_topk_sets():
+    w = np.array([[0.1, 0.7, 0.0, 0.2], [0.9, 0.0, 0.05, 0.05]])
+    np.testing.assert_array_equal(F.topk_sets(w, 2), [[1, 3], [0, 2]])
+
+
+def test_topk_overlap_acc_bounds():
+    w = np.random.default_rng(0).random((64, 8))
+    assert F.topk_overlap_acc(w, w, 2) == 1.0
+    disjoint_pred = np.zeros((4, 8))
+    disjoint_pred[:, :2] = 1.0
+    disjoint_act = np.zeros((4, 8))
+    disjoint_act[:, 6:] = 1.0
+    assert F.topk_overlap_acc(disjoint_pred, disjoint_act, 2) == 0.0
+
+
+def test_load_pearson_perfect():
+    rng = np.random.default_rng(1)
+    w = rng.random((256, 8))
+    r, pts = F.load_pearson(w, w, 2, group=128)
+    assert r > 0.999
+    assert len(pts) == 16
+    # Each group's loads sum to group * k.
+    for s in range(0, 16, 8):
+        assert sum(a for _, a in pts[s : s + 8]) == 128 * 2
+
+
+def test_mean_cosine():
+    a = np.array([[1.0, 0.0], [0.0, 2.0]])
+    assert abs(F.mean_cosine(a, a) - 1.0) < 1e-6
+    b = np.array([[0.0, 1.0], [2.0, 0.0]])
+    assert abs(F.mean_cosine(a, b)) < 1e-6
+
+
+def test_adam_reduces_kl():
+    """Fine-tuning a gate replica on synthetic data reduces the KL loss."""
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (512, 16))
+    wg_true = jax.random.normal(k2, (16, 8)) * 0.5
+    target = jax.nn.softmax(x @ wg_true, axis=-1)
+    wg0 = jax.random.normal(k3, (16, 8)) * 0.5
+    before = float(F.kl_to_actual(wg0, x, target))
+    wg = F.adam_train(F.kl_to_actual, wg0, (x, target), steps=150, lr=5e-3,
+                      batch=128, seed=0)
+    after = float(F.kl_to_actual(wg, x, target))
+    assert after < before * 0.7
+
+
+def test_collect_dataset_shapes():
+    cfg = M.TinyMoEConfig(n_layers=2)
+    params = M.init_params(cfg, seed=0)
+    moe_ins, routes = F.collect_dataset(cfg, params, n_batches=2, seed=1)
+    n = 2 * cfg.n_tokens
+    assert len(moe_ins) == 2 and len(routes) == 2
+    assert moe_ins[0].shape == (n, cfg.d_model)
+    assert routes[0].shape == (n, cfg.n_experts)
+    assert ((routes[0] > 0).sum(axis=1) == cfg.top_k).all()

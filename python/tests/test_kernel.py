@@ -1,0 +1,155 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the core signal).
+
+Fixed-shape cases cover the exact TinyMoE shapes the AOT pipeline lowers;
+hypothesis sweeps shapes/dtypes/k per the session's testing contract.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.moe_ffn import expert_ffn, _pick_block
+from compile.kernels.topk_gate import topk_gate
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# expert_ffn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c,d,f", [(64, 64, 256), (32, 64, 256), (128, 64, 256),
+                                   (16, 8, 32), (1, 4, 8), (256, 32, 64)])
+def test_ffn_matches_ref_fixed(c, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(c + d + f), 4)
+    x = _rand(ks[0], (c, d))
+    w1, w2, w3 = _rand(ks[1], (d, f), scale=0.1), _rand(ks[2], (f, d), scale=0.1), _rand(ks[3], (d, f), scale=0.1)
+    y = expert_ffn(x, w1, w2, w3)
+    np.testing.assert_allclose(y, ref.expert_ffn_ref(x, w1, w2, w3), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_c", [1, 2, 8, 16, 64])
+def test_ffn_block_sizes_equivalent(block_c):
+    """Tiling must not change numerics: every valid block_c agrees."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    x = _rand(ks[0], (64, 16))
+    w1, w2, w3 = _rand(ks[1], (16, 32)), _rand(ks[2], (32, 16)), _rand(ks[3], (16, 32))
+    base = expert_ffn(x, w1, w2, w3, block_c=64)
+    np.testing.assert_allclose(
+        expert_ffn(x, w1, w2, w3, block_c=block_c), base, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_ffn_zero_rows_inert():
+    """Capacity padding contract: ffn(0-row) == 0, so pad slots never leak."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = _rand(ks[0], (8, 16)).at[5:].set(0.0)
+    w1, w2, w3 = _rand(ks[1], (16, 32)), _rand(ks[2], (32, 16)), _rand(ks[3], (16, 32))
+    y = expert_ffn(x, w1, w2, w3)
+    np.testing.assert_allclose(y[5:], jnp.zeros((3, 16)), atol=1e-7)
+
+
+def test_ffn_row_independence():
+    """Row i of the output depends only on row i of the input (routing
+    soundness: gathered execution == dense execution)."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    x = _rand(ks[0], (16, 8))
+    w1, w2, w3 = _rand(ks[1], (8, 16)), _rand(ks[2], (16, 8)), _rand(ks[3], (8, 16))
+    full = expert_ffn(x, w1, w2, w3)
+    perm = jax.random.permutation(ks[4], 16)
+    shuffled = expert_ffn(x[perm], w1, w2, w3)
+    np.testing.assert_allclose(shuffled, full[perm], rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    c=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+    d=st.sampled_from([4, 8, 16, 64]),
+    f=st.sampled_from([8, 16, 32, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_ffn_hypothesis_shapes(c, d, f, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(ks[0], (c, d))
+    w1, w2, w3 = _rand(ks[1], (d, f), scale=0.2), _rand(ks[2], (f, d), scale=0.2), _rand(ks[3], (d, f), scale=0.2)
+    y = expert_ffn(x, w1, w2, w3)
+    np.testing.assert_allclose(y, ref.expert_ffn_ref(x, w1, w2, w3), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_ffn_bf16(seed):
+    """bf16 path (the MXU dtype): kernel matches ref at bf16 tolerance."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(ks[0], (32, 16), jnp.bfloat16)
+    w1 = _rand(ks[1], (16, 32), jnp.bfloat16, 0.2)
+    w2 = _rand(ks[2], (32, 16), jnp.bfloat16, 0.2)
+    w3 = _rand(ks[3], (16, 32), jnp.bfloat16, 0.2)
+    y = expert_ffn(x, w1, w2, w3).astype(jnp.float32)
+    r = ref.expert_ffn_ref(x, w1, w2, w3).astype(jnp.float32)
+    np.testing.assert_allclose(y, r, rtol=0.1, atol=0.1)
+
+
+def test_pick_block():
+    assert _pick_block(1) == 1
+    assert _pick_block(64) == 64
+    assert _pick_block(128) == 128
+    assert _pick_block(256) == 128
+    assert _pick_block(96) == 32
+    assert _pick_block(3) == 1
+
+
+# ---------------------------------------------------------------------------
+# topk_gate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,e,k", [(128, 64, 8, 2), (64, 64, 16, 2),
+                                     (32, 16, 8, 1), (16, 8, 4, 4), (8, 8, 8, 8)])
+def test_gate_matches_ref(n, d, e, k):
+    ks = jax.random.split(jax.random.PRNGKey(n + e + k), 2)
+    x, wg = _rand(ks[0], (n, d)), _rand(ks[1], (d, e), scale=0.5)
+    g = topk_gate(x, wg, k)
+    np.testing.assert_allclose(g, ref.topk_gate_ref(x, wg, k), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_gate_exactly_k_nonzero_rowsum_one(k):
+    ks = jax.random.split(jax.random.PRNGKey(k), 2)
+    x, wg = _rand(ks[0], (64, 16)), _rand(ks[1], (16, 8), scale=0.5)
+    g = np.asarray(topk_gate(x, wg, k))
+    assert ((g > 0).sum(axis=1) == k).all()
+    np.testing.assert_allclose(g.sum(axis=1), np.ones(64), rtol=1e-5)
+
+
+def test_gate_tie_break_low_index():
+    """Identical logits (wg == 0): deterministic lower-index winners."""
+    x = jnp.ones((4, 8))
+    wg = jnp.zeros((8, 4))
+    g = np.asarray(topk_gate(x, wg, 2))
+    assert (g[:, :2] > 0).all() and (g[:, 2:] == 0).all()
+    r = np.asarray(ref.topk_gate_ref(x, wg, 2))
+    np.testing.assert_allclose(g, r, atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 8, 32, 128]),
+    e=st.sampled_from([4, 8, 16]),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_gate_hypothesis(n, e, k, seed):
+    k = min(k, e)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x, wg = _rand(ks[0], (n, 16)), _rand(ks[1], (16, e), scale=0.5)
+    g = topk_gate(x, wg, k)
+    np.testing.assert_allclose(g, ref.topk_gate_ref(x, wg, k), rtol=1e-4, atol=1e-6)
+    gn = np.asarray(g)
+    assert ((gn > 0).sum(axis=1) == k).all()

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig17_ablation` — regenerates the paper's fig17 series
+//! (see DESIGN.md per-experiment index). Set MOELESS_FULL=1 for the
+//! full-scale replay.
+use moeless::experiments::{run_experiment, Scale};
+
+fn main() {
+    run_experiment("fig17", Scale::from_env());
+}

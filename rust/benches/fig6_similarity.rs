@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig6_similarity` — regenerates the paper's fig6 series
+//! (see DESIGN.md per-experiment index). Set MOELESS_FULL=1 for the
+//! full-scale replay.
+use moeless::experiments::{run_experiment, Scale};
+
+fn main() {
+    run_experiment("fig6", Scale::from_env());
+}

@@ -1,0 +1,65 @@
+//! `cargo bench --bench perf_hotpath` — §6.6 system overheads + L3 hot-path
+//! microbenchmarks: the per-layer coordinator work (predict → scale →
+//! place → reconcile) and the end-to-end simulator throughput.
+//!
+//! These are the numbers the EXPERIMENTS.md §Perf iteration log tracks.
+
+use moeless::baselines::PolicyKind;
+use moeless::cluster::{Cluster, CostModel};
+use moeless::config::{ClusterSpec, DatasetSpec, ModelSpec, MoelessParams};
+use moeless::engine::{MoelessPolicy, Policy};
+use moeless::placer::Placer;
+use moeless::predictor::{blend_to_accuracy, LoadPredictor, SpeculativePredictor};
+use moeless::scaler::Scaler;
+use moeless::sim::{run, SimConfig};
+use moeless::util::benchkit::{fig_header, Bencher};
+use moeless::util::rng::Pcg;
+
+fn main() {
+    let b = Bencher::default();
+    let model = ModelSpec::mixtral_8x7b();
+    let spec = ClusterSpec::a6000_x8();
+    let cm = CostModel::new(&model, &spec);
+    let mut rng = Pcg::seeded(7);
+
+    fig_header("PERF §6.6", "per-layer coordinator hot path (paper: <0.2ms prediction, async ops)");
+
+    // Representative prefill-scale loads.
+    let actual: Vec<f64> = (0..model.n_experts)
+        .map(|e| 2000.0 * 2.0 / 8.0 * (1.0 + (e as f64) * 0.4))
+        .collect();
+
+    let mut pred = SpeculativePredictor::new(&model, true, 0.8, 1);
+    b.run("predictor.predict (1 layer)", || pred.predict(16, 1, &actual, 0.0));
+
+    let mut rng2 = Pcg::seeded(8);
+    b.run("blend_to_accuracy", || blend_to_accuracy(&actual, 0.9, &mut rng2));
+
+    let scaler = Scaler::new(0.2, 16);
+    b.run("scaler.scale (Algorithm 1)", || scaler.scale(&actual));
+
+    let cluster = Cluster::new(spec.clone());
+    let plan = scaler.scale(&actual);
+    let prev: Vec<Vec<usize>> = (0..model.n_experts).map(|e| vec![e % 8]).collect();
+    b.run("placer.place (Algorithm 2)", || {
+        Placer.place(&plan.replicas, &actual, &mut prev.clone(), &cluster, 0.33)
+    });
+
+    let mut policy = MoelessPolicy::new(&model, &spec, MoelessParams::default(), 1);
+    let mut cl = Cluster::new(spec.clone());
+    b.run("moeless.run_layer (full per-layer pipeline)", || {
+        let loads: Vec<f64> = (0..8).map(|_| (rng.f64() * 800.0).floor()).collect();
+        policy.run_layer(0, &loads, &mut cl, &cm, 0.0)
+    });
+
+    fig_header("PERF sim", "end-to-end simulator throughput (layer-forwards/s)");
+    for kind in PolicyKind::paper_set() {
+        let mut cfg = SimConfig::new(model.clone(), DatasetSpec::lmsys(), kind);
+        cfg.duration_s = 20.0;
+        cfg.seed = 9;
+        let m = b.run(&format!("sim.run 20s {}", kind.name()), || run(&cfg));
+        let r = run(&cfg);
+        let lfps = r.layer_forward_ms.len() as f64 / (m.mean_ns / 1e9);
+        println!("  -> {:.0} simulated layer-forwards/s ({} iters)", lfps, r.iterations);
+    }
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench tables` — regenerates Table 1 (model
+//! characterizations) and Table 2 (predictor memory footprints).
+use moeless::experiments::tables;
+
+fn main() {
+    tables::print_table1();
+    tables::print_table2();
+}

@@ -1,0 +1,184 @@
+//! EPLB baseline [DeepSeek-V3, §6.1]: periodic serverful expert load
+//! balancing. Every `interval_s` (the paper cites ~ten minutes) EPLB swaps
+//! low-usage experts for redundant replicas of historically popular ones,
+//! within a *fixed* replica slot budget on fixed devices — the serverful
+//! constraint MoEless removes.
+//!
+//! Between rebalances the replica plan is frozen, so drifted popularity and
+//! batch-level dynamics (workload/routing.rs properties 2-3) show up as
+//! residual stragglers. All slots stay resident and bill memory every
+//! layer (serverful residency).
+
+use crate::cluster::{Cluster, CostModel};
+use crate::config::{ClusterSpec, ModelSpec};
+use crate::engine::{static_layer_outcome, LayerOutcome, Policy};
+use crate::predictor::{HistoricalPredictor, LoadPredictor};
+use crate::scaler::Scaler;
+
+pub struct EplbPolicy {
+    n_experts: usize,
+    n_gpus: usize,
+    /// Fixed replica slot budget per layer: E experts + 25% redundancy
+    /// (rounded up), mirroring EPLB's redundant-expert configuration.
+    slots_per_layer: usize,
+    pub interval_s: f64,
+    last_rebalance_s: f64,
+    history: HistoricalPredictor,
+    /// Frozen per-layer plans: replicas[e] and placement gpu per (e, k).
+    plans: Vec<Vec<usize>>,
+    placements: Vec<Vec<Vec<usize>>>,
+    _seed: u64,
+}
+
+impl EplbPolicy {
+    pub fn new(model: &ModelSpec, cluster: &ClusterSpec, interval_s: f64, seed: u64) -> EplbPolicy {
+        let slots = model.n_experts + model.n_experts.div_ceil(4);
+        EplbPolicy {
+            n_experts: model.n_experts,
+            n_gpus: cluster.n_gpus,
+            slots_per_layer: slots,
+            interval_s,
+            last_rebalance_s: f64::NEG_INFINITY,
+            history: HistoricalPredictor::new(model.n_layers, model.n_experts, interval_s),
+            plans: vec![vec![1; model.n_experts]; model.n_layers],
+            placements: vec![Vec::new(); model.n_layers],
+            _seed: seed,
+        }
+    }
+
+    /// Recompute the frozen plan for `layer` from historical averages.
+    fn rebalance_layer(&mut self, layer: usize, now_s: f64) {
+        let hist = self.history.average(layer, now_s);
+        let total: f64 = hist.iter().sum();
+        // Serverful: every expert stays resident (swap, not scale-to-zero);
+        // redundant slots go to the historically hottest experts.
+        let loads: Vec<f64> = if total > 0.0 {
+            hist.iter().map(|&w| w.max(total * 1e-3)).collect()
+        } else {
+            vec![1.0; self.n_experts]
+        };
+        let plan = Scaler::new(0.0, self.slots_per_layer).scale(&loads);
+        // Static LPT placement of the slots over GPUs.
+        let mut order: Vec<usize> = (0..self.n_experts).collect();
+        order.sort_by(|&a, &b| {
+            (loads[b] / plan.replicas[b].max(1) as f64)
+                .partial_cmp(&(loads[a] / plan.replicas[a].max(1) as f64))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut gpu_load = vec![0.0f64; self.n_gpus];
+        let mut placement = vec![Vec::new(); self.n_experts];
+        for &e in &order {
+            for _ in 0..plan.replicas[e] {
+                let g = (0..self.n_gpus)
+                    .min_by(|&a, &b| gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b)))
+                    .unwrap();
+                gpu_load[g] += loads[e] / plan.replicas[e] as f64;
+                placement[e].push(g);
+            }
+        }
+        self.plans[layer] = plan.replicas;
+        self.placements[layer] = placement;
+    }
+}
+
+impl Policy for EplbPolicy {
+    fn name(&self) -> &'static str {
+        "eplb"
+    }
+
+    fn run_layer(
+        &mut self,
+        layer: usize,
+        actual: &[f64],
+        _cluster: &mut Cluster,
+        cost: &CostModel,
+        now_s: f64,
+    ) -> LayerOutcome {
+        if now_s - self.last_rebalance_s >= self.interval_s {
+            // Periodic rebalance sweeps every layer at once.
+            for l in 0..self.plans.len() {
+                self.rebalance_layer(l, now_s);
+            }
+            self.last_rebalance_s = now_s;
+        }
+        self.history.observe(layer, actual, now_s);
+        let replicas = self.plans[layer].clone();
+        let placements = &self.placements[layer];
+        let mut out = static_layer_outcome(
+            actual,
+            &replicas,
+            self.n_gpus,
+            |e, k| {
+                placements
+                    .get(e)
+                    .and_then(|v| v.get(k))
+                    .copied()
+                    .unwrap_or(e % self.n_gpus)
+            },
+            cost,
+        );
+        // All slots are resident serverful memory, even idle ones.
+        out.replicas = self.slots_per_layer;
+        out.cost.expert_mem_gb = self.slots_per_layer as f64 * cost.expert_mem_gb;
+        out
+    }
+
+    fn resident_model_mem_gb(&self, cost: &CostModel) -> Option<f64> {
+        // Serverful + redundant replica slots on every layer: the highest
+        // residency of the comparison set (paper: EPLB costs most).
+        Some(cost.n_layers as f64 * self.slots_per_layer as f64 * cost.expert_mem_gb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn setup() -> (EplbPolicy, Cluster, CostModel) {
+        let model = ModelSpec::mixtral_8x7b();
+        let spec = ClusterSpec::a6000_x8();
+        let p = EplbPolicy::new(&model, &spec, 60.0, 1);
+        let cm = CostModel::new(&model, &spec);
+        (p, Cluster::new(spec), cm)
+    }
+
+    #[test]
+    fn learns_hot_expert_after_rebalance() {
+        let (mut p, mut cluster, cm) = setup();
+        let loads = vec![800.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0];
+        // Feed history within the first interval.
+        for t in 0..30 {
+            p.run_layer(0, &loads, &mut cluster, &cm, t as f64);
+        }
+        let before = p.run_layer(0, &loads, &mut cluster, &cm, 59.0);
+        // Cross the rebalance boundary: replicas go to expert 0.
+        let after = p.run_layer(0, &loads, &mut cluster, &cm, 61.0);
+        assert!(after.cost.expert_ms < before.cost.expert_ms, "{after:?} {before:?}");
+        assert!(p.plans[0][0] > 1, "hot expert replicated: {:?}", p.plans[0]);
+    }
+
+    #[test]
+    fn stale_between_rebalances() {
+        let (mut p, mut cluster, cm) = setup();
+        let hot0 = vec![800.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0];
+        let hot7 = vec![100.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0, 800.0];
+        for t in 0..30 {
+            p.run_layer(0, &hot0, &mut cluster, &cm, t as f64);
+        }
+        p.run_layer(0, &hot0, &mut cluster, &cm, 61.0); // rebalance to hot0
+        // Popularity shifts; the frozen plan can't follow until the next
+        // interval — the residual straggler MoEless eliminates.
+        let stale = p.run_layer(0, &hot7, &mut cluster, &cm, 65.0);
+        assert!((stale.cost.expert_ms - cm.alpha_ms * 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serverful_residency_includes_redundant_slots() {
+        let (mut p, mut cluster, cm) = setup();
+        let out = p.run_layer(0, &[100.0; 8], &mut cluster, &cm, 0.0);
+        assert_eq!(out.replicas, 10); // 8 + 25% redundancy
+        assert!((out.cost.expert_mem_gb - 10.0 * 0.33).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,86 @@
+//! Megatron-LM baseline: basic EP, no expert load balancing (§6.1).
+//!
+//! Experts are uniquely distributed across GPUs at startup (expert e of
+//! layer l lives on GPU `(l·E + e) mod G`) and never move or replicate. The
+//! hottest expert is therefore the layer's straggler verbatim, and every
+//! expert bills its memory every layer — the serverful cost base.
+
+use crate::cluster::{Cluster, CostModel};
+use crate::config::{ClusterSpec, ModelSpec};
+use crate::engine::{static_layer_outcome, LayerOutcome, Policy};
+
+pub struct MegatronPolicy {
+    n_experts: usize,
+    n_gpus: usize,
+    replicas: Vec<usize>,
+}
+
+impl MegatronPolicy {
+    pub fn new(model: &ModelSpec, cluster: &ClusterSpec) -> MegatronPolicy {
+        MegatronPolicy {
+            n_experts: model.n_experts,
+            n_gpus: cluster.n_gpus,
+            replicas: vec![1; model.n_experts],
+        }
+    }
+
+    /// The static expert→GPU map (layer-rotated round-robin).
+    pub fn gpu_of(&self, layer: usize, expert: usize) -> usize {
+        (layer + expert) % self.n_gpus
+    }
+}
+
+impl Policy for MegatronPolicy {
+    fn name(&self) -> &'static str {
+        "megatron-lm"
+    }
+
+    fn run_layer(
+        &mut self,
+        layer: usize,
+        actual: &[f64],
+        _cluster: &mut Cluster,
+        cost: &CostModel,
+        _now_s: f64,
+    ) -> LayerOutcome {
+        static_layer_outcome(actual, &self.replicas, self.n_gpus, |e, _| self.gpu_of(layer, e), cost)
+    }
+
+    fn resident_model_mem_gb(&self, cost: &CostModel) -> Option<f64> {
+        // Static EP: every expert of every layer resident for the run.
+        Some(cost.n_layers as f64 * self.n_experts as f64 * cost.expert_mem_gb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    #[test]
+    fn straggler_passes_through() {
+        let model = ModelSpec::mixtral_8x7b();
+        let spec = ClusterSpec::a6000_x8();
+        let mut p = MegatronPolicy::new(&model, &spec);
+        let cm = CostModel::new(&model, &spec);
+        let mut cluster = Cluster::new(spec);
+        let out = p.run_layer(0, &[900.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0], &mut cluster, &cm, 0.0);
+        assert!((out.cost.expert_ms - cm.alpha_ms * 900.0).abs() < 1e-9);
+        assert_eq!(out.replicas, 8); // all experts resident
+        assert!(!p.is_serverless());
+    }
+
+    #[test]
+    fn experts_spread_across_gpus() {
+        let model = ModelSpec::phi_3_5_moe();
+        let p = MegatronPolicy::new(&model, &ClusterSpec::a6000_x8());
+        // 16 experts on 8 GPUs: exactly 2 per GPU in layer 0.
+        let mut counts = vec![0usize; 8];
+        for e in 0..16 {
+            counts[p.gpu_of(0, e)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 2), "{counts:?}");
+        // Layer offset rotates the mapping.
+        assert_ne!(p.gpu_of(0, 0), p.gpu_of(1, 0));
+    }
+}

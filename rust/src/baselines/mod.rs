@@ -1,0 +1,122 @@
+//! Serverful baselines (substrate S19): Megatron-LM static EP, DeepSeek's
+//! EPLB, and the lossy Oracle — the paper's §6.1 comparison set, all
+//! evaluated under the same §3.3 cost model as MoEless.
+
+pub mod eplb;
+pub mod megatron;
+pub mod oracle;
+
+pub use eplb::EplbPolicy;
+pub use megatron::MegatronPolicy;
+pub use oracle::OraclePolicy;
+
+use crate::config::{ClusterSpec, ModelSpec, MoelessParams};
+use crate::engine::{MoelessPolicy, Policy};
+
+/// The four compared approaches (+ ablation variant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Megatron,
+    Eplb,
+    Oracle,
+    Moeless,
+    /// Fig. 17: MoEless w/o pred + scale + place.
+    MoelessAblated,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Megatron => "megatron-lm",
+            PolicyKind::Eplb => "eplb",
+            PolicyKind::Oracle => "oracle",
+            PolicyKind::Moeless => "moeless",
+            PolicyKind::MoelessAblated => "moeless-ablated",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<PolicyKind> {
+        match name {
+            "megatron-lm" | "megatron" => Some(PolicyKind::Megatron),
+            "eplb" => Some(PolicyKind::Eplb),
+            "oracle" => Some(PolicyKind::Oracle),
+            "moeless" => Some(PolicyKind::Moeless),
+            "moeless-ablated" | "ablated" => Some(PolicyKind::MoelessAblated),
+            _ => None,
+        }
+    }
+
+    /// The paper's four overall-comparison policies (Figs. 8-10).
+    pub fn paper_set() -> [PolicyKind; 4] {
+        [PolicyKind::Megatron, PolicyKind::Oracle, PolicyKind::Eplb, PolicyKind::Moeless]
+    }
+
+    /// Instantiate the policy for (model, cluster, params).
+    pub fn build(
+        &self,
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        params: &MoelessParams,
+        seed: u64,
+    ) -> Box<dyn Policy> {
+        match self {
+            PolicyKind::Megatron => Box::new(MegatronPolicy::new(model, cluster)),
+            // The paper cites ~10-minute rebalance intervals over hours of
+            // trace; our replays compress time, so the interval compresses
+            // proportionally (30 s) to keep EPLB's rebalance-to-drift ratio.
+            PolicyKind::Eplb => Box::new(EplbPolicy::new(model, cluster, 30.0, seed)),
+            PolicyKind::Oracle => Box::new(OraclePolicy::new(model, cluster)),
+            PolicyKind::Moeless => {
+                Box::new(MoelessPolicy::new(model, cluster, params.clone(), seed))
+            }
+            PolicyKind::MoelessAblated => {
+                let mut p = MoelessPolicy::with_predictor(
+                    model,
+                    cluster,
+                    params.clone(),
+                    Box::new(crate::predictor::HistoricalPredictor::new(
+                        model.n_layers,
+                        model.n_experts,
+                        600.0,
+                    )),
+                );
+                p.ablate_predictor = true;
+                p.ablate_scaling = true;
+                p.ablate_placement = true;
+                Box::new(p)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for k in [
+            PolicyKind::Megatron,
+            PolicyKind::Eplb,
+            PolicyKind::Oracle,
+            PolicyKind::Moeless,
+            PolicyKind::MoelessAblated,
+        ] {
+            assert_eq!(PolicyKind::by_name(k.name()), Some(k));
+        }
+        assert!(PolicyKind::by_name("vllm").is_none());
+    }
+
+    #[test]
+    fn build_all() {
+        let m = ModelSpec::mixtral_8x7b();
+        let c = ClusterSpec::a6000_x8();
+        let p = MoelessParams::default();
+        for k in PolicyKind::paper_set() {
+            let policy = k.build(&m, &c, &p, 1);
+            assert_eq!(policy.name(), k.name());
+        }
+        let ab = PolicyKind::MoelessAblated.build(&m, &c, &p, 1);
+        assert!(ab.is_serverless());
+    }
+}

@@ -1,0 +1,90 @@
+//! Oracle baseline [Capacity-Aware Inference, §6.1]: ignores gate outputs
+//! and performs *perfect* expert load balancing — each expert processes an
+//! exactly equal share of the layer's routed tokens.
+//!
+//! This is a lossy upper bound: re-routing tokens away from their selected
+//! experts changes the model's outputs (the paper notes the generation-
+//! quality cost; the simulator, like the paper's latency/cost analysis,
+//! measures only the serving-efficiency side). It remains serverful: all E
+//! experts stay resident and bill memory every layer.
+
+use crate::cluster::{Cluster, CostModel};
+use crate::config::{ClusterSpec, ModelSpec};
+use crate::engine::{LayerOutcome, Policy};
+
+pub struct OraclePolicy {
+    n_experts: usize,
+    n_gpus: usize,
+}
+
+impl OraclePolicy {
+    pub fn new(model: &ModelSpec, cluster: &ClusterSpec) -> OraclePolicy {
+        OraclePolicy { n_experts: model.n_experts, n_gpus: cluster.n_gpus }
+    }
+}
+
+impl Policy for OraclePolicy {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn run_layer(
+        &mut self,
+        _layer: usize,
+        actual: &[f64],
+        _cluster: &mut Cluster,
+        cost: &CostModel,
+        _now_s: f64,
+    ) -> LayerOutcome {
+        let total: f64 = actual.iter().sum();
+        let per_expert = total / self.n_experts as f64;
+        // Experts spread evenly over GPUs: per-GPU load is also perfectly
+        // balanced.
+        let per_gpu = total / self.n_gpus as f64;
+        LayerOutcome {
+            cost: cost.layer(per_expert, per_gpu, self.n_experts, 0.0),
+            replicas: self.n_experts,
+            pred_accuracy: 1.0,
+            cold_starts: 0,
+            warm_starts: 0,
+        }
+    }
+
+    fn resident_model_mem_gb(&self, cost: &CostModel) -> Option<f64> {
+        // Oracle is serverful too: perfect balancing, full residency.
+        Some(cost.n_layers as f64 * self.n_experts as f64 * cost.expert_mem_gb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    #[test]
+    fn perfectly_balanced_regardless_of_skew() {
+        let model = ModelSpec::mixtral_8x7b();
+        let spec = ClusterSpec::a6000_x8();
+        let mut p = OraclePolicy::new(&model, &spec);
+        let cm = CostModel::new(&model, &spec);
+        let mut cluster = Cluster::new(spec);
+        let skewed = p.run_layer(0, &[930.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0], &mut cluster, &cm, 0.0);
+        let flat = p.run_layer(0, &[125.0; 8], &mut cluster, &cm, 0.0);
+        assert!((skewed.cost.forward_ms() - flat.cost.forward_ms()).abs() < 1e-9);
+        assert!((skewed.cost.expert_ms - cm.alpha_ms * 125.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oracle_is_latency_lower_bound_among_e_replicas() {
+        // No assignment of the same total over E experts beats total/E.
+        let model = ModelSpec::mixtral_8x7b();
+        let spec = ClusterSpec::a6000_x8();
+        let mut p = OraclePolicy::new(&model, &spec);
+        let cm = CostModel::new(&model, &spec);
+        let mut cluster = Cluster::new(spec);
+        let loads = [800.0, 100.0, 50.0, 25.0, 12.5, 6.25, 3.125, 3.125];
+        let oracle = p.run_layer(0, &loads, &mut cluster, &cm, 0.0);
+        let actual_max = loads.iter().cloned().fold(0.0, f64::max);
+        assert!(oracle.cost.expert_ms <= cm.layer(actual_max, 0.0, 8, 0.0).expert_ms);
+    }
+}

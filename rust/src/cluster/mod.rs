@@ -1,0 +1,165 @@
+//! GPU cluster model + the paper's §3.3 latency/cost model (substrate S12).
+//!
+//! The paper reduces the 8×A6000 testbed to exactly these terms:
+//!
+//! * per-replica processing time `T_{l,e,r} = α · W_{l,e,r}`,
+//! * per-GPU all-to-all time `T_g = β · Σ_{replicas on g} W_{l,e,r}`,
+//! * layer forward `T_layer = max_{e,r} T_{l,e,r} + 2·max_g T_g + T_misc`,
+//! * cost `C = Σ layers [(T_expert + 2·T_comm) · Σ replicas M_e]
+//!   + T_misc · M_misc`.
+//!
+//! Every compared policy is evaluated under the same model, so relative
+//! results (who wins, crossovers) carry over from the real testbed
+//! (DESIGN.md substitution table).
+
+pub mod cost;
+
+pub use cost::{CostModel, LayerCost};
+
+use crate::config::ClusterSpec;
+
+/// One GPU's live accounting: resident memory and the current layer's
+/// aggregated routed-token load.
+#[derive(Clone, Debug)]
+pub struct Gpu {
+    pub id: usize,
+    pub mem_capacity_gb: f64,
+    pub mem_used_gb: f64,
+    pub load_tokens: f64,
+}
+
+impl Gpu {
+    pub fn free_gb(&self) -> f64 {
+        self.mem_capacity_gb - self.mem_used_gb
+    }
+
+    pub fn can_fit(&self, gb: f64) -> bool {
+        self.free_gb() >= gb - 1e-9
+    }
+}
+
+/// The cluster: GPUs + spec. Placement decisions mutate per-GPU memory and
+/// load trackers; the engine resets loads each layer.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub spec: ClusterSpec,
+    pub gpus: Vec<Gpu>,
+}
+
+impl Cluster {
+    pub fn new(spec: ClusterSpec) -> Cluster {
+        let gpus = (0..spec.n_gpus)
+            .map(|id| Gpu {
+                id,
+                mem_capacity_gb: spec.mem_per_gpu_gb,
+                mem_used_gb: 0.0,
+                load_tokens: 0.0,
+            })
+            .collect();
+        Cluster { spec, gpus }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// Reserve `gb` on GPU `g`; false (and no change) if it doesn't fit.
+    pub fn reserve(&mut self, g: usize, gb: f64) -> bool {
+        if self.gpus[g].can_fit(gb) {
+            self.gpus[g].mem_used_gb += gb;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release(&mut self, g: usize, gb: f64) {
+        self.gpus[g].mem_used_gb = (self.gpus[g].mem_used_gb - gb).max(0.0);
+    }
+
+    pub fn reset_loads(&mut self) {
+        for g in &mut self.gpus {
+            g.load_tokens = 0.0;
+        }
+    }
+
+    pub fn add_load(&mut self, g: usize, tokens: f64) {
+        self.gpus[g].load_tokens += tokens;
+    }
+
+    pub fn max_gpu_load(&self) -> f64 {
+        self.gpus.iter().map(|g| g.load_tokens).fold(0.0, f64::max)
+    }
+
+    /// Least-loaded GPU (JSQ) that can fit `gb`; `None` if the cluster is
+    /// memory-exhausted everywhere.
+    pub fn least_loaded_with_room(&self, gb: f64) -> Option<usize> {
+        self.gpus
+            .iter()
+            .filter(|g| g.can_fit(gb))
+            .min_by(|a, b| {
+                a.load_tokens
+                    .partial_cmp(&b.load_tokens)
+                    .unwrap()
+                    .then(a.id.cmp(&b.id))
+            })
+            .map(|g| g.id)
+    }
+
+    pub fn total_mem_used_gb(&self) -> f64 {
+        self.gpus.iter().map(|g| g.mem_used_gb).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterSpec::a6000_x8())
+    }
+
+    #[test]
+    fn construction() {
+        let c = cluster();
+        assert_eq!(c.n_gpus(), 8);
+        assert!((c.gpus[0].free_gb() - 48.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reserve_release() {
+        let mut c = cluster();
+        assert!(c.reserve(0, 40.0));
+        assert!(!c.reserve(0, 10.0)); // over capacity
+        assert!((c.gpus[0].mem_used_gb - 40.0).abs() < 1e-9);
+        c.release(0, 15.0);
+        assert!(c.reserve(0, 10.0));
+        c.release(0, 100.0); // floors at zero
+        assert_eq!(c.gpus[0].mem_used_gb, 0.0);
+    }
+
+    #[test]
+    fn jsq_picks_least_loaded_with_room() {
+        let mut c = cluster();
+        c.add_load(0, 10.0);
+        c.add_load(1, 5.0);
+        assert_eq!(c.least_loaded_with_room(1.0), Some(2)); // zero-load GPU
+        for g in 2..8 {
+            c.add_load(g, 20.0);
+        }
+        assert_eq!(c.least_loaded_with_room(1.0), Some(1));
+        // Fill GPU 1's memory: JSQ must skip it.
+        assert!(c.reserve(1, 48.0));
+        assert_eq!(c.least_loaded_with_room(1.0), Some(0));
+    }
+
+    #[test]
+    fn load_tracking() {
+        let mut c = cluster();
+        c.add_load(3, 100.0);
+        c.add_load(3, 50.0);
+        assert!((c.max_gpu_load() - 150.0).abs() < 1e-9);
+        c.reset_loads();
+        assert_eq!(c.max_gpu_load(), 0.0);
+    }
+}

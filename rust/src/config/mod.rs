@@ -1,0 +1,360 @@
+//! Configuration (substrate S9): MoE model specs (paper Table 1), the GPU
+//! cluster, workload datasets, and MoEless's own knobs.
+//!
+//! Presets mirror the paper's evaluation setup: Mixtral-8×7B, Phi-3.5-MoE
+//! and Llama-4-Scout served on 8×A6000 (48 GB, pairwise NVLink), driven by
+//! Azure-trace arrivals over LMSYS-Chat-1M / ShareGPT-style requests.
+//! JSON files in `configs/` can override any preset field.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One MoE model's serving-relevant characteristics (paper Table 1).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Total / active parameter counts (billions) — Table 1.
+    pub params_total_b: f64,
+    pub params_active_b: f64,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// Experts activated per token (top-k).
+    pub top_k: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// Memory of one expert replica in GB (bf16 weights).
+    pub expert_mem_gb: f64,
+    /// Resident non-expert memory (attention, gates, KV, runtime) in GB.
+    pub misc_mem_gb: f64,
+    /// Per-layer routing stability in [0,1]: probability a token's expert
+    /// preference survives one layer hop. Early layers are less stable
+    /// (paper Fig. 6b); used by the Tier-B routing generator and the
+    /// speculative predictor model.
+    pub layer_stability: Vec<f64>,
+    /// Zipf skew exponent of expert popularity (Fig. 1 shape).
+    pub popularity_skew: f64,
+}
+
+impl ModelSpec {
+    /// Mixtral-8×7B: 12.9B/46.7B params, 8 experts (top-2), 32 layers.
+    pub fn mixtral_8x7b() -> ModelSpec {
+        ModelSpec {
+            name: "mixtral-8x7b".into(),
+            params_total_b: 46.7,
+            params_active_b: 12.9,
+            n_layers: 32,
+            n_experts: 8,
+            top_k: 2,
+            d_model: 4096,
+            d_ff: 14336,
+            expert_mem_gb: 0.33, // paper §2.2
+            misc_mem_gb: 6.0,
+            layer_stability: ramp_stability(32, 0.62, 0.95),
+            popularity_skew: 0.9,
+        }
+    }
+
+    /// Phi-3.5-MoE: 6.6B/42B params, 16 experts (top-2), 32 layers.
+    pub fn phi_3_5_moe() -> ModelSpec {
+        ModelSpec {
+            name: "phi-3.5-moe".into(),
+            params_total_b: 42.0,
+            params_active_b: 6.6,
+            n_layers: 32,
+            n_experts: 16,
+            top_k: 2,
+            d_model: 4096,
+            d_ff: 6400,
+            expert_mem_gb: 0.16,
+            misc_mem_gb: 5.0,
+            layer_stability: ramp_stability(32, 0.58, 0.94),
+            popularity_skew: 1.1,
+        }
+    }
+
+    /// Llama-4-Scout: 17B/109B params, 16 experts (top-1), 48 layers.
+    pub fn llama_4_scout() -> ModelSpec {
+        ModelSpec {
+            name: "llama-4-scout".into(),
+            params_total_b: 109.0,
+            params_active_b: 17.0,
+            n_layers: 48,
+            n_experts: 16,
+            top_k: 1,
+            d_model: 5120,
+            d_ff: 8192,
+            expert_mem_gb: 0.26,
+            misc_mem_gb: 8.0,
+            layer_stability: ramp_stability(48, 0.60, 0.95),
+            popularity_skew: 1.3,
+        }
+    }
+
+    /// TinyMoE (Tier A): must match python/compile/model.py's TinyMoEConfig.
+    pub fn tiny_moe() -> ModelSpec {
+        ModelSpec {
+            name: "tiny-moe".into(),
+            params_total_b: 0.0008,
+            params_active_b: 0.0004,
+            n_layers: 4,
+            n_experts: 8,
+            top_k: 2,
+            d_model: 64,
+            d_ff: 256,
+            expert_mem_gb: 0.0002,
+            misc_mem_gb: 0.001,
+            layer_stability: ramp_stability(4, 0.6, 0.9),
+            popularity_skew: 0.8,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name {
+            "mixtral-8x7b" => Some(Self::mixtral_8x7b()),
+            "phi-3.5-moe" => Some(Self::phi_3_5_moe()),
+            "llama-4-scout" => Some(Self::llama_4_scout()),
+            "tiny-moe" => Some(Self::tiny_moe()),
+            _ => None,
+        }
+    }
+
+    /// The three paper evaluation models, in Table-1 order.
+    pub fn paper_models() -> Vec<ModelSpec> {
+        vec![Self::mixtral_8x7b(), Self::phi_3_5_moe(), Self::llama_4_scout()]
+    }
+
+    /// Per-expert FLOPs for one token: 3 GEMMs of the SwiGLU FFN.
+    pub fn expert_flops_per_token(&self) -> f64 {
+        3.0 * 2.0 * self.d_model as f64 * self.d_ff as f64
+    }
+
+    /// One gate-replica predictor's memory in bytes (bf16) — Table 2 "Ours"
+    /// and "Mixtral-offloading" (identical architecture).
+    pub fn predictor_bytes(&self) -> usize {
+        self.d_model * self.n_experts * 2
+    }
+
+    /// ProMoE-style from-scratch MLP predictor bytes (bf16, hidden=512).
+    pub fn promoe_predictor_bytes(&self) -> usize {
+        (self.d_model * 512 + 512 * self.n_experts) * 2
+    }
+}
+
+/// Early layers less predictable, ramping to stable late layers (Fig. 6).
+fn ramp_stability(n_layers: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..n_layers)
+        .map(|l| {
+            let t = l as f64 / (n_layers - 1).max(1) as f64;
+            // Fast early rise then plateau, like the measured cosine curves.
+            lo + (hi - lo) * t.powf(0.5)
+        })
+        .collect()
+}
+
+/// The GPU testbed (paper §6.1: 8×A6000-48GB, pairwise NVLink) plus the
+/// §3.3 cost-model coefficients.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub n_gpus: usize,
+    pub mem_per_gpu_gb: f64,
+    /// α: expert processing ms per routed token, for a Mixtral-sized expert
+    /// (scaled by expert FLOPs for other models).
+    pub alpha_ms_per_token: f64,
+    /// β: all-to-all communication ms per token aggregated on one GPU.
+    pub beta_ms_per_token: f64,
+    /// T_misc: non-MoE per-layer latency constant (attention etc.).
+    pub t_misc_ms: f64,
+    /// Cold-start latency of materializing a new expert replica on a GPU
+    /// (weight copy over PCIe + container/function activation).
+    pub cold_start_ms: f64,
+    /// GB/s of the host<->GPU link (PCIe 5.0 x16 per §6.1).
+    pub pcie_gbps: f64,
+}
+
+impl ClusterSpec {
+    pub fn a6000_x8() -> ClusterSpec {
+        ClusterSpec {
+            n_gpus: 8,
+            mem_per_gpu_gb: 48.0,
+            alpha_ms_per_token: 0.0045,
+            beta_ms_per_token: 0.0004,
+            t_misc_ms: 0.9,
+            cold_start_ms: 45.0,
+            pcie_gbps: 64.0,
+        }
+    }
+
+    /// Total cluster memory (GB).
+    pub fn total_mem_gb(&self) -> f64 {
+        self.n_gpus as f64 * self.mem_per_gpu_gb
+    }
+
+    pub fn from_json(j: &Json) -> ClusterSpec {
+        let base = Self::a6000_x8();
+        ClusterSpec {
+            n_gpus: j.opt("n_gpus").map(|v| v.as_usize()).unwrap_or(base.n_gpus),
+            mem_per_gpu_gb: j.opt("mem_per_gpu_gb").map(|v| v.as_f64()).unwrap_or(base.mem_per_gpu_gb),
+            alpha_ms_per_token: j.opt("alpha_ms_per_token").map(|v| v.as_f64()).unwrap_or(base.alpha_ms_per_token),
+            beta_ms_per_token: j.opt("beta_ms_per_token").map(|v| v.as_f64()).unwrap_or(base.beta_ms_per_token),
+            t_misc_ms: j.opt("t_misc_ms").map(|v| v.as_f64()).unwrap_or(base.t_misc_ms),
+            cold_start_ms: j.opt("cold_start_ms").map(|v| v.as_f64()).unwrap_or(base.cold_start_ms),
+            pcie_gbps: j.opt("pcie_gbps").map(|v| v.as_f64()).unwrap_or(base.pcie_gbps),
+        }
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ClusterSpec> {
+        let j = Json::parse_file(path).map_err(anyhow::Error::msg)?;
+        Ok(Self::from_json(&j))
+    }
+}
+
+/// MoEless's own knobs (§4, §6.4 sensitivity ranges).
+#[derive(Clone, Debug)]
+pub struct MoelessParams {
+    /// Prediction distance d (layers ahead; §4.1, default 1 per §6.4).
+    pub prediction_distance: usize,
+    /// CV threshold V for Algorithm 1 (default 0.2 per §6.4).
+    pub cv_threshold: f64,
+    /// Per-layer replica memory cap, as a multiple of the layer's base
+    /// expert memory E·Mₑ (Algorithm 1's M_cap).
+    pub mem_cap_factor: f64,
+    /// Keep-alive window for idle expert functions (seconds, §5).
+    pub keep_alive_s: f64,
+    /// Pre-warm the next layer's predicted replicas (§5).
+    pub prewarm: bool,
+    /// Layer-aware fine-tuning accuracy threshold h (§4.1).
+    pub finetune_threshold: f64,
+}
+
+impl Default for MoelessParams {
+    fn default() -> Self {
+        MoelessParams {
+            prediction_distance: 1,
+            cv_threshold: 0.2,
+            mem_cap_factor: 2.0,
+            keep_alive_s: 10.0,
+            prewarm: true,
+            finetune_threshold: 0.8,
+        }
+    }
+}
+
+/// Dataset profile: request length distributions (log-normal fits of the
+/// public ShareGPT / LMSYS-Chat-1M summary statistics).
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: String,
+    /// log-normal (mu, sigma) of prompt token counts.
+    pub prompt_lognorm: (f64, f64),
+    /// log-normal (mu, sigma) of output token counts.
+    pub output_lognorm: (f64, f64),
+    pub max_tokens: usize,
+}
+
+impl DatasetSpec {
+    /// ShareGPT: longer, conversation-heavy prompts and outputs.
+    pub fn sharegpt() -> DatasetSpec {
+        DatasetSpec {
+            name: "sharegpt".into(),
+            prompt_lognorm: (5.4, 1.0),  // median ~220 tokens
+            output_lognorm: (5.1, 0.9),  // median ~165 tokens
+            max_tokens: 4096,
+        }
+    }
+
+    /// LMSYS-Chat-1M: shorter chat-style requests.
+    pub fn lmsys() -> DatasetSpec {
+        DatasetSpec {
+            name: "lmsys".into(),
+            prompt_lognorm: (4.6, 1.1),  // median ~100 tokens
+            output_lognorm: (5.3, 0.8),  // median ~200 tokens
+            max_tokens: 4096,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DatasetSpec> {
+        match name {
+            "sharegpt" => Some(Self::sharegpt()),
+            "lmsys" => Some(Self::lmsys()),
+            _ => None,
+        }
+    }
+
+    pub fn paper_datasets() -> Vec<DatasetSpec> {
+        vec![Self::lmsys(), Self::sharegpt()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_presets() {
+        let m = ModelSpec::mixtral_8x7b();
+        assert_eq!((m.n_layers, m.n_experts, m.top_k), (32, 8, 2));
+        assert!((m.params_total_b - 46.7).abs() < 1e-9);
+        let p = ModelSpec::phi_3_5_moe();
+        assert_eq!((p.n_layers, p.n_experts, p.top_k), (32, 16, 2));
+        let l = ModelSpec::llama_4_scout();
+        assert_eq!((l.n_layers, l.n_experts, l.top_k), (48, 16, 1));
+        assert_eq!(ModelSpec::paper_models().len(), 3);
+    }
+
+    #[test]
+    fn stability_ramps_up() {
+        let m = ModelSpec::mixtral_8x7b();
+        assert_eq!(m.layer_stability.len(), 32);
+        assert!(m.layer_stability[0] < m.layer_stability[31]);
+        assert!(m.layer_stability.iter().all(|&s| (0.0..=1.0).contains(&s)));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ["mixtral-8x7b", "phi-3.5-moe", "llama-4-scout", "tiny-moe"] {
+            assert_eq!(ModelSpec::by_name(name).unwrap().name, name);
+        }
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn predictor_footprints_table2_shape() {
+        // Ours == Mixtral-offloading (same arch); ProMoE is >> larger.
+        for m in ModelSpec::paper_models() {
+            assert!(m.promoe_predictor_bytes() > 20 * m.predictor_bytes());
+        }
+        // Mixtral total predictor footprint ~= Table 2's 1.92 MB.
+        let m = ModelSpec::mixtral_8x7b();
+        let total_mb = (m.predictor_bytes() * m.n_layers) as f64 / 1e6;
+        assert!((total_mb - 2.1).abs() < 0.5, "got {total_mb} MB");
+    }
+
+    #[test]
+    fn cluster_spec_json_overrides() {
+        let j = Json::parse(r#"{"n_gpus": 4, "t_misc_ms": 1.5}"#).unwrap();
+        let c = ClusterSpec::from_json(&j);
+        assert_eq!(c.n_gpus, 4);
+        assert!((c.t_misc_ms - 1.5).abs() < 1e-12);
+        assert!((c.mem_per_gpu_gb - 48.0).abs() < 1e-12); // default retained
+    }
+
+    #[test]
+    fn expert_memory_fits_cluster() {
+        // Sanity: every model's full expert set + misc fits the testbed
+        // (the serverful baselines must be feasible).
+        let c = ClusterSpec::a6000_x8();
+        for m in ModelSpec::paper_models() {
+            let total = m.n_layers as f64 * m.n_experts as f64 * m.expert_mem_gb
+                + m.misc_mem_gb;
+            assert!(total < c.total_mem_gb(), "{} needs {total} GB", m.name);
+        }
+    }
+
+    #[test]
+    fn dataset_medians_differ() {
+        let s = DatasetSpec::sharegpt();
+        let l = DatasetSpec::lmsys();
+        assert!(s.prompt_lognorm.0 > l.prompt_lognorm.0);
+    }
+}

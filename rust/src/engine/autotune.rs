@@ -1,0 +1,218 @@
+//! Runtime parameter auto-tuning — the paper's stated future work.
+//!
+//! §Limitations: "System parameters (e.g., prediction distance and
+//! load-balancing thresholds) are primarily determined through offline
+//! profiling, rather than being automatically or dynamically adapted
+//! across models and datasets. We leave the design of more advanced
+//! runtime optimizations to future work."
+//!
+//! This module implements that future work as a windowed feedback
+//! controller over the two online-adjustable knobs:
+//!
+//! * **keep-alive**: raised multiplicatively while the critical-path
+//!   cold-start rate exceeds its budget (mispredicted experts found no
+//!   warm instance); decayed while the fleet is fully warm and keep-alive
+//!   residency dominates the serverless bill.
+//! * **CV threshold V**: tightened while the straggler share of layer
+//!   latency (expert_ms / forward_ms) exceeds its target — more replicas,
+//!   better trimming; loosened when layers are balance-dominated by
+//!   T_misc anyway, shedding replica cost for free.
+//!
+//! The controller is deliberately conservative (one bounded multiplicative
+//! step per window) so it cannot oscillate faster than the workload drifts.
+
+/// Observed aggregates over one tuning window.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowStats {
+    pub layers: u64,
+    /// Layer forwards that paid an on-demand cold start.
+    pub cold_layers: u64,
+    /// Σ expert_ms (straggler term) and Σ forward_ms over the window.
+    pub expert_ms: f64,
+    pub forward_ms: f64,
+    /// Mean live instances (residency pressure proxy).
+    pub mean_instances: f64,
+    /// Replica slots the memory cap allows per layer.
+    pub slot_cap: usize,
+}
+
+/// Bounded multiplicative feedback controller for MoEless's runtime knobs.
+#[derive(Clone, Debug)]
+pub struct AutoTuner {
+    /// Window length in engine iterations.
+    pub window_iters: u64,
+    /// Max tolerated fraction of layer forwards with critical cold starts.
+    pub cold_rate_budget: f64,
+    /// Target ceiling for the straggler share expert_ms / forward_ms.
+    pub straggler_share_target: f64,
+    // Knob bounds.
+    pub keep_alive_bounds_s: (f64, f64),
+    pub cv_bounds: (f64, f64),
+    // Live knob values.
+    pub keep_alive_s: f64,
+    pub cv_threshold: f64,
+    iters_in_window: u64,
+    window: WindowStats,
+    pub adjustments: u64,
+}
+
+impl AutoTuner {
+    pub fn new(keep_alive_s: f64, cv_threshold: f64) -> AutoTuner {
+        AutoTuner {
+            window_iters: 50,
+            cold_rate_budget: 0.02,
+            straggler_share_target: 0.35,
+            keep_alive_bounds_s: (1.0, 120.0),
+            cv_bounds: (0.05, 1.0),
+            keep_alive_s,
+            cv_threshold,
+            iters_in_window: 0,
+            window: WindowStats::default(),
+            adjustments: 0,
+        }
+    }
+
+    /// Record one layer forward's outcome.
+    pub fn observe_layer(&mut self, expert_ms: f64, forward_ms: f64, had_cold: bool) {
+        self.window.layers += 1;
+        self.window.cold_layers += u64::from(had_cold);
+        self.window.expert_ms += expert_ms;
+        self.window.forward_ms += forward_ms;
+    }
+
+    /// Record end-of-iteration fleet state; returns `true` when the window
+    /// closed and knobs may have moved.
+    pub fn end_iteration(&mut self, live_instances: usize, slot_cap: usize) -> bool {
+        // Running mean of instance count across the window.
+        let n = self.iters_in_window as f64;
+        self.window.mean_instances =
+            (self.window.mean_instances * n + live_instances as f64) / (n + 1.0);
+        self.window.slot_cap = slot_cap;
+        self.iters_in_window += 1;
+        if self.iters_in_window < self.window_iters {
+            return false;
+        }
+        self.retune();
+        self.iters_in_window = 0;
+        self.window = WindowStats::default();
+        true
+    }
+
+    fn retune(&mut self) {
+        let w = self.window;
+        if w.layers == 0 {
+            return;
+        }
+        let cold_rate = w.cold_layers as f64 / w.layers as f64;
+        let straggler_share = if w.forward_ms > 0.0 { w.expert_ms / w.forward_ms } else { 0.0 };
+
+        // Keep-alive: chase the cold-rate budget.
+        let (ka_lo, ka_hi) = self.keep_alive_bounds_s;
+        if cold_rate > self.cold_rate_budget {
+            self.keep_alive_s = (self.keep_alive_s * 1.5).min(ka_hi);
+            self.adjustments += 1;
+        } else if cold_rate < 0.25 * self.cold_rate_budget && self.keep_alive_s > ka_lo {
+            // Fully warm: shed idle residency slowly.
+            self.keep_alive_s = (self.keep_alive_s * 0.9).max(ka_lo);
+            self.adjustments += 1;
+        }
+
+        // CV threshold: chase the straggler-share target.
+        let (cv_lo, cv_hi) = self.cv_bounds;
+        if straggler_share > self.straggler_share_target {
+            self.cv_threshold = (self.cv_threshold * 0.8).max(cv_lo);
+            self.adjustments += 1;
+        } else if straggler_share < 0.5 * self.straggler_share_target && self.cv_threshold < cv_hi
+        {
+            self.cv_threshold = (self.cv_threshold * 1.1).min(cv_hi);
+            self.adjustments += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(tuner: &mut AutoTuner, cold: bool, straggler_share: f64) {
+        for _ in 0..tuner.window_iters {
+            tuner.observe_layer(straggler_share * 10.0, 10.0, cold);
+            tuner.end_iteration(20, 16);
+        }
+    }
+
+    #[test]
+    fn cold_storms_raise_keep_alive() {
+        let mut t = AutoTuner::new(5.0, 0.2);
+        let before = t.keep_alive_s;
+        window(&mut t, true, 0.2);
+        assert!(t.keep_alive_s > before);
+        // Repeated storms keep raising it, bounded.
+        for _ in 0..20 {
+            window(&mut t, true, 0.2);
+        }
+        assert!(t.keep_alive_s <= t.keep_alive_bounds_s.1);
+    }
+
+    #[test]
+    fn warm_fleet_decays_keep_alive() {
+        let mut t = AutoTuner::new(60.0, 0.2);
+        window(&mut t, false, 0.2);
+        assert!(t.keep_alive_s < 60.0);
+        for _ in 0..200 {
+            window(&mut t, false, 0.2);
+        }
+        assert!(t.keep_alive_s >= t.keep_alive_bounds_s.0 - 1e-9);
+    }
+
+    #[test]
+    fn stragglers_tighten_cv() {
+        let mut t = AutoTuner::new(10.0, 0.5);
+        window(&mut t, false, 0.9); // straggler-dominated layers
+        assert!(t.cv_threshold < 0.5);
+    }
+
+    #[test]
+    fn balanced_layers_loosen_cv() {
+        let mut t = AutoTuner::new(10.0, 0.2);
+        window(&mut t, false, 0.05); // t_misc dominated
+        assert!(t.cv_threshold > 0.2);
+        for _ in 0..100 {
+            window(&mut t, false, 0.05);
+        }
+        assert!(t.cv_threshold <= t.cv_bounds.1 + 1e-9);
+    }
+
+    #[test]
+    fn no_adjustment_mid_window() {
+        let mut t = AutoTuner::new(10.0, 0.2);
+        for _ in 0..(t.window_iters - 1) {
+            t.observe_layer(9.0, 10.0, true);
+            assert!(!t.end_iteration(10, 16));
+        }
+        assert_eq!(t.adjustments, 0);
+        assert!((t.keep_alive_s - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stable_workload_converges() {
+        // Under a steady moderate workload the knobs settle (no endless
+        // oscillation): adjustments stop growing.
+        let mut t = AutoTuner::new(10.0, 0.2);
+        for _ in 0..50 {
+            window(&mut t, false, 0.3);
+        }
+        let a1 = t.adjustments;
+        for _ in 0..50 {
+            window(&mut t, false, 0.3);
+        }
+        // Some decay adjustments may continue at the boundary but the knob
+        // values are pinned.
+        let ka = t.keep_alive_s;
+        let cv = t.cv_threshold;
+        window(&mut t, false, 0.3);
+        assert!((t.keep_alive_s - ka).abs() / ka < 0.11);
+        assert!((t.cv_threshold - cv).abs() / cv < 0.11);
+        let _ = a1;
+    }
+}

@@ -1,0 +1,149 @@
+//! The serving engine (substrate S18): per-layer execution under a
+//! pluggable load-balancing policy.
+//!
+//! One engine iteration walks the model's MoE layers in order. For each
+//! layer the active [`Policy`] decides the replica plan + placement (from
+//! whatever information it is entitled to — static config, history, or
+//! MoEless's speculative prediction), then the engine evaluates the §3.3
+//! latency/cost terms against the *actual* routed loads. Mispredicted
+//! experts (actual load but no planned instance) are served by on-demand
+//! instances whose cold starts land on the critical path — the cost of
+//! prediction error that drives the Fig. 13/14 distance trade-off.
+
+pub mod autotune;
+pub mod moeless;
+
+pub use autotune::AutoTuner;
+pub use moeless::MoelessPolicy;
+
+use crate::cluster::{Cluster, CostModel, LayerCost};
+
+/// Outcome of one MoE layer forward under a policy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerOutcome {
+    pub cost: LayerCost,
+    /// Replica instances charged for this layer (Σ_e R_e).
+    pub replicas: usize,
+    /// Predictor accuracy used for this layer's plan (1.0 for non-predictive
+    /// policies).
+    pub pred_accuracy: f64,
+    pub cold_starts: usize,
+    pub warm_starts: usize,
+}
+
+/// A load-balancing policy: Megatron-LM, EPLB, Oracle, or MoEless.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Serverless policies scale instances dynamically; serverful ones keep
+    /// all experts resident.
+    fn is_serverless(&self) -> bool {
+        false
+    }
+
+    /// Execute one MoE layer forward: plan (policy-internal), then account
+    /// latency/cost against the actual loads.
+    fn run_layer(
+        &mut self,
+        layer: usize,
+        actual_loads: &[f64],
+        cluster: &mut Cluster,
+        cost: &CostModel,
+        now_s: f64,
+    ) -> LayerOutcome;
+
+    /// Called once per engine iteration after all layers ran.
+    fn end_iteration(&mut self, _cluster: &mut Cluster, _now_s: f64) {}
+
+    /// Called at end of run for final accounting.
+    fn finish(&mut self, _cluster: &mut Cluster, _now_s: f64) {}
+
+    /// Serverless residency overhead (keep-alive GB·s), reported alongside
+    /// the §3.3 cost.
+    fn residency_gb_s(&self) -> f64 {
+        0.0
+    }
+
+    /// Serverful policies keep the *whole model's* experts resident on the
+    /// cluster for the entire serving window (static EP allocation); this
+    /// returns that resident expert memory (GB), billed against every
+    /// busy second. Serverless policies return `None` — they pay per
+    /// active instance per layer instead (the pay-as-you-go mechanism
+    /// behind the paper's Fig. 10 cost gap).
+    fn resident_model_mem_gb(&self, _cost: &CostModel) -> Option<f64> {
+        None
+    }
+
+    /// Fraction of instance starts served warm (serverless diagnostics).
+    fn warm_fraction(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Helper shared by serverful baselines: evaluate the §3.3 terms for a
+/// static replica assignment. `replicas[e]` instances of expert `e`, each
+/// taking `actual[e] / replicas[e]` load, placed per `gpu_of(e, r)`.
+pub fn static_layer_outcome(
+    actual: &[f64],
+    replicas: &[usize],
+    n_gpus: usize,
+    gpu_of: impl Fn(usize, usize) -> usize,
+    cost: &CostModel,
+) -> LayerOutcome {
+    let mut max_rep = 0.0f64;
+    let mut gpu_loads = vec![0.0f64; n_gpus];
+    let mut total = 0usize;
+    for (e, (&w, &r)) in actual.iter().zip(replicas).enumerate() {
+        total += r;
+        if r == 0 {
+            continue;
+        }
+        let per = w / r as f64;
+        max_rep = max_rep.max(per);
+        for k in 0..r {
+            gpu_loads[gpu_of(e, k)] += per;
+        }
+    }
+    let max_gpu = gpu_loads.into_iter().fold(0.0, f64::max);
+    LayerOutcome {
+        cost: cost.layer(max_rep, max_gpu, total, 0.0),
+        replicas: total,
+        pred_accuracy: 1.0,
+        cold_starts: 0,
+        warm_starts: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, ModelSpec};
+
+    #[test]
+    fn static_outcome_matches_hand_calc() {
+        let cm = CostModel::new(&ModelSpec::mixtral_8x7b(), &ClusterSpec::a6000_x8());
+        let actual = vec![800.0, 100.0, 100.0, 100.0];
+        let replicas = vec![1usize; 4];
+        let out = static_layer_outcome(&actual, &replicas, 4, |e, _| e % 4, &cm);
+        assert!((out.cost.expert_ms - cm.alpha_ms * 800.0).abs() < 1e-9);
+        assert!((out.cost.comm_ms - 2.0 * 0.0004 * 800.0).abs() < 1e-9);
+        assert_eq!(out.replicas, 4);
+    }
+
+    #[test]
+    fn replicas_cut_the_straggler() {
+        let cm = CostModel::new(&ModelSpec::mixtral_8x7b(), &ClusterSpec::a6000_x8());
+        let actual = vec![800.0, 100.0];
+        let one = static_layer_outcome(&actual, &[1, 1], 4, |e, _| e, &cm);
+        let four = static_layer_outcome(&actual, &[4, 1], 4, |e, k| (e + k) % 4, &cm);
+        assert!(four.cost.expert_ms < one.cost.expert_ms / 3.0);
+    }
+
+    #[test]
+    fn zero_replica_zero_load_ok() {
+        let cm = CostModel::new(&ModelSpec::mixtral_8x7b(), &ClusterSpec::a6000_x8());
+        let out = static_layer_outcome(&[0.0, 0.0], &[0, 0], 4, |_, _| 0, &cm);
+        assert_eq!(out.cost.expert_ms, 0.0);
+        assert_eq!(out.replicas, 0);
+    }
+}

@@ -1,0 +1,311 @@
+//! The MoEless policy: Expert Load Predictor (§4.1) → Expert Scaler
+//! (Algorithm 1) → Expert Placer (Algorithm 2) → serverless function
+//! manager (§5), composed per layer.
+//!
+//! Workflow per layer l (paper Fig. 5 steps 1–4):
+//! 1. Predict layer l's load distribution from d layers back (accuracy
+//!    degrades with d — plans were made before layer l's gate ran).
+//! 2. Scale: replicas per expert under the CV threshold + memory cap.
+//! 3. Place: warm-start reuse + JSQ across GPUs.
+//! 4. Serve: actual loads split evenly over planned replicas. Experts the
+//!    prediction missed get on-demand instances (cold start on the
+//!    critical path); over-provisioned replicas still bill their memory.
+
+use crate::cluster::{Cluster, CostModel};
+use crate::config::{ModelSpec, MoelessParams};
+use crate::engine::{LayerOutcome, Policy};
+use crate::placer::Placer;
+use crate::predictor::{LoadPredictor, SpeculativePredictor};
+use crate::scaler::Scaler;
+use crate::serverless::FunctionManager;
+
+/// MoEless's composed policy. Also used for the Fig. 17 ablation via the
+/// `ablate_*` switches.
+pub struct MoelessPolicy {
+    pub params: MoelessParams,
+    predictor: Box<dyn LoadPredictor>,
+    scaler: Scaler,
+    placer: Placer,
+    pub manager: FunctionManager,
+    n_experts: usize,
+    top_k: usize,
+    /// Ablation: replace the speculative predictor with EPLB's historical
+    /// estimator (MoEless w/o pred).
+    pub ablate_predictor: bool,
+    /// Ablation: disable replica scaling (one instance per loaded expert).
+    pub ablate_scaling: bool,
+    /// Ablation: disable placement optimization (round-robin, no warm
+    /// reuse preference).
+    pub ablate_placement: bool,
+    /// Optional runtime auto-tuner for keep-alive and CV threshold (the
+    /// paper's future-work extension; `engine::autotune`).
+    pub tuner: Option<crate::engine::AutoTuner>,
+    rr_counter: usize,
+}
+
+impl MoelessPolicy {
+    pub fn new(
+        model: &ModelSpec,
+        cluster_spec: &crate::config::ClusterSpec,
+        params: MoelessParams,
+        seed: u64,
+    ) -> MoelessPolicy {
+        let predictor: Box<dyn LoadPredictor> = Box::new(SpeculativePredictor::new(
+            model,
+            true,
+            params.finetune_threshold,
+            seed,
+        ));
+        Self::with_predictor(model, cluster_spec, params, predictor)
+    }
+
+    pub fn with_predictor(
+        model: &ModelSpec,
+        cluster_spec: &crate::config::ClusterSpec,
+        params: MoelessParams,
+        predictor: Box<dyn LoadPredictor>,
+    ) -> MoelessPolicy {
+        let max_slots = (model.n_experts as f64 * params.mem_cap_factor).round() as usize;
+        MoelessPolicy {
+            predictor,
+            scaler: Scaler::new(params.cv_threshold, max_slots),
+            placer: Placer,
+            manager: FunctionManager::new(
+                model.expert_mem_gb,
+                params.keep_alive_s,
+                cluster_spec.cold_start_ms,
+                model.n_layers,
+                model.n_experts,
+            ),
+            n_experts: model.n_experts,
+            top_k: model.top_k,
+            params,
+            ablate_predictor: false,
+            ablate_scaling: false,
+            ablate_placement: false,
+            tuner: None,
+            rr_counter: 0,
+        }
+    }
+
+    /// Enable the runtime auto-tuner (adapts keep-alive + CV threshold).
+    pub fn with_autotune(mut self) -> Self {
+        self.tuner = Some(crate::engine::AutoTuner::new(
+            self.params.keep_alive_s,
+            self.params.cv_threshold,
+        ));
+        self
+    }
+}
+
+impl Policy for MoelessPolicy {
+    fn name(&self) -> &'static str {
+        if self.ablate_predictor || self.ablate_scaling || self.ablate_placement {
+            "moeless-ablated"
+        } else {
+            "moeless"
+        }
+    }
+
+    fn is_serverless(&self) -> bool {
+        true
+    }
+
+    fn run_layer(
+        &mut self,
+        layer: usize,
+        actual: &[f64],
+        cluster: &mut Cluster,
+        cost: &CostModel,
+        now_s: f64,
+    ) -> LayerOutcome {
+        // Step 1: predict (d layers ahead of execution).
+        let pred = self
+            .predictor
+            .predict(layer, self.params.prediction_distance, actual, now_s);
+        self.predictor.observe(layer, actual, now_s);
+
+        // Step 2: scale. Predicted loads below one token round to zero —
+        // the serverless scale-to-zero that serverful EP cannot do.
+        let pred_loads: Vec<f64> =
+            pred.loads.iter().map(|&w| if w < 0.5 { 0.0 } else { w }).collect();
+        let plan = if self.ablate_scaling {
+            crate::scaler::ScalePlan {
+                replicas: pred_loads.iter().map(|&w| usize::from(w > 0.0)).collect(),
+            }
+        } else {
+            self.scaler.scale(&pred_loads)
+        };
+
+        // Step 3: place (warm-start reuse against live instances).
+        let mut previous: Vec<Vec<usize>> =
+            (0..self.n_experts).map(|e| self.manager.live_on(layer, e)).collect();
+        let placement = if self.ablate_placement {
+            // Round-robin without locality/JSQ.
+            let mut p = crate::placer::PlacePlan::default();
+            for (e, &r) in plan.replicas.iter().enumerate() {
+                for k in 0..r {
+                    self.rr_counter += 1;
+                    p.placements.push(crate::placer::Placement {
+                        expert: e,
+                        replica: k,
+                        gpu: self.rr_counter % cluster.n_gpus(),
+                        load: pred_loads[e] / r as f64,
+                        reused: false,
+                    });
+                }
+            }
+            p
+        } else {
+            self.placer.place(
+                &plan.replicas,
+                &pred_loads,
+                &mut previous,
+                cluster,
+                self.manager.expert_mem_gb,
+            )
+        };
+
+        // Planned instances spin up asynchronously, d layers ahead (§5):
+        // their cold starts never stall the forward.
+        let planned =
+            self.manager.apply_layer(cluster, layer, &placement.expert_gpu_pairs(), now_s);
+
+        // Misprediction repair: experts with actual load the plan missed
+        // get one on-demand instance each — THESE cold starts are on the
+        // critical path (the gate output just revealed them).
+        let mut replicas = plan.replicas.clone();
+        let mut repair_pairs = Vec::new();
+        for (e, &w) in actual.iter().enumerate() {
+            if w > 0.0 && replicas[e] == 0 {
+                replicas[e] = 1;
+                // Function locality first: a keep-alive instance of this
+                // expert anywhere is a warm start; only truly absent
+                // experts pay the on-demand cold start.
+                let live = self.manager.live_on(layer, e);
+                let gpu = live.first().copied().unwrap_or_else(|| {
+                    cluster
+                        .least_loaded_with_room(self.manager.expert_mem_gb)
+                        .unwrap_or(e % cluster.n_gpus())
+                });
+                repair_pairs.push((e, gpu));
+            }
+        }
+        let repair = if repair_pairs.is_empty() {
+            crate::serverless::ApplyStats::default()
+        } else {
+            self.manager.apply_more(cluster, layer, &repair_pairs, now_s)
+        };
+
+        // Serve: actual loads split evenly over the effective replicas.
+        let mut max_rep = 0.0f64;
+        let mut gpu_loads = vec![0.0f64; cluster.n_gpus()];
+        for p in &placement.placements {
+            let r = replicas[p.expert] as f64;
+            let actual_per = actual[p.expert] / r;
+            max_rep = max_rep.max(actual_per);
+            gpu_loads[p.gpu] += actual_per;
+        }
+        for &(e, gpu) in &repair_pairs {
+            let actual_per = actual[e] / replicas[e] as f64;
+            max_rep = max_rep.max(actual_per);
+            gpu_loads[gpu] += actual_per;
+        }
+        let max_gpu = gpu_loads.into_iter().fold(0.0, f64::max);
+
+        let total_replicas: usize = replicas.iter().sum();
+        let lc = cost.layer(max_rep, max_gpu, total_replicas, repair.critical_cold_ms);
+        if let Some(t) = &mut self.tuner {
+            t.observe_layer(lc.expert_ms, lc.forward_ms(), repair.critical_cold_ms > 0.0);
+        }
+        let acc = crate::predictor::accuracy::topk_overlap(&pred_loads, actual, self.top_k.max(2));
+        LayerOutcome {
+            cost: lc,
+            replicas: total_replicas,
+            pred_accuracy: acc,
+            cold_starts: planned.cold + repair.cold,
+            warm_starts: planned.warm + planned.prewarmed + repair.warm,
+        }
+    }
+
+    fn end_iteration(&mut self, cluster: &mut Cluster, now_s: f64) {
+        self.manager.reap(cluster, now_s);
+        if let Some(t) = &mut self.tuner {
+            if t.end_iteration(self.manager.live_count(), self.scaler.max_replica_slots) {
+                // Apply retuned knobs to the live components.
+                self.manager.keep_alive_s = t.keep_alive_s;
+                self.scaler.cv_threshold = t.cv_threshold;
+            }
+        }
+    }
+
+    fn finish(&mut self, cluster: &mut Cluster, now_s: f64) {
+        self.manager.drain(cluster, now_s);
+    }
+
+    fn residency_gb_s(&self) -> f64 {
+        self.manager.residency_gb_s
+    }
+
+    fn warm_fraction(&self) -> f64 {
+        self.manager.warm_fraction()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn setup() -> (MoelessPolicy, Cluster, CostModel) {
+        let model = ModelSpec::mixtral_8x7b();
+        let spec = ClusterSpec::a6000_x8();
+        let policy = MoelessPolicy::new(&model, &spec, MoelessParams::default(), 7);
+        let cm = CostModel::new(&model, &spec);
+        (policy, Cluster::new(spec), cm)
+    }
+
+    #[test]
+    fn scales_down_straggler_vs_static() {
+        let (mut p, mut cluster, cm) = setup();
+        let loads = vec![900.0, 120.0, 110.0, 100.0, 90.0, 80.0, 60.0, 40.0];
+        // Warm up instances (first iteration pays cold starts).
+        for t in 0..3 {
+            p.run_layer(0, &loads, &mut cluster, &cm, t as f64);
+            p.end_iteration(&mut cluster, t as f64);
+        }
+        let out = p.run_layer(0, &loads, &mut cluster, &cm, 3.0);
+        let static_ms = cm.layer(900.0, 900.0, 8, 0.0).forward_ms();
+        assert!(out.cost.forward_ms() < static_ms, "{} vs {static_ms}", out.cost.forward_ms());
+        assert!(out.replicas > 8, "straggler got extra replicas");
+    }
+
+    #[test]
+    fn steady_state_is_warm() {
+        let (mut p, mut cluster, cm) = setup();
+        let loads = vec![500.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0];
+        for t in 0..10 {
+            p.run_layer(0, &loads, &mut cluster, &cm, t as f64);
+            p.end_iteration(&mut cluster, t as f64);
+        }
+        assert!(p.warm_fraction() > 0.7, "{}", p.warm_fraction());
+    }
+
+    #[test]
+    fn zero_load_experts_not_instantiated() {
+        let (mut p, mut cluster, cm) = setup();
+        let loads = vec![100.0, 100.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let out = p.run_layer(0, &loads, &mut cluster, &cm, 0.0);
+        // Far fewer than 8 resident replicas: scale-to-zero economy.
+        assert!(out.replicas <= 6, "{}", out.replicas);
+    }
+
+    #[test]
+    fn finish_releases_everything() {
+        let (mut p, mut cluster, cm) = setup();
+        p.run_layer(0, &[100.0; 8], &mut cluster, &cm, 0.0);
+        p.finish(&mut cluster, 5.0);
+        assert_eq!(cluster.total_mem_used_gb(), 0.0);
+        assert!(p.residency_gb_s() > 0.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Fig. 17: ablation — MoEless vs "MoEless w/o pred + scale + place"
+//! (historical estimator, no replica scaling, naive placement) on
+//! Mixtral-8×7B and Phi-3.5-MoE over LMSYS-Chat-1M.
+
+use crate::baselines::PolicyKind;
+use crate::config::{DatasetSpec, ModelSpec};
+use crate::experiments::Scale;
+use crate::metrics::reduction_pct;
+use crate::sim::{run, SimConfig};
+use crate::util::benchkit::{fig_header, series_summary};
+
+pub fn fig17_ablation(scale: Scale) {
+    fig_header("FIG 17", "ablation — MoEless w/o pred + scale + place (LMSYS-Chat-1M)");
+    for model in [ModelSpec::mixtral_8x7b(), ModelSpec::phi_3_5_moe()] {
+        let mut results = Vec::new();
+        for kind in [PolicyKind::Moeless, PolicyKind::MoelessAblated] {
+            let mut cfg = SimConfig::new(model.clone(), DatasetSpec::lmsys(), kind);
+            cfg.duration_s = scale.duration_s;
+            cfg.base_rps = scale.base_rps;
+            cfg.seed = scale.seed;
+            let r = run(&cfg);
+            let cdf = r.layer_cdf();
+            series_summary(&model.name, &r.policy, &cdf);
+            for q in [25.0, 50.0, 75.0, 90.0, 99.0] {
+                println!("row {} {} p{q} {:.3}ms", model.name, r.policy, cdf.p(q));
+            }
+            results.push(r);
+        }
+        println!(
+            "summary {}: full MoEless cuts mean layer latency {:.1}% vs ablated variant",
+            model.name,
+            reduction_pct(results[1].mean_layer_ms(), results[0].mean_layer_ms()),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablated_is_worse() {
+        let model = ModelSpec::mixtral_8x7b();
+        let s = Scale { duration_s: 15.0, base_rps: 3.0, seed: 5 };
+        let mut full_cfg = SimConfig::new(model.clone(), DatasetSpec::lmsys(), PolicyKind::Moeless);
+        full_cfg.duration_s = s.duration_s;
+        full_cfg.seed = s.seed;
+        let mut abl_cfg = full_cfg.clone();
+        abl_cfg.policy = PolicyKind::MoelessAblated;
+        let full = run(&full_cfg);
+        let abl = run(&abl_cfg);
+        assert!(
+            full.mean_layer_ms() < abl.mean_layer_ms(),
+            "full {} vs ablated {}",
+            full.mean_layer_ms(),
+            abl.mean_layer_ms()
+        );
+    }
+}

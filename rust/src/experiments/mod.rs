@@ -1,0 +1,107 @@
+//! Experiment drivers (substrate S23) — one per paper figure/table.
+//!
+//! Each driver regenerates its figure's rows/series in the uniform
+//! greppable format (`util::benchkit`). The `rust/benches/*` binaries and
+//! the `moeless bench --exp <id>` CLI both dispatch here.
+//!
+//! Scale: full paper replays take minutes; `Scale::Quick` (the default for
+//! `cargo bench`, override with env `MOELESS_FULL=1` or `--full`) shrinks
+//! trace durations while preserving every qualitative relationship.
+
+pub mod ablation;
+pub mod motivation;
+pub mod overall;
+pub mod prediction;
+pub mod sensitivity;
+pub mod tables;
+
+use crate::util::cli::Args;
+
+/// Experiment scale: trace seconds per simulation run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scale {
+    pub duration_s: f64,
+    pub base_rps: f64,
+    pub seed: u64,
+}
+
+impl Scale {
+    pub fn quick() -> Scale {
+        Scale { duration_s: 40.0, base_rps: 8.0, seed: 42 }
+    }
+
+    pub fn full() -> Scale {
+        Scale { duration_s: 240.0, base_rps: 8.0, seed: 42 }
+    }
+
+    /// From env: MOELESS_FULL=1 selects the full scale (benches), and
+    /// MOELESS_SECONDS / MOELESS_SEED override individual knobs.
+    pub fn from_env() -> Scale {
+        let mut s = if std::env::var("MOELESS_FULL").map(|v| v == "1").unwrap_or(false) {
+            Scale::full()
+        } else {
+            Scale::quick()
+        };
+        if let Ok(v) = std::env::var("MOELESS_SECONDS") {
+            if let Ok(x) = v.parse() {
+                s.duration_s = x;
+            }
+        }
+        if let Ok(v) = std::env::var("MOELESS_SEED") {
+            if let Ok(x) = v.parse() {
+                s.seed = x;
+            }
+        }
+        s
+    }
+}
+
+/// Dispatch `moeless bench --exp <id>`.
+pub fn run_from_cli(args: &Args) {
+    let scale = if args.flag("full") { Scale::full() } else { Scale::from_env() };
+    let exp = args.str("exp", "all");
+    run_experiment(&exp, scale);
+}
+
+/// Run one experiment id (or "all").
+pub fn run_experiment(exp: &str, scale: Scale) {
+    match exp {
+        "fig1" => motivation::fig1_imbalance(scale),
+        "fig3" => motivation::fig3_trace(scale),
+        "fig4" => motivation::fig4_motivation(scale),
+        "fig6" => prediction::fig6_similarity(scale),
+        "fig7" => prediction::fig7_finetune(scale),
+        "fig8" => overall::fig8_9_forward(scale, "lmsys"),
+        "fig9" => overall::fig8_9_forward(scale, "sharegpt"),
+        "fig10" => overall::fig10_cost(scale),
+        "fig11" => prediction::fig11_baselines(scale),
+        "fig12" => prediction::fig12_correlation(scale),
+        "fig13" | "fig14" => sensitivity::fig13_14_distance(scale),
+        "fig15" | "fig16" => sensitivity::fig15_16_cv(scale),
+        "fig17" => ablation::fig17_ablation(scale),
+        "table1" => tables::print_table1(),
+        "table2" => tables::print_table2(),
+        "all" => {
+            for e in [
+                "table1", "table2", "fig1", "fig3", "fig4", "fig6", "fig7", "fig8",
+                "fig9", "fig10", "fig11", "fig12", "fig13", "fig15", "fig17",
+            ] {
+                run_experiment(e, scale);
+            }
+        }
+        other => {
+            eprintln!("unknown experiment {other:?}; see DESIGN.md per-experiment index");
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_presets() {
+        assert!(Scale::quick().duration_s < Scale::full().duration_s);
+    }
+}

@@ -1,0 +1,96 @@
+//! Overall performance: Figs. 8/9 (MoE layer forward latency CDFs, four
+//! approaches × three models × two datasets) and Fig. 10 (total inference
+//! cost).
+
+use crate::config::{DatasetSpec, ModelSpec};
+use crate::experiments::Scale;
+use crate::metrics::reduction_pct;
+use crate::sim::run_paper_set;
+use crate::util::benchkit::{fig_header, series_summary};
+
+/// Figs. 8/9: CDF of MoE layer forward time for the four approaches across
+/// the three models on one dataset.
+pub fn fig8_9_forward(scale: Scale, dataset_name: &str) {
+    let dataset = DatasetSpec::by_name(dataset_name).unwrap();
+    let fig = if dataset_name == "lmsys" { "FIG 8" } else { "FIG 9" };
+    let mut avg_meg = Vec::new();
+    let mut avg_eplb = Vec::new();
+    let mut avg_less = Vec::new();
+    for model in ModelSpec::paper_models() {
+        fig_header(fig, &format!("MoE layer forward time CDF — {} on {}", model.name, dataset.name));
+        let reports = run_paper_set(&model, &dataset, scale.duration_s, scale.seed);
+        for r in &reports {
+            let cdf = r.layer_cdf();
+            series_summary(&format!("{}-{}", model.name, dataset.name), &r.policy, &cdf);
+            for q in [10.0, 25.0, 50.0, 75.0, 90.0, 99.0] {
+                println!("row {} p{q} {:.3}ms", r.policy, cdf.p(q));
+            }
+        }
+        avg_meg.push(reports[0].mean_layer_ms());
+        avg_eplb.push(reports[2].mean_layer_ms());
+        avg_less.push(reports[3].mean_layer_ms());
+        let orc = reports[1].mean_layer_ms();
+        let less = reports[3].mean_layer_ms();
+        println!(
+            "summary {}: moeless vs megatron -{:.1}%, vs eplb -{:.1}%, gap to oracle {:.1}%",
+            model.name,
+            reduction_pct(reports[0].mean_layer_ms(), less),
+            reduction_pct(reports[2].mean_layer_ms(), less),
+            (less - orc) / orc.max(1e-9) * 100.0,
+        );
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "headline {dataset_name}: mean layer forward reduction vs megatron-lm {:.1}% \
+         (paper: 43.2%), vs eplb {:.1}% (paper: 21.9%)",
+        reduction_pct(mean(&avg_meg), mean(&avg_less)),
+        reduction_pct(mean(&avg_eplb), mean(&avg_less)),
+    );
+}
+
+/// Fig. 10: total inference cost of the four approaches, three models × two
+/// datasets.
+pub fn fig10_cost(scale: Scale) {
+    fig_header("FIG 10", "total inference cost — four approaches, 3 models x 2 datasets");
+    let mut sums = [0.0f64; 4]; // megatron, oracle, eplb, moeless
+    for dataset in DatasetSpec::paper_datasets() {
+        for model in ModelSpec::paper_models() {
+            let reports = run_paper_set(&model, &dataset, scale.duration_s, scale.seed);
+            for (i, r) in reports.iter().enumerate() {
+                println!(
+                    "row {}-{} {} {:.1}GBs (keepalive {:.1}GBs)",
+                    model.name, dataset.name, r.policy, r.cost_gb_s, r.residency_gb_s
+                );
+                sums[i] += r.cost_gb_s;
+            }
+        }
+    }
+    println!(
+        "headline cost reduction: vs megatron-lm {:.1}% (paper: 92.7%), vs oracle {:.1}% \
+         (paper: 84.1%), vs eplb {:.1}% (paper: 95.1%)",
+        reduction_pct(sums[0], sums[3]),
+        reduction_pct(sums[1], sums[3]),
+        reduction_pct(sums[2], sums[3]),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::PolicyKind;
+    use crate::sim::SimConfig;
+
+    #[test]
+    fn cost_ordering_smoke() {
+        // A tiny run preserves the cost ordering the figure reports.
+        let model = ModelSpec::phi_3_5_moe();
+        let dataset = DatasetSpec::lmsys();
+        let mut meg_cfg = SimConfig::new(model.clone(), dataset.clone(), PolicyKind::Megatron);
+        meg_cfg.duration_s = 10.0;
+        let mut less_cfg = meg_cfg.clone();
+        less_cfg.policy = PolicyKind::Moeless;
+        let meg = crate::sim::run(&meg_cfg);
+        let less = crate::sim::run(&less_cfg);
+        assert!(less.cost_gb_s < meg.cost_gb_s);
+    }
+}

@@ -1,0 +1,50 @@
+//! # MoEless: Efficient MoE LLM Serving via Serverless Computing
+//!
+//! Reproduction of the CS.DC 2026 paper (see DESIGN.md). This crate is the
+//! Layer-3 Rust coordinator: it owns routing, batching, expert-load
+//! prediction, expert scaling (Algorithm 1), expert placement (Algorithm 2),
+//! the serverless function runtime, the GPU cluster/cost model, the
+//! workload generators, and every experiment driver. Compute runs in
+//! AOT-compiled XLA artifacts (JAX + Pallas at build time) executed through
+//! the PJRT CPU client — Python is never on the request path.
+//!
+//! Module map (DESIGN.md system inventory S1–S23):
+//!
+//! * [`util`] — offline substrates: JSON, PRNG, CLI, threads, stats,
+//!   benchkit, property testing.
+//! * [`tensor`] — host tensors + the artifact weight store.
+//! * [`config`] — model specs (paper Table 1), cluster, datasets, knobs.
+//! * [`runtime`] — PJRT artifact loading/execution (Tier A).
+//! * [`model`] — decomposed + monolithic TinyMoE serving over artifacts.
+//! * [`cluster`] — GPU model + the paper's §3.3 latency/cost model.
+//! * [`serverless`] — expert function lifecycle (cold/warm, keep-alive).
+//! * [`predictor`] — expert load predictors (§4.1) + accuracy metrics.
+//! * [`scaler`] — Expert Scaler, Algorithm 1.
+//! * [`placer`] — Expert Placer, Algorithm 2.
+//! * [`router`] — request router + per-second continuous batcher.
+//! * [`engine`] — the serving engine: per-layer pipeline with prediction
+//!   overlap, misprediction fallback, metric capture.
+//! * [`baselines`] — Megatron-LM static EP, EPLB, Oracle.
+//! * [`workload`] — Azure-style traces, dataset length models, the
+//!   layer-Markov routing generator.
+//! * [`sim`] — the discrete-event simulation driver (Tier B).
+//! * [`metrics`] — recorders and paper-style reports.
+//! * [`experiments`] — one driver per paper figure/table.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod engine;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod placer;
+pub mod predictor;
+pub mod router;
+pub mod runtime;
+pub mod scaler;
+pub mod serverless;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+pub mod workload;

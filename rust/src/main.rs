@@ -1,0 +1,32 @@
+//! `moeless` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   serve   — Tier-A end-to-end serving of TinyMoE over real PJRT
+//!             artifacts with serverless experts (`--requests`, `--policy`)
+//!   replay  — Tier-B trace replay on the cluster simulator
+//!             (`--model`, `--dataset`, `--policy`, `--seconds`)
+//!   bench   — run one experiment driver (`--exp fig8`, `--exp table1`, ...)
+//!   report  — print Table 1 + config inventory
+
+use moeless::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("serve") => moeless::model::cli::serve(&args),
+        Some("replay") => moeless::sim::cli::replay(&args),
+        Some("bench") => moeless::experiments::run_from_cli(&args),
+        Some("report") => moeless::experiments::tables::print_table1(),
+        _ => {
+            eprintln!(
+                "usage: moeless <serve|replay|bench|report> [--opt value]...\n\
+                 \n\
+                 serve   Tier-A: serve TinyMoE end-to-end over PJRT artifacts\n\
+                 replay  Tier-B: replay an Azure-style trace on the simulator\n\
+                 bench   run one paper experiment (--exp fig1|fig3|...|table2)\n\
+                 report  print model/cluster inventory (Table 1)"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Metrics recording + reporting (substrate S22): everything the paper's
+//! evaluation measures, captured per run and rendered in the uniform
+//! bench-output format.
+
+use crate::util::stats::{Cdf, Summary};
+
+/// Accumulated measurements of one serving run (one policy × model ×
+/// dataset × trace).
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub policy: String,
+    pub model: String,
+    pub dataset: String,
+    /// Every MoE layer forward latency (ms) across all layers/iterations —
+    /// the Figs. 8/9/17 CDF population.
+    pub layer_forward_ms: Vec<f64>,
+    /// §3.3 inference cost (GB·s): expert terms + misc terms.
+    pub cost_gb_s: f64,
+    /// Serverless keep-alive residency overhead (GB·s), reported alongside.
+    pub residency_gb_s: f64,
+    /// Replica count charged per layer forward (Figs. 13-16 right axes).
+    pub replicas_per_layer: Vec<f64>,
+    pub pred_accuracy: Vec<f64>,
+    /// Request-level SLO metrics: time-to-first-token and end-to-end
+    /// latency per completed request (ms).
+    pub ttft_ms: Vec<f64>,
+    pub e2e_ms: Vec<f64>,
+    pub cold_starts: u64,
+    pub warm_fraction: f64,
+    pub iterations: u64,
+    pub completed_requests: u64,
+    pub tokens_processed: u64,
+    /// Virtual seconds of serving simulated.
+    pub sim_duration_s: f64,
+    /// Wall-clock seconds the simulation itself took (perf metric).
+    pub wall_s: f64,
+}
+
+impl RunReport {
+    pub fn layer_cdf(&self) -> Cdf {
+        Cdf::of(self.layer_forward_ms.clone())
+    }
+
+    pub fn mean_layer_ms(&self) -> f64 {
+        Summary::of(&self.layer_forward_ms).mean
+    }
+
+    pub fn mean_replicas(&self) -> f64 {
+        Summary::of(&self.replicas_per_layer).mean
+    }
+
+    pub fn mean_pred_accuracy(&self) -> f64 {
+        if self.pred_accuracy.is_empty() {
+            1.0
+        } else {
+            Summary::of(&self.pred_accuracy).mean
+        }
+    }
+
+    /// Request TTFT / e2e latency distributions (SLO reporting).
+    pub fn ttft_cdf(&self) -> Cdf {
+        Cdf::of(self.ttft_ms.clone())
+    }
+
+    pub fn e2e_cdf(&self) -> Cdf {
+        Cdf::of(self.e2e_ms.clone())
+    }
+
+    /// One-line SLO summary.
+    pub fn slo_line(&self) -> String {
+        let t = self.ttft_cdf();
+        let e = self.e2e_cdf();
+        format!(
+            "slo policy={:<16} ttft p50={:.0}ms p99={:.0}ms | e2e p50={:.2}s p99={:.2}s",
+            self.policy,
+            t.p(50.0),
+            t.p(99.0),
+            e.p(50.0) / 1e3,
+            e.p(99.0) / 1e3
+        )
+    }
+
+    /// Simulated serving throughput (tokens per simulated second).
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.sim_duration_s > 0.0 {
+            self.tokens_processed as f64 / self.sim_duration_s
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line summary in the bench-output format.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "run policy={:<16} model={:<14} dataset={:<8} mean_layer={:.3}ms p99={:.3}ms \
+             cost={:.1}GBs replicas={:.1} acc={:.3} cold={} warm_frac={:.3} iters={} reqs={}",
+            self.policy,
+            self.model,
+            self.dataset,
+            self.mean_layer_ms(),
+            self.layer_cdf().p(99.0),
+            self.cost_gb_s,
+            self.mean_replicas(),
+            self.mean_pred_accuracy(),
+            self.cold_starts,
+            self.warm_fraction,
+            self.iterations,
+            self.completed_requests,
+        )
+    }
+}
+
+/// Relative improvement helpers for paper-style claims.
+pub fn reduction_pct(baseline: f64, ours: f64) -> f64 {
+    if baseline <= 0.0 {
+        0.0
+    } else {
+        (baseline - ours) / baseline * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_aggregates() {
+        let r = RunReport {
+            policy: "x".into(),
+            layer_forward_ms: vec![1.0, 2.0, 3.0],
+            replicas_per_layer: vec![8.0, 10.0],
+            pred_accuracy: vec![0.9, 0.8],
+            tokens_processed: 500,
+            sim_duration_s: 10.0,
+            ..Default::default()
+        };
+        assert!((r.mean_layer_ms() - 2.0).abs() < 1e-12);
+        assert!((r.mean_replicas() - 9.0).abs() < 1e-12);
+        assert!((r.mean_pred_accuracy() - 0.85).abs() < 1e-12);
+        assert!((r.tokens_per_s() - 50.0).abs() < 1e-12);
+        assert!(r.summary_line().contains("policy=x"));
+    }
+
+    #[test]
+    fn reduction() {
+        assert!((reduction_pct(10.0, 5.7) - 43.0).abs() < 1e-9);
+        assert_eq!(reduction_pct(0.0, 1.0), 0.0);
+    }
+}

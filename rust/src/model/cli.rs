@@ -1,0 +1,59 @@
+//! `moeless serve` — Tier-A end-to-end serving from the command line.
+
+use std::time::Instant;
+
+use crate::config::MoelessParams;
+use crate::model::decomposed::DecomposedServer;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg;
+
+/// Serve a batch of synthetic requests over the real PJRT artifacts,
+/// validating against the monolithic model and reporting throughput +
+/// serverless statistics.
+pub fn serve(args: &Args) {
+    let mut params = MoelessParams::default();
+    params.prediction_distance = args.usize("distance", 1);
+    params.cv_threshold = args.f64("cv", 0.2);
+    let n_new = args.usize("tokens", 8);
+    let rounds = args.usize("requests", 2);
+    let seed = args.u64("seed", 42);
+
+    let Some(mut srv) = DecomposedServer::open_default(params) else {
+        eprintln!("artifacts not found — run `make artifacts` first");
+        std::process::exit(1);
+    };
+    srv.use_predictor = !args.flag("no-predictor");
+    let d = srv.dims;
+    println!(
+        "serving tiny-moe: {} layers x {} experts (top-{}), batch {} x seq {}, capacity {}",
+        d.n_layers, d.n_experts, d.top_k, d.batch, d.seq, d.capacity
+    );
+
+    let mut rng = Pcg::seeded(seed);
+    let started = Instant::now();
+    let mut tokens_out = 0usize;
+    for round in 0..rounds {
+        let prompts: Vec<Vec<i32>> = (0..d.batch)
+            .map(|_| {
+                let len = rng.range(4, d.seq / 2);
+                (0..len).map(|_| rng.below(d.vocab) as i32).collect()
+            })
+            .collect();
+        let (seqs, stats) = srv.generate(&prompts, n_new).expect("serving failed");
+        tokens_out += seqs.len() * n_new;
+        println!(
+            "batch {round}: generated {}x{} tokens | expert invocations {} | cold {} warm {} \
+             mispred {} | pred acc {:.3}",
+            d.batch, n_new, stats.expert_invocations, stats.cold_starts, stats.warm_starts,
+            stats.mispredictions, stats.pred_accuracy
+        );
+    }
+    let secs = started.elapsed().as_secs_f64();
+    println!(
+        "throughput: {:.1} tokens/s ({} tokens in {:.2}s) | warm fraction {:.3}",
+        tokens_out as f64 / secs,
+        tokens_out,
+        secs,
+        srv.manager.warm_fraction()
+    );
+}

@@ -1,0 +1,375 @@
+//! The decomposed (serverless) TinyMoE serving path — MoEless end-to-end
+//! over real compiled artifacts.
+//!
+//! Per layer, the coordinator: runs the attention artifact; runs the gate
+//! artifact (the fused Pallas top-k kernel) to obtain the sparse routing
+//! matrix; derives expert loads; **scales** (Algorithm 1) and **places**
+//! (Algorithm 2) serverless expert instances on the simulated GPU slots;
+//! invokes the shared `tiny_expert` executable once per instance with that
+//! expert's weights and its gathered token tile (capacity-padded); and
+//! scatter-combines `h + Σ w·y` back into the residual stream.
+//!
+//! With `use_predictor`, the scaling plan for layer l is made from the
+//! *fine-tuned predictor* run on layer l−d hidden states (the real §4.1
+//! mechanism, real weights from `finetune.py`); mispredicted experts are
+//! repaired on demand and counted.
+
+use anyhow::Result;
+
+use crate::cluster::Cluster;
+use crate::config::{ClusterSpec, MoelessParams};
+use crate::model::{length_mask, ModelDims};
+use crate::placer::Placer;
+use crate::runtime::{literal_to_tensor, tensor_to_literal, tokens_to_literal, Runtime};
+use crate::scaler::Scaler;
+use crate::serverless::FunctionManager;
+use crate::tensor::store::WeightStore;
+use crate::tensor::Tensor;
+
+/// Serving statistics of one decomposed forward.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    /// Serverless expert function invocations issued.
+    pub expert_invocations: usize,
+    /// Replica instances created beyond one-per-loaded-expert.
+    pub extra_replicas: usize,
+    pub cold_starts: usize,
+    pub warm_starts: usize,
+    /// Experts the predictor missed (repaired on demand).
+    pub mispredictions: usize,
+    /// Mean measured top-k load prediction accuracy (when predicting).
+    pub pred_accuracy: f64,
+}
+
+/// The Tier-A serverless serving engine.
+pub struct DecomposedServer {
+    pub dims: ModelDims,
+    store: WeightStore,
+    rt: Runtime,
+    scaler: Scaler,
+    placer: Placer,
+    pub manager: FunctionManager,
+    pub cluster: Cluster,
+    pub params: MoelessParams,
+    /// Plan from predictor output instead of actual gate output.
+    pub use_predictor: bool,
+    /// Virtual serving clock for keep-alive accounting (one tick per layer).
+    now_s: f64,
+}
+
+impl DecomposedServer {
+    pub fn new(store: WeightStore, rt: Runtime, params: MoelessParams) -> DecomposedServer {
+        let dims = ModelDims::from_store(&store);
+        // Tier-A "GPUs": 8 simulated slots; memory per expert instance is
+        // the real tile+weights footprint (tiny).
+        let spec = ClusterSpec { n_gpus: 8, mem_per_gpu_gb: 1.0, ..ClusterSpec::a6000_x8() };
+        let expert_mem = 0.01;
+        let max_slots = (dims.n_experts as f64 * params.mem_cap_factor).round() as usize;
+        DecomposedServer {
+            dims,
+            store,
+            rt,
+            scaler: Scaler::new(params.cv_threshold, max_slots),
+            placer: Placer,
+            manager: FunctionManager::new(
+                expert_mem,
+                params.keep_alive_s,
+                spec.cold_start_ms,
+                dims.n_layers,
+                dims.n_experts,
+            ),
+            cluster: Cluster::new(spec),
+            params,
+            use_predictor: true,
+            now_s: 0.0,
+        }
+    }
+
+    pub fn open_default(params: MoelessParams) -> Option<DecomposedServer> {
+        let (store, rt) = crate::model::open_default()?;
+        Some(DecomposedServer::new(store, rt, params))
+    }
+
+    fn weight(&mut self, name: &str) -> Result<Tensor> {
+        self.store.tensor(name)
+    }
+
+    /// Run the gate (or predictor) artifact on flattened hidden states.
+    fn run_gate(&mut self, moe_in: &Tensor, wg_name: &str) -> Result<Tensor> {
+        let wg = self.weight(wg_name)?;
+        let out = self.rt.execute(
+            "tiny_gate",
+            &[tensor_to_literal(moe_in)?, tensor_to_literal(&wg)?],
+        )?;
+        literal_to_tensor(&out[0])
+    }
+
+    /// One serverless expert function invocation: capacity tile through the
+    /// compiled Pallas SwiGLU FFN with expert (layer, e) weights.
+    fn invoke_expert(&mut self, layer: usize, e: usize, tile: &Tensor) -> Result<Tensor> {
+        let w1 = self.weight(&format!("layer{layer}.w1"))?.slice0(e);
+        let w2 = self.weight(&format!("layer{layer}.w2"))?.slice0(e);
+        let w3 = self.weight(&format!("layer{layer}.w3"))?.slice0(e);
+        let out = self.rt.execute(
+            "tiny_expert",
+            &[
+                tensor_to_literal(tile)?,
+                tensor_to_literal(&w1)?,
+                tensor_to_literal(&w2)?,
+                tensor_to_literal(&w3)?,
+            ],
+        )?;
+        literal_to_tensor(&out[0])
+    }
+
+    /// Full decomposed forward: logits + serving stats.
+    pub fn forward(&mut self, tokens: &[i32], lens: &[usize]) -> Result<(Tensor, ServeStats)> {
+        let d = self.dims;
+        let mask = length_mask(lens, d.batch, d.seq);
+        let mut stats = ServeStats { pred_accuracy: 1.0, ..Default::default() };
+        let mut acc_sum = 0.0f64;
+        let mut acc_n = 0usize;
+
+        // Embed.
+        let wemb = self.weight("wemb")?;
+        let wpos = self.weight("wpos")?;
+        let out = self.rt.execute(
+            "tiny_embed",
+            &[
+                tokens_to_literal(tokens, &[d.batch, d.seq])?,
+                tensor_to_literal(&wemb)?,
+                tensor_to_literal(&wpos)?,
+            ],
+        )?;
+        let mut x = literal_to_tensor(&out[0])?;
+
+        // Hidden states of previous layers for the predictor (distance d).
+        let mut moe_in_history: Vec<Tensor> = Vec::with_capacity(d.n_layers);
+
+        for layer in 0..d.n_layers {
+            // Attention block -> (h, moe_in).
+            let mut attn_inputs =
+                vec![tensor_to_literal(&x)?, tensor_to_literal(&mask)?];
+            for suffix in ["ln1.g", "ln1.b", "wq", "wk", "wv", "wo", "ln2.g", "ln2.b"] {
+                let w = self.weight(&format!("layer{layer}.{suffix}"))?;
+                attn_inputs.push(tensor_to_literal(&w)?);
+            }
+            let outs = self.rt.execute("tiny_attn", &attn_inputs)?;
+            let h = literal_to_tensor(&outs[0])?;
+            let moe_in = literal_to_tensor(&outs[1])?;
+
+            // Actual routing (the fused Pallas gate artifact).
+            let route = self.run_gate(&moe_in, &format!("layer{layer}.wg"))?;
+            let actual_loads: Vec<f64> = (0..d.n_experts)
+                .map(|e| (0..d.n_tokens()).filter(|&t| route.row(t)[e] > 0.0).count() as f64)
+                .collect();
+
+            // Plan loads: speculative prediction from layer-(l-d) states.
+            let dist = self.params.prediction_distance;
+            let plan_loads = if self.use_predictor && layer >= dist {
+                let src = &moe_in_history[layer - dist];
+                let pred_name = format!("pred.l{}.d{dist}.wg", layer - dist);
+                if self.store.has(&pred_name) {
+                    let pred_route = self.run_gate(&src.clone(), &pred_name)?;
+                    let pl: Vec<f64> = (0..d.n_experts)
+                        .map(|e| {
+                            (0..d.n_tokens())
+                                .filter(|&t| pred_route.row(t)[e] > 0.0)
+                                .count() as f64
+                        })
+                        .collect();
+                    acc_sum += crate::predictor::accuracy::topk_overlap(
+                        &pl,
+                        &actual_loads,
+                        d.top_k.max(2),
+                    );
+                    acc_n += 1;
+                    pl
+                } else {
+                    actual_loads.clone()
+                }
+            } else {
+                actual_loads.clone()
+            };
+
+            // Algorithm 1: scale on planned loads; repair mispredictions.
+            let mut plan = self.scaler.scale(&plan_loads);
+            for (e, &w) in actual_loads.iter().enumerate() {
+                if w > 0.0 && plan.replicas[e] == 0 {
+                    plan.replicas[e] = 1;
+                    stats.mispredictions += 1;
+                }
+            }
+
+            // Algorithm 2: place on the simulated GPU slots.
+            let mut previous: Vec<Vec<usize>> =
+                (0..d.n_experts).map(|e| self.manager.live_on(layer, e)).collect();
+            let placement = self.placer.place(
+                &plan.replicas,
+                &plan_loads,
+                &mut previous,
+                &self.cluster,
+                self.manager.expert_mem_gb,
+            );
+            let apply = self.manager.apply_layer(
+                &mut self.cluster,
+                layer,
+                &placement.expert_gpu_pairs(),
+                self.now_s,
+            );
+            stats.cold_starts += apply.cold;
+            stats.warm_starts += apply.warm + apply.prewarmed;
+            stats.extra_replicas +=
+                plan.total().saturating_sub(actual_loads.iter().filter(|&&w| w > 0.0).count());
+
+            // Serve: gather rows per expert, split across replicas
+            // (capacity-bounded tiles), invoke, weighted scatter.
+            let mut combined = Tensor::zeros(&[d.n_tokens(), d.d_model]);
+            for e in 0..d.n_experts {
+                let rows: Vec<usize> = (0..d.n_tokens())
+                    .filter(|&t| route.row(t)[e] > 0.0)
+                    .collect();
+                if rows.is_empty() {
+                    continue;
+                }
+                let r = plan.replicas[e].max(1);
+                let chunk = rows.len().div_ceil(r).min(d.capacity);
+                for part in rows.chunks(chunk.max(1)) {
+                    let tile = moe_in.gather_rows_padded(part, d.capacity);
+                    let y = self.invoke_expert(layer, e, &tile)?;
+                    let scales: Vec<f32> =
+                        part.iter().map(|&t| route.row(t)[e]).collect();
+                    combined.scatter_add_scaled(part, &y, &scales);
+                    stats.expert_invocations += 1;
+                }
+            }
+
+            // Residual: x = h + combined (reshaped back to [B, T, D]).
+            x = h.add(&combined.reshape(&[d.batch, d.seq, d.d_model]));
+            moe_in_history.push(moe_in);
+            self.now_s += 0.001; // one virtual ms per layer for keep-alive
+        }
+        self.manager.reap(&mut self.cluster, self.now_s);
+
+        // Head.
+        let lnfg = self.weight("lnf.g")?;
+        let lnfb = self.weight("lnf.b")?;
+        let whead = self.weight("whead")?;
+        let outs = self.rt.execute(
+            "tiny_head",
+            &[
+                tensor_to_literal(&x)?,
+                tensor_to_literal(&lnfg)?,
+                tensor_to_literal(&lnfb)?,
+                tensor_to_literal(&whead)?,
+            ],
+        )?;
+        if acc_n > 0 {
+            stats.pred_accuracy = acc_sum / acc_n as f64;
+        }
+        Ok((literal_to_tensor(&outs[0])?, stats))
+    }
+
+    /// Greedy-decode `n_new` tokens for a batch of prompts (auto-regressive
+    /// serving loop; each iteration is a full decomposed forward).
+    pub fn generate(
+        &mut self,
+        prompts: &[Vec<i32>],
+        n_new: usize,
+    ) -> Result<(Vec<Vec<i32>>, ServeStats)> {
+        let d = self.dims;
+        assert_eq!(prompts.len(), d.batch, "batch size is fixed by the artifacts");
+        let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
+        let mut total = ServeStats { pred_accuracy: 1.0, ..Default::default() };
+        let mut accs = Vec::new();
+        for _ in 0..n_new {
+            let mut tokens = vec![0i32; d.n_tokens()];
+            let mut lens = vec![0usize; d.batch];
+            for (b, s) in seqs.iter().enumerate() {
+                let len = s.len().min(d.seq);
+                lens[b] = len;
+                tokens[b * d.seq..b * d.seq + len].copy_from_slice(&s[s.len() - len..]);
+            }
+            let (logits, stats) = self.forward(&tokens, &lens)?;
+            for (b, s) in seqs.iter_mut().enumerate() {
+                let pos = lens[b] - 1;
+                let next = logits.reshape(&[d.n_tokens(), d.vocab]).argmax_row(b * d.seq + pos);
+                s.push(next as i32);
+            }
+            total.expert_invocations += stats.expert_invocations;
+            total.cold_starts += stats.cold_starts;
+            total.warm_starts += stats.warm_starts;
+            total.mispredictions += stats.mispredictions;
+            total.extra_replicas += stats.extra_replicas;
+            accs.push(stats.pred_accuracy);
+        }
+        if !accs.is_empty() {
+            total.pred_accuracy = accs.iter().sum::<f64>() / accs.len() as f64;
+        }
+        Ok((seqs, total))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{monolithic_logits, open_default};
+
+    fn test_batch(dims: ModelDims) -> (Vec<i32>, Vec<usize>) {
+        let mut tokens = vec![0i32; dims.n_tokens()];
+        for (i, t) in tokens.iter_mut().enumerate() {
+            *t = ((i * 31 + 7) % dims.vocab) as i32;
+        }
+        let lens = vec![dims.seq, dims.seq / 2, dims.seq - 3, dims.seq / 2 + 1];
+        (tokens, lens)
+    }
+
+    #[test]
+    fn decomposed_matches_monolithic() {
+        let Some(mut srv) = DecomposedServer::open_default(MoelessParams::default()) else {
+            return;
+        };
+        let (tokens, lens) = test_batch(srv.dims);
+        let (deco, stats) = srv.forward(&tokens, &lens).unwrap();
+
+        let (mut store, rt) = open_default().unwrap();
+        let mask = length_mask(&lens, srv.dims.batch, srv.dims.seq);
+        let mono = monolithic_logits(&rt, &mut store, &tokens, &mask).unwrap();
+        let diff = deco.max_abs_diff(&mono);
+        assert!(diff < 1e-3, "decomposed vs monolithic max diff {diff}");
+        assert!(stats.expert_invocations > 0);
+    }
+
+    #[test]
+    fn predictor_driven_plan_still_exact() {
+        // Prediction only affects *scaling*, never routing: logits must
+        // stay correct even with mispredictions.
+        let Some(mut srv) = DecomposedServer::open_default(MoelessParams::default()) else {
+            return;
+        };
+        srv.use_predictor = true;
+        let (tokens, lens) = test_batch(srv.dims);
+        let (a, s1) = srv.forward(&tokens, &lens).unwrap();
+        srv.use_predictor = false;
+        let (b, _) = srv.forward(&tokens, &lens).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-4);
+        assert!(s1.pred_accuracy > 0.3, "measured accuracy {}", s1.pred_accuracy);
+    }
+
+    #[test]
+    fn generate_produces_tokens_and_warm_reuse() {
+        let Some(mut srv) = DecomposedServer::open_default(MoelessParams::default()) else {
+            return;
+        };
+        let d = srv.dims;
+        let prompts: Vec<Vec<i32>> =
+            (0..d.batch).map(|b| (0..5).map(|i| ((b * 17 + i * 3) % d.vocab) as i32).collect()).collect();
+        let (seqs, stats) = srv.generate(&prompts, 3).unwrap();
+        for (p, s) in prompts.iter().zip(&seqs) {
+            assert_eq!(s.len(), p.len() + 3);
+            assert_eq!(&s[..p.len()], &p[..]);
+        }
+        // Steady-state serving is warm (keep-alive across iterations).
+        assert!(stats.warm_starts > stats.cold_starts, "{stats:?}");
+    }
+}

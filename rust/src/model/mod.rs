@@ -1,0 +1,130 @@
+//! Tier-A model execution (substrate S11): serve TinyMoE end-to-end from
+//! Rust over the compiled PJRT artifacts — the proof that all three layers
+//! compose with Python off the request path.
+//!
+//! * [`decomposed`] — the MoEless serving path: attention/gate/head
+//!   artifacts plus *per-expert serverless function invocations*, routed,
+//!   scaled (Algorithm 1) and placed (Algorithm 2) by the coordinator.
+//! * [`monolithic`] (here) — the single `tiny_model` artifact, used as the
+//!   numerical ground truth the decomposed path must match.
+
+pub mod cli;
+pub mod decomposed;
+
+pub use decomposed::DecomposedServer;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::{literal_to_tensor, tensor_to_literal, tokens_to_literal, Runtime};
+use crate::tensor::store::WeightStore;
+use crate::tensor::Tensor;
+
+/// TinyMoE dimensions read from the artifact manifest (the Python
+/// `TinyMoEConfig` twin; the manifest is the source of truth).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub capacity: usize,
+}
+
+impl ModelDims {
+    pub fn from_store(store: &WeightStore) -> ModelDims {
+        let m = store.manifest.get("model");
+        ModelDims {
+            vocab: m.get("vocab").as_usize(),
+            d_model: m.get("d_model").as_usize(),
+            n_layers: m.get("n_layers").as_usize(),
+            n_experts: m.get("n_experts").as_usize(),
+            top_k: m.get("top_k").as_usize(),
+            batch: m.get("batch").as_usize(),
+            seq: m.get("seq").as_usize(),
+            capacity: m.get("capacity").as_usize(),
+        }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+/// Run the monolithic `tiny_model` artifact: ground-truth logits.
+pub fn monolithic_logits(
+    rt: &Runtime,
+    store: &mut WeightStore,
+    tokens: &[i32],
+    len_mask: &Tensor,
+) -> Result<Tensor> {
+    let dims = ModelDims::from_store(store);
+    let abi = store.artifacts["tiny_model"].clone();
+    let mut inputs = vec![
+        tokens_to_literal(tokens, &[dims.batch, dims.seq])?,
+        tensor_to_literal(len_mask)?,
+    ];
+    for (name, _) in &abi.weight_params {
+        inputs.push(tensor_to_literal(&store.tensor(name)?)?);
+    }
+    let out = rt.execute("tiny_model", &inputs)?;
+    literal_to_tensor(&out[0])
+}
+
+/// Build a `[batch, seq]` length mask (1.0 where t < len).
+pub fn length_mask(lens: &[usize], batch: usize, seq: usize) -> Tensor {
+    assert_eq!(lens.len(), batch);
+    let mut m = Tensor::zeros(&[batch, seq]);
+    for (b, &len) in lens.iter().enumerate() {
+        for t in 0..len.min(seq) {
+            m.row_mut(b)[t] = 1.0;
+        }
+    }
+    m
+}
+
+/// Open (store, runtime) from the default artifacts directory, or `None`
+/// when artifacts haven't been built (tests skip gracefully).
+pub fn open_default() -> Option<(WeightStore, Runtime)> {
+    let dir = crate::tensor::store::artifacts_dir();
+    open_dir(&dir)
+}
+
+pub fn open_dir(dir: &Path) -> Option<(WeightStore, Runtime)> {
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let store = WeightStore::open(dir).ok()?;
+    let rt = Runtime::load(dir, &store).ok()?;
+    Some((store, rt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_mask_shape() {
+        let m = length_mask(&[2, 4], 2, 4);
+        assert_eq!(m.row(0), &[1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(m.row(1), &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn monolithic_runs_and_is_deterministic() {
+        let Some((mut store, rt)) = open_default() else { return };
+        let dims = ModelDims::from_store(&store);
+        let tokens: Vec<i32> =
+            (0..dims.n_tokens()).map(|i| (i * 7 % dims.vocab) as i32).collect();
+        let mask = length_mask(&vec![dims.seq; dims.batch], dims.batch, dims.seq);
+        let a = monolithic_logits(&rt, &mut store, &tokens, &mask).unwrap();
+        let b = monolithic_logits(&rt, &mut store, &tokens, &mask).unwrap();
+        assert_eq!(a.shape, vec![dims.batch, dims.seq, dims.vocab]);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        assert!(a.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,247 @@
+//! Expert Placer — the paper's Algorithm 2 (substrate S16).
+//!
+//! Assign every replica of a layer's scaling plan to a GPU, maximizing
+//! *function locality* (reuse live instances from the previous placement
+//! for warm starts) and balancing per-GPU aggregated loads (classic
+//! join-the-shortest-queue), under per-GPU memory constraints.
+//!
+//! Replicas are processed most-loaded first, so the heavy ones land on the
+//! emptiest GPUs — the standard LPT-style greedy that keeps
+//! `max_g Σ W` (the all-to-all straggler term of §3.3) tight.
+
+use crate::cluster::Cluster;
+
+/// A placed replica: expert, replica ordinal, GPU, assigned load, and
+/// whether a previous live instance was reused (warm start).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Placement {
+    pub expert: usize,
+    pub replica: usize,
+    pub gpu: usize,
+    pub load: f64,
+    pub reused: bool,
+}
+
+/// The full placement of one layer.
+#[derive(Clone, Debug, Default)]
+pub struct PlacePlan {
+    pub placements: Vec<Placement>,
+}
+
+impl PlacePlan {
+    /// Per-GPU aggregated loads (the T_g input).
+    pub fn gpu_loads(&self, n_gpus: usize) -> Vec<f64> {
+        let mut loads = vec![0.0; n_gpus];
+        for p in &self.placements {
+            loads[p.gpu] += p.load;
+        }
+        loads
+    }
+
+    pub fn max_gpu_load(&self, n_gpus: usize) -> f64 {
+        self.gpu_loads(n_gpus).into_iter().fold(0.0, f64::max)
+    }
+
+    pub fn reused_count(&self) -> usize {
+        self.placements.iter().filter(|p| p.reused).count()
+    }
+
+    /// (expert, gpu) pairs, the serverless manager's reconciliation input.
+    pub fn expert_gpu_pairs(&self) -> Vec<(usize, usize)> {
+        self.placements.iter().map(|p| (p.expert, p.gpu)).collect()
+    }
+}
+
+/// Expert Placer (Algorithm 2).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Placer;
+
+impl Placer {
+    /// Place replicas for one layer.
+    ///
+    /// * `replicas[e]` — the scaling plan (replica count per expert).
+    /// * `loads[e]` — the (predicted) expert loads; each replica carries
+    ///   `loads[e] / replicas[e]`.
+    /// * `previous[e]` — GPUs hosting live instances of expert e from the
+    ///   last placement (the warm-start candidates). Consumed in place
+    ///   (entries are removed as they're reused) — callers rebuild it per
+    ///   layer anyway, and this avoids a per-call deep clone (§Perf).
+    /// * `cluster` — provides JSQ state; this function tracks its own
+    ///   tentative per-GPU load/memory so the caller applies effects via
+    ///   the serverless manager afterwards.
+    pub fn place(
+        &self,
+        replicas: &[usize],
+        loads: &[f64],
+        previous: &mut [Vec<usize>],
+        cluster: &Cluster,
+        expert_mem_gb: f64,
+    ) -> PlacePlan {
+        let n_gpus = cluster.n_gpus();
+        let mut gpu_load = vec![0.0f64; n_gpus];
+        let mut gpu_free: Vec<f64> = cluster.gpus.iter().map(|g| g.free_gb()).collect();
+        // Remaining warm instances usable per expert (each reusable once).
+        let warm: &mut [Vec<usize>] = previous;
+
+        // Work list: every replica with its load, most-loaded first
+        // (Algorithm 2 line 4: select most-loaded r*).
+        let mut work: Vec<Placement> = Vec::new();
+        for (e, &r) in replicas.iter().enumerate() {
+            for k in 0..r {
+                work.push(Placement {
+                    expert: e,
+                    replica: k,
+                    gpu: usize::MAX,
+                    load: loads[e] / r as f64,
+                    reused: false,
+                });
+            }
+        }
+        work.sort_by(|a, b| {
+            b.load
+                .partial_cmp(&a.load)
+                .unwrap()
+                .then(a.expert.cmp(&b.expert))
+                .then(a.replica.cmp(&b.replica))
+        });
+
+        for p in &mut work {
+            // Warm-start reuse (line 5-6): a live instance of this expert
+            // exists — no data transfer, no init. The instance already
+            // holds memory, so no new reservation.
+            if let Some(pos) = pick_warm(&warm[p.expert], &gpu_load) {
+                let gpu = warm[p.expert].swap_remove(pos);
+                p.gpu = gpu;
+                p.reused = true;
+                gpu_load[gpu] += p.load;
+                continue;
+            }
+            // JSQ (line 8): least-loaded GPU with room.
+            let gpu = (0..n_gpus)
+                .filter(|&g| gpu_free[g] >= expert_mem_gb - 1e-9)
+                .min_by(|&a, &b| {
+                    gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b))
+                })
+                // Memory exhausted everywhere: fall back to least-loaded
+                // (the manager will evict an idle instance to make room).
+                .unwrap_or_else(|| {
+                    (0..n_gpus)
+                        .min_by(|&a, &b| {
+                            gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b))
+                        })
+                        .unwrap()
+                });
+            p.gpu = gpu;
+            gpu_load[gpu] += p.load;
+            gpu_free[gpu] -= expert_mem_gb;
+        }
+
+        PlacePlan { placements: work }
+    }
+}
+
+/// Among warm candidate GPUs, prefer the least-loaded one (locality first,
+/// then balance among the local options).
+fn pick_warm(cands: &[usize], gpu_load: &[f64]) -> Option<usize> {
+    cands
+        .iter()
+        .enumerate()
+        .min_by(|(_, &a), (_, &b)| {
+            gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b))
+        })
+        .map(|(pos, _)| pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn cluster(n: usize) -> Cluster {
+        Cluster::new(ClusterSpec { n_gpus: n, ..ClusterSpec::a6000_x8() })
+    }
+
+    fn no_prev(n: usize) -> Vec<Vec<usize>> {
+        vec![Vec::new(); n]
+    }
+
+    #[test]
+    fn balances_gpu_loads() {
+        let c = cluster(4);
+        let plan = Placer.place(
+            &[1, 1, 1, 1, 1, 1, 1, 1],
+            &[80.0, 70.0, 60.0, 50.0, 40.0, 30.0, 20.0, 10.0],
+            &mut no_prev(8),
+            &c,
+            0.33,
+        );
+        let loads = plan.gpu_loads(4);
+        let max = loads.iter().cloned().fold(0.0, f64::max);
+        let min = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+        // LPT greedy keeps the spread tight: 80+10, 70+20, 60+30, 50+40.
+        assert!((max - 90.0).abs() < 1e-9 && (min - 90.0).abs() < 1e-9, "{loads:?}");
+    }
+
+    #[test]
+    fn warm_instances_are_reused() {
+        let c = cluster(4);
+        let mut prev = vec![vec![2], vec![], vec![0, 1], vec![]];
+        let plan = Placer.place(&[1, 1, 2, 0], &[50.0, 40.0, 60.0, 0.0], &mut prev, &c, 0.33);
+        assert_eq!(plan.reused_count(), 3);
+        let e0 = plan.placements.iter().find(|p| p.expert == 0).unwrap();
+        assert_eq!(e0.gpu, 2);
+        assert!(e0.reused);
+        // Expert 2's two replicas land on its two previous GPUs.
+        let mut e2: Vec<usize> = plan
+            .placements
+            .iter()
+            .filter(|p| p.expert == 2)
+            .map(|p| p.gpu)
+            .collect();
+        e2.sort();
+        assert_eq!(e2, vec![0, 1]);
+    }
+
+    #[test]
+    fn replica_loads_split_evenly() {
+        let c = cluster(2);
+        let plan = Placer.place(&[3], &[90.0], &mut no_prev(1), &c, 0.33);
+        assert_eq!(plan.placements.len(), 3);
+        assert!(plan.placements.iter().all(|p| (p.load - 30.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn respects_memory_constraints() {
+        let mut c = cluster(2);
+        // GPU 0 is full: everything must go to GPU 1.
+        assert!(c.reserve(0, 48.0));
+        let plan = Placer.place(&[1, 1], &[10.0, 10.0], &mut no_prev(2), &c, 0.33);
+        assert!(plan.placements.iter().all(|p| p.gpu == 1), "{plan:?}");
+    }
+
+    #[test]
+    fn falls_back_when_all_full() {
+        let mut c = cluster(2);
+        assert!(c.reserve(0, 48.0));
+        assert!(c.reserve(1, 48.0));
+        let plan = Placer.place(&[1], &[10.0], &mut no_prev(1), &c, 0.33);
+        assert_eq!(plan.placements.len(), 1); // still placed (manager evicts)
+    }
+
+    #[test]
+    fn empty_plan() {
+        let c = cluster(4);
+        let plan = Placer.place(&[0, 0], &[0.0, 0.0], &mut no_prev(2), &c, 0.33);
+        assert!(plan.placements.is_empty());
+        assert_eq!(plan.max_gpu_load(4), 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = cluster(4);
+        let args = (&[2usize, 1, 1][..], &[100.0, 50.0, 50.0][..]);
+        let a = Placer.place(args.0, args.1, &mut no_prev(3), &c, 0.33);
+        let b = Placer.place(args.0, args.1, &mut no_prev(3), &c, 0.33);
+        assert_eq!(a.placements, b.placements);
+    }
+}

@@ -1,0 +1,80 @@
+//! Prediction accuracy metrics (§6.3): top-k set overlap between predicted
+//! and actual expert rankings, and load-distribution error measures.
+
+/// Indices of the k largest entries (ties broken toward lower index).
+pub fn topk_indices(loads: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..loads.len()).collect();
+    idx.sort_by(|&a, &b| loads[b].partial_cmp(&loads[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k.min(loads.len()));
+    idx.sort();
+    idx
+}
+
+/// |topk(pred) ∩ topk(actual)| / k — the paper's accuracy metric applied at
+/// load-distribution level.
+pub fn topk_overlap(pred: &[f64], actual: &[f64], k: usize) -> f64 {
+    if k == 0 || pred.is_empty() {
+        return 1.0;
+    }
+    let p = topk_indices(pred, k);
+    let a = topk_indices(actual, k);
+    let mut inter = 0usize;
+    let mut i = 0;
+    let mut j = 0;
+    while i < p.len() && j < a.len() {
+        match p[i].cmp(&a[j]) {
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+        }
+    }
+    inter as f64 / k as f64
+}
+
+/// Normalized L1 distance between two load distributions in [0, 1]
+/// (0 = identical shape; 1 = disjoint mass).
+pub fn l1_error(pred: &[f64], actual: &[f64]) -> f64 {
+    let sp: f64 = pred.iter().sum();
+    let sa: f64 = actual.iter().sum();
+    if sp <= 0.0 || sa <= 0.0 {
+        return if sp == sa { 0.0 } else { 1.0 };
+    }
+    0.5 * pred
+        .iter()
+        .zip(actual)
+        .map(|(p, a)| (p / sp - a / sa).abs())
+        .sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_indices_sorted_ties_low_first() {
+        assert_eq!(topk_indices(&[1.0, 3.0, 3.0, 0.5], 2), vec![1, 2]);
+        assert_eq!(topk_indices(&[2.0, 2.0, 2.0], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn overlap_bounds() {
+        let a = [10.0, 8.0, 1.0, 0.0];
+        assert_eq!(topk_overlap(&a, &a, 2), 1.0);
+        let b = [0.0, 1.0, 8.0, 10.0];
+        assert_eq!(topk_overlap(&a, &b, 2), 0.0);
+        let c = [10.0, 0.0, 8.0, 0.0];
+        assert_eq!(topk_overlap(&a, &c, 2), 0.5);
+    }
+
+    #[test]
+    fn l1_error_range() {
+        assert_eq!(l1_error(&[1.0, 1.0], &[2.0, 2.0]), 0.0); // same shape
+        assert!((l1_error(&[1.0, 0.0], &[0.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(l1_error(&[0.0, 0.0], &[0.0, 0.0]), 0.0);
+        assert_eq!(l1_error(&[0.0], &[1.0]), 1.0);
+    }
+}

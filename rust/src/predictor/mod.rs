@@ -1,0 +1,413 @@
+//! Expert Load Predictors (paper §4.1, substrate S14).
+//!
+//! Tier A runs *real* predictors: fine-tuned gate replicas compiled to HLO
+//! and executed over PJRT (`model::decomposed` wires them). Tier B — the
+//! cluster simulator where all paper figures regenerate — models predictor
+//! *quality*: a predictor with top-k accuracy `a` for (layer, distance)
+//! produces `Ŵ = a·W_true + (1−a)·flat + noise` (DESIGN.md key decision 2).
+//! That blend reproduces the paper's coupled effects: lower accuracy ⇒
+//! flatter predictions ⇒ fewer replicas scaled *and* worse straggler
+//! trimming ⇒ higher latency (Figs. 13/14).
+//!
+//! Four predictors, matching the paper's comparisons:
+//! * [`SpeculativePredictor`] with `finetuned = false` — Mixtral-offloading
+//!   (reuse the future gate raw; accuracy = Π layer stabilities).
+//! * [`SpeculativePredictor`] with `finetuned = true` — **MoEless** (§4.1
+//!   layer-aware fine-tuned gate replicas; recovers most of the lost
+//!   accuracy, calibrated against our Tier-A measurements).
+//! * [`PromoePredictor`] — ProMoE's from-scratch MLP (between the two).
+//! * [`HistoricalPredictor`] — EPLB's windowed historical loads.
+//! * [`OraclePredictor`] — perfect knowledge (upper bound).
+
+pub mod accuracy;
+
+use crate::config::ModelSpec;
+use crate::util::rng::Pcg;
+
+/// A load prediction for one layer: expected tokens per expert plus the
+/// model-level accuracy it was produced at.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub loads: Vec<f64>,
+    pub accuracy: f64,
+}
+
+/// Common interface of all load predictors (Tier-B quality models).
+pub trait LoadPredictor: Send {
+    fn name(&self) -> &'static str;
+
+    /// Predict layer `layer`'s load distribution from `distance` layers
+    /// back. `actual_future` is the ground-truth the simulator knows; the
+    /// predictor degrades it according to its accuracy model.
+    fn predict(
+        &mut self,
+        layer: usize,
+        distance: usize,
+        actual_future: &[f64],
+        now_s: f64,
+    ) -> Prediction;
+
+    /// Observe the realized loads (historical predictors learn from this).
+    fn observe(&mut self, _layer: usize, _actual: &[f64], _now_s: f64) {}
+}
+
+// ---------------------------------------------------------------------------
+// Speculative (gate-replica) predictor — MoEless's + Mixtral-offloading's.
+// ---------------------------------------------------------------------------
+
+/// Accuracy model of speculative gate-replica prediction.
+#[derive(Clone, Debug)]
+pub struct SpeculativePredictor {
+    /// Per-layer routing stability (from the model spec; Fig. 6's shape).
+    stability: Vec<f64>,
+    /// Layer-aware fine-tuning (§4.1): recovers a fraction of the accuracy
+    /// lost to inter-layer drift. Calibrated on TinyMoE measurements
+    /// (artifacts/predictor_profile.json): pretrained ~0.42→fine-tuned
+    /// ~0.67 at the worst layer, ~0.68→0.86 at stable layers.
+    pub finetuned: bool,
+    /// Only fine-tune layers whose raw accuracy is below this threshold
+    /// (paper's h, default 0.8).
+    pub finetune_threshold: f64,
+    rng: Pcg,
+}
+
+/// Fraction of lost accuracy that fine-tuning recovers (Tier-A calibrated:
+/// pretrained 0.42 -> fine-tuned 0.67 at the least stable layer is ~0.43;
+/// at real-model scale the paper's Fig. 7 gap corresponds to ~0.6).
+const FT_RECOVERY: f64 = 0.6;
+/// ProMoE's from-scratch MLP recovers less (no inherited gate knowledge at
+/// real-model scale — paper Fig. 11 places it between the other two), and
+/// saturates: trained from scratch on limited traces it plateaus below the
+/// gate-replica's inherited accuracy on stable layers.
+const PROMOE_RECOVERY: f64 = 0.38;
+const PROMOE_CAP: f64 = 0.88;
+
+impl SpeculativePredictor {
+    pub fn new(model: &ModelSpec, finetuned: bool, threshold: f64, seed: u64) -> Self {
+        SpeculativePredictor {
+            stability: model.layer_stability.clone(),
+            finetuned,
+            finetune_threshold: threshold,
+            rng: Pcg::new(seed, 0x5eec),
+        }
+    }
+
+    /// Raw (pretrained gate reuse) accuracy for predicting `layer` from
+    /// `distance` back: the token's routing signal must survive `distance`
+    /// layer hops.
+    pub fn raw_accuracy(&self, layer: usize, distance: usize) -> f64 {
+        let lo = layer.saturating_sub(distance);
+        (lo..layer)
+            .map(|l| self.stability.get(l).copied().unwrap_or(0.9))
+            .product()
+    }
+
+    /// Accuracy after layer-aware fine-tuning.
+    pub fn accuracy(&self, layer: usize, distance: usize) -> f64 {
+        let raw = self.raw_accuracy(layer, distance);
+        if self.finetuned && raw < self.finetune_threshold {
+            raw + (1.0 - raw) * FT_RECOVERY
+        } else {
+            raw
+        }
+    }
+}
+
+/// Degrade ground-truth loads to a given accuracy: keep an `acc` fraction
+/// of the true signal, replace the rest with the flat mean plus
+/// multiplicative noise (mispredicted tokens scatter roughly uniformly).
+pub fn blend_to_accuracy(actual: &[f64], acc: f64, rng: &mut Pcg) -> Vec<f64> {
+    let n = actual.len().max(1);
+    let total: f64 = actual.iter().sum();
+    let mean = total / n as f64;
+    actual
+        .iter()
+        .map(|&w| {
+            let noise = rng.lognormal(0.0, 0.25 * (1.0 - acc));
+            (acc * w + (1.0 - acc) * mean * noise).max(0.0)
+        })
+        .collect()
+}
+
+impl LoadPredictor for SpeculativePredictor {
+    fn name(&self) -> &'static str {
+        if self.finetuned {
+            "moeless-predictor"
+        } else {
+            "mixtral-offloading"
+        }
+    }
+
+    fn predict(
+        &mut self,
+        layer: usize,
+        distance: usize,
+        actual_future: &[f64],
+        _now_s: f64,
+    ) -> Prediction {
+        let acc = self.accuracy(layer, distance);
+        Prediction { loads: blend_to_accuracy(actual_future, acc, &mut self.rng), accuracy: acc }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ProMoE-style from-scratch MLP predictor.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct PromoePredictor {
+    inner: SpeculativePredictor,
+}
+
+impl PromoePredictor {
+    pub fn new(model: &ModelSpec, seed: u64) -> Self {
+        PromoePredictor { inner: SpeculativePredictor::new(model, false, 0.8, seed) }
+    }
+
+    pub fn accuracy(&self, layer: usize, distance: usize) -> f64 {
+        let raw = self.inner.raw_accuracy(layer, distance);
+        (raw + (1.0 - raw) * PROMOE_RECOVERY).min(PROMOE_CAP.max(raw))
+    }
+}
+
+impl LoadPredictor for PromoePredictor {
+    fn name(&self) -> &'static str {
+        "promoe"
+    }
+
+    fn predict(
+        &mut self,
+        layer: usize,
+        distance: usize,
+        actual_future: &[f64],
+        _now_s: f64,
+    ) -> Prediction {
+        let acc = self.accuracy(layer, distance);
+        Prediction {
+            loads: blend_to_accuracy(actual_future, acc, &mut self.inner.rng),
+            accuracy: acc,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Historical predictor (EPLB's estimator).
+// ---------------------------------------------------------------------------
+
+/// EPLB-style estimator: the average expert load over a trailing window.
+/// Accurate for *stationary* popularity, blind to batch-level dynamics —
+/// exactly the gap MoEless's speculative predictor closes.
+#[derive(Clone, Debug)]
+pub struct HistoricalPredictor {
+    pub window_s: f64,
+    /// Per layer: ring of (time, loads).
+    history: Vec<Vec<(f64, Vec<f64>)>>,
+    n_experts: usize,
+}
+
+impl HistoricalPredictor {
+    pub fn new(n_layers: usize, n_experts: usize, window_s: f64) -> Self {
+        HistoricalPredictor {
+            window_s,
+            history: vec![Vec::new(); n_layers],
+            n_experts,
+        }
+    }
+
+    pub fn average(&self, layer: usize, now_s: f64) -> Vec<f64> {
+        let h = &self.history[layer];
+        let mut sum = vec![0.0; self.n_experts];
+        let mut count = 0usize;
+        for (t, loads) in h.iter().rev() {
+            if now_s - t > self.window_s {
+                break;
+            }
+            for (s, &w) in sum.iter_mut().zip(loads) {
+                *s += w;
+            }
+            count += 1;
+        }
+        if count > 0 {
+            sum.iter_mut().for_each(|s| *s /= count as f64);
+        }
+        sum
+    }
+}
+
+impl LoadPredictor for HistoricalPredictor {
+    fn name(&self) -> &'static str {
+        "eplb-historical"
+    }
+
+    fn predict(
+        &mut self,
+        layer: usize,
+        _distance: usize,
+        actual_future: &[f64],
+        now_s: f64,
+    ) -> Prediction {
+        let avg = self.average(layer, now_s);
+        // Scale the historical shape to the current batch volume (EPLB
+        // knows the incoming token count, not its routing).
+        let total_now: f64 = actual_future.iter().sum();
+        let total_avg: f64 = avg.iter().sum();
+        let loads = if total_avg > 0.0 {
+            avg.iter().map(|&w| w * total_now / total_avg).collect()
+        } else {
+            vec![total_now / self.n_experts as f64; self.n_experts]
+        };
+        let acc = accuracy::topk_overlap(&loads, actual_future, 2);
+        Prediction { loads, accuracy: acc }
+    }
+
+    fn observe(&mut self, layer: usize, actual: &[f64], now_s: f64) {
+        let h = &mut self.history[layer];
+        h.push((now_s, actual.to_vec()));
+        // Trim outside the window to bound memory.
+        let cutoff = now_s - 2.0 * self.window_s;
+        let keep_from = h.partition_point(|(t, _)| *t < cutoff);
+        if keep_from > 0 {
+            h.drain(..keep_from);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oracle predictor (upper bound).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OraclePredictor;
+
+impl LoadPredictor for OraclePredictor {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn predict(
+        &mut self,
+        _layer: usize,
+        _distance: usize,
+        actual_future: &[f64],
+        _now_s: f64,
+    ) -> Prediction {
+        Prediction { loads: actual_future.to_vec(), accuracy: 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+
+    fn model() -> ModelSpec {
+        ModelSpec::mixtral_8x7b()
+    }
+
+    #[test]
+    fn raw_accuracy_decays_with_distance() {
+        let p = SpeculativePredictor::new(&model(), false, 0.8, 1);
+        let a1 = p.raw_accuracy(16, 1);
+        let a3 = p.raw_accuracy(16, 3);
+        let a5 = p.raw_accuracy(16, 5);
+        assert!(a1 > a3 && a3 > a5, "{a1} {a3} {a5}");
+    }
+
+    #[test]
+    fn later_layers_more_predictable() {
+        // Fig. 6b: early layers are less stable.
+        let p = SpeculativePredictor::new(&model(), false, 0.8, 1);
+        assert!(p.raw_accuracy(2, 1) < p.raw_accuracy(30, 1));
+    }
+
+    #[test]
+    fn finetuning_improves_low_accuracy_layers_only() {
+        let raw = SpeculativePredictor::new(&model(), false, 0.8, 1);
+        let ft = SpeculativePredictor::new(&model(), true, 0.8, 1);
+        // Early layer, long distance: below threshold, fine-tuned.
+        assert!(ft.accuracy(4, 3) > raw.accuracy(4, 3));
+        // Late layer, d=1: above threshold, layer-aware skip.
+        let late_raw = raw.accuracy(31, 1);
+        if late_raw >= 0.8 {
+            assert_eq!(ft.accuracy(31, 1), late_raw);
+        }
+    }
+
+    #[test]
+    fn predictor_ordering_matches_fig11() {
+        // Fig. 11 compares *average* accuracy across layers: ours >= promoe
+        // >= mixtral-offloading, with the gap widening with distance. (At
+        // d=1 on very stable layers the layer-aware skip can leave ours ==
+        // raw while ProMoE still trains — the averages are what the paper
+        // reports.)
+        let m = model();
+        let ours = SpeculativePredictor::new(&m, true, 0.8, 1);
+        let promoe = PromoePredictor::new(&m, 1);
+        let raw = SpeculativePredictor::new(&m, false, 0.8, 1);
+        let mean = |f: &dyn Fn(usize) -> f64| -> f64 {
+            (0..m.n_layers).map(f).sum::<f64>() / m.n_layers as f64
+        };
+        for d in 1..=5usize {
+            let us = mean(&|l| ours.accuracy(l, d));
+            let pm = mean(&|l| promoe.accuracy(l, d));
+            let mo = mean(&|l| raw.raw_accuracy(l, d));
+            assert!(us >= pm - 0.01, "d={d}: ours {us} vs promoe {pm}");
+            assert!(pm > mo, "d={d}: promoe {pm} vs moff {mo}");
+        }
+        // The gap over ProMoE is strict once distance degrades raw accuracy.
+        let us3 = mean(&|l| ours.accuracy(l, 3));
+        let pm3 = mean(&|l| promoe.accuracy(l, 3));
+        assert!(us3 > pm3, "{us3} vs {pm3}");
+    }
+
+    #[test]
+    fn blend_preserves_total_roughly_and_flattens() {
+        let mut rng = Pcg::seeded(3);
+        let actual = vec![800.0, 100.0, 50.0, 50.0, 0.0, 0.0, 0.0, 0.0];
+        let hi = blend_to_accuracy(&actual, 0.95, &mut rng);
+        let lo = blend_to_accuracy(&actual, 0.3, &mut rng);
+        use crate::util::stats::cv;
+        assert!(cv(&hi) > cv(&lo), "high accuracy keeps the skew");
+        let sum_hi: f64 = hi.iter().sum();
+        assert!((sum_hi - 1000.0).abs() / 1000.0 < 0.25);
+    }
+
+    #[test]
+    fn oracle_is_exact() {
+        let mut o = OraclePredictor;
+        let actual = vec![5.0, 3.0, 2.0];
+        let p = o.predict(7, 1, &actual, 0.0);
+        assert_eq!(p.loads, actual);
+        assert_eq!(p.accuracy, 1.0);
+    }
+
+    #[test]
+    fn historical_averages_window() {
+        let mut h = HistoricalPredictor::new(2, 4, 10.0);
+        h.observe(0, &[10.0, 0.0, 0.0, 0.0], 0.0);
+        h.observe(0, &[0.0, 10.0, 0.0, 0.0], 5.0);
+        let avg = h.average(0, 6.0);
+        assert_eq!(avg, vec![5.0, 5.0, 0.0, 0.0]);
+        // Old sample falls out of the window.
+        h.observe(0, &[0.0, 0.0, 10.0, 0.0], 20.0);
+        let avg2 = h.average(0, 20.0);
+        assert_eq!(avg2, vec![0.0, 0.0, 10.0, 0.0]);
+    }
+
+    #[test]
+    fn historical_scales_to_batch_volume() {
+        let mut h = HistoricalPredictor::new(1, 2, 10.0);
+        h.observe(0, &[8.0, 2.0], 0.0);
+        let p = h.predict(0, 1, &[50.0, 50.0], 1.0);
+        // Shape from history (80/20), volume from the batch (100).
+        assert!((p.loads[0] - 80.0).abs() < 1e-9);
+        assert!((p.loads[1] - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn historical_cold_start_uniform() {
+        let mut h = HistoricalPredictor::new(1, 4, 10.0);
+        let p = h.predict(0, 1, &[40.0, 0.0, 0.0, 0.0], 0.0);
+        assert_eq!(p.loads, vec![10.0; 4]);
+    }
+}

@@ -1,0 +1,256 @@
+//! Request router + continuous batcher (substrate S17).
+//!
+//! Megatron-LM has no native continuous batching; the paper emulates it by
+//! aggregating all requests arriving within each second into one batch
+//! (§6.1). We implement the emulation faithfully at iteration granularity:
+//! each engine iteration admits every pending request whose arrival time
+//! has passed (their prompts form the prefill work) and decodes one token
+//! for every in-flight sequence. Sequences retire when their trace-specified
+//! output length completes.
+
+use std::collections::VecDeque;
+
+use crate::workload::TraceRequest;
+
+/// One engine iteration's batch composition.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct IterationBatch {
+    /// Prompt tokens of newly admitted requests (prefill work).
+    pub prefill_tokens: usize,
+    /// In-flight sequences each generating one token (decode work).
+    pub decode_seqs: usize,
+}
+
+impl IterationBatch {
+    /// Tokens entering the MoE layers this iteration.
+    pub fn total_tokens(&self) -> usize {
+        self.prefill_tokens + self.decode_seqs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_tokens() == 0
+    }
+}
+
+/// In-flight sequence state.
+#[derive(Clone, Copy, Debug)]
+struct Active {
+    remaining_out: usize,
+    arrival_s: f64,
+}
+
+/// The continuous batcher: admission queue + in-flight set.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    pending: VecDeque<TraceRequest>,
+    active: Vec<Active>,
+    /// Admitted this iteration: their first token comes from the prefill
+    /// pass, so they join decode only from the *next* iteration.
+    fresh: Vec<Active>,
+    pub admitted: u64,
+    pub completed: u64,
+    pub tokens_prefilled: u64,
+    pub tokens_decoded: u64,
+    /// Per-request time-to-first-token (ms) — recorded when the prefill
+    /// iteration completes (SLO metric).
+    pub ttft_ms: Vec<f64>,
+    /// Per-request end-to-end latency (ms) — arrival to last token.
+    pub e2e_ms: Vec<f64>,
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher::default()
+    }
+
+    /// Queue requests (must be fed in arrival order).
+    pub fn enqueue(&mut self, reqs: &[TraceRequest]) {
+        self.pending.extend(reqs.iter().copied());
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.active.len() + self.fresh.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.pending.is_empty() && self.active.is_empty() && self.fresh.is_empty()
+    }
+
+    /// Earliest queued arrival (for clock jumps when idle).
+    pub fn next_arrival(&self) -> Option<f64> {
+        self.pending.front().map(|r| r.arrival_s)
+    }
+
+    /// Form the next iteration at virtual time `now`: admit all arrived
+    /// requests, count decode work. Returns `None` when fully idle.
+    pub fn next_iteration(&mut self, now_s: f64) -> Option<IterationBatch> {
+        // Decode work is the sequences already in flight BEFORE admission
+        // (freshly admitted ones get their first token from the prefill).
+        let decode = self.active.len();
+        let mut prefill = 0usize;
+        while let Some(r) = self.pending.front() {
+            if r.arrival_s > now_s {
+                break;
+            }
+            let r = self.pending.pop_front().unwrap();
+            prefill += r.prompt_tokens;
+            self.admitted += 1;
+            // The prefill iteration itself emits the first token, so the
+            // sequence enters decode with output_tokens - 1 remaining.
+            self.fresh.push(Active {
+                remaining_out: r.output_tokens.saturating_sub(1),
+                arrival_s: r.arrival_s,
+            });
+        }
+        if prefill == 0 && decode == 0 {
+            // No prefill and nothing decoding; fresh-only states can't
+            // occur here because fresh is drained by complete_iteration.
+            return None;
+        }
+        self.tokens_prefilled += prefill as u64;
+        self.tokens_decoded += decode as u64;
+        Some(IterationBatch { prefill_tokens: prefill, decode_seqs: decode })
+    }
+
+    /// Commit the iteration at virtual time `now_s`: every decoding
+    /// sequence produced one token; freshly prefilled sequences emit their
+    /// first token (TTFT) and join the decode set.
+    pub fn complete_iteration(&mut self, now_s: f64) {
+        let mut i = 0;
+        while i < self.active.len() {
+            self.active[i].remaining_out -= 1;
+            if self.active[i].remaining_out == 0 {
+                let a = self.active.swap_remove(i);
+                self.completed += 1;
+                self.e2e_ms.push((now_s - a.arrival_s).max(0.0) * 1e3);
+            } else {
+                i += 1;
+            }
+        }
+        let mut j = 0;
+        while j < self.fresh.len() {
+            let f = self.fresh[j];
+            self.ttft_ms.push((now_s - f.arrival_s).max(0.0) * 1e3);
+            if f.remaining_out == 0 {
+                self.fresh.swap_remove(j);
+                self.completed += 1;
+                self.e2e_ms.push((now_s - f.arrival_s).max(0.0) * 1e3);
+            } else {
+                j += 1;
+            }
+        }
+        self.active.append(&mut self.fresh);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64, prompt: usize, output: usize) -> TraceRequest {
+        TraceRequest { id, arrival_s: arrival, prompt_tokens: prompt, output_tokens: output }
+    }
+
+    #[test]
+    fn admits_only_arrived() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(0, 0.5, 10, 3), req(1, 2.0, 20, 2)]);
+        let it = b.next_iteration(1.0).unwrap();
+        // The new request prefills; nothing was decoding yet.
+        assert_eq!(it, IterationBatch { prefill_tokens: 10, decode_seqs: 0 });
+        assert_eq!(b.pending_len(), 1);
+        assert_eq!(b.in_flight(), 1);
+        b.complete_iteration(1.2);
+        // Now it decodes.
+        assert_eq!(
+            b.next_iteration(1.5).unwrap(),
+            IterationBatch { prefill_tokens: 0, decode_seqs: 1 }
+        );
+    }
+
+    #[test]
+    fn decode_until_completion() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(0, 0.0, 10, 3)]);
+        // Prefill iteration emits token 1 of 3.
+        assert_eq!(b.next_iteration(0.0).unwrap().prefill_tokens, 10);
+        b.complete_iteration(0.05);
+        // Tokens 2 and 3 come from two decode iterations.
+        for t in [0.1, 0.2] {
+            let it = b.next_iteration(t).unwrap();
+            assert_eq!(it, IterationBatch { prefill_tokens: 0, decode_seqs: 1 });
+            b.complete_iteration(t + 0.05);
+        }
+        assert!(b.next_iteration(0.3).is_none());
+        assert_eq!(b.completed, 1);
+        assert!(b.idle());
+    }
+
+    #[test]
+    fn single_token_outputs_complete_at_prefill() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(0, 0.0, 5, 1)]);
+        b.next_iteration(0.0).unwrap();
+        b.complete_iteration(0.05);
+        assert_eq!(b.completed, 1);
+        assert_eq!(b.in_flight(), 0);
+        // TTFT == e2e for a 1-token output.
+        assert_eq!(b.ttft_ms.len(), 1);
+        assert_eq!(b.e2e_ms.len(), 1);
+        assert!((b.ttft_ms[0] - 50.0).abs() < 1e-9);
+        assert!((b.e2e_ms[0] - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_metrics_recorded() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(0, 0.0, 10, 3)]);
+        b.next_iteration(0.5).unwrap();
+        b.complete_iteration(0.6); // first token at t=0.6 -> TTFT 600ms
+        for t in [0.7, 0.8] {
+            b.next_iteration(t).unwrap();
+            b.complete_iteration(t + 0.05);
+        }
+        assert_eq!(b.ttft_ms, vec![600.0]);
+        assert_eq!(b.e2e_ms.len(), 1);
+        assert!((b.e2e_ms[0] - 850.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_prefill_and_decode() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(0, 0.0, 10, 5), req(1, 1.0, 30, 2)]);
+        b.next_iteration(0.0).unwrap();
+        b.complete_iteration(0.1);
+        let it = b.next_iteration(1.0).unwrap();
+        // Request 1 prefills while request 0 decodes.
+        assert_eq!(it, IterationBatch { prefill_tokens: 30, decode_seqs: 1 });
+        assert_eq!(b.in_flight(), 2);
+    }
+
+    #[test]
+    fn next_arrival_for_clock_jump() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(0, 7.5, 10, 2)]);
+        assert!(b.next_iteration(1.0).is_none());
+        assert_eq!(b.next_arrival(), Some(7.5));
+    }
+
+    #[test]
+    fn accounting() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(0, 0.0, 10, 3), req(1, 0.0, 20, 2)]);
+        b.next_iteration(0.0).unwrap();
+        b.complete_iteration(0.1);
+        b.next_iteration(0.1).unwrap();
+        b.complete_iteration(0.2);
+        b.next_iteration(0.2);
+        assert_eq!(b.admitted, 2);
+        assert_eq!(b.tokens_prefilled, 30);
+        assert!(b.tokens_decoded >= 3);
+    }
+}

@@ -1,0 +1,169 @@
+//! PJRT runtime (substrate S10): load AOT-compiled HLO-text artifacts and
+//! execute them from the Rust request path.
+//!
+//! Bridge pattern (see /opt/xla-example and DESIGN.md): the Python AOT
+//! pipeline emits HLO **text** (xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id protos); we parse with `HloModuleProto::from_text_file`,
+//! compile once per artifact on the PJRT CPU client, and cache the loaded
+//! executables. All artifacts were lowered with `return_tuple=True`, so
+//! every execution returns a tuple literal we decompose into the manifest's
+//! declared output count.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::store::WeightStore;
+use crate::tensor::Tensor;
+
+/// Compiled-artifact registry over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Compile every artifact listed in the store's manifest.
+    pub fn load(dir: &Path, store: &WeightStore) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        for (name, abi) in &store.artifacts {
+            let path = dir.join(&abi.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime { client, exes })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&String> {
+        self.exes.keys().collect()
+    }
+
+    /// Execute artifact `name`; returns the tuple elements as literals.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let Some(exe) = self.exes.get(name) else {
+            bail!("unknown artifact {name:?}");
+        };
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Host tensor -> device literal (f32).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// i32 token array -> device literal with the given shape.
+pub fn tokens_to_literal(tokens: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(tokens).reshape(&dims)?)
+}
+
+/// Device literal -> host tensor (f32).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.shape()?;
+    let dims: Vec<usize> = match &shape {
+        xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+        _ => bail!("expected array literal"),
+    };
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::store::artifacts_dir;
+
+    fn runtime() -> Option<(Runtime, WeightStore)> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let store = WeightStore::open(&dir).unwrap();
+        let rt = Runtime::load(&dir, &store).unwrap();
+        Some((rt, store))
+    }
+
+    #[test]
+    fn loads_and_lists_artifacts() {
+        let Some((rt, _)) = runtime() else { return };
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        let names = rt.artifact_names();
+        for want in ["tiny_model", "tiny_attn", "tiny_gate", "tiny_expert", "tiny_head"] {
+            assert!(names.iter().any(|n| n.as_str() == want), "{want}");
+        }
+    }
+
+    #[test]
+    fn expert_artifact_executes_and_matches_zero_contract() {
+        let Some((rt, mut store)) = runtime() else { return };
+        // ffn(0) == 0: zero input tile through real weights.
+        let abi = store.artifacts["tiny_expert"].clone();
+        let (cap, d) = (abi.runtime_inputs[0].1[0], abi.runtime_inputs[0].1[1]);
+        let x = Tensor::zeros(&[cap, d]);
+        let w1 = store.tensor("layer0.w1").unwrap().slice0(0);
+        let w2 = store.tensor("layer0.w2").unwrap().slice0(0);
+        let w3 = store.tensor("layer0.w3").unwrap().slice0(0);
+        let out = rt
+            .execute(
+                "tiny_expert",
+                &[
+                    tensor_to_literal(&x).unwrap(),
+                    tensor_to_literal(&w1).unwrap(),
+                    tensor_to_literal(&w2).unwrap(),
+                    tensor_to_literal(&w3).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let y = literal_to_tensor(&out[0]).unwrap();
+        assert_eq!(y.shape, vec![cap, d]);
+        assert!(y.data.iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn gate_artifact_routes_topk() {
+        let Some((rt, mut store)) = runtime() else { return };
+        let abi = store.artifacts["tiny_gate"].clone();
+        let (n, d) = (abi.runtime_inputs[0].1[0], abi.runtime_inputs[0].1[1]);
+        let mut x = Tensor::zeros(&[n, d]);
+        // Deterministic non-trivial input.
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i % 13) as f32 - 6.0) * 0.1;
+        }
+        let wg = store.tensor("layer0.wg").unwrap();
+        let out = rt
+            .execute(
+                "tiny_gate",
+                &[tensor_to_literal(&x).unwrap(), tensor_to_literal(&wg).unwrap()],
+            )
+            .unwrap();
+        let w = literal_to_tensor(&out[0]).unwrap();
+        let e = w.shape[1];
+        let top_k = store.manifest.get("model").get("top_k").as_usize();
+        for row in 0..n {
+            let r = w.row(row);
+            let nz = r.iter().filter(|&&x| x > 0.0).count();
+            assert_eq!(nz, top_k, "row {row}");
+            let sum: f32 = r.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+            assert_eq!(r.len(), e);
+        }
+    }
+}

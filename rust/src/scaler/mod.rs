@@ -1,0 +1,244 @@
+//! Expert Scaler — the paper's Algorithm 1 (substrate S15).
+//!
+//! Given a layer's (predicted) expert load distribution, decide how many
+//! replicas each expert gets: start every *loaded* expert at one instance,
+//! then greedily pop the most-overloaded expert from a max-heap and grant
+//! it one more replica (evenly splitting its load), until either the
+//! coefficient of variation of per-replica loads falls below the threshold
+//! `V` or the per-layer memory cap `M_cap` is exhausted.
+//!
+//! Serverless extension: experts with zero predicted load receive zero
+//! instances (scale-to-zero) — that elasticity is where the paper's cost
+//! savings come from (§2.4, Fig. 3c). A mispredicted zero is handled by the
+//! engine as an on-demand cold start.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+
+/// One expert's replica entry in the max-heap, ordered by per-replica load.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct HeapEntry {
+    per_replica: f64,
+    expert: usize,
+}
+
+impl Eq for HeapEntry {}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.per_replica
+            .partial_cmp(&other.per_replica)
+            .unwrap_or(Ordering::Equal)
+            // Deterministic tie-break: lower expert index first.
+            .then_with(|| other.expert.cmp(&self.expert))
+    }
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The scaling plan for one layer: replicas per expert.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScalePlan {
+    pub replicas: Vec<usize>,
+}
+
+impl ScalePlan {
+    pub fn total(&self) -> usize {
+        self.replicas.iter().sum()
+    }
+
+    /// Per-replica loads implied by even splitting (the multiset CV is
+    /// evaluated over).
+    pub fn per_replica_loads(&self, loads: &[f64]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.total());
+        for (e, &r) in self.replicas.iter().enumerate() {
+            for _ in 0..r {
+                out.push(loads[e] / r as f64);
+            }
+        }
+        out
+    }
+
+    /// The straggler term: max per-replica load under this plan.
+    pub fn max_per_replica(&self, loads: &[f64]) -> f64 {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, &r)| r > 0)
+            .map(|(e, &r)| loads[e] / r as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Expert Scaler configuration (Algorithm 1 inputs).
+#[derive(Clone, Copy, Debug)]
+pub struct Scaler {
+    /// CV threshold V (paper default 0.2).
+    pub cv_threshold: f64,
+    /// Per-layer memory cap in replica slots (M_cap / Mₑ).
+    pub max_replica_slots: usize,
+}
+
+impl Scaler {
+    pub fn new(cv_threshold: f64, max_replica_slots: usize) -> Scaler {
+        Scaler { cv_threshold, max_replica_slots }
+    }
+
+    /// Algorithm 1. `loads[e]` is the (predicted) token count for expert e.
+    ///
+    /// Perf (EXPERIMENTS.md §Perf): the CV of the per-replica load multiset
+    /// is maintained incrementally (sum + sum-of-squares), so each greedy
+    /// step is O(log E) instead of rebuilding the multiset — this call sits
+    /// on the per-layer critical path.
+    pub fn scale(&self, loads: &[f64]) -> ScalePlan {
+        let n = loads.len();
+        let mut replicas = vec![0usize; n];
+        let mut heap = BinaryHeap::with_capacity(n);
+        let mut slots = 0usize;
+        // Incremental moments of the per-replica load multiset.
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for (e, &w) in loads.iter().enumerate() {
+            if w > 0.0 {
+                replicas[e] = 1;
+                slots += 1;
+                sum += w;
+                sumsq += w * w;
+                heap.push(HeapEntry { per_replica: w, expert: e });
+            }
+        }
+        if slots == 0 {
+            return ScalePlan { replicas };
+        }
+        let cv_ok = |sum: f64, sumsq: f64, k: usize| -> bool {
+            let kf = k as f64;
+            let mean = sum / kf;
+            if mean.abs() < 1e-12 {
+                return true;
+            }
+            let var = (sumsq / kf - mean * mean).max(0.0);
+            var.sqrt() / mean <= self.cv_threshold
+        };
+        // Greedy straggler trimming.
+        let mut per_replica: Vec<f64> = loads.to_vec();
+        while slots < self.max_replica_slots && !cv_ok(sum, sumsq, slots) {
+            let Some(top) = heap.pop() else { break };
+            // Stale heap entry (expert got replicas since push): refresh.
+            if (top.per_replica - per_replica[top.expert]).abs() > 1e-9 {
+                heap.push(HeapEntry {
+                    per_replica: per_replica[top.expert],
+                    expert: top.expert,
+                });
+                continue;
+            }
+            let e = top.expert;
+            let w = loads[e];
+            let r_old = replicas[e] as f64;
+            // Multiset update: r_old entries of w/r_old -> (r_old+1) of
+            // w/(r_old+1). Sum of entries for e stays w; sum of squares
+            // goes w²/r_old -> w²/(r_old+1).
+            sumsq += w * w / (r_old + 1.0) - w * w / r_old;
+            replicas[e] += 1;
+            slots += 1;
+            per_replica[e] = w / replicas[e] as f64;
+            heap.push(HeapEntry { per_replica: per_replica[e], expert: e });
+        }
+        ScalePlan { replicas }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_loads_get_one_replica_each() {
+        let s = Scaler::new(0.2, 64);
+        let plan = s.scale(&[100.0, 100.0, 100.0, 100.0]);
+        assert_eq!(plan.replicas, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn zero_load_experts_scale_to_zero() {
+        let s = Scaler::new(0.2, 64);
+        let plan = s.scale(&[50.0, 0.0, 50.0, 0.0]);
+        assert_eq!(plan.replicas, vec![1, 0, 1, 0]);
+        assert_eq!(plan.total(), 2);
+    }
+
+    #[test]
+    fn all_zero_loads() {
+        let s = Scaler::new(0.2, 64);
+        assert_eq!(s.scale(&[0.0; 8]).total(), 0);
+    }
+
+    #[test]
+    fn straggler_gets_replicas() {
+        let s = Scaler::new(0.2, 64);
+        // One hot expert at 8x the others.
+        let loads = [800.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0];
+        let plan = s.scale(&loads);
+        assert!(plan.replicas[0] >= 6, "{:?}", plan.replicas);
+        assert!(plan.replicas[1..].iter().all(|&r| r == 1));
+        // Post-scaling CV meets the threshold.
+        assert!(crate::util::stats::cv(&plan.per_replica_loads(&loads)) <= 0.2 + 1e-9);
+        // The straggler term shrank ~8x.
+        assert!(plan.max_per_replica(&loads) <= 800.0 / 6.0 + 1e-9);
+    }
+
+    #[test]
+    fn memory_cap_bounds_replicas() {
+        let s = Scaler::new(0.0, 10); // CV 0 is unreachable; cap binds
+        let loads = [1000.0, 1.0, 1.0, 1.0];
+        let plan = s.scale(&loads);
+        assert_eq!(plan.total(), 10);
+        assert_eq!(plan.replicas[0], 7); // 4 initial + 6 extra, all to the hot one
+    }
+
+    #[test]
+    fn looser_cv_means_fewer_replicas() {
+        // Fig. 15/16's mechanism: larger V => less aggressive scaling.
+        let loads = [500.0, 300.0, 120.0, 80.0, 60.0, 40.0, 30.0, 20.0];
+        let mut last = usize::MAX;
+        for v in [0.2, 0.4, 0.6, 0.8, 1.0] {
+            let t = Scaler::new(v, 64).scale(&loads).total();
+            assert!(t <= last, "V={v}: {t} > {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn deterministic_under_ties() {
+        // Unequal loads with V=0 (unreachable): the cap binds, and repeated
+        // runs must produce the identical plan despite per-replica ties
+        // arising mid-run.
+        let s = Scaler::new(0.0, 9);
+        let loads = [100.0, 50.0, 30.0, 20.0];
+        let a = s.scale(&loads);
+        let b = s.scale(&loads);
+        assert_eq!(a, b);
+        assert_eq!(a.total(), 9);
+        // Heavier experts hold at least as many replicas as lighter ones.
+        assert!(a.replicas[0] >= a.replicas[2]);
+    }
+
+    #[test]
+    fn equal_loads_already_balanced_even_at_zero_threshold() {
+        // CV of identical per-replica loads is 0, satisfying any V.
+        let s = Scaler::new(0.0, 16);
+        assert_eq!(s.scale(&[100.0; 4]).total(), 4);
+    }
+
+    #[test]
+    fn per_replica_loads_multiset() {
+        let plan = ScalePlan { replicas: vec![2, 1, 0] };
+        let lr = plan.per_replica_loads(&[100.0, 30.0, 0.0]);
+        assert_eq!(lr, vec![50.0, 50.0, 30.0]);
+        assert!((plan.max_per_replica(&[100.0, 30.0, 0.0]) - 50.0).abs() < 1e-12);
+    }
+}

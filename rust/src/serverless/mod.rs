@@ -1,0 +1,423 @@
+//! Serverless expert-function runtime (substrate S13).
+//!
+//! An expert *function* is the unit MoEless scales: (layer, expert) bound
+//! to a GPU slot. Instances follow the standard serverless lifecycle the
+//! paper adopts (§5): created on demand (cold start: weight copy +
+//! activation), kept warm for a fixed keep-alive window after last use,
+//! reused for warm starts whenever possible, and pre-warmed ahead of the
+//! predicted layer execution so scaling ops stay off the critical path.
+//!
+//! The manager tracks every live instance, reconciles a layer's desired
+//! placement against what is already resident (maximizing *function
+//! locality*, §4.3), accounts cold/warm/prewarm starts, and accrues
+//! keep-alive memory-time (reported as serverless overhead next to the
+//! §3.3 cost).
+//!
+//! Perf note (EXPERIMENTS.md §Perf): instances are stored in a flat
+//! `[layer × expert]` table, not a map — `apply_layer`/`live_on` are on
+//! the per-layer critical path and run O(replicas), allocation-free.
+
+use crate::cluster::Cluster;
+
+/// A live expert function instance on a GPU.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub gpu: usize,
+    /// Virtual time the instance was created.
+    pub created_s: f64,
+    /// Virtual time of last use (keep-alive reference point).
+    pub last_used_s: f64,
+    /// Claimed by the current layer execution.
+    pub busy: bool,
+}
+
+/// How an acquisition was satisfied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StartKind {
+    /// Reused a live instance already on the right GPU (function locality).
+    Warm,
+    /// Instance was created ahead of time by the pre-warmer.
+    Prewarmed,
+    /// Created on demand — pays the cold-start latency.
+    Cold,
+}
+
+/// Per-layer reconciliation outcome.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ApplyStats {
+    pub warm: usize,
+    pub prewarmed: usize,
+    pub cold: usize,
+    /// Cold-start latency landing on the critical path (ms). Cold starts
+    /// within one layer run in parallel across GPUs, so this is one
+    /// cold-start latency if any occurred on-demand, else 0.
+    pub critical_cold_ms: f64,
+}
+
+/// The serverless function manager for one served model.
+#[derive(Debug)]
+pub struct FunctionManager {
+    /// Flat `[layer * n_experts + expert]` -> live instances.
+    slots: Vec<Vec<Instance>>,
+    n_experts: usize,
+    live: usize,
+    pub expert_mem_gb: f64,
+    pub keep_alive_s: f64,
+    pub cold_start_ms: f64,
+    /// (layer, expert, gpu) triples pre-warmed for upcoming execution.
+    prewarmed: Vec<(usize, usize, usize)>,
+    // Accounting.
+    pub warm_starts: u64,
+    pub cold_starts: u64,
+    pub prewarm_hits: u64,
+    /// GB·s of instance residency (the serverless memory bill, including
+    /// keep-alive idle time).
+    pub residency_gb_s: f64,
+    pub peak_instances: usize,
+}
+
+impl FunctionManager {
+    pub fn new(
+        expert_mem_gb: f64,
+        keep_alive_s: f64,
+        cold_start_ms: f64,
+        n_layers: usize,
+        n_experts: usize,
+    ) -> Self {
+        FunctionManager {
+            slots: vec![Vec::new(); n_layers.max(1) * n_experts.max(1)],
+            n_experts: n_experts.max(1),
+            live: 0,
+            expert_mem_gb,
+            keep_alive_s,
+            cold_start_ms,
+            prewarmed: Vec::new(),
+            warm_starts: 0,
+            cold_starts: 0,
+            prewarm_hits: 0,
+            residency_gb_s: 0.0,
+            peak_instances: 0,
+        }
+    }
+
+    #[inline]
+    fn idx(&self, layer: usize, expert: usize) -> usize {
+        layer * self.n_experts + expert
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live
+    }
+
+    /// Live instances of (layer, expert) — GPU ids, in creation order.
+    pub fn live_on(&self, layer: usize, expert: usize) -> Vec<usize> {
+        self.slots[self.idx(layer, expert)].iter().map(|i| i.gpu).collect()
+    }
+
+    /// Allocation-free variant: append GPU ids into `out`.
+    pub fn live_on_into(&self, layer: usize, expert: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.slots[self.idx(layer, expert)].iter().map(|i| i.gpu));
+    }
+
+    /// Pre-warm instances for a predicted placement (asynchronous in the
+    /// real system — costs nothing on the critical path, §5).
+    pub fn prewarm(&mut self, cluster: &mut Cluster, wants: &[(usize, usize, usize)], now_s: f64) {
+        for &(layer, expert, gpu) in wants {
+            let idx = self.idx(layer, expert);
+            let have = self.slots[idx].iter().any(|i| i.gpu == gpu);
+            if !have && cluster.reserve(gpu, self.expert_mem_gb) {
+                self.slots[idx].push(Instance {
+                    gpu,
+                    created_s: now_s,
+                    last_used_s: now_s,
+                    busy: false,
+                });
+                self.live += 1;
+                self.prewarmed.push((layer, expert, gpu));
+            }
+        }
+        self.peak_instances = self.peak_instances.max(self.live);
+    }
+
+    /// Reconcile one layer's desired placement `(expert, gpu)` pairs with
+    /// live instances: reuse what's resident, create the rest.
+    ///
+    /// Planned scale-ups are asynchronous in MoEless (§5: prediction gives
+    /// a d-layer head start, so instance creation overlaps the ongoing
+    /// forward) — callers treat this call's cold starts as off the critical
+    /// path and use [`FunctionManager::apply_more`] for on-demand
+    /// misprediction repairs, whose cold starts do stall the layer.
+    pub fn apply_layer(
+        &mut self,
+        cluster: &mut Cluster,
+        layer: usize,
+        placement: &[(usize, usize)],
+        now_s: f64,
+    ) -> ApplyStats {
+        // Free this layer's busy flags from the previous iteration.
+        let base = self.idx(layer, 0);
+        for v in &mut self.slots[base..base + self.n_experts] {
+            v.iter_mut().for_each(|i| i.busy = false);
+        }
+        self.apply_inner(cluster, layer, placement, now_s)
+    }
+
+    /// Additional on-demand placements within the same layer execution
+    /// (misprediction repair): does NOT reset busy flags, so instances
+    /// claimed by `apply_layer` stay claimed.
+    pub fn apply_more(
+        &mut self,
+        cluster: &mut Cluster,
+        layer: usize,
+        placement: &[(usize, usize)],
+        now_s: f64,
+    ) -> ApplyStats {
+        self.apply_inner(cluster, layer, placement, now_s)
+    }
+
+    fn apply_inner(
+        &mut self,
+        cluster: &mut Cluster,
+        layer: usize,
+        placement: &[(usize, usize)],
+        now_s: f64,
+    ) -> ApplyStats {
+        let mut stats = ApplyStats::default();
+        for &(expert, gpu) in placement {
+            match self.acquire(cluster, layer, expert, gpu, now_s) {
+                StartKind::Warm => stats.warm += 1,
+                StartKind::Prewarmed => stats.prewarmed += 1,
+                StartKind::Cold => stats.cold += 1,
+            }
+        }
+        if stats.cold > 0 {
+            stats.critical_cold_ms = self.cold_start_ms;
+        }
+        self.peak_instances = self.peak_instances.max(self.live);
+        stats
+    }
+
+    fn acquire(
+        &mut self,
+        cluster: &mut Cluster,
+        layer: usize,
+        expert: usize,
+        gpu: usize,
+        now_s: f64,
+    ) -> StartKind {
+        let was_prewarmed = if self.prewarmed.is_empty() {
+            false
+        } else if let Some(i) = self.prewarmed.iter().position(|&p| p == (layer, expert, gpu)) {
+            self.prewarmed.swap_remove(i);
+            true
+        } else {
+            false
+        };
+        let idx = self.idx(layer, expert);
+        if let Some(inst) = self.slots[idx].iter_mut().find(|i| i.gpu == gpu && !i.busy) {
+            inst.busy = true;
+            inst.last_used_s = now_s;
+            if was_prewarmed {
+                self.prewarm_hits += 1;
+                return StartKind::Prewarmed;
+            }
+            self.warm_starts += 1;
+            return StartKind::Warm;
+        }
+        // On-demand creation. If memory is tight, evict the stalest idle
+        // instance anywhere to make room (the reaper has priority).
+        if !cluster.reserve(gpu, self.expert_mem_gb) {
+            self.evict_one_idle(cluster, now_s);
+            if !cluster.reserve(gpu, self.expert_mem_gb) {
+                // Memory truly exhausted on this GPU: count the cold start
+                // anyway (queued behind eviction in a real system).
+                self.cold_starts += 1;
+                return StartKind::Cold;
+            }
+        }
+        self.slots[idx].push(Instance { gpu, created_s: now_s, last_used_s: now_s, busy: true });
+        self.live += 1;
+        self.cold_starts += 1;
+        StartKind::Cold
+    }
+
+    fn evict_one_idle(&mut self, cluster: &mut Cluster, now_s: f64) {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for (idx, v) in self.slots.iter().enumerate() {
+            for (k, inst) in v.iter().enumerate() {
+                if !inst.busy && best.map(|(_, _, t)| inst.last_used_s < t).unwrap_or(true) {
+                    best = Some((idx, k, inst.last_used_s));
+                }
+            }
+        }
+        if let Some((idx, k, _)) = best {
+            let inst = self.slots[idx].swap_remove(k);
+            self.live -= 1;
+            self.account(&inst, now_s);
+            cluster.release(inst.gpu, self.expert_mem_gb);
+        }
+    }
+
+    /// Expire idle instances past the keep-alive window; release memory and
+    /// accrue their residency GB·s.
+    pub fn reap(&mut self, cluster: &mut Cluster, now_s: f64) {
+        let keep = self.keep_alive_s;
+        let mem = self.expert_mem_gb;
+        let mut residency = 0.0;
+        let mut freed = 0usize;
+        for v in &mut self.slots {
+            let mut i = 0;
+            while i < v.len() {
+                if !v[i].busy && now_s - v[i].last_used_s > keep {
+                    let inst = v.swap_remove(i);
+                    residency += (now_s - inst.created_s).max(0.0) * mem;
+                    cluster.release(inst.gpu, mem);
+                    freed += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        self.live -= freed;
+        self.residency_gb_s += residency;
+        // Stale prewarm marks expire with their instances.
+        self.prewarmed.clear();
+    }
+
+    fn account(&mut self, inst: &Instance, now_s: f64) {
+        self.residency_gb_s += (now_s - inst.created_s).max(0.0) * self.expert_mem_gb;
+    }
+
+    /// Drain everything (end of run) and finalize accounting.
+    pub fn drain(&mut self, cluster: &mut Cluster, now_s: f64) {
+        let mem = self.expert_mem_gb;
+        let mut residency = 0.0;
+        for v in &mut self.slots {
+            for inst in v.drain(..) {
+                residency += (now_s - inst.created_s).max(0.0) * mem;
+                cluster.release(inst.gpu, mem);
+            }
+        }
+        self.live = 0;
+        self.residency_gb_s += residency;
+    }
+
+    pub fn warm_fraction(&self) -> f64 {
+        let total = self.warm_starts + self.cold_starts + self.prewarm_hits;
+        if total == 0 {
+            return 1.0;
+        }
+        (self.warm_starts + self.prewarm_hits) as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn setup() -> (Cluster, FunctionManager) {
+        (
+            Cluster::new(ClusterSpec::a6000_x8()),
+            FunctionManager::new(0.33, 10.0, 45.0, 4, 8),
+        )
+    }
+
+    #[test]
+    fn first_use_is_cold_then_warm() {
+        let (mut c, mut fm) = setup();
+        let s1 = fm.apply_layer(&mut c, 0, &[(3, 1)], 0.0);
+        assert_eq!((s1.cold, s1.warm), (1, 0));
+        assert!(s1.critical_cold_ms > 0.0);
+        let s2 = fm.apply_layer(&mut c, 0, &[(3, 1)], 1.0);
+        assert_eq!((s2.cold, s2.warm), (0, 1));
+        assert_eq!(s2.critical_cold_ms, 0.0);
+        assert_eq!(fm.live_count(), 1);
+    }
+
+    #[test]
+    fn prewarm_avoids_cold_start() {
+        let (mut c, mut fm) = setup();
+        fm.prewarm(&mut c, &[(0, 5, 2)], 0.0);
+        let s = fm.apply_layer(&mut c, 0, &[(5, 2)], 0.5);
+        assert_eq!((s.cold, s.prewarmed), (0, 1));
+        assert_eq!(fm.prewarm_hits, 1);
+    }
+
+    #[test]
+    fn replicas_on_same_gpu_are_distinct_instances() {
+        let (mut c, mut fm) = setup();
+        let s = fm.apply_layer(&mut c, 0, &[(1, 0), (1, 0)], 0.0);
+        assert_eq!(s.cold, 2);
+        assert_eq!(fm.live_count(), 2);
+    }
+
+    #[test]
+    fn layers_are_independent() {
+        let (mut c, mut fm) = setup();
+        fm.apply_layer(&mut c, 0, &[(1, 0)], 0.0);
+        fm.apply_layer(&mut c, 1, &[(1, 0)], 0.0);
+        assert_eq!(fm.live_count(), 2);
+        assert_eq!(fm.live_on(0, 1), vec![0]);
+        assert_eq!(fm.live_on(1, 1), vec![0]);
+        assert!(fm.live_on(2, 1).is_empty());
+    }
+
+    #[test]
+    fn keep_alive_reaps_idle() {
+        let (mut c, mut fm) = setup();
+        fm.apply_layer(&mut c, 0, &[(1, 0)], 0.0);
+        assert!(c.gpus[0].mem_used_gb > 0.0);
+        fm.reap(&mut c, 5.0); // within keep-alive
+        assert_eq!(fm.live_count(), 1);
+        // Free the busy flag by re-applying an empty layer, then expire.
+        fm.apply_layer(&mut c, 0, &[], 5.0);
+        fm.reap(&mut c, 20.0);
+        assert_eq!(fm.live_count(), 0);
+        assert_eq!(c.gpus[0].mem_used_gb, 0.0);
+        assert!(fm.residency_gb_s > 0.0);
+    }
+
+    #[test]
+    fn memory_pressure_evicts_stalest() {
+        let spec = ClusterSpec { n_gpus: 1, mem_per_gpu_gb: 1.0, ..ClusterSpec::a6000_x8() };
+        let mut c = Cluster::new(spec);
+        let mut fm = FunctionManager::new(0.4, 100.0, 45.0, 4, 8);
+        fm.apply_layer(&mut c, 0, &[(0, 0), (1, 0)], 0.0); // 0.8 GB used
+        fm.apply_layer(&mut c, 0, &[], 1.0); // release busy flags
+        // A third expert needs eviction of the stalest idle instance.
+        let s = fm.apply_layer(&mut c, 0, &[(2, 0)], 2.0);
+        assert_eq!(s.cold, 1);
+        assert_eq!(fm.live_count(), 2);
+    }
+
+    #[test]
+    fn warm_fraction_reflects_steady_state() {
+        let (mut c, mut fm) = setup();
+        for t in 0..20 {
+            fm.apply_layer(&mut c, 0, &[(0, 0), (1, 1)], t as f64);
+        }
+        assert!(fm.warm_fraction() > 0.9, "{}", fm.warm_fraction());
+    }
+
+    #[test]
+    fn drain_finalizes_accounting() {
+        let (mut c, mut fm) = setup();
+        fm.apply_layer(&mut c, 0, &[(0, 0)], 0.0);
+        fm.drain(&mut c, 10.0);
+        assert_eq!(fm.live_count(), 0);
+        assert!((fm.residency_gb_s - 10.0 * 0.33).abs() < 1e-9);
+        assert_eq!(c.total_mem_used_gb(), 0.0);
+    }
+
+    #[test]
+    fn live_on_into_matches_live_on() {
+        let (mut c, mut fm) = setup();
+        fm.apply_layer(&mut c, 2, &[(3, 1), (3, 4)], 0.0);
+        let mut buf = Vec::new();
+        fm.live_on_into(2, 3, &mut buf);
+        assert_eq!(buf, fm.live_on(2, 3));
+        assert_eq!(buf.len(), 2);
+    }
+}

@@ -1,0 +1,39 @@
+//! `moeless replay` — Tier-B trace replay from the command line.
+
+use crate::baselines::PolicyKind;
+use crate::config::{ClusterSpec, DatasetSpec, ModelSpec};
+use crate::sim::{run, SimConfig};
+use crate::util::cli::Args;
+
+/// Replay an Azure-style trace on the cluster simulator and print the run
+/// report (and a CDF when `--cdf` is passed).
+pub fn replay(args: &Args) {
+    let model = ModelSpec::by_name(&args.str("model", "mixtral-8x7b"))
+        .expect("--model: mixtral-8x7b | phi-3.5-moe | llama-4-scout | tiny-moe");
+    let dataset = DatasetSpec::by_name(&args.str("dataset", "lmsys"))
+        .expect("--dataset: lmsys | sharegpt");
+    let policy = PolicyKind::by_name(&args.str("policy", "moeless"))
+        .expect("--policy: megatron-lm | eplb | oracle | moeless | moeless-ablated");
+
+    let mut cfg = SimConfig::new(model, dataset, policy);
+    cfg.duration_s = args.f64("seconds", 120.0);
+    cfg.base_rps = args.f64("rps", 3.0);
+    cfg.seed = args.u64("seed", 42);
+    cfg.params.prediction_distance = args.usize("distance", 1);
+    cfg.params.cv_threshold = args.f64("cv", 0.2);
+    cfg.params.keep_alive_s = args.f64("keep-alive", 10.0);
+    cfg.autotune = args.flag("autotune");
+    if let Some(path) = args.opt_str("cluster") {
+        cfg.cluster = ClusterSpec::load(std::path::Path::new(path)).expect("cluster config");
+    }
+
+    let report = run(&cfg);
+    println!("{}", report.summary_line());
+    println!("{}", report.slo_line());
+    if args.flag("cdf") {
+        let cdf = report.layer_cdf();
+        for q in [1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {
+            println!("cdf p{q:<5} {:.3}ms", cdf.p(q));
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Host tensors + the artifact weight store (substrate S8).
+//!
+//! `Tensor` is the coordinator's host-side array: f32 data + shape, with
+//! just the ops the serving path needs (row gather/scatter, slicing stacked
+//! expert weights, elementwise combine). Heavy math belongs to the compiled
+//! HLO artifacts, not here.
+
+pub mod store;
+
+pub use store::WeightStore;
+
+/// A dense row-major f32 host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Size of trailing dims after the first (row width for rank>=2).
+    pub fn row_len(&self) -> usize {
+        self.shape[1..].iter().product::<usize>().max(1)
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.row_len();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let w = self.row_len();
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// View the i-th slice along axis 0 as its own tensor (copy).
+    /// Used to slice per-expert weights out of stacked [E, ...] tensors.
+    pub fn slice0(&self, i: usize) -> Tensor {
+        assert!(self.rank() >= 2, "slice0 needs rank >= 2");
+        assert!(i < self.shape[0], "slice0 index {i} out of {}", self.shape[0]);
+        Tensor { shape: self.shape[1..].to_vec(), data: self.row(i).to_vec() }
+    }
+
+    /// Gather rows into a fixed-capacity tile, zero-padding the tail
+    /// (the serverless expert invocation prologue).
+    pub fn gather_rows_padded(&self, rows: &[usize], capacity: usize) -> Tensor {
+        assert!(rows.len() <= capacity, "{} rows > capacity {capacity}", rows.len());
+        let w = self.row_len();
+        let mut out = Tensor::zeros(&[capacity, w]);
+        for (slot, &r) in rows.iter().enumerate() {
+            out.row_mut(slot).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// out[rows[j]] += scale[j] * tile[j] — the weighted expert combine.
+    pub fn scatter_add_scaled(&mut self, rows: &[usize], tile: &Tensor, scales: &[f32]) {
+        assert_eq!(rows.len(), scales.len());
+        let w = self.row_len();
+        assert_eq!(tile.row_len(), w);
+        for (j, (&r, &s)) in rows.iter().zip(scales).enumerate() {
+            let dst = self.row_mut(r);
+            let src = tile.row(j);
+            for (d, x) in dst.iter_mut().zip(src) {
+                *d += s * x;
+            }
+        }
+    }
+
+    /// Elementwise a + b (residual add).
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.numel());
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Max |a - b| over all elements (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn argmax_row(&self, i: usize) -> usize {
+        let row = self.row(i);
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_rows() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.row_len(), 3);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn slice0_extracts_expert() {
+        let t = Tensor::from_vec(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        let e1 = t.slice0(1);
+        assert_eq!(e1.shape, vec![2, 2]);
+        assert_eq!(e1.data, vec![4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let t = Tensor::from_vec(&[4, 2], vec![1., 1., 2., 2., 3., 3., 4., 4.]);
+        let tile = t.gather_rows_padded(&[2, 0], 3);
+        assert_eq!(tile.shape, vec![3, 2]);
+        assert_eq!(tile.row(0), &[3., 3.]);
+        assert_eq!(tile.row(1), &[1., 1.]);
+        assert_eq!(tile.row(2), &[0., 0.]); // pad
+
+        let mut out = Tensor::zeros(&[4, 2]);
+        out.scatter_add_scaled(&[2, 0], &tile, &[0.5, 2.0]);
+        assert_eq!(out.row(2), &[1.5, 1.5]);
+        assert_eq!(out.row(0), &[2.0, 2.0]);
+        assert_eq!(out.row(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn add_and_diff() {
+        let a = Tensor::from_vec(&[2], vec![1., 2.]);
+        let b = Tensor::from_vec(&[2], vec![3., 5.]);
+        assert_eq!(a.add(&b).data, vec![4., 7.]);
+        assert_eq!(a.max_abs_diff(&b), 3.0);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::from_vec(&[2, 3], vec![0., 5., 1., 9., 2., 3.]);
+        assert_eq!(t.argmax_row(0), 1);
+        assert_eq!(t.argmax_row(1), 0);
+    }
+}

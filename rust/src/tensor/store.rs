@@ -1,0 +1,236 @@
+//! Weight store: loads `manifest.json` + raw `.bin` blobs emitted by the
+//! Python AOT pipeline (`python/compile/iobin.py` is the writer twin).
+//!
+//! The manifest's tensor table maps names to (dtype, shape, offset, nbytes,
+//! bin-file); `WeightStore` memory-loads each referenced bin once and hands
+//! out `Tensor` copies on demand. It also exposes the artifact ABI table —
+//! which HLO file implements each component and the exact positional
+//! parameter order the compiled executable expects.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// One artifact's ABI: runtime inputs then weight parameters, in call order.
+#[derive(Clone, Debug)]
+pub struct ArtifactAbi {
+    pub name: String,
+    pub file: String,
+    pub runtime_inputs: Vec<(String, Vec<usize>, String)>,
+    pub weight_params: Vec<(String, Vec<usize>)>,
+    /// "model" (global tensor names), "layer" (resolve `layer{l}.` prefix),
+    /// or "expert" (layer prefix + slice the `[E, ...]` stack at `e`).
+    pub weight_scope: String,
+    pub outputs: usize,
+}
+
+/// Loaded tensor metadata + blob access.
+#[derive(Debug)]
+pub struct WeightStore {
+    dir: PathBuf,
+    bins: BTreeMap<String, Vec<u8>>,
+    table: BTreeMap<String, TensorMeta>,
+    pub artifacts: BTreeMap<String, ArtifactAbi>,
+    pub manifest: Json,
+}
+
+#[derive(Clone, Debug)]
+struct TensorMeta {
+    dtype: String,
+    shape: Vec<usize>,
+    offset: usize,
+    nbytes: usize,
+    bin: String,
+}
+
+impl WeightStore {
+    /// Load `manifest.json` (and lazily any bins it references) from `dir`.
+    pub fn open(dir: &Path) -> Result<WeightStore> {
+        let manifest = Json::parse_file(&dir.join("manifest.json"))
+            .map_err(anyhow::Error::msg)
+            .context("loading manifest.json (run `make artifacts`)")?;
+        let mut store = WeightStore {
+            dir: dir.to_path_buf(),
+            bins: BTreeMap::new(),
+            table: BTreeMap::new(),
+            artifacts: BTreeMap::new(),
+            manifest: manifest.clone(),
+        };
+        store.ingest_table(manifest.get("tensors"))?;
+        for (name, abi) in manifest.get("artifacts").as_obj() {
+            store.artifacts.insert(name.clone(), parse_abi(name, abi));
+        }
+        // Predictor tensors live in a side table written by finetune.py.
+        let profile = dir.join("predictor_profile.json");
+        if profile.exists() {
+            let p = Json::parse_file(&profile).map_err(anyhow::Error::msg)?;
+            store.ingest_table(p.get("tensors"))?;
+        }
+        Ok(store)
+    }
+
+    fn ingest_table(&mut self, tensors: &Json) -> Result<()> {
+        for (name, t) in tensors.as_obj() {
+            self.table.insert(
+                name.clone(),
+                TensorMeta {
+                    dtype: t.get("dtype").as_str().to_string(),
+                    shape: t.get("shape").as_usizes(),
+                    offset: t.get("offset").as_usize(),
+                    nbytes: t.get("nbytes").as_usize(),
+                    bin: t.get("bin").as_str().to_string(),
+                },
+            );
+        }
+        Ok(())
+    }
+
+    fn bin(&mut self, name: &str) -> Result<&[u8]> {
+        if !self.bins.contains_key(name) {
+            let path = self.dir.join(name);
+            let data = std::fs::read(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            self.bins.insert(name.to_string(), data);
+        }
+        Ok(self.bins.get(name).unwrap())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.table.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.table.keys()
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        match self.table.get(name) {
+            Some(m) => Ok(&m.shape),
+            None => bail!("unknown tensor {name:?}"),
+        }
+    }
+
+    /// Load a named f32 tensor.
+    pub fn tensor(&mut self, name: &str) -> Result<Tensor> {
+        let meta = match self.table.get(name) {
+            Some(m) => m.clone(),
+            None => bail!("unknown tensor {name:?}"),
+        };
+        if meta.dtype != "f32" {
+            bail!("tensor {name:?} has dtype {} (expected f32)", meta.dtype);
+        }
+        let blob = self.bin(&meta.bin)?;
+        let bytes = &blob[meta.offset..meta.offset + meta.nbytes];
+        let mut data = vec![0f32; meta.nbytes / 4];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(Tensor::from_vec(&meta.shape, data))
+    }
+
+    /// Resolve an artifact weight parameter name for a given layer/expert
+    /// scope into the global tensor name.
+    pub fn resolve(scope: &str, param: &str, layer: usize) -> String {
+        match scope {
+            "model" => param.to_string(),
+            "layer" | "expert" => format!("layer{layer}.{param}"),
+            other => panic!("unknown weight scope {other:?}"),
+        }
+    }
+}
+
+fn parse_abi(name: &str, abi: &Json) -> ArtifactAbi {
+    ArtifactAbi {
+        name: name.to_string(),
+        file: abi.get("file").as_str().to_string(),
+        runtime_inputs: abi
+            .get("runtime_inputs")
+            .as_arr()
+            .iter()
+            .map(|r| {
+                (
+                    r.get("name").as_str().to_string(),
+                    r.get("shape").as_usizes(),
+                    r.get("dtype").as_str().to_string(),
+                )
+            })
+            .collect(),
+        weight_params: abi
+            .get("weight_params")
+            .as_arr()
+            .iter()
+            .map(|p| (p.get("name").as_str().to_string(), p.get("shape").as_usizes()))
+            .collect(),
+        weight_scope: abi.get("weight_scope").as_str().to_string(),
+        outputs: abi.get("outputs").as_usize(),
+    }
+}
+
+/// Default artifacts directory: $MOELESS_ARTIFACTS or `<crate>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("MOELESS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> Option<WeightStore> {
+        let dir = artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(WeightStore::open(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_manifest_and_tensors() {
+        let Some(mut s) = store() else { return };
+        assert!(s.has("wemb"));
+        let wemb = s.tensor("wemb").unwrap();
+        assert_eq!(wemb.shape.len(), 2);
+        assert!(wemb.data.iter().all(|x| x.is_finite()));
+        // Stacked expert weights slice cleanly.
+        let w1 = s.tensor("layer0.w1").unwrap();
+        assert_eq!(w1.rank(), 3);
+        let e0 = w1.slice0(0);
+        assert_eq!(e0.shape, w1.shape[1..].to_vec());
+    }
+
+    #[test]
+    fn artifact_abis_present() {
+        let Some(s) = store() else { return };
+        for name in ["tiny_model", "tiny_attn", "tiny_gate", "tiny_expert", "tiny_head"] {
+            let abi = s.artifacts.get(name).expect(name);
+            assert!(!abi.runtime_inputs.is_empty() || !abi.weight_params.is_empty());
+        }
+        assert_eq!(s.artifacts["tiny_attn"].outputs, 2);
+        assert_eq!(s.artifacts["tiny_expert"].weight_scope, "expert");
+    }
+
+    #[test]
+    fn predictor_tensors_ingested() {
+        let Some(s) = store() else { return };
+        assert!(s.has("pred.l0.d1.wg"), "finetune outputs missing");
+    }
+
+    #[test]
+    fn resolve_scopes() {
+        assert_eq!(WeightStore::resolve("model", "wemb", 3), "wemb");
+        assert_eq!(WeightStore::resolve("layer", "wg", 2), "layer2.wg");
+        assert_eq!(WeightStore::resolve("expert", "w1", 0), "layer0.w1");
+    }
+
+    #[test]
+    fn unknown_tensor_errors() {
+        let Some(mut s) = store() else { return };
+        assert!(s.tensor("nope").is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Criterion-like micro/macro bench harness (substrate S6; criterion is
+//! unavailable offline).
+//!
+//! `cargo bench` runs the `rust/benches/*.rs` binaries (harness = false);
+//! each uses this module to (a) time hot paths with warmup + repeated
+//! measurement and (b) print the paper-figure tables/series in a uniform,
+//! greppable format:
+//!
+//! ```text
+//! === FIG 8: MoE layer forward time CDF — mixtral-8x7b on lmsys ===
+//! series megatron-lm p50=6.21ms p99=14.80ms mean=6.80ms
+//! row megatron-lm 0.10 3.1ms
+//! ```
+
+use std::time::Instant;
+
+use crate::util::stats::{percentile, Summary};
+
+/// Timing result of one benchmark target.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} iters={:<7} mean={:>12} p50={:>12} p99={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: warms up for `warmup_iters`, then measures batches
+/// until `min_runtime_ms` of samples are collected (or `max_iters`).
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_runtime_ms: u64,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, min_runtime_ms: 300, max_iters: 10_000 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, min_runtime_ms: 50, max_iters: 1_000 }
+    }
+
+    /// Time `f`, which must perform one full unit of work per call.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed().as_millis() as u64) < self.min_runtime_ms
+            && samples_ns.len() < self.max_iters
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = Summary::of(&samples_ns);
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: s.mean,
+            p50_ns: percentile(&samples_ns, 50.0),
+            p99_ns: percentile(&samples_ns, 99.0),
+            min_ns: s.min,
+        };
+        println!("{}", m.report());
+        m
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paper-figure printing.
+// ---------------------------------------------------------------------------
+
+/// Print a figure/table header in the uniform greppable format.
+pub fn fig_header(id: &str, caption: &str) {
+    println!("\n=== {id}: {caption} ===");
+}
+
+/// Print one named series as (x, y) rows.
+pub fn series(name: &str, points: &[(f64, f64)], xfmt: &str, yfmt: &str) {
+    for (x, y) in points {
+        println!("row {name} {} {}", fmt_unit(*x, xfmt), fmt_unit(*y, yfmt));
+    }
+}
+
+/// Print a one-line series summary (CDF-style figures).
+pub fn series_summary(name: &str, label: &str, values_ms: &crate::util::stats::Cdf) {
+    println!(
+        "series {name:<28} {label}: mean={:.3}ms p50={:.3}ms p90={:.3}ms p99={:.3}ms n={}",
+        values_ms.mean(),
+        values_ms.p(50.0),
+        values_ms.p(90.0),
+        values_ms.p(99.0),
+        values_ms.len()
+    );
+}
+
+pub fn fmt_unit(v: f64, unit: &str) -> String {
+    match unit {
+        "ms" => format!("{v:.3}ms"),
+        "s" => format!("{v:.2}s"),
+        "pct" => format!("{:.1}%", v * 100.0),
+        "x" => format!("{v:.3}"),
+        "int" => format!("{}", v.round() as i64),
+        _ => format!("{v:.4}{unit}"),
+    }
+}
+
+/// Render an aligned text table (Tables 1 and 2).
+pub fn table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    println!("{}", line(&hdr));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-+-"));
+    for row in rows {
+        println!("{}", line(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_work() {
+        let b = Bencher { warmup_iters: 1, min_runtime_ms: 10, max_iters: 200 };
+        let mut acc = 0u64;
+        let m = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.iters > 0);
+        assert!(m.mean_ns > 0.0);
+        assert!(m.p50_ns <= m.p99_ns);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(12.0), "12.0ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+
+    #[test]
+    fn unit_formatting() {
+        assert_eq!(fmt_unit(0.43, "pct"), "43.0%");
+        assert_eq!(fmt_unit(5.0, "int"), "5");
+        assert_eq!(fmt_unit(1.25, "ms"), "1.250ms");
+    }
+}

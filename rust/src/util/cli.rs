@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser (substrate S3; clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]...`. Typed getters
+//! with defaults keep the call sites one-liners.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` / `--flag` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub opts: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(argv: Vec<String>) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or boolean `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.opts.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.opts
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.opts
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.usize(name, default as usize) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = parse("serve --model tiny-moe --gpus 8 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.str("model", "x"), "tiny-moe");
+        assert_eq!(a.usize("gpus", 1), 8);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn eq_form_and_defaults() {
+        let a = parse("bench --cv=0.4");
+        assert!((a.f64("cv", 0.2) - 0.4).abs() < 1e-12);
+        assert!((a.f64("missing", 0.2) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("replay trace.json other");
+        assert_eq!(a.subcommand.as_deref(), Some("replay"));
+        assert_eq!(a.positional, vec!["trace.json", "other"]);
+    }
+
+    #[test]
+    fn flag_before_value_opt() {
+        let a = parse("run --fast --n 3");
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize("n", 0), 3);
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substrates (S1–S7): everything an offline build can't pull from
+//! crates.io — JSON, PRNG, CLI, thread pool, stats, bench harness,
+//! property testing.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,106 @@
+//! Mini property-testing framework (substrate S7; proptest is unavailable
+//! offline).
+//!
+//! `property(cases, |g| { ... })` runs a closure over `cases` independently
+//! seeded generator handles; on failure it reports the failing case's seed
+//! so the case reproduces exactly with `PROPTEST_SEED=<seed>`.
+
+use crate::util::rng::Pcg;
+
+/// Generator handle passed to each property case.
+pub struct Gen {
+    pub rng: Pcg,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Vector of length in [lo_len, hi_len] with elements from `f`.
+    pub fn vec_of<T>(
+        &mut self,
+        lo_len: usize,
+        hi_len: usize,
+        mut f: impl FnMut(&mut Self) -> T,
+    ) -> Vec<T> {
+        let n = self.usize_in(lo_len, hi_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Non-negative load vector (the scaler/placer input domain).
+    pub fn loads(&mut self, n_experts: usize, max_load: f64) -> Vec<f64> {
+        (0..n_experts).map(|_| (self.rng.f64() * max_load).floor()).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `f` over `cases` generated inputs; panics with the failing seed.
+pub fn property(cases: usize, f: impl Fn(&mut Gen)) {
+    let base = std::env::var("PROPTEST_SEED").ok().and_then(|s| s.parse::<u64>().ok());
+    if let Some(seed) = base {
+        let mut g = Gen { rng: Pcg::seeded(seed), seed };
+        f(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x9e3779b97f4a7c15u64.wrapping_mul(case as u64 + 1);
+        let mut g = Gen { rng: Pcg::seeded(seed), seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case} — rerun with PROPTEST_SEED={seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn properties_run_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        property(25, |g| {
+            let v = g.vec_of(0, 10, |g| g.f64_in(-1.0, 1.0));
+            assert!(v.len() <= 10);
+            assert!(v.iter().all(|x| (-1.0..=1.0).contains(x)));
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    fn gen_ranges() {
+        property(50, |g| {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let loads = g.loads(8, 100.0);
+            assert_eq!(loads.len(), 8);
+            assert!(loads.iter().all(|&l| (0.0..=100.0).contains(&l)));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        property(10, |g| {
+            assert!(g.usize_in(0, 9) < 5, "intentional failure");
+        });
+    }
+}

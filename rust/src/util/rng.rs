@@ -1,0 +1,254 @@
+//! Deterministic PRNG and distribution sampling (substrate S2).
+//!
+//! The `rand` crate is unavailable offline, so this module provides the
+//! randomness the whole system uses: a PCG-XSH-RR-64/32 core (O'Neill 2014)
+//! plus the distributions the workload generators need (normal, log-normal,
+//! Poisson, exponential, Zipf). Everything is seeded; every simulation,
+//! bench, and property test is reproducible bit-for-bit.
+
+/// PCG-XSH-RR 64/32: 64-bit LCG state, 32-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+    /// Cached second normal variate (Box–Muller produces pairs; caching
+    /// halves the libm calls on the predictor hot path — §Perf).
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    /// Seed a generator; `stream` selects an independent sequence.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1, spare_normal: None };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience single-stream constructor.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Derive an independent child stream (for per-layer / per-request rngs).
+    pub fn fork(&mut self, stream: u64) -> Pcg {
+        let seed = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
+        Pcg::new(seed, stream)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.f64() * n as f64) as usize % n
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (pair-cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with given mean and standard deviation.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal: exp(N(mu, sigma)).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate lambda.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.f64().max(1e-300).ln() / lambda
+    }
+
+    /// Poisson via inversion for small lambda, normal approx above 30.
+    pub fn poisson(&mut self, lambda: f64) -> usize {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            return self.normal_ms(lambda, lambda.sqrt()).round().max(0.0) as usize;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut r = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipf-like popularity weights: weight(i) ∝ 1/(i+1)^s, shuffled by `perm`.
+///
+/// This is the skew shape prior MoE studies observe for expert popularity
+/// (Fig. 1); the permutation decouples popularity rank from expert index.
+pub fn zipf_weights(n: usize, s: f64, rng: &mut Pcg) -> Vec<f64> {
+    let mut w: Vec<f64> = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+    rng.shuffle(&mut w);
+    let total: f64 = w.iter().sum();
+    w.iter_mut().for_each(|x| *x /= total);
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg::seeded(42);
+        let mut b = Pcg::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg::new(42, 1);
+        let mut b = Pcg::new(42, 2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u32()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u32()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg::seeded(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Pcg::seeded(1);
+        let mean: f64 = (0..20_000).map(|_| r.f64()).sum::<f64>() / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::seeded(2);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut r = Pcg::seeded(3);
+        for lambda in [2.0, 50.0] {
+            let m: f64 =
+                (0..5_000).map(|_| r.poisson(lambda) as f64).sum::<f64>() / 5_000.0;
+            assert!((m - lambda).abs() < lambda * 0.1, "lambda={lambda} m={m}");
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Pcg::seeded(4);
+        for _ in 0..1_000 {
+            assert!(r.below(7) < 7);
+            let x = r.range(3, 9);
+            assert!((3..9).contains(&x));
+        }
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Pcg::seeded(5);
+        let w = [0.05, 0.9, 0.05];
+        let hits = (0..5_000).filter(|_| r.weighted(&w) == 1).count();
+        assert!(hits > 4_000, "hits={hits}");
+    }
+
+    #[test]
+    fn zipf_normalized_and_skewed() {
+        let mut r = Pcg::seeded(6);
+        let w = zipf_weights(8, 1.2, &mut r);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let mut sorted = w.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert!(sorted[0] > 3.0 * sorted[7]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::seeded(8);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut back = xs.clone();
+        back.sort();
+        assert_eq!(back, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

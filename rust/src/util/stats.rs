@@ -1,0 +1,246 @@
+//! Statistics toolkit (substrate S5): summaries, percentiles, CDFs,
+//! correlation — the measurement vocabulary of the paper's evaluation
+//! (latency CDFs in Figs. 8/9/17, Pearson in Fig. 12, CV in Algorithm 1).
+
+/// Mean / std / CV / min / max over a sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        Summary {
+            n: xs.len(),
+            mean,
+            std: var.sqrt(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// Coefficient of variation — Algorithm 1's balance criterion.
+    pub fn cv(&self) -> f64 {
+        if self.mean.abs() < 1e-12 {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+}
+
+/// Coefficient of variation of a load vector (Algorithm 1's stop test).
+pub fn cv(xs: &[f64]) -> f64 {
+    Summary::of(xs).cv()
+}
+
+/// Percentile by linear interpolation on the sorted sample; q in [0,100].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// An empirical CDF over a sample — the paper's Figs. 8/9/17 primitive.
+#[derive(Clone, Debug)]
+pub struct Cdf {
+    sorted: Vec<f64>,
+}
+
+impl Cdf {
+    pub fn of(mut xs: Vec<f64>) -> Cdf {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Cdf { sorted: xs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn p(&self, q: f64) -> f64 {
+        percentile(&self.sorted, q)
+    }
+
+    pub fn mean(&self) -> f64 {
+        Summary::of(&self.sorted).mean
+    }
+
+    /// Fraction of samples <= x.
+    pub fn at(&self, x: f64) -> f64 {
+        let idx = self.sorted.partition_point(|&v| v <= x);
+        idx as f64 / self.sorted.len().max(1) as f64
+    }
+
+    /// (value, cumulative fraction) rows at the given percentiles — the
+    /// series the bench harness prints for figure regeneration.
+    pub fn rows(&self, qs: &[f64]) -> Vec<(f64, f64)> {
+        qs.iter().map(|&q| (self.p(q), q / 100.0)).collect()
+    }
+}
+
+/// Pearson correlation coefficient (Fig. 12).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        num += (a - mx) * (b - my);
+        dx += (a - mx).powi(2);
+        dy += (b - my).powi(2);
+    }
+    if dx <= 0.0 || dy <= 0.0 {
+        0.0
+    } else {
+        num / (dx.sqrt() * dy.sqrt())
+    }
+}
+
+/// Cosine similarity between two vectors (Fig. 6a).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut num, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b) {
+        num += *x as f64 * *y as f64;
+        na += (*x as f64).powi(2);
+        nb += (*y as f64).powi(2);
+    }
+    num / (na.sqrt() * nb.sqrt() + 1e-12)
+}
+
+/// Fixed-bin histogram for heatmaps (Fig. 12's density plot).
+#[derive(Clone, Debug)]
+pub struct Histogram2d {
+    pub xbins: usize,
+    pub ybins: usize,
+    pub xmax: f64,
+    pub ymax: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram2d {
+    pub fn new(xbins: usize, ybins: usize, xmax: f64, ymax: f64) -> Self {
+        Histogram2d { xbins, ybins, xmax, ymax, counts: vec![0; xbins * ybins] }
+    }
+
+    pub fn add(&mut self, x: f64, y: f64) {
+        let xi = ((x / self.xmax * self.xbins as f64) as usize).min(self.xbins - 1);
+        let yi = ((y / self.ymax * self.ybins as f64) as usize).min(self.ybins - 1);
+        self.counts[yi * self.xbins + xi] += 1;
+    }
+
+    pub fn get(&self, xi: usize, yi: usize) -> u64 {
+        self.counts[yi * self.xbins + xi]
+    }
+
+    /// ASCII density render (darker = more mass) for terminal figures.
+    pub fn render(&self) -> String {
+        let max = *self.counts.iter().max().unwrap_or(&1) as f64;
+        let shades = [' ', '.', ':', '+', '*', '#', '@'];
+        let mut out = String::new();
+        for yi in (0..self.ybins).rev() {
+            for xi in 0..self.xbins {
+                let c = self.get(xi, yi) as f64 / max.max(1.0);
+                let idx = (c * (shades.len() - 1) as f64).round() as usize;
+                out.push(shades[idx]);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 4.0).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_uniform_is_zero() {
+        assert!(cv(&[5.0, 5.0, 5.0]) < 1e-12);
+        assert!(cv(&[1.0, 9.0]) > 0.5);
+        assert_eq!(cv(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [0.0, 10.0, 20.0, 30.0];
+        assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 30.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_at_and_rows() {
+        let c = Cdf::of(vec![3.0, 1.0, 2.0, 4.0]);
+        assert!((c.at(2.0) - 0.5).abs() < 1e-12);
+        assert!((c.at(0.5) - 0.0).abs() < 1e-12);
+        assert!((c.at(9.0) - 1.0).abs() < 1e-12);
+        let rows = c.rows(&[50.0]);
+        assert!((rows[0].0 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&x, &[1.0, 1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn cosine_orthogonal() {
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-9);
+        assert!((cosine(&[1.0, 2.0], &[2.0, 4.0]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hist2d_bins() {
+        let mut h = Histogram2d::new(4, 4, 4.0, 4.0);
+        h.add(0.5, 0.5);
+        h.add(3.9, 3.9);
+        h.add(5.0, 5.0); // clamps into the last bin
+        assert_eq!(h.get(0, 0), 1);
+        assert_eq!(h.get(3, 3), 2);
+        assert_eq!(h.render().lines().count(), 4);
+    }
+}

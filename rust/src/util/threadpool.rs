@@ -1,0 +1,168 @@
+//! Fixed-size thread pool + parallel map (substrate S4; tokio is
+//! unavailable offline).
+//!
+//! The coordinator's request loop is synchronous-per-iteration by design
+//! (the MoE layer pipeline is a strict dependency chain), but expert
+//! *instances within one layer* are embarrassingly parallel — `scoped_map`
+//! is what the Tier-A serving path uses to fan expert invocations out, and
+//! what parameter sweeps use to run independent simulations.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of workers consuming jobs from a shared channel.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("moeless-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, size }
+    }
+
+    /// Pool sized to the machine (cpus - 0, min 1).
+    pub fn host_sized() -> ThreadPool {
+        Self::new(thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().expect("pool shut down").send(Box::new(f)).expect("send job");
+    }
+
+    /// Run `f(i)` for i in 0..n on the pool, blocking until all complete.
+    pub fn run_all<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let remaining = Arc::new(AtomicUsize::new(n));
+        let (done_tx, done_rx) = mpsc::channel();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let remaining = Arc::clone(&remaining);
+            let done_tx = done_tx.clone();
+            self.execute(move || {
+                f(i);
+                if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let _ = done_tx.send(());
+                }
+            });
+        }
+        if n > 0 {
+            done_rx.recv().expect("pool completion");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map over a slice using scoped threads (no 'static bound):
+/// chunks the input across `threads` workers, preserves order.
+pub fn scoped_map<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, items.len());
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let chunk = items.len().div_ceil(threads);
+    thread::scope(|s| {
+        for (islice, oslice) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            s.spawn(|| {
+                for (i, o) in islice.iter().zip(oslice.iter_mut()) {
+                    *o = Some(f(i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("scoped_map slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.run_all(100, move |i| {
+            c.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 5050);
+    }
+
+    #[test]
+    fn run_all_zero_jobs_ok() {
+        let pool = ThreadPool::new(2);
+        pool.run_all(0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn scoped_map_preserves_order() {
+        let items: Vec<u64> = (0..57).collect();
+        let out = scoped_map(&items, 4, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_single_item() {
+        assert_eq!(scoped_map(&[5u32], 8, |x| x + 1), vec![6]);
+        let empty: Vec<u32> = vec![];
+        assert!(scoped_map(&empty, 4, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+}

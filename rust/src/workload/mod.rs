@@ -1,0 +1,8 @@
+//! Workload generation (substrate S20): Azure-style request traces, dataset
+//! length models, and the Tier-B expert routing generator.
+
+pub mod routing;
+pub mod trace;
+
+pub use routing::RoutingModel;
+pub use trace::{azure_like_trace, TraceRequest};

@@ -1,0 +1,209 @@
+//! Tier-B expert routing generator: produces per-layer expert load
+//! distributions with the three properties the paper's analysis rests on:
+//!
+//! 1. **Skewed popularity** (Fig. 1): per-layer expert popularity follows a
+//!    shuffled Zipf profile with model-specific skew.
+//! 2. **Temporal drift** (Fig. 3c): popularity performs a slow random walk
+//!    in log space, so hot experts change over minutes — this is what
+//!    defeats EPLB's periodic historical rebalancing.
+//! 3. **Batch-level noise**: each iteration's realized loads deviate from
+//!    popularity (finite-batch multinomial variance + content correlation),
+//!    so even a fresh historical average misses batch dynamics.
+//!
+//! Tier A replaces all of this with real TinyMoE gate outputs; this module
+//! is the scale substitute (DESIGN.md substitution table).
+
+use crate::config::ModelSpec;
+use crate::util::rng::{zipf_weights, Pcg};
+
+/// Generator state for one served model.
+#[derive(Clone, Debug)]
+pub struct RoutingModel {
+    /// Per-layer popularity distributions (each sums to 1).
+    pops: Vec<Vec<f64>>,
+    pub top_k: usize,
+    n_experts: usize,
+    /// Log-space random-walk step per second of virtual time.
+    pub drift_sigma: f64,
+    /// Batch-level multiplicative noise strength.
+    pub batch_sigma: f64,
+    rng: Pcg,
+}
+
+impl RoutingModel {
+    pub fn new(model: &ModelSpec, seed: u64) -> RoutingModel {
+        let mut rng = Pcg::new(seed, 0x401d);
+        let pops = (0..model.n_layers)
+            .map(|_| zipf_weights(model.n_experts, model.popularity_skew, &mut rng))
+            .collect();
+        RoutingModel {
+            pops,
+            top_k: model.top_k,
+            n_experts: model.n_experts,
+            drift_sigma: 0.03,
+            batch_sigma: 0.45,
+            rng,
+        }
+    }
+
+    /// Advance popularity by `dt_s` seconds of random-walk drift.
+    pub fn step(&mut self, dt_s: f64) {
+        if dt_s <= 0.0 {
+            return;
+        }
+        let sigma = self.drift_sigma * dt_s.sqrt();
+        for pop in &mut self.pops {
+            let mut total = 0.0;
+            for p in pop.iter_mut() {
+                *p = (*p).max(1e-9) * (sigma * self.rng.normal()).exp();
+                total += *p;
+            }
+            pop.iter_mut().for_each(|p| *p /= total);
+        }
+    }
+
+    /// Realized expert loads (token counts) for one layer of one iteration
+    /// routing `n_tokens` tokens to `top_k` experts each.
+    pub fn layer_loads(&mut self, layer: usize, n_tokens: f64) -> Vec<f64> {
+        let n_routed = n_tokens * self.top_k as f64;
+        let pop = &self.pops[layer];
+        // Batch-level multiplicative noise, renormalized; then integer-ish
+        // loads by largest-remainder rounding to keep the total exact.
+        let mut w: Vec<f64> = pop
+            .iter()
+            .map(|&p| p * self.rng.lognormal(0.0, self.batch_sigma))
+            .collect();
+        let total: f64 = w.iter().sum();
+        w.iter_mut().for_each(|x| *x = *x / total * n_routed);
+        round_preserving_sum(&mut w);
+        w
+    }
+
+    /// Loads for every layer of an iteration.
+    pub fn iteration_loads(&mut self, n_tokens: usize) -> Vec<Vec<f64>> {
+        (0..self.pops.len())
+            .map(|l| self.layer_loads(l, n_tokens as f64))
+            .collect()
+    }
+
+    /// Number of experts with nonzero load (Fig. 3c's active-expert count).
+    pub fn active_experts(loads: &[f64]) -> usize {
+        loads.iter().filter(|&&w| w >= 1.0).count()
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    pub fn popularity(&self, layer: usize) -> &[f64] {
+        &self.pops[layer]
+    }
+}
+
+/// Round entries to integers while preserving the (integral) total —
+/// largest-remainder method.
+fn round_preserving_sum(w: &mut [f64]) {
+    let target: f64 = w.iter().sum::<f64>().round();
+    let mut floor_sum = 0.0;
+    let mut rema: Vec<(usize, f64)> = Vec::with_capacity(w.len());
+    for (i, x) in w.iter_mut().enumerate() {
+        let f = x.floor();
+        rema.push((i, *x - f));
+        *x = f;
+        floor_sum += f;
+    }
+    let mut need = (target - floor_sum) as i64;
+    rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    for (i, _) in rema {
+        if need <= 0 {
+            break;
+        }
+        w[i] += 1.0;
+        need -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::util::stats::cv;
+
+    fn model() -> ModelSpec {
+        ModelSpec::mixtral_8x7b()
+    }
+
+    #[test]
+    fn loads_conserve_routed_tokens() {
+        let mut rm = RoutingModel::new(&model(), 1);
+        for n in [10usize, 100, 1000] {
+            let loads = rm.layer_loads(0, n as f64);
+            let total: f64 = loads.iter().sum();
+            assert!((total - (n * 2) as f64).abs() < 1e-6, "n={n} total={total}");
+            assert!(loads.iter().all(|&w| w >= 0.0 && w.fract() == 0.0));
+        }
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let mut rm = RoutingModel::new(&model(), 2);
+        // Average many iterations: the skew must show through (Fig. 1).
+        let mut acc = vec![0.0; 8];
+        for _ in 0..200 {
+            for (a, w) in acc.iter_mut().zip(rm.layer_loads(5, 500.0)) {
+                *a += w;
+            }
+        }
+        assert!(cv(&acc) > 0.3, "CV={}", cv(&acc));
+    }
+
+    #[test]
+    fn drift_changes_popularity_slowly() {
+        let mut rm = RoutingModel::new(&model(), 3);
+        let before = rm.popularity(0).to_vec();
+        rm.step(1.0);
+        let after1 = rm.popularity(0).to_vec();
+        rm.step(600.0);
+        let after600 = rm.popularity(0).to_vec();
+        let l1 = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+        };
+        assert!(l1(&before, &after1) < l1(&before, &after600));
+        assert!((after600.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn iteration_covers_all_layers() {
+        let mut rm = RoutingModel::new(&model(), 4);
+        let all = rm.iteration_loads(100);
+        assert_eq!(all.len(), 32);
+        assert!(all.iter().all(|l| l.len() == 8));
+    }
+
+    #[test]
+    fn active_expert_count_scales_with_batch() {
+        let mut rm = RoutingModel::new(&ModelSpec::phi_3_5_moe(), 5);
+        let small = RoutingModel::active_experts(&rm.layer_loads(0, 2.0));
+        let large = RoutingModel::active_experts(&rm.layer_loads(0, 2000.0));
+        assert!(small <= large);
+        assert!(small <= 4, "a 2-token batch activates at most 4 experts");
+        assert!(large >= 8, "a big batch lights up most experts");
+    }
+
+    #[test]
+    fn round_preserving_sum_exact() {
+        let mut w = vec![1.2, 2.7, 3.1];
+        round_preserving_sum(&mut w);
+        assert_eq!(w.iter().sum::<f64>(), 7.0);
+        assert!(w.iter().all(|x| x.fract() == 0.0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = RoutingModel::new(&model(), 9);
+        let mut b = RoutingModel::new(&model(), 9);
+        a.step(5.0);
+        b.step(5.0);
+        assert_eq!(a.layer_loads(3, 700.0), b.layer_loads(3, 700.0));
+    }
+}

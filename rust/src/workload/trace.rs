@@ -1,0 +1,120 @@
+//! Azure-LLM-inference-style request trace generation (§6.1).
+//!
+//! The paper replays the noon-peak window of the public Azure traces
+//! [Patel et al., Splitwise], sampling request bodies from ShareGPT /
+//! LMSYS-Chat-1M. We generate the same *shape* (DESIGN.md substitution
+//! table): a Poisson arrival process whose rate follows a diurnal ramp with
+//! superimposed bursts (Fig. 3a), with prompt/output token counts drawn
+//! from per-dataset log-normal fits (Fig. 3b's aggregated token loads).
+
+use crate::config::DatasetSpec;
+use crate::util::rng::Pcg;
+
+/// One inference request of the replayed trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRequest {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// Generate an Azure-like trace: `duration_s` seconds at `base_rps`
+/// average arrivals/s with diurnal modulation + bursts.
+pub fn azure_like_trace(
+    dataset: &DatasetSpec,
+    duration_s: f64,
+    base_rps: f64,
+    seed: u64,
+) -> Vec<TraceRequest> {
+    let mut rng = Pcg::new(seed, 0xa2be);
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    let mut burst_until = -1.0f64;
+    let mut burst_gain = 1.0f64;
+    for sec in 0..duration_s.ceil() as usize {
+        let t = sec as f64;
+        // Diurnal ramp toward a mid-trace peak (the replayed noon window).
+        let phase = t / duration_s.max(1.0);
+        let diurnal = 0.75 + 0.5 * (std::f64::consts::PI * phase).sin();
+        // Bursts: ~every 40 s on average, 2-4x for 3-8 s (Fig. 3a spikes).
+        if t > burst_until && rng.f64() < 1.0 / 40.0 {
+            burst_until = t + 3.0 + rng.f64() * 5.0;
+            burst_gain = 2.0 + rng.f64() * 2.0;
+        }
+        let gain = if t <= burst_until { burst_gain } else { 1.0 };
+        let n = rng.poisson(base_rps * diurnal * gain);
+        for _ in 0..n {
+            let arrival = t + rng.f64();
+            let (pm, ps) = dataset.prompt_lognorm;
+            let (om, os) = dataset.output_lognorm;
+            out.push(TraceRequest {
+                id,
+                arrival_s: arrival,
+                prompt_tokens: (rng.lognormal(pm, ps).round() as usize)
+                    .clamp(1, dataset.max_tokens),
+                output_tokens: (rng.lognormal(om, os).round() as usize)
+                    .clamp(1, dataset.max_tokens),
+            });
+            id += 1;
+        }
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out
+}
+
+/// Per-second aggregated token arrivals (Fig. 3b's series).
+pub fn tokens_per_second(trace: &[TraceRequest], duration_s: f64) -> Vec<f64> {
+    let mut bins = vec![0.0; duration_s.ceil() as usize];
+    for r in trace {
+        let s = (r.arrival_s as usize).min(bins.len().saturating_sub(1));
+        bins[s] += r.prompt_tokens as f64;
+    }
+    bins
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+
+    #[test]
+    fn deterministic_and_sorted() {
+        let d = DatasetSpec::lmsys();
+        let a = azure_like_trace(&d, 60.0, 4.0, 7);
+        let b = azure_like_trace(&d, 60.0, 4.0, 7);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn rate_near_base() {
+        let d = DatasetSpec::lmsys();
+        let t = azure_like_trace(&d, 300.0, 4.0, 1);
+        let rps = t.len() as f64 / 300.0;
+        assert!(rps > 2.0 && rps < 10.0, "rps={rps}");
+    }
+
+    #[test]
+    fn lengths_within_bounds_and_dataset_shapes_differ() {
+        let share = azure_like_trace(&DatasetSpec::sharegpt(), 120.0, 4.0, 2);
+        let lmsys = azure_like_trace(&DatasetSpec::lmsys(), 120.0, 4.0, 2);
+        for r in share.iter().chain(&lmsys) {
+            assert!(r.prompt_tokens >= 1 && r.prompt_tokens <= 4096);
+            assert!(r.output_tokens >= 1 && r.output_tokens <= 4096);
+        }
+        let mean = |t: &[TraceRequest]| {
+            t.iter().map(|r| r.prompt_tokens as f64).sum::<f64>() / t.len() as f64
+        };
+        assert!(mean(&share) > mean(&lmsys), "ShareGPT prompts are longer");
+    }
+
+    #[test]
+    fn bursts_create_variance() {
+        let d = DatasetSpec::lmsys();
+        let t = azure_like_trace(&d, 300.0, 6.0, 3);
+        let bins = tokens_per_second(&t, 300.0);
+        let s = crate::util::stats::Summary::of(&bins);
+        assert!(s.cv() > 0.3, "expected bursty token loads, CV={}", s.cv());
+    }
+}

@@ -1,0 +1,180 @@
+//! Cross-module integration tests (Tier B): policies × workloads × models
+//! composed through the full simulation driver, checking the paper's
+//! qualitative claims end to end.
+
+use moeless::baselines::PolicyKind;
+use moeless::config::{DatasetSpec, ModelSpec, MoelessParams};
+use moeless::metrics::reduction_pct;
+use moeless::sim::{run, SimConfig};
+
+fn cfg(model: ModelSpec, policy: PolicyKind) -> SimConfig {
+    let mut c = SimConfig::new(model, DatasetSpec::lmsys(), policy);
+    c.duration_s = 45.0;
+    c.base_rps = 8.0;
+    c.seed = 77;
+    c
+}
+
+#[test]
+fn all_policies_all_models_complete() {
+    for model in ModelSpec::paper_models() {
+        for kind in PolicyKind::paper_set() {
+            let mut c = cfg(model.clone(), kind);
+            c.duration_s = 15.0;
+            let r = run(&c);
+            assert!(r.iterations > 5, "{} {}: {} iters", model.name, kind.name(), r.iterations);
+            assert!(r.completed_requests > 0, "{} {}", model.name, kind.name());
+            assert!(r.layer_forward_ms.iter().all(|&x| x.is_finite() && x > 0.0));
+            assert!(r.cost_gb_s > 0.0);
+        }
+    }
+}
+
+#[test]
+fn headline_latency_ordering_mixtral() {
+    let meg = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Megatron));
+    let eplb = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Eplb));
+    let orc = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Oracle));
+    let less = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Moeless));
+
+    // Paper §6.2: MoEless < EPLB < Megatron-LM; MoEless closest to Oracle.
+    assert!(less.mean_layer_ms() < eplb.mean_layer_ms());
+    assert!(eplb.mean_layer_ms() < meg.mean_layer_ms());
+    let vs_meg = reduction_pct(meg.mean_layer_ms(), less.mean_layer_ms());
+    assert!(
+        (25.0..70.0).contains(&vs_meg),
+        "latency reduction vs megatron should be in the paper's ballpark (43%), got {vs_meg:.1}%"
+    );
+    // Closest to oracle: within 15% of its mean.
+    assert!(less.mean_layer_ms() < orc.mean_layer_ms() * 1.15);
+}
+
+#[test]
+fn headline_cost_reduction() {
+    let meg = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Megatron));
+    let eplb = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Eplb));
+    let less = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Moeless));
+    // Paper: -92.7% vs Megatron-LM, -95.1% vs EPLB (EPLB costs the most).
+    assert!(eplb.cost_gb_s > meg.cost_gb_s, "EPLB's redundant slots cost extra");
+    let vs_meg = reduction_pct(meg.cost_gb_s, less.cost_gb_s);
+    assert!(vs_meg > 80.0, "cost reduction vs megatron, got {vs_meg:.1}%");
+}
+
+#[test]
+fn tail_latency_also_improves() {
+    let meg = run(&cfg(ModelSpec::phi_3_5_moe(), PolicyKind::Megatron));
+    let less = run(&cfg(ModelSpec::phi_3_5_moe(), PolicyKind::Moeless));
+    assert!(less.layer_cdf().p(99.0) < meg.layer_cdf().p(99.0));
+}
+
+#[test]
+fn distance_sensitivity_tradeoff() {
+    // Fig. 13: latency rises with d while replicas fall.
+    let mut lat = Vec::new();
+    let mut rep = Vec::new();
+    for d in [1usize, 5] {
+        let mut c = cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Moeless);
+        c.params = MoelessParams { prediction_distance: d, ..Default::default() };
+        let r = run(&c);
+        lat.push(r.mean_layer_ms());
+        rep.push(r.mean_replicas());
+    }
+    assert!(lat[1] > lat[0] * 0.99, "latency d=5 {} vs d=1 {}", lat[1], lat[0]);
+    assert!(rep[1] < rep[0], "replicas d=5 {} vs d=1 {}", rep[1], rep[0]);
+}
+
+#[test]
+fn cv_sensitivity_tradeoff() {
+    // Fig. 15: looser V => fewer replicas, higher latency.
+    let mut out = Vec::new();
+    for v in [0.2, 1.0] {
+        let mut c = cfg(ModelSpec::phi_3_5_moe(), PolicyKind::Moeless);
+        c.params = MoelessParams { cv_threshold: v, ..Default::default() };
+        let r = run(&c);
+        out.push((r.mean_layer_ms(), r.mean_replicas()));
+    }
+    assert!(out[1].1 < out[0].1, "replicas: {:?}", out);
+    assert!(out[1].0 > out[0].0 * 0.98, "latency: {:?}", out);
+}
+
+#[test]
+fn ablation_degrades_moeless() {
+    let full = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Moeless));
+    let ablated = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::MoelessAblated));
+    assert!(full.mean_layer_ms() < ablated.mean_layer_ms());
+}
+
+#[test]
+fn serverless_diagnostics_healthy() {
+    // §6.6: nearly all operations warm-started. Mixtral (top-2, 8 experts)
+    // keeps every expert hot; Llama-4-Scout (top-1, 16 experts, 48 layers)
+    // has flickering cold experts and sits a little lower.
+    let mix = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Moeless));
+    assert!(mix.warm_fraction > 0.95, "warm fraction {}", mix.warm_fraction);
+    let llama = run(&cfg(ModelSpec::llama_4_scout(), PolicyKind::Moeless));
+    assert!(llama.warm_fraction > 0.75, "warm fraction {}", llama.warm_fraction);
+    assert!(llama.residency_gb_s > 0.0);
+    assert!(llama.mean_pred_accuracy() > 0.8);
+}
+
+#[test]
+fn reports_are_deterministic_across_policies() {
+    for kind in [PolicyKind::Moeless, PolicyKind::Eplb] {
+        let a = run(&cfg(ModelSpec::mixtral_8x7b(), kind));
+        let b = run(&cfg(ModelSpec::mixtral_8x7b(), kind));
+        assert_eq!(a.layer_forward_ms, b.layer_forward_ms, "{}", kind.name());
+        assert_eq!(a.cost_gb_s, b.cost_gb_s);
+    }
+}
+
+#[test]
+fn higher_load_amplifies_moeless_advantage() {
+    // The straggler term grows with batch size; so must MoEless's edge.
+    let gain = |rps: f64| {
+        let mut m = cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Megatron);
+        m.base_rps = rps;
+        let mut l = cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Moeless);
+        l.base_rps = rps;
+        reduction_pct(run(&m).mean_layer_ms(), run(&l).mean_layer_ms())
+    };
+    let low = gain(1.0);
+    let high = gain(10.0);
+    assert!(high > low, "low-load {low:.1}% vs high-load {high:.1}%");
+}
+
+#[test]
+fn slo_metrics_reported() {
+    let r = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Moeless));
+    assert_eq!(r.e2e_ms.len() as u64, r.completed_requests);
+    assert!(r.ttft_ms.len() as u64 >= r.completed_requests);
+    // TTFT <= e2e for every request distribution-wise.
+    assert!(r.ttft_cdf().p(50.0) <= r.e2e_cdf().p(50.0));
+    assert!(r.ttft_cdf().p(99.0) > 0.0);
+    // MoEless's lower iteration latency shows up in TTFT too.
+    let meg = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Megatron));
+    assert!(r.ttft_cdf().p(99.0) <= meg.ttft_cdf().p(99.0) * 1.1);
+}
+
+#[test]
+fn autotune_trades_replicas_for_bounded_latency() {
+    // The future-work extension: with the auto-tuner on, T_misc-dominated
+    // workloads shed replica cost without catastrophic latency loss.
+    let base = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Moeless));
+    let mut c = cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Moeless);
+    c.autotune = true;
+    let tuned = run(&c);
+    assert!(tuned.mean_replicas() <= base.mean_replicas() + 0.5);
+    assert!(tuned.mean_layer_ms() < base.mean_layer_ms() * 1.5);
+    // And it still beats the serverful baseline.
+    let meg = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Megatron));
+    assert!(tuned.mean_layer_ms() < meg.mean_layer_ms());
+}
+
+#[test]
+fn autotune_is_deterministic() {
+    let mut a = cfg(ModelSpec::phi_3_5_moe(), PolicyKind::Moeless);
+    a.autotune = true;
+    let mut b = cfg(ModelSpec::phi_3_5_moe(), PolicyKind::Moeless);
+    b.autotune = true;
+    assert_eq!(run(&a).layer_forward_ms, run(&b).layer_forward_ms);
+}

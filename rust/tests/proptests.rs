@@ -1,0 +1,279 @@
+//! Property-based tests on coordinator invariants (deliverable (c)):
+//! routing, scaling, placement, batching and state-management laws that
+//! must hold for *any* input, via the in-tree mini-proptest (util S7).
+
+use moeless::cluster::Cluster;
+use moeless::config::ClusterSpec;
+use moeless::placer::Placer;
+use moeless::predictor::accuracy::{l1_error, topk_overlap};
+use moeless::predictor::blend_to_accuracy;
+use moeless::router::Batcher;
+use moeless::scaler::Scaler;
+use moeless::serverless::FunctionManager;
+use moeless::util::quickcheck::property;
+use moeless::util::rng::Pcg;
+use moeless::util::stats::cv;
+use moeless::workload::TraceRequest;
+
+// ---------------------------------------------------------------------------
+// Scaler (Algorithm 1) invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scaler_respects_cap_and_floor() {
+    property(200, |g| {
+        let n = g.usize_in(1, 32);
+        let loads = g.loads(n, 2000.0);
+        let cap = g.usize_in(1, 64);
+        let v = g.f64_in(0.0, 1.0);
+        let plan = Scaler::new(v, cap).scale(&loads);
+        let active = loads.iter().filter(|&&w| w > 0.0).count();
+        // Every loaded expert has >= 1 replica (no starvation), zero-load
+        // experts have none (scale-to-zero), and the cap holds whenever it
+        // admits all active experts.
+        for (e, &w) in loads.iter().enumerate() {
+            if w > 0.0 {
+                assert!(plan.replicas[e] >= 1);
+            } else {
+                assert_eq!(plan.replicas[e], 0);
+            }
+        }
+        assert!(plan.total() <= cap.max(active));
+    });
+}
+
+#[test]
+fn prop_scaler_never_increases_straggler() {
+    property(200, |g| {
+        let n = g.usize_in(1, 16);
+        let loads = g.loads(n, 1000.0);
+        let plan = Scaler::new(g.f64_in(0.0, 0.5), g.usize_in(n, 64)).scale(&loads);
+        let before = loads.iter().cloned().fold(0.0, f64::max);
+        assert!(plan.max_per_replica(&loads) <= before + 1e-9);
+    });
+}
+
+#[test]
+fn prop_scaler_meets_cv_or_exhausts_cap() {
+    property(150, |g| {
+        let n = g.usize_in(2, 16);
+        let loads = g.loads(n, 500.0);
+        if loads.iter().all(|&w| w == 0.0) {
+            return;
+        }
+        let v = g.f64_in(0.1, 1.0);
+        let cap = g.usize_in(2 * n, 4 * n);
+        let plan = Scaler::new(v, cap).scale(&loads);
+        let achieved = cv(&plan.per_replica_loads(&loads));
+        assert!(
+            achieved <= v + 1e-9 || plan.total() == cap,
+            "CV {achieved} > {v} with {}/{} slots",
+            plan.total(),
+            cap
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Placer (Algorithm 2) invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_placer_places_every_replica_exactly_once() {
+    property(200, |g| {
+        let n = g.usize_in(1, 16);
+        let loads = g.loads(n, 800.0);
+        let replicas: Vec<usize> =
+            loads.iter().map(|&w| if w > 0.0 { g.usize_in(1, 4) } else { 0 }).collect();
+        let n_gpus = g.usize_in(1, 8);
+        let cluster = Cluster::new(ClusterSpec { n_gpus, ..ClusterSpec::a6000_x8() });
+        let mut prev: Vec<Vec<usize>> = (0..n)
+            .map(|_| g.vec_of(0, 2, |g| g.usize_in(0, n_gpus - 1)))
+            .collect();
+        let plan = Placer.place(&replicas, &loads, &mut prev, &cluster, 0.33);
+        assert_eq!(plan.placements.len(), replicas.iter().sum::<usize>());
+        for p in &plan.placements {
+            assert!(p.gpu < n_gpus);
+            assert!(p.load >= 0.0);
+        }
+        // Load conservation: placed load == total load of replicated experts.
+        let placed: f64 = plan.placements.iter().map(|p| p.load).sum();
+        let expected: f64 = loads
+            .iter()
+            .zip(&replicas)
+            .filter(|(_, &r)| r > 0)
+            .map(|(&w, _)| w)
+            .sum();
+        assert!((placed - expected).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_placer_balance_not_catastrophic() {
+    // JSQ/LPT guarantee: max GPU load <= total/G + max single replica load.
+    property(150, |g| {
+        let n = g.usize_in(1, 16);
+        let loads = g.loads(n, 800.0);
+        let replicas: Vec<usize> = loads.iter().map(|&w| usize::from(w > 0.0)).collect();
+        let n_gpus = g.usize_in(1, 8);
+        let cluster = Cluster::new(ClusterSpec { n_gpus, ..ClusterSpec::a6000_x8() });
+        let mut prev = vec![Vec::new(); n];
+        let plan = Placer.place(&replicas, &loads, &mut prev, &cluster, 0.33);
+        let total: f64 = loads.iter().sum();
+        let max_single = loads.iter().cloned().fold(0.0, f64::max);
+        let bound = total / n_gpus as f64 + max_single + 1e-9;
+        assert!(plan.max_gpu_load(n_gpus) <= bound);
+    });
+}
+
+#[test]
+fn prop_placer_warm_reuse_monotone() {
+    // With previous instances for every expert, at least min(replicas,
+    // previous) placements are reused.
+    property(100, |g| {
+        let n = g.usize_in(1, 8);
+        let loads: Vec<f64> = (0..n).map(|_| g.f64_in(1.0, 100.0)).collect();
+        let replicas = vec![1usize; n];
+        let n_gpus = 4;
+        let cluster = Cluster::new(ClusterSpec { n_gpus, ..ClusterSpec::a6000_x8() });
+        let mut prev: Vec<Vec<usize>> = (0..n).map(|e| vec![e % n_gpus]).collect();
+        let plan = Placer.place(&replicas, &loads, &mut prev, &cluster, 0.33);
+        assert_eq!(plan.reused_count(), n, "all single replicas reuse their old home");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Serverless manager invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_manager_memory_conservation() {
+    property(60, |g| {
+        let spec = ClusterSpec::a6000_x8();
+        let mut cluster = Cluster::new(spec);
+        let mut fm = FunctionManager::new(0.33, g.f64_in(0.5, 20.0), 45.0, 4, 8);
+        let steps = g.usize_in(1, 40);
+        for t in 0..steps {
+            let n_place = g.usize_in(0, 12);
+            let placement: Vec<(usize, usize)> =
+                (0..n_place).map(|_| (g.usize_in(0, 7), g.usize_in(0, 7))).collect();
+            fm.apply_layer(&mut cluster, g.usize_in(0, 3), &placement, t as f64);
+            if g.bool() {
+                fm.reap(&mut cluster, t as f64);
+            }
+            // Memory accounting is consistent at every step.
+            let used = cluster.total_mem_used_gb();
+            let expect = fm.live_count() as f64 * 0.33;
+            assert!((used - expect).abs() < 1e-6, "used {used} vs {expect}");
+        }
+        fm.drain(&mut cluster, steps as f64);
+        assert_eq!(fm.live_count(), 0);
+        assert!(cluster.total_mem_used_gb().abs() < 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Router invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_requests_and_tokens() {
+    property(100, |g| {
+        let n = g.usize_in(0, 40);
+        let mut reqs = Vec::new();
+        for i in 0..n {
+            reqs.push(TraceRequest {
+                id: i as u64,
+                arrival_s: g.f64_in(0.0, 10.0),
+                prompt_tokens: g.usize_in(1, 300),
+                output_tokens: g.usize_in(1, 30),
+            });
+        }
+        reqs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let total_prompt: u64 = reqs.iter().map(|r| r.prompt_tokens as u64).sum();
+        let total_out: u64 = reqs.iter().map(|r| r.output_tokens as u64).sum();
+
+        let mut b = Batcher::new();
+        b.enqueue(&reqs);
+        let mut clock = 0.0;
+        let mut guard = 0;
+        while !b.idle() {
+            match b.next_iteration(clock) {
+                Some(_) => b.complete_iteration(clock),
+                None => clock = b.next_arrival().unwrap_or(clock + 1.0),
+            }
+            clock += 0.05;
+            guard += 1;
+            assert!(guard < 100_000, "batcher must terminate");
+        }
+        assert_eq!(b.admitted, n as u64);
+        assert_eq!(b.completed, n as u64);
+        assert_eq!(b.tokens_prefilled, total_prompt);
+        // Every output token is either the prefill's first token or a
+        // decode step: decoded == total_out - n.
+        assert_eq!(b.tokens_decoded, total_out - n as u64);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Predictor invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_blend_extremes() {
+    property(100, |g| {
+        let n = g.usize_in(1, 16);
+        let loads = g.loads(n, 500.0);
+        let mut rng = Pcg::seeded(g.seed);
+        // Perfect accuracy reproduces the input exactly (no noise at a=1).
+        let perfect = blend_to_accuracy(&loads, 1.0, &mut rng);
+        for (p, a) in perfect.iter().zip(&loads) {
+            assert!((p - a).abs() < 1e-9);
+        }
+        // Any accuracy preserves non-negativity.
+        let any = blend_to_accuracy(&loads, g.f64_in(0.0, 1.0), &mut rng);
+        assert!(any.iter().all(|&x| x >= 0.0));
+    });
+}
+
+#[test]
+fn prop_accuracy_metrics_bounded() {
+    property(200, |g| {
+        let n = g.usize_in(1, 16);
+        let a = g.loads(n, 100.0);
+        let b = g.loads(n, 100.0);
+        let k = g.usize_in(1, n);
+        let o = topk_overlap(&a, &b, k);
+        assert!((0.0..=1.0).contains(&o));
+        assert_eq!(topk_overlap(&a, &a, k), 1.0);
+        let e = l1_error(&a, &b);
+        assert!((0.0..=1.0 + 1e-9).contains(&e));
+        assert!(l1_error(&a, &a) < 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection: memory-exhausted clusters must degrade, not crash.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tiny_cluster_never_panics() {
+    property(40, |g| {
+        use moeless::baselines::PolicyKind;
+        use moeless::config::{DatasetSpec, ModelSpec};
+        use moeless::sim::{run, SimConfig};
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            *g.pick(&[PolicyKind::Moeless, PolicyKind::MoelessAblated]),
+        );
+        // Pathologically small GPUs: evictions and placement fallbacks fire.
+        cfg.cluster.n_gpus = g.usize_in(1, 2);
+        cfg.cluster.mem_per_gpu_gb = g.f64_in(0.5, 2.0);
+        cfg.duration_s = 4.0;
+        cfg.base_rps = g.f64_in(0.5, 6.0);
+        cfg.seed = g.seed;
+        let r = run(&cfg);
+        assert!(r.layer_forward_ms.iter().all(|&x| x.is_finite()));
+    });
+}
