@@ -1,44 +1,88 @@
-//! Trace replay example: serve the paper's three MoE models on an
-//! Azure-style trace with all four policies and print the Fig. 8/10-style
-//! comparison (Tier B).
+//! Request-level serving example (Tier B): the paper's four policies under
+//! three distinct arrival scenarios — constant-rate Poisson, bursty
+//! (2-state MMPP), and replay of a recorded Azure-style trace — with
+//! per-request p50/p95/p99 TTFT and TPOT plus goodput, multi-seed and
+//! sharded across the thread pool. A second section prints the classic
+//! Fig. 8/10-style layer-latency/cost comparison on the diurnal trace.
 //!
-//! Run: `cargo run --release --example serve_trace [-- --seconds 120 --rps 8]`
+//! Run: `cargo run --release --example serve_trace [-- --seconds 45 --rps 6 --seeds 2]`
+
+use std::time::Instant;
 
 use moeless::config::{DatasetSpec, ModelSpec};
-use moeless::metrics::reduction_pct;
+use moeless::metrics::{reduction_pct, SloSpec};
 use moeless::sim::run_paper_set;
+use moeless::sim::sweep::{run_sweep, summarize, SweepSpec};
 use moeless::util::benchkit::series_summary;
 use moeless::util::cli::Args;
+use moeless::workload::{azure_like_trace, Scenario};
 
 fn main() {
     let args = Args::from_env();
-    let seconds = args.f64("seconds", 90.0);
+    let seconds = args.f64("seconds", 45.0);
+    let rps = args.f64("rps", 6.0);
     let seed = args.u64("seed", 42);
+    let n_seeds = args.usize("seeds", 2);
+    let model = ModelSpec::by_name(&args.str("model", "mixtral-8x7b")).expect("unknown model");
+    let dataset = DatasetSpec::by_name(&args.str("dataset", "lmsys")).expect("unknown dataset");
 
-    for model in ModelSpec::paper_models() {
-        let dataset = DatasetSpec::lmsys();
-        println!("\n=== {} on {} ({seconds:.0}s trace) ===", model.name, dataset.name);
-        let reports = run_paper_set(&model, &dataset, seconds, seed);
-        for r in &reports {
-            series_summary(&model.name, &r.policy, &r.layer_cdf());
-            println!(
-                "   cost {:8.1} GB·s | replicas/layer {:5.1} | completed {:4} reqs \
-                 | warm {:.3}",
-                r.cost_gb_s,
-                r.mean_replicas(),
-                r.completed_requests,
-                r.warm_fraction
-            );
-        }
-        let (meg, orc, eplb, less) = (&reports[0], &reports[1], &reports[2], &reports[3]);
+    // --- request-level SLO sweep: 4 policies x 3 scenarios x N seeds ----
+    let mut spec = SweepSpec::new(model.clone(), dataset.clone());
+    spec.duration_s = seconds;
+    spec.base_rps = rps;
+    spec.seeds = (0..n_seeds.max(1) as u64).map(|i| seed + i).collect();
+    spec.scenarios = vec![
+        Scenario::poisson(),
+        Scenario::bursty(),
+        // Trace replay: every policy serves the identical recorded stream.
+        Scenario::replay(azure_like_trace(&dataset, seconds, rps, seed ^ 0xA2CE)),
+    ];
+
+    println!(
+        "=== request-level serving: {} on {} — {} policies x {} scenarios x {} seeds \
+         on {} threads ===",
+        model.name,
+        dataset.name,
+        spec.policies.len(),
+        spec.scenarios.len(),
+        spec.seeds.len(),
+        spec.threads
+    );
+    let slo = SloSpec::default();
+    let t0 = Instant::now();
+    let cells = run_sweep(&spec);
+    for row in summarize(&cells, &slo) {
+        println!("{}", row.line());
+    }
+    println!(
+        "({} simulations in {:.2}s wall; SLO: ttft<={:.0}ms, tpot<={:.0}ms)",
+        cells.len(),
+        t0.elapsed().as_secs_f64(),
+        slo.ttft_ms,
+        slo.tpot_ms
+    );
+
+    // --- classic layer-latency / cost comparison (diurnal trace) --------
+    println!("\n=== layer-level comparison: {} on {} ({seconds:.0}s diurnal trace) ===", model.name, dataset.name);
+    let reports = run_paper_set(&model, &dataset, seconds, seed);
+    for r in &reports {
+        series_summary(&model.name, &r.policy, &r.layer_cdf());
         println!(
-            "   moeless: latency -{:.1}% vs megatron, -{:.1}% vs eplb; \
-             cost -{:.1}% vs megatron, -{:.1}% vs oracle, -{:.1}% vs eplb",
-            reduction_pct(meg.mean_layer_ms(), less.mean_layer_ms()),
-            reduction_pct(eplb.mean_layer_ms(), less.mean_layer_ms()),
-            reduction_pct(meg.cost_gb_s, less.cost_gb_s),
-            reduction_pct(orc.cost_gb_s, less.cost_gb_s),
-            reduction_pct(eplb.cost_gb_s, less.cost_gb_s),
+            "   cost {:8.1} GB·s | replicas/layer {:5.1} | completed {:4} reqs | warm {:.3}",
+            r.cost_gb_s,
+            r.mean_replicas(),
+            r.completed_requests,
+            r.warm_fraction
         );
     }
+    let (meg, orc, eplb, less) = (&reports[0], &reports[1], &reports[2], &reports[3]);
+    println!(
+        "   moeless: latency -{:.1}% vs megatron, -{:.1}% vs eplb; \
+         cost -{:.1}% vs megatron, -{:.1}% vs oracle, -{:.1}% vs eplb",
+        reduction_pct(meg.mean_layer_ms(), less.mean_layer_ms()),
+        reduction_pct(eplb.mean_layer_ms(), less.mean_layer_ms()),
+        reduction_pct(meg.cost_gb_s, less.cost_gb_s),
+        reduction_pct(orc.cost_gb_s, less.cost_gb_s),
+        reduction_pct(eplb.cost_gb_s, less.cost_gb_s),
+    );
 }

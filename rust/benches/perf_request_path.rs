@@ -1,0 +1,84 @@
+//! `cargo bench --bench perf_request_path` — request-path hot loops:
+//! the continuous batcher's admit/decode/retire cycle, the end-to-end
+//! request-level simulation, and the multi-seed × multi-scenario sweep's
+//! measured speedup over a sequential run (threadpool sharding).
+
+use std::time::Instant;
+
+use moeless::baselines::PolicyKind;
+use moeless::config::{DatasetSpec, ModelSpec};
+use moeless::router::Batcher;
+use moeless::sim::sweep::{run_sweep, SweepSpec};
+use moeless::sim::{run, SimConfig};
+use moeless::util::benchkit::{fig_header, Bencher};
+use moeless::workload::Scenario;
+
+fn main() {
+    let b = Bencher::quick();
+    let model = ModelSpec::mixtral_8x7b();
+    let dataset = DatasetSpec::lmsys();
+
+    fig_header("PERF request path", "continuous batcher + request-level simulator");
+
+    // Batcher admit/decode/retire over a full bursty trace (no engine):
+    // the pure request-bookkeeping hot path.
+    let trace = Scenario::bursty().generate(&dataset, 60.0, 8.0, 7);
+    b.run("batcher.drain (60s bursty trace)", || {
+        let mut batcher = Batcher::new();
+        batcher.enqueue(&trace);
+        let mut clock = 0.0f64;
+        while !batcher.idle() {
+            match batcher.next_iteration(clock) {
+                Some(_) => batcher.complete_iteration(clock + 0.08),
+                None => clock = batcher.next_arrival().unwrap_or(clock),
+            }
+            clock += 0.08;
+        }
+        batcher.completed
+    });
+
+    // End-to-end request-level simulation throughput per scenario.
+    for scenario in [Scenario::poisson(), Scenario::bursty()] {
+        let mut cfg = SimConfig::new(model.clone(), dataset.clone(), PolicyKind::Moeless);
+        cfg.scenario = scenario.clone();
+        cfg.duration_s = 15.0;
+        cfg.base_rps = 6.0;
+        cfg.seed = 9;
+        let m = b.run(&format!("sim.run 15s {} moeless", scenario.name), || run(&cfg));
+        let r = run(&cfg);
+        println!(
+            "  -> {} requests completed, {:.0} completed-requests/s of wall time",
+            r.completed_requests,
+            r.completed_requests as f64 / (m.mean_ns / 1e9)
+        );
+    }
+
+    // Sharded sweep speedup over sequential: same cells, 1 thread vs all.
+    fig_header("PERF sweep", "multi-seed x multi-scenario sweep — threadpool sharding speedup");
+    let mut spec = SweepSpec::new(model, dataset);
+    spec.duration_s = 8.0;
+    spec.base_rps = 4.0;
+    spec.seeds = vec![1, 2];
+    let n_cells = spec.policies.len() * spec.scenarios.len() * spec.seeds.len();
+
+    let mut sequential = spec.clone();
+    sequential.threads = 1;
+    let t0 = Instant::now();
+    let seq_cells = run_sweep(&sequential);
+    let seq_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let par_cells = run_sweep(&spec);
+    let par_s = t1.elapsed().as_secs_f64();
+
+    assert_eq!(seq_cells.len(), n_cells);
+    assert_eq!(par_cells.len(), n_cells);
+    println!(
+        "bench sweep {} runs: sequential={:.2}s sharded({} threads)={:.2}s speedup={:.2}x",
+        n_cells,
+        seq_s,
+        spec.threads,
+        par_s,
+        seq_s / par_s.max(1e-9)
+    );
+}

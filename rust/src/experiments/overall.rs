@@ -4,8 +4,9 @@
 
 use crate::config::{DatasetSpec, ModelSpec};
 use crate::experiments::Scale;
-use crate::metrics::reduction_pct;
+use crate::metrics::{reduction_pct, SloSpec};
 use crate::sim::run_paper_set;
+use crate::sim::sweep::{run_sweep, summarize, SweepSpec};
 use crate::util::benchkit::{fig_header, series_summary};
 
 /// Figs. 8/9: CDF of MoE layer forward time for the four approaches across
@@ -71,6 +72,34 @@ pub fn fig10_cost(scale: Scale) {
         reduction_pct(sums[0], sums[3]),
         reduction_pct(sums[1], sums[3]),
         reduction_pct(sums[2], sums[3]),
+    );
+}
+
+/// Request-level SLO comparison: per-request TTFT/TPOT percentiles and
+/// goodput for the four policies under the three arrival scenarios,
+/// multi-seed, sharded across the thread pool. (The request-level
+/// counterpart of Figs. 8-10 — what ServerlessLLM-style evaluations
+/// report.)
+pub fn request_slo(scale: Scale) {
+    fig_header(
+        "SLO",
+        "request-level TTFT/TPOT/goodput — 4 policies x 3 arrival scenarios, multi-seed",
+    );
+    let mut spec = SweepSpec::new(ModelSpec::mixtral_8x7b(), DatasetSpec::lmsys());
+    spec.duration_s = scale.duration_s;
+    spec.base_rps = scale.base_rps;
+    spec.seeds = vec![scale.seed, scale.seed + 1];
+    let slo = SloSpec::default();
+    let cells = run_sweep(&spec);
+    for row in summarize(&cells, &slo) {
+        println!("{}", row.line());
+    }
+    println!(
+        "({} simulations on {} threads; SLO: ttft<={:.0}ms, tpot<={:.0}ms)",
+        spec.policies.len() * spec.scenarios.len() * spec.seeds.len(),
+        spec.threads,
+        slo.ttft_ms,
+        slo.tpot_ms,
     );
 }
 

@@ -14,22 +14,60 @@
 //!   benchkit, property testing.
 //! * [`tensor`] — host tensors + the artifact weight store.
 //! * [`config`] — model specs (paper Table 1), cluster, datasets, knobs.
-//! * [`runtime`] — PJRT artifact loading/execution (Tier A).
-//! * [`model`] — decomposed + monolithic TinyMoE serving over artifacts.
+//! * `runtime` — PJRT artifact loading/execution (Tier A, `pjrt` feature).
+//! * `model` — decomposed + monolithic TinyMoE serving over artifacts
+//!   (`pjrt` feature).
 //! * [`cluster`] — GPU model + the paper's §3.3 latency/cost model.
 //! * [`serverless`] — expert function lifecycle (cold/warm, keep-alive).
 //! * [`predictor`] — expert load predictors (§4.1) + accuracy metrics.
 //! * [`scaler`] — Expert Scaler, Algorithm 1.
 //! * [`placer`] — Expert Placer, Algorithm 2.
-//! * [`router`] — request router + per-second continuous batcher.
+//! * [`router`] — request router + iteration-level continuous batcher with
+//!   per-request TTFT/TPOT tracking.
 //! * [`engine`] — the serving engine: per-layer pipeline with prediction
 //!   overlap, misprediction fallback, metric capture.
 //! * [`baselines`] — Megatron-LM static EP, EPLB, Oracle.
-//! * [`workload`] — Azure-style traces, dataset length models, the
+//! * [`workload`] — Azure-style traces, arrival scenarios (Poisson,
+//!   bursty/MMPP, diurnal, replay), dataset length models, the
 //!   layer-Markov routing generator.
-//! * [`sim`] — the discrete-event simulation driver (Tier B).
-//! * [`metrics`] — recorders and paper-style reports.
+//! * [`sim`] — the request-level discrete-event simulation driver (Tier B)
+//!   plus the sharded multi-seed/multi-scenario sweep runner
+//!   (`sim::sweep`).
+//! * [`metrics`] — recorders and paper-style reports, including
+//!   per-request SLO metrics (TTFT, TPOT, goodput).
 //! * [`experiments`] — one driver per paper figure/table.
+//!
+//! # Cargo features
+//!
+//! * `pjrt` (default **off**) — the Tier-A native runtime: the `runtime`
+//!   and `model` modules, the `runtime_e2e` test and the `quickstart` /
+//!   `predictor_demo` examples. The default build has no native
+//!   dependencies, so `cargo build --release && cargo test -q` passes on
+//!   machines without XLA libraries. `rust/vendor/xla` is a compilable
+//!   stub whose entry points error at runtime; point that path dependency
+//!   at a real xla-rs checkout to execute compiled artifacts for real.
+//!
+//! # Request-level serving simulation
+//!
+//! The Tier-B simulator is request-level: [`workload::Scenario`] generates
+//! arrivals (Poisson, bursty/MMPP, diurnal, trace replay),
+//! [`router::Batcher`] tracks every request through prefill + per-token
+//! decode iterations under continuous batching, and
+//! [`metrics::RunReport::requests`] records per-request TTFT, TPOT and
+//! end-to-end latency ([`metrics::SloSpec`] turns them into goodput).
+//! [`sim::sweep`] shards multi-seed × multi-scenario × multi-policy runs
+//! across the thread pool:
+//!
+//! ```no_run
+//! use moeless::config::{DatasetSpec, ModelSpec};
+//! use moeless::metrics::SloSpec;
+//! use moeless::sim::sweep::{run_sweep, summarize, SweepSpec};
+//!
+//! let spec = SweepSpec::new(ModelSpec::mixtral_8x7b(), DatasetSpec::lmsys());
+//! for row in summarize(&run_sweep(&spec), &SloSpec::default()) {
+//!     println!("{}", row.line());
+//! }
+//! ```
 
 pub mod baselines;
 pub mod cluster;
@@ -37,10 +75,12 @@ pub mod config;
 pub mod engine;
 pub mod experiments;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod model;
 pub mod placer;
 pub mod predictor;
 pub mod router;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scaler;
 pub mod serverless;

@@ -10,10 +10,25 @@
 
 use moeless::util::cli::Args;
 
+#[cfg(feature = "pjrt")]
+fn serve(args: &Args) {
+    moeless::model::cli::serve(args);
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve(_args: &Args) {
+    eprintln!(
+        "`moeless serve` needs the Tier-A PJRT runtime: rebuild with \
+         `--features pjrt` (and point rust/vendor/xla at a real xla-rs \
+         checkout). Tier-B replay works without it: `moeless replay`."
+    );
+    std::process::exit(2);
+}
+
 fn main() {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
-        Some("serve") => moeless::model::cli::serve(&args),
+        Some("serve") => serve(&args),
         Some("replay") => moeless::sim::cli::replay(&args),
         Some("bench") => moeless::experiments::run_from_cli(&args),
         Some("report") => moeless::experiments::tables::print_table1(),

@@ -4,6 +4,71 @@
 
 use crate::util::stats::{Cdf, Summary};
 
+/// Per-request serving record — the request-level simulator's primitive.
+/// One is emitted when the continuous batcher retires a request (EOS /
+/// length limit reached); all times are virtual seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival_s: f64,
+    /// When the prefill iteration completed (first token emitted).
+    pub first_token_s: f64,
+    /// When the last output token completed.
+    pub finish_s: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+impl RequestRecord {
+    /// Time-to-first-token (ms): arrival → end of the prefill iteration,
+    /// queueing delay included.
+    pub fn ttft_ms(&self) -> f64 {
+        (self.first_token_s - self.arrival_s).max(0.0) * 1e3
+    }
+
+    /// End-to-end latency (ms): arrival → last token.
+    pub fn e2e_ms(&self) -> f64 {
+        (self.finish_s - self.arrival_s).max(0.0) * 1e3
+    }
+
+    /// Time-per-output-token (ms): mean inter-token latency after the
+    /// first token; 0 for single-token outputs.
+    pub fn tpot_ms(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            0.0
+        } else {
+            (self.finish_s - self.first_token_s).max(0.0) * 1e3
+                / (self.output_tokens - 1) as f64
+        }
+    }
+}
+
+/// Request-level SLO: a completed request is "good" when both the TTFT and
+/// the TPOT bound hold (the goodput definition of ServerlessLLM-style
+/// evaluations).
+#[derive(Clone, Copy, Debug)]
+pub struct SloSpec {
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec { ttft_ms: 1000.0, tpot_ms: 250.0 }
+    }
+}
+
+impl SloSpec {
+    /// No bounds: goodput degenerates to completed-request throughput.
+    pub fn unbounded() -> SloSpec {
+        SloSpec { ttft_ms: f64::INFINITY, tpot_ms: f64::INFINITY }
+    }
+
+    pub fn met(&self, r: &RequestRecord) -> bool {
+        r.ttft_ms() <= self.ttft_ms && r.tpot_ms() <= self.tpot_ms
+    }
+}
+
 /// Accumulated measurements of one serving run (one policy × model ×
 /// dataset × trace).
 #[derive(Clone, Debug, Default)]
@@ -25,6 +90,10 @@ pub struct RunReport {
     /// latency per completed request (ms).
     pub ttft_ms: Vec<f64>,
     pub e2e_ms: Vec<f64>,
+    /// Full per-request records of completed requests (TTFT/TPOT/goodput
+    /// inputs; `ttft_ms` above also counts requests still in flight at
+    /// shutdown).
+    pub requests: Vec<RequestRecord>,
     pub cold_starts: u64,
     pub warm_fraction: f64,
     pub iterations: u64,
@@ -64,6 +133,41 @@ impl RunReport {
 
     pub fn e2e_cdf(&self) -> Cdf {
         Cdf::of(self.e2e_ms.clone())
+    }
+
+    /// Time-per-output-token distribution over completed requests.
+    pub fn tpot_cdf(&self) -> Cdf {
+        Cdf::of(self.requests.iter().map(|r| r.tpot_ms()).collect())
+    }
+
+    /// Requests per simulated second that completed within the SLO.
+    pub fn goodput_rps(&self, slo: &SloSpec) -> f64 {
+        if self.sim_duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.requests.iter().filter(|r| slo.met(r)).count() as f64 / self.sim_duration_s
+    }
+
+    /// One-line request-level summary (TTFT/TPOT percentiles + goodput).
+    /// All figures are over the same population — *completed* requests —
+    /// unlike [`RunReport::ttft_cdf`], which also counts requests still in
+    /// flight at shutdown.
+    pub fn request_slo_line(&self, slo: &SloSpec) -> String {
+        let t = Cdf::of(self.requests.iter().map(|r| r.ttft_ms()).collect());
+        let p = self.tpot_cdf();
+        format!(
+            "req policy={:<16} ttft p50={:.0}ms p95={:.0}ms p99={:.0}ms | \
+             tpot p50={:.1}ms p95={:.1}ms p99={:.1}ms | goodput={:.2}req/s ({} completed)",
+            self.policy,
+            t.p(50.0),
+            t.p(95.0),
+            t.p(99.0),
+            p.p(50.0),
+            p.p(95.0),
+            p.p(99.0),
+            self.goodput_rps(slo),
+            self.completed_requests,
+        )
     }
 
     /// One-line SLO summary.
@@ -145,5 +249,49 @@ mod tests {
     fn reduction() {
         assert!((reduction_pct(10.0, 5.7) - 43.0).abs() < 1e-9);
         assert_eq!(reduction_pct(0.0, 1.0), 0.0);
+    }
+
+    fn record(arrival: f64, first: f64, finish: f64, out: usize) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            arrival_s: arrival,
+            first_token_s: first,
+            finish_s: finish,
+            prompt_tokens: 10,
+            output_tokens: out,
+        }
+    }
+
+    #[test]
+    fn request_record_metrics() {
+        let r = record(1.0, 1.2, 2.2, 5);
+        assert!((r.ttft_ms() - 200.0).abs() < 1e-9);
+        assert!((r.e2e_ms() - 1200.0).abs() < 1e-9);
+        // 4 decode tokens over 1 s -> 250 ms/token.
+        assert!((r.tpot_ms() - 250.0).abs() < 1e-9);
+        // Single-token outputs have no inter-token latency.
+        assert_eq!(record(0.0, 0.1, 0.1, 1).tpot_ms(), 0.0);
+    }
+
+    #[test]
+    fn goodput_monotone_in_slo() {
+        let rep = RunReport {
+            requests: vec![
+                record(0.0, 0.1, 1.0, 5),  // ttft 100ms, tpot 225ms
+                record(0.0, 2.0, 4.0, 5),  // ttft 2000ms, tpot 500ms
+                record(0.0, 0.05, 0.2, 2), // ttft 50ms, tpot 150ms
+            ],
+            completed_requests: 3,
+            sim_duration_s: 10.0,
+            ..Default::default()
+        };
+        let unbounded = rep.goodput_rps(&SloSpec::unbounded());
+        assert!((unbounded - 0.3).abs() < 1e-12, "{unbounded}");
+        let tight = rep.goodput_rps(&SloSpec { ttft_ms: 60.0, tpot_ms: 240.0 });
+        let loose = rep.goodput_rps(&SloSpec { ttft_ms: 500.0, tpot_ms: 240.0 });
+        assert!(tight <= loose && loose <= unbounded, "{tight} {loose} {unbounded}");
+        assert!((tight - 0.1).abs() < 1e-12, "{tight}");
+        assert!(rep.request_slo_line(&SloSpec::default()).contains("goodput="));
+        assert!((rep.tpot_cdf().p(100.0) - 500.0).abs() < 1e-9);
     }
 }

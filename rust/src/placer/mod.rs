@@ -26,6 +26,10 @@ pub struct Placement {
 #[derive(Clone, Debug, Default)]
 pub struct PlacePlan {
     pub placements: Vec<Placement>,
+    /// Replicas placed after every GPU's memory was exhausted: the
+    /// serverless manager owes one eviction each before they can
+    /// materialize (and bills the evicted instance's residency).
+    pub evictions_owed: usize,
 }
 
 impl PlacePlan {
@@ -105,6 +109,7 @@ impl Placer {
                 .then(a.replica.cmp(&b.replica))
         });
 
+        let mut evictions_owed = 0usize;
         for p in &mut work {
             // Warm-start reuse (line 5-6): a live instance of this expert
             // exists — no data transfer, no init. The instance already
@@ -117,26 +122,33 @@ impl Placer {
                 continue;
             }
             // JSQ (line 8): least-loaded GPU with room.
-            let gpu = (0..n_gpus)
+            let fit = (0..n_gpus)
                 .filter(|&g| gpu_free[g] >= expert_mem_gb - 1e-9)
                 .min_by(|&a, &b| {
                     gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b))
-                })
+                });
+            let gpu = match fit {
+                Some(g) => g,
                 // Memory exhausted everywhere: fall back to least-loaded
-                // (the manager will evict an idle instance to make room).
-                .unwrap_or_else(|| {
+                // and record the eviction debt — the serverless manager
+                // evicts an idle instance to make room and bills it.
+                None => {
+                    evictions_owed += 1;
                     (0..n_gpus)
                         .min_by(|&a, &b| {
                             gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b))
                         })
                         .unwrap()
-                });
+                }
+            };
             p.gpu = gpu;
             gpu_load[gpu] += p.load;
-            gpu_free[gpu] -= expert_mem_gb;
+            // Saturate at zero: an eviction frees exactly the slot this
+            // replica consumes, so the tracker never goes negative.
+            gpu_free[gpu] = (gpu_free[gpu] - expert_mem_gb).max(0.0);
         }
 
-        PlacePlan { placements: work }
+        PlacePlan { placements: work, evictions_owed }
     }
 }
 
@@ -226,6 +238,14 @@ mod tests {
         assert!(c.reserve(1, 48.0));
         let plan = Placer.place(&[1], &[10.0], &mut no_prev(1), &c, 0.33);
         assert_eq!(plan.placements.len(), 1); // still placed (manager evicts)
+        assert_eq!(plan.evictions_owed, 1); // ...and the eviction is owed
+    }
+
+    #[test]
+    fn no_evictions_owed_when_memory_suffices() {
+        let c = cluster(4);
+        let plan = Placer.place(&[2, 1], &[80.0, 40.0], &mut no_prev(2), &c, 0.33);
+        assert_eq!(plan.evictions_owed, 0);
     }
 
     #[test]

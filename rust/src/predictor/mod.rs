@@ -215,8 +215,12 @@ impl HistoricalPredictor {
     }
 
     pub fn average(&self, layer: usize, now_s: f64) -> Vec<f64> {
-        let h = &self.history[layer];
         let mut sum = vec![0.0; self.n_experts];
+        // Out-of-range layers (callers probing beyond the model depth)
+        // yield the empty-history shape instead of panicking.
+        let Some(h) = self.history.get(layer) else {
+            return sum;
+        };
         let mut count = 0usize;
         for (t, loads) in h.iter().rev() {
             if now_s - t > self.window_s {
@@ -261,8 +265,21 @@ impl LoadPredictor for HistoricalPredictor {
     }
 
     fn observe(&mut self, layer: usize, actual: &[f64], now_s: f64) {
-        let h = &mut self.history[layer];
-        h.push((now_s, actual.to_vec()));
+        // Out-of-range layers are ignored (see `average`).
+        let Some(h) = self.history.get_mut(layer) else {
+            return;
+        };
+        debug_assert!(
+            h.last().map_or(true, |(t, _)| *t <= now_s),
+            "HistoricalPredictor::observe expects nondecreasing timestamps \
+             (got {now_s} after {:?})",
+            h.last().map(|(t, _)| *t)
+        );
+        // Keep the ring time-sorted even if a release-mode caller reports
+        // late — both the window trim below and `average`'s early break
+        // rely on it.
+        let at = h.partition_point(|(t, _)| *t <= now_s);
+        h.insert(at, (now_s, actual.to_vec()));
         // Trim outside the window to bound memory.
         let cutoff = now_s - 2.0 * self.window_s;
         let keep_from = h.partition_point(|(t, _)| *t < cutoff);
@@ -402,6 +419,17 @@ mod tests {
         // Shape from history (80/20), volume from the batch (100).
         assert!((p.loads[0] - 80.0).abs() < 1e-9);
         assert!((p.loads[1] - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn historical_out_of_range_layer_is_ignored() {
+        let mut h = HistoricalPredictor::new(2, 4, 10.0);
+        // Layer 5 is beyond n_layers=2: observe is dropped, average is the
+        // empty-history shape, predict falls back to uniform — no panic.
+        h.observe(5, &[9.0, 9.0, 9.0, 9.0], 0.0);
+        assert_eq!(h.average(5, 1.0), vec![0.0; 4]);
+        let p = h.predict(5, 1, &[8.0, 0.0, 0.0, 0.0], 1.0);
+        assert_eq!(p.loads, vec![2.0; 4]);
     }
 
     #[test]

@@ -6,10 +6,13 @@
 //! each engine iteration admits every pending request whose arrival time
 //! has passed (their prompts form the prefill work) and decodes one token
 //! for every in-flight sequence. Sequences retire when their trace-specified
-//! output length completes.
+//! output length completes (EOS / length limit), emitting a per-request
+//! [`RequestRecord`] with arrival, first-token and finish timestamps — the
+//! TTFT / TPOT / goodput inputs of the request-level simulator.
 
 use std::collections::VecDeque;
 
+use crate::metrics::RequestRecord;
 use crate::workload::TraceRequest;
 
 /// One engine iteration's batch composition.
@@ -35,8 +38,13 @@ impl IterationBatch {
 /// In-flight sequence state.
 #[derive(Clone, Copy, Debug)]
 struct Active {
-    remaining_out: usize,
+    id: u64,
     arrival_s: f64,
+    /// Set when the prefill iteration completes.
+    first_token_s: f64,
+    prompt_tokens: usize,
+    output_tokens: usize,
+    remaining_out: usize,
 }
 
 /// The continuous batcher: admission queue + in-flight set.
@@ -56,6 +64,8 @@ pub struct Batcher {
     pub ttft_ms: Vec<f64>,
     /// Per-request end-to-end latency (ms) — arrival to last token.
     pub e2e_ms: Vec<f64>,
+    /// Full per-request records, emitted at retirement.
+    pub finished: Vec<RequestRecord>,
 }
 
 impl Batcher {
@@ -102,8 +112,12 @@ impl Batcher {
             // The prefill iteration itself emits the first token, so the
             // sequence enters decode with output_tokens - 1 remaining.
             self.fresh.push(Active {
-                remaining_out: r.output_tokens.saturating_sub(1),
+                id: r.id,
                 arrival_s: r.arrival_s,
+                first_token_s: 0.0,
+                prompt_tokens: r.prompt_tokens,
+                output_tokens: r.output_tokens,
+                remaining_out: r.output_tokens.saturating_sub(1),
             });
         }
         if prefill == 0 && decode == 0 {
@@ -125,25 +139,37 @@ impl Batcher {
             self.active[i].remaining_out -= 1;
             if self.active[i].remaining_out == 0 {
                 let a = self.active.swap_remove(i);
-                self.completed += 1;
-                self.e2e_ms.push((now_s - a.arrival_s).max(0.0) * 1e3);
+                self.retire(a, now_s);
             } else {
                 i += 1;
             }
         }
         let mut j = 0;
         while j < self.fresh.len() {
-            let f = self.fresh[j];
-            self.ttft_ms.push((now_s - f.arrival_s).max(0.0) * 1e3);
-            if f.remaining_out == 0 {
-                self.fresh.swap_remove(j);
-                self.completed += 1;
-                self.e2e_ms.push((now_s - f.arrival_s).max(0.0) * 1e3);
+            self.fresh[j].first_token_s = now_s;
+            self.ttft_ms.push((now_s - self.fresh[j].arrival_s).max(0.0) * 1e3);
+            if self.fresh[j].remaining_out == 0 {
+                let f = self.fresh.swap_remove(j);
+                self.retire(f, now_s);
             } else {
                 j += 1;
             }
         }
         self.active.append(&mut self.fresh);
+    }
+
+    /// A request reached its EOS / length limit: record its metrics.
+    fn retire(&mut self, a: Active, now_s: f64) {
+        self.completed += 1;
+        self.e2e_ms.push((now_s - a.arrival_s).max(0.0) * 1e3);
+        self.finished.push(RequestRecord {
+            id: a.id,
+            arrival_s: a.arrival_s,
+            first_token_s: a.first_token_s,
+            finish_s: now_s,
+            prompt_tokens: a.prompt_tokens,
+            output_tokens: a.output_tokens,
+        });
     }
 }
 
@@ -230,6 +256,25 @@ mod tests {
         // Request 1 prefills while request 0 decodes.
         assert_eq!(it, IterationBatch { prefill_tokens: 30, decode_seqs: 1 });
         assert_eq!(b.in_flight(), 2);
+    }
+
+    #[test]
+    fn per_request_records() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(7, 0.0, 10, 3)]);
+        b.next_iteration(0.0).unwrap();
+        b.complete_iteration(0.1); // first token at t=0.1
+        for t in [0.2, 0.3] {
+            b.next_iteration(t).unwrap();
+            b.complete_iteration(t + 0.1);
+        }
+        assert_eq!(b.finished.len(), 1);
+        let r = &b.finished[0];
+        assert_eq!((r.id, r.prompt_tokens, r.output_tokens), (7, 10, 3));
+        assert!((r.ttft_ms() - 100.0).abs() < 1e-9);
+        assert!((r.e2e_ms() - 400.0).abs() < 1e-9);
+        // 2 decode tokens over (0.4 - 0.1)s -> 150 ms/token.
+        assert!((r.tpot_ms() - 150.0).abs() < 1e-9);
     }
 
     #[test]

@@ -70,6 +70,10 @@ pub struct FunctionManager {
     pub warm_starts: u64,
     pub cold_starts: u64,
     pub prewarm_hits: u64,
+    /// Idle instances evicted under memory pressure to make room for a new
+    /// one (the debt a memory-exhausted placement fallback incurs —
+    /// `placer::PlacePlan::evictions_owed` predicts these).
+    pub forced_evictions: u64,
     /// GB·s of instance residency (the serverless memory bill, including
     /// keep-alive idle time).
     pub residency_gb_s: f64,
@@ -95,6 +99,7 @@ impl FunctionManager {
             warm_starts: 0,
             cold_starts: 0,
             prewarm_hits: 0,
+            forced_evictions: 0,
             residency_gb_s: 0.0,
             peak_instances: 0,
         }
@@ -254,6 +259,7 @@ impl FunctionManager {
         if let Some((idx, k, _)) = best {
             let inst = self.slots[idx].swap_remove(k);
             self.live -= 1;
+            self.forced_evictions += 1;
             self.account(&inst, now_s);
             cluster.release(inst.gpu, self.expert_mem_gb);
         }
@@ -390,6 +396,7 @@ mod tests {
         let s = fm.apply_layer(&mut c, 0, &[(2, 0)], 2.0);
         assert_eq!(s.cold, 1);
         assert_eq!(fm.live_count(), 2);
+        assert_eq!(fm.forced_evictions, 1, "the eviction is billed");
     }
 
     #[test]

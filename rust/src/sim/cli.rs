@@ -1,11 +1,15 @@
-//! `moeless replay` — Tier-B trace replay from the command line.
+//! `moeless replay` — Tier-B request-level serving from the command line:
+//! any arrival scenario (`--scenario poisson|bursty|diurnal|replay`)
+//! through the continuous batcher under the chosen policy.
 
 use crate::baselines::PolicyKind;
 use crate::config::{ClusterSpec, DatasetSpec, ModelSpec};
+use crate::metrics::SloSpec;
 use crate::sim::{run, SimConfig};
 use crate::util::cli::Args;
+use crate::workload::{azure_like_trace, Scenario};
 
-/// Replay an Azure-style trace on the cluster simulator and print the run
+/// Replay an arrival scenario on the cluster simulator and print the run
 /// report (and a CDF when `--cdf` is passed).
 pub fn replay(args: &Args) {
     let model = ModelSpec::by_name(&args.str("model", "mixtral-8x7b"))
@@ -19,6 +23,18 @@ pub fn replay(args: &Args) {
     cfg.duration_s = args.f64("seconds", 120.0);
     cfg.base_rps = args.f64("rps", 3.0);
     cfg.seed = args.u64("seed", 42);
+    cfg.scenario = match args.str("scenario", "diurnal").as_str() {
+        // Replay of a recorded Azure-style trace (fixed recording seed, so
+        // every policy replays the identical request stream).
+        "replay" => Scenario::replay(azure_like_trace(
+            &cfg.dataset,
+            cfg.duration_s,
+            cfg.base_rps,
+            0xA2CE,
+        )),
+        name => Scenario::by_name(name)
+            .expect("--scenario: poisson | bursty | diurnal | replay"),
+    };
     cfg.params.prediction_distance = args.usize("distance", 1);
     cfg.params.cv_threshold = args.f64("cv", 0.2);
     cfg.params.keep_alive_s = args.f64("keep-alive", 10.0);
@@ -30,6 +46,7 @@ pub fn replay(args: &Args) {
     let report = run(&cfg);
     println!("{}", report.summary_line());
     println!("{}", report.slo_line());
+    println!("{}", report.request_slo_line(&SloSpec::default()));
     if args.flag("cdf") {
         let cdf = report.layer_cdf();
         for q in [1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {

@@ -1,12 +1,17 @@
-//! Discrete-event serving simulation (substrate S21, Tier B).
+//! Request-level discrete-event serving simulation (substrate S21, Tier B).
 //!
-//! Replays an Azure-style trace through the continuous batcher and the
-//! per-layer engine under a chosen policy, on a virtual clock: each
-//! iteration's latency is the sum of its per-layer §3.3 forward times, and
-//! the clock advances by exactly that. All paper figures regenerate from
-//! `run()` reports.
+//! Drives a request stream (any [`Scenario`] arrival process, or an
+//! Azure-style trace) through the continuous batcher and the per-layer
+//! engine under a chosen policy, on a virtual clock: each iteration's
+//! latency is the sum of its per-layer §3.3 forward times (cold-start
+//! stalls included), and the clock advances by exactly that — so queueing
+//! delay, batch dynamics and scaling decisions feed back into each other.
+//! Every completed request leaves a `RequestRecord` (TTFT / TPOT / e2e);
+//! [`sweep`] shards multi-seed × multi-scenario runs across the thread
+//! pool. All paper figures regenerate from `run()` reports.
 
 pub mod cli;
+pub mod sweep;
 
 use std::time::Instant;
 
@@ -15,7 +20,7 @@ use crate::cluster::{Cluster, CostModel};
 use crate::config::{ClusterSpec, DatasetSpec, ModelSpec, MoelessParams};
 use crate::metrics::RunReport;
 use crate::router::Batcher;
-use crate::workload::{azure_like_trace, RoutingModel};
+use crate::workload::{RoutingModel, Scenario};
 
 /// Everything one simulation run needs.
 #[derive(Clone, Debug)]
@@ -25,6 +30,9 @@ pub struct SimConfig {
     pub cluster: ClusterSpec,
     pub policy: PolicyKind,
     pub params: MoelessParams,
+    /// Arrival process driving the batcher (default: the Azure-style
+    /// diurnal trace every paper figure replays).
+    pub scenario: Scenario,
     /// Trace duration (virtual seconds).
     pub duration_s: f64,
     /// Average request arrivals per second.
@@ -45,6 +53,7 @@ impl SimConfig {
             cluster: ClusterSpec::a6000_x8(),
             policy,
             params: MoelessParams::default(),
+            scenario: Scenario::diurnal(),
             duration_s: 120.0,
             // ~8 req/s over 8 GPUs reproduces the paper's Fig. 3b token
             // loads (peaks of several thousand tokens/s).
@@ -59,7 +68,7 @@ impl SimConfig {
 /// Run one simulation to completion and return its report.
 pub fn run(cfg: &SimConfig) -> RunReport {
     let wall_start = Instant::now();
-    let trace = azure_like_trace(&cfg.dataset, cfg.duration_s, cfg.base_rps, cfg.seed);
+    let trace = cfg.scenario.generate(&cfg.dataset, cfg.duration_s, cfg.base_rps, cfg.seed);
     let mut routing = RoutingModel::new(&cfg.model, cfg.seed ^ 0x9e37);
     let mut policy: Box<dyn crate::engine::Policy> =
         if cfg.autotune && cfg.policy == PolicyKind::Moeless {
@@ -141,6 +150,7 @@ pub fn run(cfg: &SimConfig) -> RunReport {
     report.completed_requests = batcher.completed;
     report.ttft_ms = std::mem::take(&mut batcher.ttft_ms);
     report.e2e_ms = std::mem::take(&mut batcher.e2e_ms);
+    report.requests = std::mem::take(&mut batcher.finished);
     report.sim_duration_s = clock;
     report.wall_s = wall_start.elapsed().as_secs_f64();
     report
@@ -213,5 +223,55 @@ mod tests {
         let r = quick(PolicyKind::Moeless);
         assert!(r.warm_fraction > 0.5, "{}", r.warm_fraction);
         assert!(r.residency_gb_s > 0.0);
+    }
+
+    #[test]
+    fn per_request_records_captured() {
+        let r = quick(PolicyKind::Moeless);
+        assert_eq!(r.requests.len() as u64, r.completed_requests);
+        for req in &r.requests {
+            assert!(req.finish_s >= req.first_token_s);
+            assert!(req.first_token_s >= req.arrival_s);
+            assert!(req.ttft_ms() > 0.0 && req.ttft_ms().is_finite());
+            assert!(req.tpot_ms().is_finite());
+        }
+        use crate::metrics::SloSpec;
+        assert!(r.goodput_rps(&SloSpec::unbounded()) > 0.0);
+    }
+
+    #[test]
+    fn scenarios_drive_the_batcher() {
+        use crate::workload::Scenario;
+        for scenario in Scenario::paper_set() {
+            let mut cfg = SimConfig::new(
+                ModelSpec::mixtral_8x7b(),
+                DatasetSpec::lmsys(),
+                PolicyKind::Moeless,
+            );
+            cfg.scenario = scenario.clone();
+            cfg.duration_s = 15.0;
+            cfg.base_rps = 3.0;
+            cfg.seed = 5;
+            let r = run(&cfg);
+            assert!(r.completed_requests > 0, "{}", scenario.name);
+            assert_eq!(r.requests.len() as u64, r.completed_requests);
+        }
+    }
+
+    #[test]
+    fn replay_scenario_reproduces_recorded_trace() {
+        use crate::workload::{azure_like_trace, Scenario};
+        let dataset = DatasetSpec::lmsys();
+        let recorded = azure_like_trace(&dataset, 15.0, 3.0, 11);
+        let mut a = SimConfig::new(ModelSpec::mixtral_8x7b(), dataset.clone(), PolicyKind::Moeless);
+        a.duration_s = 15.0;
+        a.base_rps = 3.0;
+        a.seed = 11;
+        let mut b = a.clone();
+        b.scenario = Scenario::replay(recorded);
+        // The replay of the diurnal trace is the diurnal run, bit for bit.
+        let (ra, rb) = (run(&a), run(&b));
+        assert_eq!(ra.layer_forward_ms, rb.layer_forward_ms);
+        assert_eq!(ra.requests, rb.requests);
     }
 }

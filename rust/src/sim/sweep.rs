@@ -1,0 +1,239 @@
+//! Multi-seed × multi-scenario × multi-policy sweep runner.
+//!
+//! Simulation runs are embarrassingly parallel (each owns its policy,
+//! cluster and batcher), so the sweep shards the full cross product across
+//! `util::threadpool::scoped_map` for near-linear speedup — the
+//! `perf_request_path` bench measures it against a sequential run. Results
+//! are deterministic and independent of the thread count: every cell is
+//! seeded by its own (policy, scenario, seed) coordinates.
+
+use crate::baselines::PolicyKind;
+use crate::config::{DatasetSpec, ModelSpec};
+use crate::metrics::{RunReport, SloSpec};
+use crate::sim::{run, SimConfig};
+use crate::util::stats::Cdf;
+use crate::util::threadpool::scoped_map;
+use crate::workload::Scenario;
+
+/// The sweep's cross product: policies × scenarios × seeds on one
+/// (model, dataset) at a fixed duration and mean rate.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub model: ModelSpec,
+    pub dataset: DatasetSpec,
+    pub policies: Vec<PolicyKind>,
+    pub scenarios: Vec<Scenario>,
+    pub seeds: Vec<u64>,
+    pub duration_s: f64,
+    pub base_rps: f64,
+    /// Worker threads the runs are sharded across (1 = sequential).
+    pub threads: usize,
+}
+
+impl SweepSpec {
+    pub fn new(model: ModelSpec, dataset: DatasetSpec) -> SweepSpec {
+        SweepSpec {
+            model,
+            dataset,
+            policies: PolicyKind::paper_set().to_vec(),
+            scenarios: Scenario::paper_set(),
+            seeds: vec![42],
+            duration_s: 30.0,
+            base_rps: 6.0,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+
+    /// The cells to run, scenario-major (keeps chunked sharding balanced).
+    pub fn cells(&self) -> Vec<(PolicyKind, Scenario, u64)> {
+        let mut out = Vec::new();
+        for scenario in &self.scenarios {
+            for &policy in &self.policies {
+                for &seed in &self.seeds {
+                    out.push((policy, scenario.clone(), seed));
+                }
+            }
+        }
+        out
+    }
+
+    fn config_for(&self, policy: PolicyKind, scenario: &Scenario, seed: u64) -> SimConfig {
+        let mut cfg = SimConfig::new(self.model.clone(), self.dataset.clone(), policy);
+        cfg.scenario = scenario.clone();
+        cfg.duration_s = self.duration_s;
+        cfg.base_rps = self.base_rps;
+        cfg.seed = seed;
+        cfg
+    }
+}
+
+/// One completed sweep cell.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub policy: PolicyKind,
+    pub scenario: String,
+    pub seed: u64,
+    pub report: RunReport,
+}
+
+/// Run every cell of the sweep, sharded across `spec.threads` workers.
+pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepCell> {
+    let cells = spec.cells();
+    let reports = scoped_map(&cells, spec.threads.max(1), |(policy, scenario, seed)| {
+        run(&spec.config_for(*policy, scenario, *seed))
+    });
+    cells
+        .into_iter()
+        .zip(reports)
+        .map(|((policy, scenario, seed), report)| SweepCell {
+            policy,
+            scenario: scenario.name,
+            seed,
+            report,
+        })
+        .collect()
+}
+
+/// Request-level summary of one (scenario, policy) group, pooled across
+/// seeds: TTFT/TPOT p50/p95/p99 over every completed request, plus mean
+/// goodput under the SLO.
+#[derive(Clone, Debug)]
+pub struct SloSummary {
+    pub scenario: String,
+    pub policy: String,
+    pub seeds: usize,
+    pub completed: u64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p95_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub tpot_p50_ms: f64,
+    pub tpot_p95_ms: f64,
+    pub tpot_p99_ms: f64,
+    pub e2e_p50_ms: f64,
+    pub goodput_rps: f64,
+}
+
+impl SloSummary {
+    /// One row in the uniform greppable bench format.
+    pub fn line(&self) -> String {
+        format!(
+            "slo {:<8} {:<16} ttft p50={:>5.0} p95={:>5.0} p99={:>5.0}ms | \
+             tpot p50={:>5.1} p95={:>5.1} p99={:>5.1}ms | \
+             e2e p50={:>5.2}s | goodput={:.2}req/s reqs={} seeds={}",
+            self.scenario,
+            self.policy,
+            self.ttft_p50_ms,
+            self.ttft_p95_ms,
+            self.ttft_p99_ms,
+            self.tpot_p50_ms,
+            self.tpot_p95_ms,
+            self.tpot_p99_ms,
+            self.e2e_p50_ms / 1e3,
+            self.goodput_rps,
+            self.completed,
+            self.seeds,
+        )
+    }
+}
+
+/// Group sweep cells by (scenario, policy) in first-seen order and pool
+/// their per-request records into one distribution per group.
+pub fn summarize(cells: &[SweepCell], slo: &SloSpec) -> Vec<SloSummary> {
+    let mut keys: Vec<(String, String)> = Vec::new();
+    for c in cells {
+        let k = (c.scenario.clone(), c.report.policy.clone());
+        if !keys.contains(&k) {
+            keys.push(k);
+        }
+    }
+    keys.into_iter()
+        .map(|(scenario, policy)| {
+            let group: Vec<&SweepCell> = cells
+                .iter()
+                .filter(|c| c.scenario == scenario && c.report.policy == policy)
+                .collect();
+            let mut ttft = Vec::new();
+            let mut tpot = Vec::new();
+            let mut e2e = Vec::new();
+            let mut completed = 0u64;
+            let mut goodput = 0.0;
+            for c in &group {
+                for r in &c.report.requests {
+                    ttft.push(r.ttft_ms());
+                    tpot.push(r.tpot_ms());
+                    e2e.push(r.e2e_ms());
+                }
+                completed += c.report.completed_requests;
+                goodput += c.report.goodput_rps(slo);
+            }
+            let (t, p, e) = (Cdf::of(ttft), Cdf::of(tpot), Cdf::of(e2e));
+            SloSummary {
+                scenario,
+                policy,
+                seeds: group.len(),
+                completed,
+                ttft_p50_ms: t.p(50.0),
+                ttft_p95_ms: t.p(95.0),
+                ttft_p99_ms: t.p(99.0),
+                tpot_p50_ms: p.p(50.0),
+                tpot_p95_ms: p.p(95.0),
+                tpot_p99_ms: p.p(99.0),
+                e2e_p50_ms: e.p(50.0),
+                goodput_rps: goodput / group.len().max(1) as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SweepSpec {
+        let mut spec = SweepSpec::new(ModelSpec::phi_3_5_moe(), DatasetSpec::lmsys());
+        spec.policies = vec![PolicyKind::Megatron, PolicyKind::Moeless];
+        spec.scenarios = vec![Scenario::poisson(), Scenario::bursty()];
+        spec.seeds = vec![1, 2];
+        spec.duration_s = 8.0;
+        spec.base_rps = 3.0;
+        spec
+    }
+
+    #[test]
+    fn sweep_covers_cross_product_and_sharding_is_deterministic() {
+        let mut spec = small_spec();
+        spec.threads = 4;
+        let par = run_sweep(&spec);
+        assert_eq!(par.len(), 2 * 2 * 2);
+
+        let mut seq_spec = small_spec();
+        seq_spec.threads = 1;
+        let seq = run_sweep(&seq_spec);
+        for (a, b) in par.iter().zip(&seq) {
+            assert_eq!((a.scenario.as_str(), a.seed), (b.scenario.as_str(), b.seed));
+            assert_eq!(a.report.layer_forward_ms, b.report.layer_forward_ms);
+            assert_eq!(a.report.requests, b.report.requests);
+        }
+    }
+
+    #[test]
+    fn summaries_group_by_scenario_and_policy() {
+        let mut spec = small_spec();
+        spec.threads = 4;
+        let cells = run_sweep(&spec);
+        let rows = summarize(&cells, &SloSpec::default());
+        assert_eq!(rows.len(), 4, "2 scenarios x 2 policies");
+        for r in &rows {
+            assert_eq!(r.seeds, 2);
+            assert!(r.completed > 0, "{} {}", r.scenario, r.policy);
+            assert!(r.ttft_p50_ms <= r.ttft_p99_ms);
+            assert!(r.tpot_p50_ms <= r.tpot_p99_ms);
+            assert!(r.line().contains(&r.policy));
+        }
+        // Goodput under no SLO equals pooled completed-request throughput.
+        let free = summarize(&cells, &SloSpec::unbounded());
+        for (a, b) in rows.iter().zip(&free) {
+            assert!(a.goodput_rps <= b.goodput_rps + 1e-12);
+        }
+    }
+}

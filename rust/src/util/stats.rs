@@ -45,7 +45,15 @@ pub fn cv(xs: &[f64]) -> f64 {
 }
 
 /// Percentile by linear interpolation on the sorted sample; q in [0,100].
+///
+/// Contract: `sorted` must be nondecreasing — the result is meaningless
+/// otherwise. Enforced in debug builds; release callers are audited
+/// ([`Cdf::of`] and `benchkit::Bencher::run` sort before calling).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile requires sorted input"
+    );
     if sorted.is_empty() {
         return 0.0;
     }

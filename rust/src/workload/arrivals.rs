@@ -1,0 +1,273 @@
+//! Request-arrival scenarios for the request-level serving simulator.
+//!
+//! The paper evaluates over *streams* of concurrent requests; related
+//! systems (ServerlessLLM, fMoE) report TTFT/TPOT percentiles under real
+//! arrival processes. Four processes drive the continuous batcher:
+//!
+//! * **Poisson** — constant-rate memoryless arrivals (the M/·/· baseline).
+//! * **Bursty** — a two-state MMPP (Markov-modulated Poisson process):
+//!   a low-rate background regime punctuated by high-rate bursts with
+//!   geometric sojourn times; the stationary mean matches `base_rps`.
+//! * **Diurnal** — the Azure-style diurnal ramp + superimposed bursts of
+//!   [`trace::azure_like_trace`] (Fig. 3a's shape).
+//! * **Replay** — deterministic replay of a prerecorded request trace.
+//!
+//! All generators are seeded and bit-for-bit reproducible; request bodies
+//! (prompt/output lengths) come from the dataset's log-normal fits.
+
+use crate::config::DatasetSpec;
+use crate::util::rng::Pcg;
+use crate::workload::trace::{azure_like_trace, TraceRequest};
+
+/// The arrival process of a [`Scenario`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalKind {
+    /// Constant-rate Poisson arrivals at `base_rps`.
+    Poisson,
+    /// Two-state MMPP: rate is `base_rps * gain_hi` while bursting and
+    /// `base_rps * rate_lo` otherwise; state sojourns are geometric with
+    /// the given means (seconds).
+    Bursty { gain_hi: f64, rate_lo: f64, mean_on_s: f64, mean_off_s: f64 },
+    /// Azure-style diurnal ramp + bursts (delegates to
+    /// [`azure_like_trace`] — the default trace every figure replays).
+    Diurnal,
+    /// Replay a prerecorded trace verbatim (clipped to the duration).
+    Replay(Vec<TraceRequest>),
+}
+
+/// A named arrival scenario the sweep runner and CLIs select by.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub kind: ArrivalKind,
+}
+
+impl Scenario {
+    pub fn poisson() -> Scenario {
+        Scenario { name: "poisson".into(), kind: ArrivalKind::Poisson }
+    }
+
+    /// Defaults chosen so the stationary mean equals `base_rps`:
+    /// P(on) = 5/(5+20) = 0.2, and 0.2·3.0 + 0.8·0.5 = 1.0.
+    pub fn bursty() -> Scenario {
+        Scenario {
+            name: "bursty".into(),
+            kind: ArrivalKind::Bursty {
+                gain_hi: 3.0,
+                rate_lo: 0.5,
+                mean_on_s: 5.0,
+                mean_off_s: 20.0,
+            },
+        }
+    }
+
+    pub fn diurnal() -> Scenario {
+        Scenario { name: "diurnal".into(), kind: ArrivalKind::Diurnal }
+    }
+
+    pub fn replay(trace: Vec<TraceRequest>) -> Scenario {
+        Scenario { name: "replay".into(), kind: ArrivalKind::Replay(trace) }
+    }
+
+    /// The synthetic-process scenarios (replay needs a recorded trace and
+    /// is constructed explicitly).
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        match name {
+            "poisson" => Some(Self::poisson()),
+            "bursty" | "mmpp" => Some(Self::bursty()),
+            "diurnal" | "azure" => Some(Self::diurnal()),
+            _ => None,
+        }
+    }
+
+    /// The sweep runner's default scenario set.
+    pub fn paper_set() -> Vec<Scenario> {
+        vec![Self::poisson(), Self::bursty(), Self::diurnal()]
+    }
+
+    /// Generate the request stream for `duration_s` seconds at `base_rps`
+    /// mean arrivals/s (Replay ignores the rate and replays verbatim).
+    pub fn generate(
+        &self,
+        dataset: &DatasetSpec,
+        duration_s: f64,
+        base_rps: f64,
+        seed: u64,
+    ) -> Vec<TraceRequest> {
+        match &self.kind {
+            ArrivalKind::Diurnal => azure_like_trace(dataset, duration_s, base_rps, seed),
+            ArrivalKind::Poisson => poisson_trace(dataset, duration_s, base_rps, seed),
+            ArrivalKind::Bursty { gain_hi, rate_lo, mean_on_s, mean_off_s } => bursty_trace(
+                dataset, duration_s, base_rps, seed, *gain_hi, *rate_lo, *mean_on_s, *mean_off_s,
+            ),
+            ArrivalKind::Replay(trace) => {
+                trace.iter().filter(|r| r.arrival_s < duration_s).copied().collect()
+            }
+        }
+    }
+}
+
+/// Draw one request body from the dataset's log-normal length fits.
+fn sample_request(
+    dataset: &DatasetSpec,
+    id: u64,
+    arrival_s: f64,
+    rng: &mut Pcg,
+) -> TraceRequest {
+    let (pm, ps) = dataset.prompt_lognorm;
+    let (om, os) = dataset.output_lognorm;
+    TraceRequest {
+        id,
+        arrival_s,
+        prompt_tokens: (rng.lognormal(pm, ps).round() as usize).clamp(1, dataset.max_tokens),
+        output_tokens: (rng.lognormal(om, os).round() as usize).clamp(1, dataset.max_tokens),
+    }
+}
+
+fn poisson_trace(
+    dataset: &DatasetSpec,
+    duration_s: f64,
+    base_rps: f64,
+    seed: u64,
+) -> Vec<TraceRequest> {
+    let mut rng = Pcg::new(seed, 0x9015);
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    for sec in 0..duration_s.ceil() as usize {
+        let n = rng.poisson(base_rps);
+        for _ in 0..n {
+            let arrival = sec as f64 + rng.f64();
+            // Fractional durations: the last second is partial — arrivals
+            // past the end would never be admitted by the sim loop.
+            if arrival >= duration_s {
+                continue;
+            }
+            out.push(sample_request(dataset, id, arrival, &mut rng));
+            id += 1;
+        }
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bursty_trace(
+    dataset: &DatasetSpec,
+    duration_s: f64,
+    base_rps: f64,
+    seed: u64,
+    gain_hi: f64,
+    rate_lo: f64,
+    mean_on_s: f64,
+    mean_off_s: f64,
+) -> Vec<TraceRequest> {
+    let mut rng = Pcg::new(seed, 0xb4a5);
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    let mut on = false;
+    for sec in 0..duration_s.ceil() as usize {
+        // Geometric sojourns: flip with probability 1/mean each second.
+        let flip_p = if on { 1.0 / mean_on_s.max(1.0) } else { 1.0 / mean_off_s.max(1.0) };
+        if rng.f64() < flip_p {
+            on = !on;
+        }
+        let rate = base_rps * if on { gain_hi } else { rate_lo };
+        let n = rng.poisson(rate);
+        for _ in 0..n {
+            let arrival = sec as f64 + rng.f64();
+            // Fractional durations: drop arrivals past the end (see
+            // `poisson_trace`).
+            if arrival >= duration_s {
+                continue;
+            }
+            out.push(sample_request(dataset, id, arrival, &mut rng));
+            id += 1;
+        }
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::cv;
+
+    fn per_second_counts(trace: &[TraceRequest], duration_s: f64) -> Vec<f64> {
+        let mut bins = vec![0.0; duration_s.ceil() as usize];
+        for r in trace {
+            let s = (r.arrival_s as usize).min(bins.len().saturating_sub(1));
+            bins[s] += 1.0;
+        }
+        bins
+    }
+
+    #[test]
+    fn deterministic_and_sorted() {
+        let d = DatasetSpec::lmsys();
+        for sc in Scenario::paper_set() {
+            let a = sc.generate(&d, 120.0, 4.0, 11);
+            let b = sc.generate(&d, 120.0, 4.0, 11);
+            assert_eq!(a, b, "{}", sc.name);
+            assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s), "{}", sc.name);
+            assert!(!a.is_empty(), "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn mean_rates_near_base() {
+        let d = DatasetSpec::lmsys();
+        for sc in [Scenario::poisson(), Scenario::bursty()] {
+            let t = sc.generate(&d, 400.0, 4.0, 3);
+            let rps = t.len() as f64 / 400.0;
+            assert!(rps > 2.0 && rps < 7.0, "{}: rps={rps}", sc.name);
+        }
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        let d = DatasetSpec::lmsys();
+        let p = per_second_counts(&Scenario::poisson().generate(&d, 300.0, 6.0, 5), 300.0);
+        let b = per_second_counts(&Scenario::bursty().generate(&d, 300.0, 6.0, 5), 300.0);
+        assert!(cv(&b) > 1.5 * cv(&p), "bursty CV {} vs poisson CV {}", cv(&b), cv(&p));
+    }
+
+    #[test]
+    fn diurnal_matches_azure_trace() {
+        let d = DatasetSpec::sharegpt();
+        assert_eq!(
+            Scenario::diurnal().generate(&d, 90.0, 5.0, 7),
+            azure_like_trace(&d, 90.0, 5.0, 7)
+        );
+    }
+
+    #[test]
+    fn replay_clips_to_duration() {
+        let d = DatasetSpec::lmsys();
+        let recorded = azure_like_trace(&d, 60.0, 4.0, 9);
+        let sc = Scenario::replay(recorded.clone());
+        // Replay ignores rate/seed and returns the recorded stream.
+        let replayed = sc.generate(&d, 30.0, 99.0, 1);
+        assert!(replayed.iter().all(|r| r.arrival_s < 30.0));
+        assert!(replayed.len() < recorded.len());
+        assert_eq!(&replayed[..], &recorded[..replayed.len()]);
+    }
+
+    #[test]
+    fn fractional_durations_do_not_overshoot() {
+        let d = DatasetSpec::lmsys();
+        for sc in [Scenario::poisson(), Scenario::bursty()] {
+            let t = sc.generate(&d, 10.5, 6.0, 13);
+            assert!(!t.is_empty(), "{}", sc.name);
+            assert!(t.iter().all(|r| r.arrival_s < 10.5), "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ["poisson", "bursty", "diurnal"] {
+            assert_eq!(Scenario::by_name(name).unwrap().name, name);
+        }
+        assert!(Scenario::by_name("flash-crowd").is_none());
+    }
+}

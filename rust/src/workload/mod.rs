@@ -1,8 +1,11 @@
-//! Workload generation (substrate S20): Azure-style request traces, dataset
-//! length models, and the Tier-B expert routing generator.
+//! Workload generation (substrate S20): Azure-style request traces, arrival
+//! scenarios (Poisson / bursty MMPP / diurnal / replay), dataset length
+//! models, and the Tier-B expert routing generator.
 
+pub mod arrivals;
 pub mod routing;
 pub mod trace;
 
+pub use arrivals::{ArrivalKind, Scenario};
 pub use routing::RoutingModel;
 pub use trace::{azure_like_trace, TraceRequest};

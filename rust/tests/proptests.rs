@@ -54,6 +54,45 @@ fn prop_scaler_never_increases_straggler() {
 }
 
 #[test]
+fn prop_scaler_incremental_cv_matches_recompute() {
+    // The scaler maintains the per-replica-load CV incrementally (sum +
+    // sum-of-squares). Verify the incremental identity against a
+    // from-scratch `stats::cv` recomputation on the plan it returns, and
+    // that the stop condition is consistent with that CV.
+    property(200, |g| {
+        let n = g.usize_in(1, 24);
+        let loads = g.loads(n, 1500.0);
+        let v = g.f64_in(0.05, 0.8);
+        let cap = g.usize_in(1, 96);
+        let plan = Scaler::new(v, cap).scale(&loads);
+        let per = plan.per_replica_loads(&loads);
+        if per.is_empty() {
+            return;
+        }
+        let k = per.len() as f64;
+        let sum: f64 = per.iter().sum();
+        let sumsq: f64 = per.iter().map(|x| x * x).sum();
+        let mean = sum / k;
+        let incremental = if mean.abs() < 1e-12 {
+            0.0
+        } else {
+            (sumsq / k - mean * mean).max(0.0).sqrt() / mean
+        };
+        let scratch = cv(&per);
+        assert!(
+            (incremental - scratch).abs() < 1e-6 * (1.0 + scratch),
+            "incremental CV {incremental} vs from-scratch {scratch}"
+        );
+        // Stop condition: the CV target was met, or the cap bound.
+        assert!(
+            scratch <= v + 1e-6 || plan.total() >= cap,
+            "CV {scratch} > {v} with {}/{cap} slots",
+            plan.total()
+        );
+    });
+}
+
+#[test]
 fn prop_scaler_meets_cv_or_exhausts_cap() {
     property(150, |g| {
         let n = g.usize_in(2, 16);
@@ -140,6 +179,49 @@ fn prop_placer_warm_reuse_monotone() {
         let plan = Placer.place(&replicas, &loads, &mut prev, &cluster, 0.33);
         assert_eq!(plan.reused_count(), n, "all single replicas reuse their old home");
     });
+}
+
+#[test]
+fn placer_fallback_records_eviction_debt() {
+    // A fully memory-exhausted cluster still places every replica, but each
+    // placement owes the serverless manager one eviction.
+    let mut cluster = Cluster::new(ClusterSpec { n_gpus: 2, ..ClusterSpec::a6000_x8() });
+    assert!(cluster.reserve(0, 48.0));
+    assert!(cluster.reserve(1, 48.0));
+    let mut prev = vec![Vec::new(); 3];
+    let plan = Placer.place(&[1, 1, 1], &[30.0, 20.0, 10.0], &mut prev, &cluster, 0.33);
+    assert_eq!(plan.placements.len(), 3);
+    assert_eq!(plan.evictions_owed, 3);
+    assert!(plan.placements.iter().all(|p| p.gpu < 2));
+}
+
+#[test]
+fn placer_partial_room_owes_only_the_overflow() {
+    // One free slot on a 2-GPU cluster: the first replica fits, the second
+    // owes an eviction.
+    let spec = ClusterSpec { n_gpus: 2, mem_per_gpu_gb: 1.0, ..ClusterSpec::a6000_x8() };
+    let mut cluster = Cluster::new(spec);
+    assert!(cluster.reserve(0, 1.0));
+    assert!(cluster.reserve(1, 0.5)); // 0.5 GB free on GPU 1: one 0.4 GB slot
+    let mut prev = vec![Vec::new(); 2];
+    let plan = Placer.place(&[1, 1], &[50.0, 40.0], &mut prev, &cluster, 0.4);
+    assert_eq!(plan.placements.len(), 2);
+    assert_eq!(plan.evictions_owed, 1);
+}
+
+#[test]
+fn placer_consumes_warm_candidates_in_place() {
+    // Warm candidates are consumed as they are reused — each live instance
+    // backs at most one replica, and leftovers stay for the caller.
+    let cluster = Cluster::new(ClusterSpec::a6000_x8());
+    let mut prev = vec![vec![3, 5], vec![1]];
+    let plan = Placer.place(&[1, 1], &[60.0, 30.0], &mut prev, &cluster, 0.33);
+    assert_eq!(plan.reused_count(), 2);
+    // Expert 0 used one of its two candidates; expert 1 used its only one.
+    assert_eq!(prev[0].len(), 1);
+    assert!(prev[1].is_empty());
+    let e0 = plan.placements.iter().find(|p| p.expert == 0).unwrap();
+    assert!(!prev[0].contains(&e0.gpu), "the reused candidate was removed");
 }
 
 // ---------------------------------------------------------------------------

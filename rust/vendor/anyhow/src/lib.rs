@@ -1,0 +1,121 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! crates.io is unavailable in the build environment, so this vendored
+//! shim implements exactly the API surface the `moeless` crate uses:
+//! [`Error`], [`Result`], [`Error::msg`], the [`Context`] extension trait
+//! (on `Result`), and the [`bail!`] macro. Error chains are flattened into
+//! the message at wrap time; that is all the callers ever display.
+
+use std::fmt;
+
+/// A flattened, `String`-backed error value.
+///
+/// Like the real `anyhow::Error`, this type deliberately does **not**
+/// implement `std::error::Error` — that is what makes the blanket
+/// `From<E: std::error::Error>` conversion below coherent alongside the
+/// standard library's reflexive `From<T> for T`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Build an error from a concrete error value (flattens the message).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+
+    /// Wrap with an outer context message: `"{context}: {inner}"`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// `anyhow::Result<T>`: `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    /// Attach a context message to the error, if any.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily-built context message to the error, if any.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn fails() -> Result<u32> {
+        bail!("boom {}", 7)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn context_wraps_std_errors() {
+        let e = std::fs::read("/definitely/not/a/real/path")
+            .context("reading cfg")
+            .unwrap_err();
+        assert!(e.to_string().starts_with("reading cfg: "), "{e}");
+    }
+
+    #[test]
+    fn with_context_wraps_shim_errors() {
+        let r: Result<()> = Err(Error::msg("inner"));
+        let e = r.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 1: inner");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn io_fail() -> Result<Vec<u8>> {
+            Ok(std::fs::read("/definitely/not/a/real/path")?)
+        }
+        assert!(io_fail().is_err());
+    }
+}

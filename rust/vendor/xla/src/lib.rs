@@ -1,0 +1,168 @@
+//! Compilable stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The Tier-A serving path needs native XLA/PJRT libraries that this build
+//! environment does not have. This vendored stub keeps the `pjrt` cargo
+//! feature *compilable*: it mirrors the exact API surface
+//! `moeless::runtime` uses, and every fallible entry point returns a
+//! descriptive [`Error`] at runtime, so callers (which already skip
+//! gracefully when artifacts are missing) degrade to Tier-B.
+//!
+//! To run Tier A for real, point the `xla` path dependency in
+//! `rust/Cargo.toml` at a real xla-rs checkout with the PJRT CPU plugin.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries the "built without native XLA" explanation.
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} unavailable — built without native XLA/PJRT \
+         (point rust/vendor/xla at a real xla-rs checkout to run Tier A)"
+    )))
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded executable (stub: execution always fails).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A host literal (stub: opaque, all accessors fail).
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stub("Literal::reshape")
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        stub("Literal::shape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub("Literal::to_tuple")
+    }
+}
+
+/// Array-or-tuple shape of a literal.
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Dimensions of an array-shaped literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn new(dims: Vec<i64>) -> ArrayShape {
+        ArrayShape { dims }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("xla stub"), "{e}");
+        assert!(HloModuleProto::from_text_file("/x.hlo").is_err());
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let s = Shape::Array(ArrayShape::new(vec![2, 3]));
+        match &s {
+            Shape::Array(a) => assert_eq!(a.dims(), &[2, 3]),
+            _ => panic!("expected array shape"),
+        }
+    }
+}
