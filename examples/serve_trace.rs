@@ -3,16 +3,19 @@
 //! (2-state MMPP), and replay of a recorded Azure-style trace — with
 //! per-request p50/p95/p99 TTFT and TPOT plus goodput, multi-seed and
 //! sharded across the thread pool. A second section prints the classic
-//! Fig. 8/10-style layer-latency/cost comparison on the diurnal trace.
+//! Fig. 8/10-style layer-latency/cost comparison on the diurnal trace; a
+//! third shrinks the KV-cache carve-out on a bursty stream to show the
+//! admission controller's queue/preempt/resume feedback on tail TTFT.
 //!
 //! Run: `cargo run --release --example serve_trace [-- --seconds 45 --rps 6 --seeds 2]`
 
 use std::time::Instant;
 
+use moeless::baselines::PolicyKind;
 use moeless::config::{DatasetSpec, ModelSpec};
 use moeless::metrics::{reduction_pct, SloSpec};
-use moeless::sim::run_paper_set;
 use moeless::sim::sweep::{run_sweep, summarize, SweepSpec};
+use moeless::sim::{run, run_paper_set, SimConfig};
 use moeless::util::benchkit::series_summary;
 use moeless::util::cli::Args;
 use moeless::workload::{azure_like_trace, Scenario};
@@ -85,4 +88,25 @@ fn main() {
         reduction_pct(orc.cost_gb_s, less.cost_gb_s),
         reduction_pct(eplb.cost_gb_s, less.cost_gb_s),
     );
+
+    // --- KV-cache pressure A/B: shrink the KV carve-out on the same ----
+    // --- bursty stream and watch admission queue, preempt, and inflate --
+    // --- tail TTFT (the memory side of the latency/cost trade-off). ----
+    println!("\n=== KV-cache pressure: {} on {} (bursty, {seconds:.0}s) ===", model.name, dataset.name);
+    for (label, kv_frac) in [("unconstrained", f64::INFINITY), ("full", 1.0), ("tight", 0.05)] {
+        let mut cfg = SimConfig::new(model.clone(), dataset.clone(), PolicyKind::Moeless);
+        cfg.scenario = Scenario::bursty();
+        cfg.duration_s = seconds;
+        cfg.base_rps = rps;
+        cfg.seed = seed;
+        cfg.kv_frac = kv_frac;
+        let r = run(&cfg);
+        println!("   {label:<13} {}", r.pressure_line());
+        println!(
+            "   {label:<13} ttft p99={:.0}ms | completed {} | kv peak util {:.3}",
+            r.ttft_cdf().p(99.0),
+            r.completed_requests,
+            r.peak_kv_util()
+        );
+    }
 }

@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use moeless::baselines::PolicyKind;
 use moeless::config::{DatasetSpec, ModelSpec};
-use moeless::router::Batcher;
+use moeless::router::{BatchLimits, Batcher};
 use moeless::sim::sweep::{run_sweep, SweepSpec};
 use moeless::sim::{run, SimConfig};
 use moeless::util::benchkit::{fig_header, Bencher};
@@ -35,6 +35,28 @@ fn main() {
             clock += 0.08;
         }
         batcher.completed
+    });
+
+    // The same drain under KV pressure: admission gating + youngest-first
+    // preemption + recompute-on-resume on the hot path. The budget (in
+    // tokens, 1 B/token) is sized to a small multiple of the mean request
+    // so churn actually occurs.
+    b.run("batcher.drain kv-constrained (60s bursty trace)", || {
+        let mut batcher = Batcher::with_limits(BatchLimits {
+            max_batch_tokens: 4096,
+            kv_budget_bytes: 4000.0,
+            kv_bytes_per_token: 1.0,
+        });
+        batcher.enqueue(&trace);
+        let mut clock = 0.0f64;
+        while !batcher.idle() {
+            match batcher.next_iteration(clock) {
+                Some(_) => batcher.complete_iteration(clock + 0.08),
+                None => clock = batcher.next_arrival().unwrap_or(clock).max(clock),
+            }
+            clock += 0.08;
+        }
+        (batcher.completed, batcher.preemptions)
     });
 
     // End-to-end request-level simulation throughput per scenario.

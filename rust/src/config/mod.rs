@@ -139,6 +139,21 @@ impl ModelSpec {
     pub fn promoe_predictor_bytes(&self) -> usize {
         (self.d_model * 512 + 512 * self.n_experts) * 2
     }
+
+    /// Bytes of KV cache one token occupies across the whole model:
+    /// `2 (K and V) × n_layers × d_model × bytes_per_elem` with bf16
+    /// (2-byte) cache entries. Multiply by a sequence's materialized
+    /// tokens for its cache footprint — the batcher's admission currency.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.n_layers * self.d_model * 2) as f64
+    }
+
+    /// Full expert-weight footprint (GB): every expert of every layer
+    /// resident at once — what a static-EP serverful deployment pins, and
+    /// the occupancy the KV budget is carved out alongside.
+    pub fn full_expert_set_gb(&self) -> f64 {
+        self.n_layers as f64 * self.n_experts as f64 * self.expert_mem_gb
+    }
 }
 
 /// Early layers less predictable, ramping to stable late layers (Fig. 6).
@@ -188,6 +203,20 @@ impl ClusterSpec {
     /// Total cluster memory (GB).
     pub fn total_mem_gb(&self) -> f64 {
         self.n_gpus as f64 * self.mem_per_gpu_gb
+    }
+
+    /// The KV-cache budget (GB) carved out of cluster memory alongside
+    /// the expert-weight occupancy: total memory minus the resident
+    /// non-expert footprint minus the full expert set (the worst-case
+    /// weight residency — serverless policies that keep fewer experts
+    /// live run *under* this carve-out, never over it). Sequences are
+    /// assumed balanced across GPUs, so the aggregate equals n_gpus ×
+    /// the per-GPU carve-out. Floored at 5% of cluster memory so
+    /// pathologically small clusters degrade (reject/preempt) instead of
+    /// dividing by nothing.
+    pub fn kv_budget_gb(&self, model: &ModelSpec) -> f64 {
+        (self.total_mem_gb() - model.misc_mem_gb - model.full_expert_set_gb())
+            .max(0.05 * self.total_mem_gb())
     }
 
     pub fn from_json(j: &Json) -> ClusterSpec {
@@ -349,6 +378,30 @@ mod tests {
                 + m.misc_mem_gb;
             assert!(total < c.total_mem_gb(), "{} needs {total} GB", m.name);
         }
+    }
+
+    #[test]
+    fn kv_model_matches_formula() {
+        // Mixtral: 2 * 32 layers * 4096 d_model * 2 B = 512 KiB per token.
+        let m = ModelSpec::mixtral_8x7b();
+        assert!((m.kv_bytes_per_token() - 524_288.0).abs() < 1e-6);
+        assert!((m.full_expert_set_gb() - 32.0 * 8.0 * 0.33).abs() < 1e-9);
+        // The carve-out leaves real KV headroom on the paper testbed for
+        // every evaluation model, and the pieces add back up to <= total.
+        let c = ClusterSpec::a6000_x8();
+        for m in ModelSpec::paper_models() {
+            let kv = c.kv_budget_gb(&m);
+            assert!(kv > 0.1 * c.total_mem_gb(), "{}: {kv} GB", m.name);
+            assert!(
+                kv + m.misc_mem_gb + m.full_expert_set_gb() <= c.total_mem_gb() + 1e-9,
+                "{}",
+                m.name
+            );
+        }
+        // A cluster too small for the expert set still yields the 5% floor.
+        let tiny = ClusterSpec { n_gpus: 1, mem_per_gpu_gb: 2.0, ..ClusterSpec::a6000_x8() };
+        let kv = tiny.kv_budget_gb(&ModelSpec::mixtral_8x7b());
+        assert!((kv - 0.1).abs() < 1e-9, "floor = 5% of 2 GB, got {kv}");
     }
 
     #[test]

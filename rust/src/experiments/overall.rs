@@ -2,12 +2,14 @@
 //! approaches × three models × two datasets) and Fig. 10 (total inference
 //! cost).
 
+use crate::baselines::PolicyKind;
 use crate::config::{DatasetSpec, ModelSpec};
 use crate::experiments::Scale;
 use crate::metrics::{reduction_pct, SloSpec};
 use crate::sim::run_paper_set;
 use crate::sim::sweep::{run_sweep, summarize, SweepSpec};
 use crate::util::benchkit::{fig_header, series_summary};
+use crate::workload::Scenario;
 
 /// Figs. 8/9: CDF of MoE layer forward time for the four approaches across
 /// the three models on one dataset.
@@ -101,6 +103,27 @@ pub fn request_slo(scale: Scale) {
         slo.ttft_ms,
         slo.tpot_ms,
     );
+
+    // KV-cache memory pressure: the same bursty arrivals under a shrinking
+    // KV carve-out. With the full budget admission never queues on
+    // headroom; tightening it makes preemptions appear and tail TTFT
+    // inflate — the feedback loop the admission controller models.
+    fig_header(
+        "SLO-KV",
+        "request-level impact of KV-budget pressure — bursty arrivals, shrinking carve-out",
+    );
+    for (label, kv_frac) in [("full", 1.0f64), ("half", 0.5), ("tight", 0.05)] {
+        let mut spec = SweepSpec::new(ModelSpec::mixtral_8x7b(), DatasetSpec::lmsys());
+        spec.policies = vec![PolicyKind::Megatron, PolicyKind::Moeless];
+        spec.scenarios = vec![Scenario::bursty()];
+        spec.seeds = vec![scale.seed];
+        spec.duration_s = scale.duration_s;
+        spec.base_rps = scale.base_rps;
+        spec.kv_frac = kv_frac;
+        for row in summarize(&run_sweep(&spec), &slo) {
+            println!("kv={label:<5} {}", row.line());
+        }
+    }
 }
 
 #[cfg(test)]

@@ -22,8 +22,10 @@
 //! * [`predictor`] — expert load predictors (§4.1) + accuracy metrics.
 //! * [`scaler`] — Expert Scaler, Algorithm 1.
 //! * [`placer`] — Expert Placer, Algorithm 2.
-//! * [`router`] — request router + iteration-level continuous batcher with
-//!   per-request TTFT/TPOT tracking.
+//! * [`router`] — request router + KV-cache-aware iteration-level
+//!   continuous batcher: per-request TTFT/TPOT tracking, token-cap and
+//!   KV-headroom admission control, youngest-first preemption with
+//!   recompute-on-resume.
 //! * [`engine`] — the serving engine: per-layer pipeline with prediction
 //!   overlap, misprediction fallback, metric capture.
 //! * [`baselines`] — Megatron-LM static EP, EPLB, Oracle.
@@ -52,9 +54,13 @@
 //! The Tier-B simulator is request-level: [`workload::Scenario`] generates
 //! arrivals (Poisson, bursty/MMPP, diurnal, trace replay),
 //! [`router::Batcher`] tracks every request through prefill + per-token
-//! decode iterations under continuous batching, and
+//! decode iterations under continuous batching — gating admission on a
+//! per-iteration token cap and on KV-cache headroom carved out of cluster
+//! memory ([`config::ClusterSpec::kv_budget_gb`]), preempting the youngest
+//! sequences (recompute-on-resume) when decode growth exhausts it — and
 //! [`metrics::RunReport::requests`] records per-request TTFT, TPOT and
-//! end-to-end latency ([`metrics::SloSpec`] turns them into goodput).
+//! end-to-end latency ([`metrics::SloSpec`] turns them into goodput),
+//! alongside KV utilization, queue depth, and preemption/rejection counts.
 //! [`sim::sweep`] shards multi-seed × multi-scenario × multi-policy runs
 //! across the thread pool:
 //!

@@ -38,6 +38,8 @@ fn main() {
                  \n\
                  serve   Tier-A: serve TinyMoE end-to-end over PJRT artifacts\n\
                  replay  Tier-B: replay an Azure-style trace on the simulator\n\
+                         (--kv-frac F | --kv-budget-gb G | --max-batch-tokens N\n\
+                          gate admission on KV-cache headroom / batch size)\n\
                  bench   run one paper experiment (--exp fig1|fig3|...|table2)\n\
                  report  print model/cluster inventory (Table 1)"
             );

@@ -17,6 +17,10 @@ pub struct RequestRecord {
     pub finish_s: f64,
     pub prompt_tokens: usize,
     pub output_tokens: usize,
+    /// Times this request was preempted under KV-cache pressure (each
+    /// preemption drops its cache; resume recomputes prompt + emitted
+    /// tokens).
+    pub preemptions: u32,
 }
 
 impl RequestRecord {
@@ -99,6 +103,28 @@ pub struct RunReport {
     pub iterations: u64,
     pub completed_requests: u64,
     pub tokens_processed: u64,
+    /// KV-cache budget the batcher was gated on (GB; infinite when
+    /// unconstrained).
+    pub kv_budget_gb: f64,
+    /// Per-iteration KV-cache utilization (bytes in use / budget; all
+    /// zeros when unconstrained).
+    pub kv_util: Vec<f64>,
+    /// Per-iteration admission-queue depth (pending arrivals + preempted
+    /// sequences awaiting resume).
+    pub queue_depth: Vec<f64>,
+    /// Preemption events under KV pressure (youngest-first,
+    /// recompute-on-resume).
+    pub preemptions: u64,
+    /// Re-admissions of preempted sequences.
+    pub resumes: u64,
+    /// Requests whose peak KV demand could never fit the budget
+    /// (rejected at admission, counted — never silently lost).
+    pub rejected_requests: u64,
+    /// Iterations in which an arrived request was deferred by the token
+    /// cap or missing KV headroom.
+    pub delayed_admissions: u64,
+    /// Prefill tokens spent recomputing preempted sequences' context.
+    pub tokens_recomputed: u64,
     /// Virtual seconds of serving simulated.
     pub sim_duration_s: f64,
     /// Wall-clock seconds the simulation itself took (perf metric).
@@ -184,6 +210,45 @@ impl RunReport {
         )
     }
 
+    /// Peak per-iteration KV-cache utilization (0 when unconstrained).
+    pub fn peak_kv_util(&self) -> f64 {
+        self.kv_util.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Peak admission-queue depth across iterations.
+    pub fn peak_queue_depth(&self) -> f64 {
+        self.queue_depth.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Mean admission-queue depth across iterations.
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_depth.is_empty() {
+            0.0
+        } else {
+            Summary::of(&self.queue_depth).mean
+        }
+    }
+
+    /// One-line memory-pressure summary: KV budget/utilization, the
+    /// preemption/resume churn, and the rejected-vs-delayed admission
+    /// split.
+    pub fn pressure_line(&self) -> String {
+        format!(
+            "kv  policy={:<16} budget={:.1}GB peak_util={:.3} preempt={} resumes={} \
+             rejected={} delayed={} recompute_tok={} queue peak={:.0} mean={:.1}",
+            self.policy,
+            self.kv_budget_gb,
+            self.peak_kv_util(),
+            self.preemptions,
+            self.resumes,
+            self.rejected_requests,
+            self.delayed_admissions,
+            self.tokens_recomputed,
+            self.peak_queue_depth(),
+            self.mean_queue_depth(),
+        )
+    }
+
     /// Simulated serving throughput (tokens per simulated second).
     pub fn tokens_per_s(&self) -> f64 {
         if self.sim_duration_s > 0.0 {
@@ -197,7 +262,8 @@ impl RunReport {
     pub fn summary_line(&self) -> String {
         format!(
             "run policy={:<16} model={:<14} dataset={:<8} mean_layer={:.3}ms p99={:.3}ms \
-             cost={:.1}GBs replicas={:.1} acc={:.3} cold={} warm_frac={:.3} iters={} reqs={}",
+             cost={:.1}GBs replicas={:.1} acc={:.3} cold={} warm_frac={:.3} iters={} reqs={} \
+             preempt={} rej={}",
             self.policy,
             self.model,
             self.dataset,
@@ -210,6 +276,8 @@ impl RunReport {
             self.warm_fraction,
             self.iterations,
             self.completed_requests,
+            self.preemptions,
+            self.rejected_requests,
         )
     }
 }
@@ -246,6 +314,31 @@ mod tests {
     }
 
     #[test]
+    fn pressure_signals_summarized() {
+        let r = RunReport {
+            policy: "x".into(),
+            kv_budget_gb: 12.0,
+            kv_util: vec![0.2, 0.9, 0.5],
+            queue_depth: vec![0.0, 4.0, 2.0],
+            preemptions: 3,
+            resumes: 3,
+            rejected_requests: 1,
+            delayed_admissions: 7,
+            ..Default::default()
+        };
+        assert!((r.peak_kv_util() - 0.9).abs() < 1e-12);
+        assert!((r.peak_queue_depth() - 4.0).abs() < 1e-12);
+        assert!((r.mean_queue_depth() - 2.0).abs() < 1e-12);
+        let line = r.pressure_line();
+        assert!(line.contains("preempt=3") && line.contains("rejected=1"), "{line}");
+        // Empty report: gauges degrade to zero, not NaN.
+        let empty = RunReport::default();
+        assert_eq!(empty.peak_kv_util(), 0.0);
+        assert_eq!(empty.mean_queue_depth(), 0.0);
+        assert!(empty.summary_line().contains("preempt=0"));
+    }
+
+    #[test]
     fn reduction() {
         assert!((reduction_pct(10.0, 5.7) - 43.0).abs() < 1e-9);
         assert_eq!(reduction_pct(0.0, 1.0), 0.0);
@@ -259,6 +352,7 @@ mod tests {
             finish_s: finish,
             prompt_tokens: 10,
             output_tokens: out,
+            preemptions: 0,
         }
     }
 

@@ -114,6 +114,15 @@ impl FunctionManager {
         self.live
     }
 
+    /// GPU memory (GB) currently held by live expert instances — the
+    /// expert-weight occupancy the batcher's KV-cache budget is carved
+    /// out alongside (`config::ClusterSpec::kv_budget_gb` reserves the
+    /// *full* expert set, so a serverless deployment that keeps fewer
+    /// experts live always runs under the carve-out, never over it).
+    pub fn live_mem_gb(&self) -> f64 {
+        self.live as f64 * self.expert_mem_gb
+    }
+
     /// Live instances of (layer, expert) — GPU ids, in creation order.
     pub fn live_on(&self, layer: usize, expert: usize) -> Vec<usize> {
         self.slots[self.idx(layer, expert)].iter().map(|i| i.gpu).collect()
@@ -357,6 +366,17 @@ mod tests {
         let s = fm.apply_layer(&mut c, 0, &[(1, 0), (1, 0)], 0.0);
         assert_eq!(s.cold, 2);
         assert_eq!(fm.live_count(), 2);
+    }
+
+    #[test]
+    fn live_mem_tracks_instances() {
+        let (mut c, mut fm) = setup();
+        assert_eq!(fm.live_mem_gb(), 0.0);
+        fm.apply_layer(&mut c, 0, &[(1, 0), (2, 1)], 0.0);
+        assert!((fm.live_mem_gb() - 2.0 * 0.33).abs() < 1e-9);
+        assert!((fm.live_mem_gb() - c.total_mem_used_gb()).abs() < 1e-9);
+        fm.drain(&mut c, 1.0);
+        assert_eq!(fm.live_mem_gb(), 0.0);
     }
 
     #[test]

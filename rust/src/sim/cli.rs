@@ -39,6 +39,14 @@ pub fn replay(args: &Args) {
     cfg.params.cv_threshold = args.f64("cv", 0.2);
     cfg.params.keep_alive_s = args.f64("keep-alive", 10.0);
     cfg.autotune = args.flag("autotune");
+    // KV-cache admission control: `--kv-frac 0.5` halves the derived
+    // budget, `--kv-frac inf` disables gating, `--kv-budget-gb` overrides
+    // it outright; `--max-batch-tokens` caps per-iteration admission.
+    cfg.kv_frac = args.f64("kv-frac", 1.0);
+    cfg.max_batch_tokens = args.usize("max-batch-tokens", 0);
+    if args.opts.contains_key("kv-budget-gb") {
+        cfg.kv_budget_override_gb = Some(args.f64("kv-budget-gb", 0.0));
+    }
     if let Some(path) = args.opt_str("cluster") {
         cfg.cluster = ClusterSpec::load(std::path::Path::new(path)).expect("cluster config");
     }
@@ -47,6 +55,7 @@ pub fn replay(args: &Args) {
     println!("{}", report.summary_line());
     println!("{}", report.slo_line());
     println!("{}", report.request_slo_line(&SloSpec::default()));
+    println!("{}", report.pressure_line());
     if args.flag("cdf") {
         let cdf = report.layer_cdf();
         for q in [1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {

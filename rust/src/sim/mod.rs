@@ -19,7 +19,7 @@ use crate::baselines::PolicyKind;
 use crate::cluster::{Cluster, CostModel};
 use crate::config::{ClusterSpec, DatasetSpec, ModelSpec, MoelessParams};
 use crate::metrics::RunReport;
-use crate::router::Batcher;
+use crate::router::{BatchLimits, Batcher};
 use crate::workload::{RoutingModel, Scenario};
 
 /// Everything one simulation run needs.
@@ -43,6 +43,16 @@ pub struct SimConfig {
     /// Enable the runtime auto-tuner (MoEless only; the paper's
     /// future-work extension, `engine::autotune`).
     pub autotune: bool,
+    /// Per-iteration token cap for batcher admission (0 = unlimited).
+    pub max_batch_tokens: usize,
+    /// Fraction of the derived KV carve-out
+    /// ([`ClusterSpec::kv_budget_gb`]) the batcher may use. 1.0 = the
+    /// full budget; `f64::INFINITY` = unconstrained (PR-1 behavior);
+    /// 0.5 = the halved-budget memory-pressure configuration.
+    pub kv_frac: f64,
+    /// Explicit KV budget override in GB (tests / CLI); `None` derives
+    /// `cluster.kv_budget_gb(&model) * kv_frac`.
+    pub kv_budget_override_gb: Option<f64>,
 }
 
 impl SimConfig {
@@ -61,7 +71,16 @@ impl SimConfig {
             seed: 42,
             max_iterations: 0,
             autotune: false,
+            max_batch_tokens: 0,
+            kv_frac: 1.0,
+            kv_budget_override_gb: None,
         }
+    }
+
+    /// The KV-cache budget (GB) this run's batcher is gated on.
+    pub fn kv_budget_gb(&self) -> f64 {
+        self.kv_budget_override_gb
+            .unwrap_or_else(|| self.cluster.kv_budget_gb(&self.model) * self.kv_frac)
     }
 }
 
@@ -86,13 +105,19 @@ pub fn run(cfg: &SimConfig) -> RunReport {
         };
     let cm = CostModel::new(&cfg.model, &cfg.cluster);
     let mut cluster = Cluster::new(cfg.cluster.clone());
-    let mut batcher = Batcher::new();
+    let kv_budget_gb = cfg.kv_budget_gb();
+    let mut batcher = Batcher::with_limits(BatchLimits {
+        max_batch_tokens: cfg.max_batch_tokens,
+        kv_budget_bytes: kv_budget_gb * 1e9,
+        kv_bytes_per_token: cfg.model.kv_bytes_per_token(),
+    });
     batcher.enqueue(&trace);
 
     let mut report = RunReport {
         policy: policy.name().to_string(),
         model: cfg.model.name.clone(),
         dataset: cfg.dataset.name.clone(),
+        kv_budget_gb,
         ..Default::default()
     };
 
@@ -100,10 +125,21 @@ pub fn run(cfg: &SimConfig) -> RunReport {
     let mut last_clock = 0.0f64;
     while clock < cfg.duration_s {
         let Some(iter) = batcher.next_iteration(clock) else {
-            // Idle: jump to the next arrival (or finish).
+            // Idle: jump to the next arrival (or finish). The jump must
+            // strictly advance the virtual clock — a requeued (preempted)
+            // sequence reports a past arrival, and re-entering the loop at
+            // the same instant would spin forever. `next_iteration`
+            // guarantees such a sequence is admitted when nothing is in
+            // flight, so a backwards/stationary target here means the
+            // batcher is waiting on the future only.
             match batcher.next_arrival() {
                 Some(t) if t < cfg.duration_s => {
-                    clock = t;
+                    debug_assert!(t > clock, "idle jump must advance the clock");
+                    if t <= clock {
+                        clock += 1e-3; // defensive: never wedge the clock
+                    } else {
+                        clock = t;
+                    }
                     continue;
                 }
                 _ => break,
@@ -139,6 +175,13 @@ pub fn run(cfg: &SimConfig) -> RunReport {
         policy.end_iteration(&mut cluster, clock);
         report.iterations += 1;
         report.tokens_processed += iter.total_tokens() as u64;
+        // Memory-pressure gauges, sampled once per iteration.
+        report.queue_depth.push(batcher.queue_depth() as f64);
+        report.kv_util.push(if kv_budget_gb.is_finite() && kv_budget_gb > 0.0 {
+            batcher.kv_bytes_in_use() / (kv_budget_gb * 1e9)
+        } else {
+            0.0
+        });
 
         if cfg.max_iterations > 0 && report.iterations >= cfg.max_iterations {
             break;
@@ -148,6 +191,11 @@ pub fn run(cfg: &SimConfig) -> RunReport {
     report.residency_gb_s = policy.residency_gb_s();
     report.warm_fraction = policy.warm_fraction();
     report.completed_requests = batcher.completed;
+    report.preemptions = batcher.preemptions;
+    report.resumes = batcher.resumes;
+    report.rejected_requests = batcher.rejected;
+    report.delayed_admissions = batcher.delayed_admissions;
+    report.tokens_recomputed = batcher.tokens_recomputed;
     report.ttft_ms = std::mem::take(&mut batcher.ttft_ms);
     report.e2e_ms = std::mem::take(&mut batcher.e2e_ms);
     report.requests = std::mem::take(&mut batcher.finished);
@@ -256,6 +304,67 @@ mod tests {
             assert!(r.completed_requests > 0, "{}", scenario.name);
             assert_eq!(r.requests.len() as u64, r.completed_requests);
         }
+    }
+
+    #[test]
+    fn default_kv_budget_has_headroom_at_quick_scale() {
+        // The derived carve-out (cluster minus misc minus the full expert
+        // set) is finite but ample here: no preemption/rejection fires,
+        // and the run is bit-identical to a fully unconstrained one — the
+        // acceptance baseline that preserves PR 1's latency ordering.
+        let r = quick(PolicyKind::Moeless);
+        assert!(r.kv_budget_gb.is_finite() && r.kv_budget_gb > 0.0);
+        assert_eq!(r.kv_util.len() as u64, r.iterations);
+        assert_eq!(r.queue_depth.len() as u64, r.iterations);
+        assert_eq!((r.preemptions, r.rejected_requests), (0, 0));
+        assert!(r.peak_kv_util() > 0.0 && r.peak_kv_util() < 1.0);
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.duration_s = 20.0;
+        cfg.base_rps = 3.0;
+        cfg.seed = 11;
+        cfg.kv_frac = f64::INFINITY;
+        let unconstrained = run(&cfg);
+        assert_eq!(r.layer_forward_ms, unconstrained.layer_forward_ms);
+        assert_eq!(r.requests, unconstrained.requests);
+        assert_eq!(unconstrained.peak_kv_util(), 0.0, "gauge off when unconstrained");
+    }
+
+    #[test]
+    fn kv_pressure_feeds_back_into_ttft() {
+        // A tight explicit budget (2 GB ~ 3800 Mixtral tokens) forces
+        // admission to queue behind KV headroom: TTFT inflates relative
+        // to the unconstrained baseline on the same seed, and the
+        // occupancy invariant holds at every sampled iteration.
+        let base = quick(PolicyKind::Moeless);
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.duration_s = 20.0;
+        cfg.base_rps = 3.0;
+        cfg.seed = 11;
+        cfg.kv_budget_override_gb = Some(2.0);
+        let tight = run(&cfg);
+        assert!((tight.kv_budget_gb - 2.0).abs() < 1e-12);
+        assert!(
+            tight.delayed_admissions > 0 || tight.preemptions > 0,
+            "a 2 GB budget must create pressure at this load"
+        );
+        assert!(tight.peak_queue_depth() > 0.0);
+        assert!(tight.peak_kv_util() <= 1.0 + 1e-9, "{}", tight.peak_kv_util());
+        assert!(tight.resumes <= tight.preemptions);
+        assert!(tight.completed_requests > 0, "pressure degrades, not starves");
+        assert!(
+            tight.ttft_cdf().p(99.0) > base.ttft_cdf().p(99.0),
+            "queueing for KV headroom must show up in tail TTFT: {} vs {}",
+            tight.ttft_cdf().p(99.0),
+            base.ttft_cdf().p(99.0)
+        );
     }
 
     #[test]

@@ -28,6 +28,10 @@ pub struct SweepSpec {
     pub base_rps: f64,
     /// Worker threads the runs are sharded across (1 = sequential).
     pub threads: usize,
+    /// KV-budget fraction forwarded to every cell ([`SimConfig::kv_frac`]).
+    pub kv_frac: f64,
+    /// Per-iteration token cap forwarded to every cell (0 = unlimited).
+    pub max_batch_tokens: usize,
 }
 
 impl SweepSpec {
@@ -41,6 +45,8 @@ impl SweepSpec {
             duration_s: 30.0,
             base_rps: 6.0,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            kv_frac: 1.0,
+            max_batch_tokens: 0,
         }
     }
 
@@ -63,6 +69,8 @@ impl SweepSpec {
         cfg.duration_s = self.duration_s;
         cfg.base_rps = self.base_rps;
         cfg.seed = seed;
+        cfg.kv_frac = self.kv_frac;
+        cfg.max_batch_tokens = self.max_batch_tokens;
         cfg
     }
 }
@@ -111,6 +119,9 @@ pub struct SloSummary {
     pub tpot_p99_ms: f64,
     pub e2e_p50_ms: f64,
     pub goodput_rps: f64,
+    /// KV-pressure churn pooled across the group's seeds.
+    pub preemptions: u64,
+    pub rejected: u64,
 }
 
 impl SloSummary {
@@ -119,7 +130,7 @@ impl SloSummary {
         format!(
             "slo {:<8} {:<16} ttft p50={:>5.0} p95={:>5.0} p99={:>5.0}ms | \
              tpot p50={:>5.1} p95={:>5.1} p99={:>5.1}ms | \
-             e2e p50={:>5.2}s | goodput={:.2}req/s reqs={} seeds={}",
+             e2e p50={:>5.2}s | goodput={:.2}req/s reqs={} seeds={} preempt={} rej={}",
             self.scenario,
             self.policy,
             self.ttft_p50_ms,
@@ -132,6 +143,8 @@ impl SloSummary {
             self.goodput_rps,
             self.completed,
             self.seeds,
+            self.preemptions,
+            self.rejected,
         )
     }
 }
@@ -157,6 +170,8 @@ pub fn summarize(cells: &[SweepCell], slo: &SloSpec) -> Vec<SloSummary> {
             let mut e2e = Vec::new();
             let mut completed = 0u64;
             let mut goodput = 0.0;
+            let mut preemptions = 0u64;
+            let mut rejected = 0u64;
             for c in &group {
                 for r in &c.report.requests {
                     ttft.push(r.ttft_ms());
@@ -165,6 +180,8 @@ pub fn summarize(cells: &[SweepCell], slo: &SloSpec) -> Vec<SloSummary> {
                 }
                 completed += c.report.completed_requests;
                 goodput += c.report.goodput_rps(slo);
+                preemptions += c.report.preemptions;
+                rejected += c.report.rejected_requests;
             }
             let (t, p, e) = (Cdf::of(ttft), Cdf::of(tpot), Cdf::of(e2e));
             SloSummary {
@@ -180,6 +197,8 @@ pub fn summarize(cells: &[SweepCell], slo: &SloSpec) -> Vec<SloSummary> {
                 tpot_p99_ms: p.p(99.0),
                 e2e_p50_ms: e.p(50.0),
                 goodput_rps: goodput / group.len().max(1) as f64,
+                preemptions,
+                rejected,
             }
         })
         .collect()
@@ -214,6 +233,24 @@ mod tests {
             assert_eq!(a.report.layer_forward_ms, b.report.layer_forward_ms);
             assert_eq!(a.report.requests, b.report.requests);
         }
+    }
+
+    #[test]
+    fn kv_knobs_forward_into_cells() {
+        use crate::config::ClusterSpec;
+        let mut spec = small_spec();
+        spec.threads = 2;
+        spec.policies = vec![PolicyKind::Moeless];
+        spec.scenarios = vec![Scenario::poisson()];
+        spec.seeds = vec![1];
+        spec.kv_frac = 0.5;
+        let cells = run_sweep(&spec);
+        let derived = ClusterSpec::a6000_x8().kv_budget_gb(&spec.model);
+        for c in &cells {
+            assert!((c.report.kv_budget_gb - 0.5 * derived).abs() < 1e-9);
+        }
+        let rows = summarize(&cells, &SloSpec::default());
+        assert!(rows[0].line().contains("preempt="));
     }
 
     #[test]

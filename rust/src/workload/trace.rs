@@ -63,6 +63,16 @@ pub fn azure_like_trace(
     out
 }
 
+/// A synchronized stampede: `n` identical requests arriving together at
+/// `at_s`. The deterministic KV-oversubscription scenario — aggregate
+/// prompt KV alone can be sized to exceed any budget, forcing the
+/// batcher's delay/preempt/resume machinery with hand-checkable numbers.
+pub fn burst_trace(n: usize, at_s: f64, prompt_tokens: usize, output_tokens: usize) -> Vec<TraceRequest> {
+    (0..n)
+        .map(|i| TraceRequest { id: i as u64, arrival_s: at_s, prompt_tokens, output_tokens })
+        .collect()
+}
+
 /// Per-second aggregated token arrivals (Fig. 3b's series).
 pub fn tokens_per_second(trace: &[TraceRequest], duration_s: f64) -> Vec<f64> {
     let mut bins = vec![0.0; duration_s.ceil() as usize];
@@ -107,6 +117,16 @@ mod tests {
             t.iter().map(|r| r.prompt_tokens as f64).sum::<f64>() / t.len() as f64
         };
         assert!(mean(&share) > mean(&lmsys), "ShareGPT prompts are longer");
+    }
+
+    #[test]
+    fn burst_trace_is_simultaneous_and_ordered() {
+        let t = burst_trace(5, 2.5, 100, 10);
+        assert_eq!(t.len(), 5);
+        assert!(t.iter().all(|r| r.arrival_s == 2.5));
+        assert!(t.iter().all(|r| (r.prompt_tokens, r.output_tokens) == (100, 10)));
+        let ids: Vec<u64> = t.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

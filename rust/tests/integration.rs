@@ -4,8 +4,9 @@
 
 use moeless::baselines::PolicyKind;
 use moeless::config::{DatasetSpec, ModelSpec, MoelessParams};
-use moeless::metrics::reduction_pct;
+use moeless::metrics::{reduction_pct, SloSpec};
 use moeless::sim::{run, SimConfig};
+use moeless::workload::{burst_trace, Scenario};
 
 fn cfg(model: ModelSpec, policy: PolicyKind) -> SimConfig {
     let mut c = SimConfig::new(model, DatasetSpec::lmsys(), policy);
@@ -153,6 +154,99 @@ fn slo_metrics_reported() {
     // MoEless's lower iteration latency shows up in TTFT too.
     let meg = run(&cfg(ModelSpec::mixtral_8x7b(), PolicyKind::Megatron));
     assert!(r.ttft_cdf().p(99.0) <= meg.ttft_cdf().p(99.0) * 1.1);
+}
+
+#[test]
+fn kv_oversubscription_preempts_without_losing_requests() {
+    // Deterministic oversubscription: 24 simultaneous requests whose
+    // aggregate prompt KV (24 × 400 = 9600 tokens) far exceeds a
+    // 0.004 GB ≈ 3906-token budget (TinyMoE holds 1 KiB of KV per
+    // token), while each single request's peak (400 + 120 = 520 tokens)
+    // fits comfortably. Admission must queue behind headroom, decode
+    // growth must preempt, and every request must still drain.
+    let mk = |budget_gb: Option<f64>| {
+        let mut c =
+            SimConfig::new(ModelSpec::tiny_moe(), DatasetSpec::lmsys(), PolicyKind::Moeless);
+        c.scenario = Scenario::replay(burst_trace(24, 0.0, 400, 120));
+        c.duration_s = 60.0;
+        c.seed = 7;
+        c.kv_budget_override_gb = budget_gb;
+        c
+    };
+    let constrained = run(&mk(Some(0.004)));
+    let baseline = run(&mk(None)); // derived budget: no pressure at this scale
+
+    // The budget binds: preemption + delay churn, near-full utilization.
+    assert!(constrained.preemptions > 0, "oversubscription must preempt");
+    assert!(constrained.delayed_admissions > 0);
+    assert!(constrained.tokens_recomputed > 0, "resume recomputes context");
+    assert!(constrained.peak_kv_util() > 0.8, "{}", constrained.peak_kv_util());
+    assert!(constrained.peak_kv_util() <= 1.0 + 1e-9, "occupancy stays within budget");
+
+    // No request is lost, and accounting balances at drain:
+    // admitted = completed, every preemption was resumed, and the
+    // per-request preemption counts add up to the run total.
+    assert_eq!(constrained.rejected_requests, 0, "every peak fits: nothing rejected");
+    assert_eq!(constrained.completed_requests, 24);
+    assert_eq!(constrained.requests.len(), 24);
+    assert_eq!(constrained.resumes, constrained.preemptions);
+    let per_request: u64 = constrained.requests.iter().map(|r| r.preemptions as u64).sum();
+    assert_eq!(per_request, constrained.preemptions);
+
+    // Same seed without pressure: zero churn, lower tail TTFT, shorter
+    // serving time — the acceptance A/B.
+    assert_eq!((baseline.preemptions, baseline.rejected_requests), (0, 0));
+    assert_eq!(baseline.completed_requests, 24);
+    assert!(
+        constrained.ttft_cdf().p(99.0) > baseline.ttft_cdf().p(99.0),
+        "pressure must inflate tail TTFT: {} vs {}",
+        constrained.ttft_cdf().p(99.0),
+        baseline.ttft_cdf().p(99.0)
+    );
+    assert!(constrained.sim_duration_s > baseline.sim_duration_s);
+
+    // The oversubscribed run is bit-for-bit reproducible.
+    let again = run(&mk(Some(0.004)));
+    assert_eq!(constrained.requests, again.requests);
+    assert_eq!(constrained.preemptions, again.preemptions);
+}
+
+#[test]
+fn kv_budget_pressure_degrades_goodput_monotonically() {
+    // With the KV carve-out halved (and then slashed), goodput under the
+    // default SLO degrades monotonically-or-equal for every policy, and
+    // MoEless still beats Megatron-LM on p99 TTFT under the halved
+    // budget.
+    let slo = SloSpec::default();
+    let at = |kind: PolicyKind, frac: f64| {
+        let mut c = cfg(ModelSpec::mixtral_8x7b(), kind);
+        c.duration_s = 25.0;
+        c.base_rps = 10.0;
+        c.kv_frac = frac;
+        run(&c)
+    };
+    for kind in PolicyKind::paper_set() {
+        let full = at(kind, 1.0);
+        let half = at(kind, 0.5);
+        let tight = at(kind, 0.02);
+        let (gf, gh, gt) =
+            (full.goodput_rps(&slo), half.goodput_rps(&slo), tight.goodput_rps(&slo));
+        assert!(gh <= gf + 1e-9, "{}: half {gh} > full {gf}", kind.name());
+        assert!(gt <= gh + 1e-9, "{}: tight {gt} > half {gh}", kind.name());
+        assert!(
+            tight.preemptions + tight.delayed_admissions > 0,
+            "{}: a 2% carve-out must bind at this load",
+            kind.name()
+        );
+    }
+    let meg = at(PolicyKind::Megatron, 0.5);
+    let less = at(PolicyKind::Moeless, 0.5);
+    assert!(
+        less.ttft_cdf().p(99.0) < meg.ttft_cdf().p(99.0),
+        "moeless p99 ttft {} vs megatron {}",
+        less.ttft_cdf().p(99.0),
+        meg.ttft_cdf().p(99.0)
+    );
 }
 
 #[test]

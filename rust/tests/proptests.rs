@@ -7,7 +7,7 @@ use moeless::config::ClusterSpec;
 use moeless::placer::Placer;
 use moeless::predictor::accuracy::{l1_error, topk_overlap};
 use moeless::predictor::blend_to_accuracy;
-use moeless::router::Batcher;
+use moeless::router::{BatchLimits, Batcher};
 use moeless::scaler::Scaler;
 use moeless::serverless::FunctionManager;
 use moeless::util::quickcheck::property;
@@ -294,6 +294,90 @@ fn prop_batcher_conserves_requests_and_tokens() {
         // Every output token is either the prefill's first token or a
         // decode step: decoded == total_out - n.
         assert_eq!(b.tokens_decoded, total_out - n as u64);
+    });
+}
+
+#[test]
+fn prop_kv_occupancy_and_accounting_invariants() {
+    // KV-gated batcher laws, for any workload and any budget:
+    //  (a) KV occupancy never exceeds the budget after any
+    //      next_iteration / complete_iteration sequence;
+    //  (b) no request is ever lost: admitted = in-flight + requeued +
+    //      finished at every step, and admitted + rejected = enqueued at
+    //      drain;
+    //  (c) token progress is monotone across preemption, and every
+    //      resumed request recomputed at least its full prompt.
+    property(80, |g| {
+        let budget_tokens = g.usize_in(16, 400);
+        let cap = if g.bool() { g.usize_in(8, 256) } else { 0 };
+        let mut b = Batcher::with_limits(BatchLimits {
+            max_batch_tokens: cap,
+            kv_budget_bytes: budget_tokens as f64,
+            kv_bytes_per_token: 1.0,
+        });
+        let n = g.usize_in(1, 30);
+        let mut reqs = Vec::new();
+        for i in 0..n {
+            reqs.push(TraceRequest {
+                id: i as u64,
+                arrival_s: g.f64_in(0.0, 5.0),
+                prompt_tokens: g.usize_in(1, 80),
+                output_tokens: g.usize_in(1, 25),
+            });
+        }
+        reqs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let infeasible = reqs
+            .iter()
+            .filter(|r| r.prompt_tokens + r.output_tokens > budget_tokens)
+            .count() as u64;
+        b.enqueue(&reqs);
+
+        let mut clock = 0.0f64;
+        let mut progress = vec![0usize; n];
+        let mut guard = 0;
+        while !b.idle() {
+            match b.next_iteration(clock) {
+                Some(_) => b.complete_iteration(clock + 0.02),
+                // A `None` may have *rejected* the tail of the queue and
+                // gone idle in the same call — no arrival need exist.
+                None => clock = b.next_arrival().unwrap_or(clock).max(clock),
+            }
+            clock += 0.05;
+            assert!(
+                b.kv_bytes_in_use() <= budget_tokens as f64 + 1e-9,
+                "occupancy {} over budget {budget_tokens}",
+                b.kv_bytes_in_use()
+            );
+            assert_eq!(
+                b.admitted as usize,
+                b.in_flight() + b.requeued_len() + b.finished.len(),
+                "an admitted request went missing"
+            );
+            for r in &reqs {
+                if let Some(p) = b.progress_of(r.id) {
+                    let seen = &mut progress[r.id as usize];
+                    assert!(p >= *seen, "id {}: progress {p} < {}", r.id, *seen);
+                    *seen = p;
+                }
+            }
+            guard += 1;
+            assert!(guard < 500_000, "batcher must drain");
+        }
+
+        assert_eq!(b.admitted + b.rejected, n as u64);
+        assert_eq!(b.rejected, infeasible);
+        assert_eq!(b.completed, b.admitted);
+        assert_eq!(b.resumes, b.preemptions, "every preemption resumed by drain");
+        // Each resume recomputes the prompt plus >= 1 emitted token.
+        let owed: u64 = b
+            .finished
+            .iter()
+            .map(|r| r.preemptions as u64 * (r.prompt_tokens as u64 + 1))
+            .sum();
+        assert!(b.tokens_recomputed >= owed, "{} < {owed}", b.tokens_recomputed);
+        for r in &b.finished {
+            assert_eq!(progress[r.id as usize], r.output_tokens, "full output emitted");
+        }
     });
 }
 
