@@ -5,20 +5,25 @@
 //! sharded across the thread pool. A second section prints the classic
 //! Fig. 8/10-style layer-latency/cost comparison on the diurnal trace; a
 //! third shrinks the KV-cache carve-out on a bursty stream to show the
-//! admission controller's queue/preempt/resume feedback on tail TTFT.
+//! admission controller's queue/preempt/resume feedback on tail TTFT; a
+//! fourth replays a long-prompt interference mix monolithically, with
+//! stall-free chunked prefill (`--chunk-tokens`, decode packs first and
+//! prefill chunks fill the remainder of each iteration), and chunked +
+//! disaggregated into prefill/decode pools with a billed KV handoff
+//! (`--disagg`, mirroring `moeless replay --chunk-tokens 512 --disagg`).
 //!
-//! Run: `cargo run --release --example serve_trace [-- --seconds 45 --rps 6 --seeds 2]`
+//! Run: `cargo run --release --example serve_trace [-- --seconds 45 --rps 6 --seeds 2 --chunk-tokens 256]`
 
 use std::time::Instant;
 
 use moeless::baselines::PolicyKind;
-use moeless::config::{DatasetSpec, ModelSpec};
+use moeless::config::{DatasetSpec, DisaggSpec, ModelSpec};
 use moeless::metrics::{reduction_pct, SloSpec};
 use moeless::sim::sweep::{run_sweep, summarize, SweepSpec};
 use moeless::sim::{run, run_paper_set, SimConfig};
 use moeless::util::benchkit::series_summary;
 use moeless::util::cli::Args;
-use moeless::workload::{azure_like_trace, Scenario};
+use moeless::workload::{azure_like_trace, interference_trace, Scenario};
 
 fn main() {
     let args = Args::from_env();
@@ -107,6 +112,35 @@ fn main() {
             r.ttft_cdf().p(99.0),
             r.completed_requests,
             r.peak_kv_util()
+        );
+    }
+
+    // --- chunked prefill + disaggregation: the long-prompt interference -
+    // --- mix, monolithic vs stall-free chunks vs chunks + split pools. --
+    let chunk = args.usize("chunk-tokens", 256);
+    println!(
+        "\n=== chunked prefill + disaggregation: {} on {} (interference mix, chunk={chunk}) ===",
+        model.name, dataset.name
+    );
+    let mix = interference_trace(seconds.min(30.0), 6.0, 32, 16, 10.0, 6000, 8);
+    for (label, chunk_tokens, disagg) in
+        [("monolithic", 0usize, false), ("chunked", chunk, false), ("chunk+disagg", chunk, true)]
+    {
+        let mut cfg = SimConfig::new(model.clone(), dataset.clone(), PolicyKind::Moeless);
+        cfg.scenario = Scenario::replay(mix.clone());
+        cfg.duration_s = 10.0 * seconds; // outlast the arrivals: drain fully
+        cfg.seed = seed;
+        cfg.prefill_chunk_tokens = chunk_tokens;
+        if disagg {
+            cfg.disagg = Some(DisaggSpec::even_split(&cfg.cluster));
+        }
+        let r = run(&cfg);
+        println!(
+            "   {label:<13} tpot p99={:6.1}ms ttft p99={:6.0}ms goodput={:.2}req/s | {}",
+            r.tpot_p99_ms(),
+            r.ttft_cdf().p(99.0),
+            r.goodput_rps(&slo),
+            r.phase_line()
         );
     }
 }

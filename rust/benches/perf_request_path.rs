@@ -46,6 +46,7 @@ fn main() {
             max_batch_tokens: 4096,
             kv_budget_bytes: 4000.0,
             kv_bytes_per_token: 1.0,
+            ..BatchLimits::default()
         });
         batcher.enqueue(&trace);
         let mut clock = 0.0f64;
@@ -57,6 +58,26 @@ fn main() {
             clock += 0.08;
         }
         (batcher.completed, batcher.preemptions)
+    });
+
+    // Chunked prefill on the hot path: the same drain with a 256-token
+    // stall-free chunk budget (decode packs first) — measures the cost of
+    // per-chunk admission over monolithic prefill.
+    b.run("batcher.drain chunked-256 (60s bursty trace)", || {
+        let mut batcher = Batcher::with_limits(BatchLimits {
+            prefill_chunk_tokens: 256,
+            ..BatchLimits::default()
+        });
+        batcher.enqueue(&trace);
+        let mut clock = 0.0f64;
+        while !batcher.idle() {
+            match batcher.next_iteration(clock) {
+                Some(_) => batcher.complete_iteration(clock + 0.08),
+                None => clock = batcher.next_arrival().unwrap_or(clock).max(clock),
+            }
+            clock += 0.08;
+        }
+        (batcher.completed, batcher.chunks_landed)
     });
 
     // End-to-end request-level simulation throughput per scenario.

@@ -238,6 +238,43 @@ impl ClusterSpec {
     }
 }
 
+/// Prefill/decode disaggregation: the cluster is partitioned into a
+/// prefill pool and a decode pool, and a sequence's KV cache is shipped
+/// between them at the phase handoff (Splitwise/DistServe-style). The
+/// transfer is billed as `kv_bytes_per_token × materialized tokens` over
+/// the link, delaying that sequence's first token; both pools run
+/// concurrently, so an iteration costs the slower pool's time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DisaggSpec {
+    /// GPUs dedicated to prefill (prompt processing).
+    pub prefill_gpus: usize,
+    /// GPUs dedicated to decode (token generation + KV residency).
+    pub decode_gpus: usize,
+    /// GB/s of the prefill→decode KV-transfer link.
+    pub link_gbps: f64,
+}
+
+impl DisaggSpec {
+    /// Split the cluster evenly (odd GPU counts favor decode, which also
+    /// hosts the KV cache); the transfer link defaults to the cluster's
+    /// host link bandwidth. Disaggregation needs >= 2 GPUs: a 1-GPU
+    /// cluster degenerates to two 1-GPU pools (oversubscribed — the
+    /// numbers then model 2 GPUs, not 1).
+    pub fn even_split(cluster: &ClusterSpec) -> DisaggSpec {
+        let prefill = (cluster.n_gpus / 2).max(1);
+        DisaggSpec {
+            prefill_gpus: prefill,
+            decode_gpus: cluster.n_gpus.saturating_sub(prefill).max(1),
+            link_gbps: cluster.pcie_gbps,
+        }
+    }
+
+    /// The pool's own cluster spec: the base testbed with `gpus` GPUs.
+    pub fn pool_cluster(base: &ClusterSpec, gpus: usize) -> ClusterSpec {
+        ClusterSpec { n_gpus: gpus.max(1), ..base.clone() }
+    }
+}
+
 /// MoEless's own knobs (§4, §6.4 sensitivity ranges).
 #[derive(Clone, Debug)]
 pub struct MoelessParams {
@@ -402,6 +439,21 @@ mod tests {
         let tiny = ClusterSpec { n_gpus: 1, mem_per_gpu_gb: 2.0, ..ClusterSpec::a6000_x8() };
         let kv = tiny.kv_budget_gb(&ModelSpec::mixtral_8x7b());
         assert!((kv - 0.1).abs() < 1e-9, "floor = 5% of 2 GB, got {kv}");
+    }
+
+    #[test]
+    fn disagg_split_covers_the_cluster() {
+        let c = ClusterSpec::a6000_x8();
+        let d = DisaggSpec::even_split(&c);
+        assert_eq!((d.prefill_gpus, d.decode_gpus), (4, 4));
+        assert!((d.link_gbps - c.pcie_gbps).abs() < 1e-12);
+        let pool = DisaggSpec::pool_cluster(&c, d.prefill_gpus);
+        assert_eq!(pool.n_gpus, 4);
+        assert!((pool.mem_per_gpu_gb - c.mem_per_gpu_gb).abs() < 1e-12);
+        // Degenerate 1-GPU clusters still yield non-empty pools (documented
+        // oversubscription: disaggregation needs >= 2 GPUs to be faithful).
+        let one = DisaggSpec::even_split(&ClusterSpec { n_gpus: 1, ..ClusterSpec::a6000_x8() });
+        assert!(one.prefill_gpus >= 1 && one.decode_gpus >= 1);
     }
 
     #[test]

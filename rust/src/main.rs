@@ -39,7 +39,11 @@ fn main() {
                  serve   Tier-A: serve TinyMoE end-to-end over PJRT artifacts\n\
                  replay  Tier-B: replay an Azure-style trace on the simulator\n\
                          (--kv-frac F | --kv-budget-gb G | --max-batch-tokens N\n\
-                          gate admission on KV-cache headroom / batch size)\n\
+                          gate admission on KV-cache headroom / batch size;\n\
+                          --chunk-tokens N enables stall-free chunked prefill —\n\
+                          decode packs first, prefill chunks fill the remainder;\n\
+                          --disagg [--prefill-gpus N --link-gbps F] splits the\n\
+                          cluster into prefill/decode pools with a billed KV handoff)\n\
                  bench   run one paper experiment (--exp fig1|fig3|...|table2)\n\
                  report  print model/cluster inventory (Table 1)"
             );

@@ -18,9 +18,13 @@ pub struct RequestRecord {
     pub prompt_tokens: usize,
     pub output_tokens: usize,
     /// Times this request was preempted under KV-cache pressure (each
-    /// preemption drops its cache; resume recomputes prompt + emitted
-    /// tokens).
+    /// preemption drops its cache; resume recomputes the tokens whose KV
+    /// had been materialized).
     pub preemptions: u32,
+    /// Prefill chunks this request's prompt was processed in (1 under
+    /// monolithic prefill; more under `prefill_chunk_tokens` and after
+    /// preemption-resume cycles).
+    pub chunks: u32,
 }
 
 impl RequestRecord {
@@ -123,8 +127,26 @@ pub struct RunReport {
     /// Iterations in which an arrived request was deferred by the token
     /// cap or missing KV headroom.
     pub delayed_admissions: u64,
-    /// Prefill tokens spent recomputing preempted sequences' context.
+    /// Prefill tokens spent recomputing preempted sequences' context
+    /// (only tokens whose KV had actually been materialized — a sequence
+    /// preempted mid-prefill resumes from its last completed chunk).
     pub tokens_recomputed: u64,
+    /// Chunked-prefill iteration budget the run was configured with
+    /// (0 = monolithic prefill).
+    pub prefill_chunk_tokens: usize,
+    /// Prefill chunks landed across all sequences (== admissions + resumes
+    /// under monolithic prefill).
+    pub prefill_chunks: u64,
+    /// Whether the run disaggregated prefill and decode into separate
+    /// pools.
+    pub disagg: bool,
+    /// KV cache shipped prefill→decode at phase handoffs (GB; 0 when
+    /// colocated).
+    pub kv_transfer_gb: f64,
+    /// Fraction of serving time each pool was busy (disaggregated runs
+    /// only; 0 when colocated).
+    pub prefill_pool_util: f64,
+    pub decode_pool_util: f64,
     /// Virtual seconds of serving simulated.
     pub sim_duration_s: f64,
     /// Wall-clock seconds the simulation itself took (perf metric).
@@ -164,6 +186,24 @@ impl RunReport {
     /// Time-per-output-token distribution over completed requests.
     pub fn tpot_cdf(&self) -> Cdf {
         Cdf::of(self.requests.iter().map(|r| r.tpot_ms()).collect())
+    }
+
+    /// Tail inter-token latency (ms) — the interference headline: a
+    /// monolithic long-prompt prefill stalls every co-scheduled decode and
+    /// shows up here; chunked prefill keeps it flat.
+    pub fn tpot_p99_ms(&self) -> f64 {
+        self.tpot_cdf().p(99.0)
+    }
+
+    /// Mean prefill chunks per completed request (1.0 under monolithic
+    /// prefill with no preemption churn).
+    pub fn mean_chunks_per_request(&self) -> f64 {
+        if self.requests.is_empty() {
+            0.0
+        } else {
+            self.requests.iter().map(|r| r.chunks as f64).sum::<f64>()
+                / self.requests.len() as f64
+        }
     }
 
     /// Requests per simulated second that completed within the SLO.
@@ -246,6 +286,27 @@ impl RunReport {
             self.tokens_recomputed,
             self.peak_queue_depth(),
             self.mean_queue_depth(),
+        )
+    }
+
+    /// One-line phase summary: the chunked-prefill shape (chunks per
+    /// request, tail TPOT — the interference signal) and the
+    /// disaggregation signals (KV shipped between pools, per-pool busy
+    /// fractions).
+    pub fn phase_line(&self) -> String {
+        format!(
+            "phase policy={:<16} chunk_tokens={} chunks={} chunks/req={:.2} \
+             tpot p99={:.1}ms | disagg={} kv_transfer={:.4}GB \
+             pool_util prefill={:.3} decode={:.3}",
+            self.policy,
+            self.prefill_chunk_tokens,
+            self.prefill_chunks,
+            self.mean_chunks_per_request(),
+            self.tpot_p99_ms(),
+            if self.disagg { "on" } else { "off" },
+            self.kv_transfer_gb,
+            self.prefill_pool_util,
+            self.decode_pool_util,
         )
     }
 
@@ -353,7 +414,35 @@ mod tests {
             prompt_tokens: 10,
             output_tokens: out,
             preemptions: 0,
+            chunks: 1,
         }
+    }
+
+    #[test]
+    fn phase_signals_summarized() {
+        let r = RunReport {
+            policy: "x".into(),
+            prefill_chunk_tokens: 512,
+            prefill_chunks: 9,
+            disagg: true,
+            kv_transfer_gb: 1.25,
+            prefill_pool_util: 0.4,
+            decode_pool_util: 0.8,
+            requests: vec![
+                RequestRecord { chunks: 3, ..record(0.0, 0.1, 1.0, 5) },
+                RequestRecord { chunks: 1, ..record(0.0, 0.1, 1.0, 5) },
+            ],
+            ..Default::default()
+        };
+        assert!((r.mean_chunks_per_request() - 2.0).abs() < 1e-12);
+        let line = r.phase_line();
+        assert!(line.contains("chunk_tokens=512") && line.contains("disagg=on"), "{line}");
+        assert!(line.contains("kv_transfer=1.2500GB"), "{line}");
+        // Empty report degrades to zeros, monolithic defaults.
+        let empty = RunReport::default();
+        assert_eq!(empty.mean_chunks_per_request(), 0.0);
+        assert!(empty.phase_line().contains("disagg=off"));
+        assert!(empty.tpot_p99_ms().is_finite(), "empty percentile degrades to 0, not NaN");
     }
 
     #[test]

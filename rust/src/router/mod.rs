@@ -25,21 +25,46 @@
 //! When decode growth would exceed the budget, the *youngest* in-flight
 //! sequences (latest arrival, then highest id) are preempted: their KV is
 //! dropped and they re-enter the admission queue ahead of new arrivals
-//! (recompute-on-resume — the resumed prefill reprocesses the prompt plus
-//! all previously emitted tokens, so token progress is monotone and no
+//! (recompute-on-resume — the resumed prefill reprocesses every token whose
+//! KV had been materialized before, so token progress is monotone and no
 //! output is ever re-served). The oldest sequence is never preempted,
 //! which guarantees forward progress. Requests whose *peak* KV demand
 //! (`prompt + output` tokens) can never fit the budget are rejected at
 //! admission (counted, not silently dropped); requests that merely have to
 //! wait for headroom are delayed (also counted) — the rejected-vs-delayed
 //! split the run report surfaces.
+//!
+//! # Chunked prefill (stall-free batching)
+//!
+//! With `prefill_chunk_tokens > 0` a prompt is no longer processed in one
+//! monolithic prefill iteration: each iteration packs the decode tokens
+//! *first*, then fills the remainder of the chunk budget with prefill
+//! chunks — in-progress prefills continue before new admissions, FIFO —
+//! so a long prompt can never stall co-scheduled decodes for its whole
+//! length (the straggler effect the paper analyses at the expert level,
+//! replayed at the phase level). KV is charged per chunk as it lands;
+//! TTFT is recorded when the *last* chunk completes; a sequence preempted
+//! between chunks resumes from its last completed chunk, recomputing only
+//! the tokens whose KV had actually been materialized (high-water mark),
+//! never the un-chunked prompt tail.
+//!
+//! # Prefill/decode disaggregation
+//!
+//! [`with_transfer_link`](Batcher::with_transfer_link) models the
+//! disaggregated deployment's phase handoff: when a sequence finishes
+//! prefill, its KV cache (`kv_tokens × kv_bytes_per_token`) is shipped
+//! from the prefill pool to the decode pool over a finite link, delaying
+//! that sequence's first token (TTFT) by the transfer time; transferred
+//! bytes accumulate in `kv_transfer_bytes`. The transfer overlaps with
+//! compute — it delays the transferring request, not the iteration clock.
 
 use std::collections::VecDeque;
 
 use crate::metrics::RequestRecord;
 use crate::workload::TraceRequest;
 
-/// Admission limits: per-iteration token cap + KV-cache budget.
+/// Admission limits: per-iteration token cap + KV-cache budget + the
+/// chunked-prefill budget.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchLimits {
     /// Cap on tokens entering one iteration (prefill + decode);
@@ -52,6 +77,10 @@ pub struct BatchLimits {
     /// Bytes of KV one token occupies across all layers
     /// ([`ModelSpec::kv_bytes_per_token`](crate::config::ModelSpec::kv_bytes_per_token)).
     pub kv_bytes_per_token: f64,
+    /// Chunked-prefill iteration budget: decode tokens pack first, prefill
+    /// chunks fill the remainder up to this many total tokens (stall-free
+    /// batching). 0 = monolithic prefill (whole prompt in one iteration).
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for BatchLimits {
@@ -60,6 +89,7 @@ impl Default for BatchLimits {
             max_batch_tokens: 0,
             kv_budget_bytes: f64::INFINITY,
             kv_bytes_per_token: 0.0,
+            prefill_chunk_tokens: 0,
         }
     }
 }
@@ -68,7 +98,8 @@ impl Default for BatchLimits {
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct IterationBatch {
     /// Prompt tokens of newly admitted requests (prefill work), including
-    /// recompute-on-resume tokens of resumed preempted requests.
+    /// continued prefill chunks and recompute-on-resume tokens of resumed
+    /// preempted requests.
     pub prefill_tokens: usize,
     /// In-flight sequences each generating one token (decode work).
     pub decode_seqs: usize,
@@ -93,31 +124,57 @@ impl IterationBatch {
 struct Active {
     id: u64,
     arrival_s: f64,
-    /// Set when the first prefill iteration completes.
+    /// Set when the last prefill chunk completes (first token emitted).
     first_token_s: f64,
     /// First token already emitted (survives preemption: TTFT is recorded
-    /// once, on the original prefill).
+    /// once, on the original prefill completion).
     started: bool,
     prompt_tokens: usize,
     output_tokens: usize,
     remaining_out: usize,
     /// KV-cache entries currently materialized for this sequence
-    /// (prompt + generated tokens; dropped to 0 on preemption).
+    /// (landed prefill chunks + generated tokens; dropped to 0 on
+    /// preemption).
     kv_tokens: usize,
+    /// When the phase-handoff KV transfer completes (disaggregated mode);
+    /// the sequence joins decode no earlier than this.
+    ready_s: f64,
+    /// Tokens this prefill pass must materialize before the sequence
+    /// (re)joins decode: the prompt, plus — on resume — every previously
+    /// emitted token.
+    prefill_target: usize,
+    /// High-water mark of tokens ever processed for this sequence. On
+    /// (re)prefill, tokens below the mark count as *recomputed*; tokens
+    /// above it are first-time prompt work. This is what lets a sequence
+    /// preempted mid-prefill resume from its last completed chunk instead
+    /// of being charged for the un-chunked prompt tail.
+    processed_hwm: usize,
+    /// First-time prompt tokens landed so far (conservation: equals
+    /// `prompt_tokens` exactly at retirement).
+    prompt_landed: usize,
+    /// Prefill chunks this sequence consumed (1 per iteration with prefill
+    /// work for it; 1 total under monolithic prefill per pass).
+    chunks: u32,
     /// Times this sequence was preempted (recompute-on-resume).
     preemptions: u32,
 }
 
 impl Active {
-    /// Output tokens emitted (or committed to emit this iteration) so far.
+    /// Output tokens emitted so far.
     fn emitted(&self) -> usize {
         self.output_tokens - self.remaining_out
     }
 
-    /// Prefill length on (re)admission: the prompt plus every previously
-    /// emitted token, all of whose KV must be recomputed.
-    fn resume_tokens(&self) -> usize {
-        self.prompt_tokens + self.emitted()
+    /// Land `take` prefill tokens: KV materializes, the high-water mark
+    /// splits the chunk into (recomputed, first-time) token counts.
+    fn land_chunk(&mut self, take: usize) -> (u64, u64) {
+        let off = self.kv_tokens;
+        let recomp = take.min(self.processed_hwm.saturating_sub(off));
+        self.kv_tokens += take;
+        self.processed_hwm = self.processed_hwm.max(self.kv_tokens);
+        self.prompt_landed += take - recomp;
+        self.chunks += 1;
+        (recomp as u64, (take - recomp) as u64)
     }
 }
 
@@ -131,30 +188,47 @@ pub struct Batcher {
     /// anything still queued).
     requeued: VecDeque<Active>,
     active: Vec<Active>,
-    /// Admitted this iteration: their (first or resumed) token comes from
-    /// the prefill pass, so they join decode only from the *next*
-    /// iteration.
+    /// Prefill-phase sequences: admitted, but their (first or resumed)
+    /// token only comes when the last prefill chunk completes — they join
+    /// decode from the *next* iteration. Monolithic prefill drains this
+    /// every iteration; chunked prefill keeps partially-landed sequences
+    /// here across iterations, FIFO.
     fresh: Vec<Active>,
+    /// Sequences whose prefill completed but whose KV is still in flight
+    /// to the decode pool (disaggregated mode): they hold cache but join
+    /// decode only once `ready_s` passes.
+    transferring: Vec<Active>,
+    /// Seconds to ship one KV byte from the prefill pool to the decode
+    /// pool at phase handoff (0 = colocated, no transfer).
+    kv_transfer_s_per_byte: f64,
     pub admitted: u64,
     pub completed: u64,
     /// Requests whose peak KV demand can never fit the budget, dropped at
     /// admission time (the "rejected" half of rejected-vs-delayed).
     pub rejected: u64,
     /// Iterations in which an arrived request was deferred by the token
-    /// cap or missing KV headroom (the "delayed" half).
+    /// cap or missing KV headroom (the "delayed" half). Waiting for the
+    /// chunk budget is scheduling, not delay, and is not counted.
     pub delayed_admissions: u64,
     /// Preemption events (KV dropped, sequence requeued).
     pub preemptions: u64,
     /// Re-admissions of preempted sequences (each pays a recompute
     /// prefill).
     pub resumes: u64,
+    /// Prefill chunks landed across all sequences (== admissions + resumes
+    /// under monolithic prefill).
+    pub chunks_landed: u64,
+    /// KV bytes shipped prefill→decode at phase handoffs (disaggregated
+    /// mode; 0 when colocated).
+    pub kv_transfer_bytes: f64,
     pub tokens_prefilled: u64,
     pub tokens_decoded: u64,
     /// Prefill tokens spent recomputing preempted sequences' context
-    /// (prompt + previously emitted tokens), on top of `tokens_prefilled`.
+    /// (previously materialized tokens only — never the un-chunked prompt
+    /// tail), on top of `tokens_prefilled`.
     pub tokens_recomputed: u64,
-    /// Per-request time-to-first-token (ms) — recorded when the original
-    /// prefill iteration completes (SLO metric).
+    /// Per-request time-to-first-token (ms) — recorded when the last chunk
+    /// of the original prefill completes (SLO metric).
     pub ttft_ms: Vec<f64>,
     /// Per-request end-to-end latency (ms) — arrival to last token.
     pub e2e_ms: Vec<f64>,
@@ -167,14 +241,37 @@ impl Batcher {
         Batcher::default()
     }
 
-    /// A batcher gated by the given token cap and KV budget.
+    /// A batcher gated by the given token cap, KV budget and chunk budget.
     pub fn with_limits(limits: BatchLimits) -> Batcher {
         Batcher { limits, ..Batcher::default() }
     }
 
-    /// Queue requests (must be fed in arrival order).
+    /// Model the disaggregated phase handoff: a sequence completing
+    /// prefill that proceeds to decode ships its KV over a `link_gbps`
+    /// GB/s link before its first token counts (TTFT includes the
+    /// transfer; the clock does not — transfers overlap with compute; a
+    /// request retiring at prefill ships nothing). The link must be a
+    /// positive finite bandwidth — a free link is colocation.
+    pub fn with_transfer_link(mut self, link_gbps: f64) -> Batcher {
+        assert!(
+            link_gbps.is_finite() && link_gbps > 0.0,
+            "transfer link must be a positive finite GB/s (got {link_gbps})"
+        );
+        self.kv_transfer_s_per_byte = 1.0 / (link_gbps * 1e9);
+        self
+    }
+
+    /// Queue requests (must be fed in arrival order). Degenerate
+    /// zero-token prompts/outputs are clamped to one token: the iteration
+    /// machinery treats "no prefill and no decode" as idle, so a 0-token
+    /// phase could never complete (the workload generators already clamp
+    /// to >= 1).
     pub fn enqueue(&mut self, reqs: &[TraceRequest]) {
-        self.pending.extend(reqs.iter().copied());
+        self.pending.extend(reqs.iter().map(|r| TraceRequest {
+            prompt_tokens: r.prompt_tokens.max(1),
+            output_tokens: r.output_tokens.max(1),
+            ..*r
+        }));
     }
 
     pub fn pending_len(&self) -> usize {
@@ -191,8 +288,20 @@ impl Batcher {
         self.pending.len() + self.requeued.len()
     }
 
+    /// Sequences whose KV handoff is still in flight (disaggregated mode).
+    pub fn transferring_len(&self) -> usize {
+        self.transferring.len()
+    }
+
+    /// Earliest completion time of an in-flight KV handoff — the clock
+    /// driver's wake-up when a blocked (past-arrival) requeued sequence
+    /// masks it in [`next_arrival`](Batcher::next_arrival).
+    pub fn next_transfer_ready(&self) -> Option<f64> {
+        self.transferring.iter().map(|a| a.ready_s).reduce(f64::min)
+    }
+
     pub fn in_flight(&self) -> usize {
-        self.active.len() + self.fresh.len()
+        self.active.len() + self.fresh.len() + self.transferring.len()
     }
 
     pub fn idle(&self) -> bool {
@@ -200,11 +309,18 @@ impl Batcher {
             && self.requeued.is_empty()
             && self.active.is_empty()
             && self.fresh.is_empty()
+            && self.transferring.is_empty()
     }
 
-    /// KV-cache entries currently materialized across in-flight sequences.
+    /// KV-cache entries currently materialized across in-flight sequences
+    /// (in-transit phase-handoff KV counts once).
     pub fn kv_tokens_in_use(&self) -> usize {
-        self.active.iter().chain(self.fresh.iter()).map(|a| a.kv_tokens).sum()
+        self.active
+            .iter()
+            .chain(self.fresh.iter())
+            .chain(self.transferring.iter())
+            .map(|a| a.kv_tokens)
+            .sum()
     }
 
     /// KV-cache bytes currently materialized.
@@ -212,14 +328,16 @@ impl Batcher {
         self.kv_tokens_in_use() as f64 * self.limits.kv_bytes_per_token
     }
 
-    /// Output tokens emitted so far for request `id`: 0 while queued, the
-    /// full output once finished, `None` for unknown ids. Monotone over a
-    /// request's lifetime — preemption never rolls progress back.
+    /// Output tokens emitted so far for request `id`: 0 while queued or
+    /// prefilling, the full output once finished, `None` for unknown ids.
+    /// Monotone over a request's lifetime — preemption never rolls
+    /// progress back.
     pub fn progress_of(&self, id: u64) -> Option<usize> {
         if let Some(a) = self
             .active
             .iter()
             .chain(self.fresh.iter())
+            .chain(self.transferring.iter())
             .chain(self.requeued.iter())
             .find(|a| a.id == id)
         {
@@ -231,77 +349,203 @@ impl Batcher {
         self.finished.iter().find(|r| r.id == id).map(|r| r.output_tokens)
     }
 
-    /// Earliest queued arrival (for clock jumps when idle). Includes
-    /// preempted-requeued sequences — whose arrivals are in the past — so
-    /// a caller jumping the clock can never skip over them; see
-    /// `next_iteration`, which always re-admits such a sequence when
-    /// nothing is running (a fully-preempted state cannot stall).
+    /// Prefill progress of request `id`: `(kv tokens landed, prefill
+    /// target)` while it is in the prefill phase; `None` otherwise. The
+    /// chunk-conservation observable: landed never exceeds the target and
+    /// only moves forward between preemptions.
+    pub fn prefill_progress_of(&self, id: u64) -> Option<(usize, usize)> {
+        self.fresh.iter().find(|a| a.id == id).map(|a| (a.kv_tokens, a.prefill_target))
+    }
+
+    /// Earliest instant new work becomes available (for clock jumps when
+    /// idle). Includes preempted-requeued sequences — whose arrivals are
+    /// in the past — so a caller jumping the clock can never skip over
+    /// them (see `next_iteration`, which always re-admits such a sequence
+    /// when nothing is running: a fully-preempted state cannot stall), and
+    /// KV-transfer completion times of sequences mid-handoff.
     pub fn next_arrival(&self) -> Option<f64> {
         let requeued = self.requeued.front().map(|a| a.arrival_s);
         let pending = self.pending.front().map(|r| r.arrival_s);
-        match (requeued, pending) {
+        let ready = self.next_transfer_ready().unwrap_or(f64::INFINITY);
+        let queued = match (requeued, pending) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, None) => a,
             (None, b) => b,
+        };
+        match queued {
+            Some(t) => Some(t.min(ready)),
+            None if ready.is_finite() => Some(ready),
+            None => None,
         }
     }
 
+    /// Preempt the youngest in-flight sequence (decode or mid-prefill),
+    /// adjusting `projected` by the KV it frees. Returns false when no
+    /// victim may be taken (the oldest survivor is never preempted).
+    fn preempt_youngest(&mut self, projected: &mut usize) -> bool {
+        if self.active.len() + self.fresh.len() <= 1 {
+            return false;
+        }
+        let key = |a: &Active| (a.arrival_s, a.id);
+        let youngest_active = self
+            .active
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| key(a).partial_cmp(&key(b)).unwrap())
+            .map(|(i, a)| (i, key(a)));
+        let youngest_fresh = self
+            .fresh
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| key(a).partial_cmp(&key(b)).unwrap())
+            .map(|(i, a)| (i, key(a)));
+        let from_fresh = match (youngest_active, youngest_fresh) {
+            (Some((_, ka)), Some((_, kf))) => kf > ka,
+            (None, Some(_)) => true,
+            _ => false,
+        };
+        let mut a = if from_fresh {
+            let (i, _) = youngest_fresh.unwrap();
+            *projected -= self.fresh[i].kv_tokens;
+            // `remove` keeps the FIFO chunk-continuation order intact.
+            self.fresh.remove(i)
+        } else {
+            let (i, _) = youngest_active.unwrap();
+            *projected -= self.active[i].kv_tokens + 1;
+            self.active.swap_remove(i)
+        };
+        // The high-water mark is what the resume must recompute: a decoding
+        // sequence reprocesses prompt + emitted (the last emitted token is
+        // re-fed to produce the next); a mid-prefill one only its landed
+        // chunks — the un-chunked tail is first-time work, not recompute.
+        a.processed_hwm = if from_fresh {
+            a.processed_hwm.max(a.kv_tokens)
+        } else {
+            a.processed_hwm.max(a.prompt_tokens + a.emitted())
+        };
+        a.kv_tokens = 0;
+        a.preemptions += 1;
+        self.preemptions += 1;
+        let pos = self
+            .requeued
+            .iter()
+            .position(|r| (r.arrival_s, r.id) > (a.arrival_s, a.id))
+            .unwrap_or(self.requeued.len());
+        self.requeued.insert(pos, a);
+        true
+    }
+
     /// Form the next iteration at virtual time `now`: preempt if decode
-    /// growth exhausts the KV budget, then admit arrived (and resumed)
-    /// requests up to the token cap and KV headroom. Returns `None` only
-    /// when there is no decode work and nothing admissible yet.
+    /// growth (or a headroom-starved prefill) exhausts the KV budget, then
+    /// pack decode first and fill the remainder with prefill chunks —
+    /// in-progress prefills continue before resumed and new admissions,
+    /// all FIFO. Returns `None` only when there is no decode work and
+    /// nothing admissible yet.
     pub fn next_iteration(&mut self, now_s: f64) -> Option<IterationBatch> {
-        let BatchLimits { max_batch_tokens: cap, kv_budget_bytes: budget, kv_bytes_per_token: bpt } =
-            self.limits;
+        let BatchLimits {
+            max_batch_tokens: cap,
+            kv_budget_bytes: budget,
+            kv_bytes_per_token: bpt,
+            prefill_chunk_tokens: chunk,
+        } = self.limits;
         let kv_gated = budget.is_finite() && bpt > 0.0;
 
-        // Decode growth: each in-flight sequence appends one token's KV
-        // this iteration. If that exceeds the budget, preempt the youngest
-        // sequences (never the oldest — forward progress is guaranteed).
+        // Phase-handoff arrivals: sequences whose KV transfer finished
+        // join the decode set (disaggregated mode; no-op otherwise).
+        let mut t = 0;
+        while t < self.transferring.len() {
+            if self.transferring[t].ready_s <= now_s + 1e-12 {
+                let a = self.transferring.swap_remove(t);
+                self.active.push(a);
+            } else {
+                t += 1;
+            }
+        }
+
+        // Decode growth: each decoding sequence appends one token's KV this
+        // iteration, on top of the KV held by mid-prefill sequences. If the
+        // total exceeds the budget, preempt the youngest sequences (never
+        // the oldest — forward progress is guaranteed). When nothing is
+        // decoding but chunked prefills are parked on zero headroom, demand
+        // one spare token of room so the oldest prefill can always land a
+        // chunk (two half-prefilled prompts jointly filling the budget
+        // would otherwise deadlock).
         let mut preempted = 0usize;
+        let mut kv_projected: usize = self.active.iter().map(|a| a.kv_tokens + 1).sum::<usize>()
+            + self
+                .fresh
+                .iter()
+                .chain(self.transferring.iter())
+                .map(|a| a.kv_tokens)
+                .sum::<usize>();
         if kv_gated {
-            // Maintained incrementally: one O(active) sum, then O(active)
-            // per eviction for victim selection only.
-            let mut projected: usize = self.active.iter().map(|a| a.kv_tokens + 1).sum();
-            while self.active.len() > 1 && (projected as f64) * bpt > budget + 1e-9 {
-                let youngest = self
-                    .active
-                    .iter()
-                    .enumerate()
-                    .max_by(|(_, a), (_, b)| {
-                        a.arrival_s
-                            .partial_cmp(&b.arrival_s)
-                            .unwrap()
-                            .then(a.id.cmp(&b.id))
-                    })
-                    .map(|(i, _)| i)
-                    .unwrap();
-                let mut a = self.active.swap_remove(youngest);
-                projected -= a.kv_tokens + 1;
-                a.kv_tokens = 0; // recompute-on-resume: its cache is freed
-                a.preemptions += 1;
-                self.preemptions += 1;
+            loop {
+                let min_room = usize::from(self.active.is_empty() && !self.fresh.is_empty());
+                if ((kv_projected + min_room) as f64) * bpt <= budget + 1e-9 {
+                    break;
+                }
+                if !self.preempt_youngest(&mut kv_projected) {
+                    break;
+                }
                 preempted += 1;
-                let pos = self
-                    .requeued
-                    .iter()
-                    .position(|r| (r.arrival_s, r.id) > (a.arrival_s, a.id))
-                    .unwrap_or(self.requeued.len());
-                self.requeued.insert(pos, a);
             }
         }
 
         let decode = self.active.len();
-        // KV the surviving decode work will hold after this iteration.
-        let mut kv_projected: usize = self.active.iter().map(|a| a.kv_tokens + 1).sum();
         let mut prefill = 0usize;
+        // Stall-free packing: decode tokens claim the chunk budget (and
+        // the token cap) first, prefill chunks fill the remainder. In
+        // disaggregated mode (transfer link configured) decode runs on its
+        // own pool and does not throttle the prefill pool's budgets.
+        let decode_share = if self.kv_transfer_s_per_byte > 0.0 { 0 } else { decode };
+        let mut chunk_left =
+            if chunk == 0 { usize::MAX } else { chunk.saturating_sub(decode_share) };
+        let headroom = |kv_projected: usize| -> usize {
+            (((budget + 1e-9) / bpt) as usize).saturating_sub(kv_projected)
+        };
+
+        // Continue in-progress prefills first (they already hold KV;
+        // finishing them frees the phase pipeline), FIFO.
+        if chunk > 0 {
+            let mut recomputed = 0u64;
+            let mut prefilled = 0u64;
+            let mut landed = 0u64;
+            for a in &mut self.fresh {
+                if chunk_left == 0 {
+                    break;
+                }
+                let mut take = (a.prefill_target - a.kv_tokens).min(chunk_left);
+                if cap > 0 {
+                    take = take.min(cap.saturating_sub(decode_share + prefill));
+                }
+                if kv_gated {
+                    take = take.min(headroom(kv_projected));
+                }
+                if take == 0 {
+                    continue;
+                }
+                let (r, f) = a.land_chunk(take);
+                recomputed += r;
+                prefilled += f;
+                landed += 1;
+                prefill += take;
+                kv_projected += take;
+                chunk_left -= take;
+            }
+            self.tokens_recomputed += recomputed;
+            self.tokens_prefilled += prefilled;
+            self.chunks_landed += landed;
+        }
 
         // Admission: resumed sequences first (they arrived no later than
         // anything still pending), then new arrivals, FIFO.
         loop {
+            if chunk_left == 0 {
+                break;
+            }
             let resume = !self.requeued.is_empty();
             let need_tokens = if let Some(a) = self.requeued.front() {
-                a.resume_tokens()
+                a.prompt_tokens + a.emitted()
             } else if let Some(r) = self.pending.front() {
                 if r.arrival_s > now_s {
                     break;
@@ -318,56 +562,95 @@ impl Batcher {
                 break;
             };
 
-            let nothing_running = decode == 0 && prefill == 0;
-            let over_cap = cap > 0 && decode + prefill + need_tokens > cap;
-            let over_kv =
-                kv_gated && ((kv_projected + need_tokens) as f64) * bpt > budget + 1e-9;
-            if (over_cap || over_kv) && !nothing_running {
-                // Head-of-line wait: the queue is FIFO, so later requests
-                // wait behind the blocked head (delayed, not rejected).
-                self.delayed_admissions += 1;
-                break;
-            }
+            // First-chunk size: monolithic mode must land the whole target
+            // at once (the pre-chunking contract); chunked mode lands
+            // whatever the budgets allow, down to — but never — zero.
+            let take = if chunk == 0 {
+                let nothing_running = decode == 0 && prefill == 0;
+                let over_cap = cap > 0 && decode_share + prefill + need_tokens > cap;
+                let over_kv =
+                    kv_gated && ((kv_projected + need_tokens) as f64) * bpt > budget + 1e-9;
+                // The oversized-alone override must not fire when KV in
+                // transit (disaggregated handoffs) still holds the budget:
+                // there the wake-up is the transfer completing, and
+                // admitting anyway would overshoot the occupancy
+                // invariant. Colocated, nothing_running implies
+                // kv_projected == 0, so this is the old behavior exactly.
+                let admit_alone = nothing_running && !(over_kv && kv_projected > 0);
+                if (over_cap || over_kv) && !admit_alone {
+                    // Head-of-line wait: the queue is FIFO, so later
+                    // requests wait behind the blocked head (delayed, not
+                    // rejected).
+                    self.delayed_admissions += 1;
+                    break;
+                }
+                need_tokens
+            } else {
+                let mut take = need_tokens.min(chunk_left);
+                if cap > 0 {
+                    take = take.min(cap.saturating_sub(decode_share + prefill));
+                }
+                if kv_gated {
+                    take = take.min(headroom(kv_projected));
+                }
+                if take == 0 {
+                    // Blocked by the token cap or KV headroom (the chunk
+                    // budget still had room — that case breaks above).
+                    self.delayed_admissions += 1;
+                    break;
+                }
+                take
+            };
 
-            if resume {
+            let mut a = if resume {
                 let mut a = self.requeued.pop_front().unwrap();
-                a.kv_tokens = a.resume_tokens();
-                // The resumed prefill re-emits context and produces the
-                // next output token, like the original prefill did.
-                a.remaining_out -= 1;
-                prefill += a.kv_tokens;
-                kv_projected += a.kv_tokens;
-                self.tokens_recomputed += a.kv_tokens as u64;
+                a.prefill_target = a.prompt_tokens + a.emitted();
                 self.resumes += 1;
-                self.fresh.push(a);
+                a
             } else {
                 let r = self.pending.pop_front().unwrap();
-                prefill += r.prompt_tokens;
-                kv_projected += r.prompt_tokens;
                 self.admitted += 1;
-                self.tokens_prefilled += r.prompt_tokens as u64;
-                // The prefill iteration itself emits the first token, so
-                // the sequence enters decode with output_tokens - 1
-                // remaining.
-                self.fresh.push(Active {
+                Active {
                     id: r.id,
                     arrival_s: r.arrival_s,
                     first_token_s: 0.0,
                     started: false,
                     prompt_tokens: r.prompt_tokens,
                     output_tokens: r.output_tokens,
-                    remaining_out: r.output_tokens.saturating_sub(1),
-                    kv_tokens: r.prompt_tokens,
+                    remaining_out: r.output_tokens,
+                    kv_tokens: 0,
+                    ready_s: 0.0,
+                    prefill_target: r.prompt_tokens,
+                    processed_hwm: 0,
+                    prompt_landed: 0,
+                    chunks: 0,
                     preemptions: 0,
-                });
-            }
+                }
+            };
+            let (r, f) = a.land_chunk(take);
+            self.tokens_recomputed += r;
+            self.tokens_prefilled += f;
+            self.chunks_landed += 1;
+            prefill += take;
+            kv_projected += take;
+            chunk_left = chunk_left.saturating_sub(take);
+            self.fresh.push(a);
         }
 
         if prefill == 0 && decode == 0 {
-            // No prefill and nothing decoding; fresh-only states can't
-            // occur here because fresh is drained by complete_iteration,
-            // and a non-empty requeue with nothing running always admits
-            // (the nothing_running override above).
+            // No prefill and nothing decoding. Chunked mid-prefill
+            // sequences cannot be parked here: the preemption pass
+            // guarantees one token of headroom when nothing decodes, so
+            // the oldest always lands a chunk; monolithic fresh is drained
+            // by complete_iteration; and a non-empty requeue with nothing
+            // running always admits (the nothing_running override above).
+            // The one exception: KV in transit (disaggregated mode) may
+            // hold the headroom — then the pending transfer itself wakes
+            // the clock (`next_arrival` reports its completion).
+            debug_assert!(
+                self.fresh.is_empty() || !self.transferring.is_empty(),
+                "a parked prefill with no pending wake-up would stall the clock"
+            );
             return None;
         }
         self.tokens_decoded += decode as u64;
@@ -379,9 +662,11 @@ impl Batcher {
     }
 
     /// Commit the iteration at virtual time `now_s`: every decoding
-    /// sequence produced one token (its KV grows by one entry); freshly
-    /// prefilled sequences emit their first token (TTFT, unless resumed)
-    /// and join the decode set.
+    /// sequence produced one token (its KV grows by one entry); prefill
+    /// sequences whose last chunk landed emit their first token (TTFT,
+    /// unless resumed; delayed by the KV phase handoff when a transfer
+    /// link is configured) and join the decode set. Partially-prefilled
+    /// sequences stay for the next iteration's chunks.
     pub fn complete_iteration(&mut self, now_s: f64) {
         let mut i = 0;
         while i < self.active.len() {
@@ -394,26 +679,52 @@ impl Batcher {
                 i += 1;
             }
         }
-        let mut j = 0;
-        while j < self.fresh.len() {
-            if !self.fresh[j].started {
-                self.fresh[j].started = true;
-                self.fresh[j].first_token_s = now_s;
-                self.ttft_ms.push((now_s - self.fresh[j].arrival_s).max(0.0) * 1e3);
+        let fresh = std::mem::take(&mut self.fresh);
+        for mut f in fresh {
+            if f.kv_tokens < f.prefill_target {
+                self.fresh.push(f); // still mid-prefill (chunked)
+                continue;
             }
-            if self.fresh[j].remaining_out == 0 {
-                let f = self.fresh.swap_remove(j);
-                self.retire(f, now_s);
+            // The completing prefill emits one token (the first, or — on
+            // resume — the next). Saturating: outputs are clamped >= 1 at
+            // enqueue, so this only guards hand-built state.
+            f.remaining_out = f.remaining_out.saturating_sub(1);
+            // Phase handoff: only a sequence that proceeds to decode ships
+            // its KV to the decode pool (a request retiring at prefill
+            // never needs the cache there). The token counts when the KV
+            // lands.
+            let t = if f.remaining_out > 0 && self.kv_transfer_s_per_byte > 0.0 {
+                let bytes = f.kv_tokens as f64 * self.limits.kv_bytes_per_token;
+                self.kv_transfer_bytes += bytes;
+                now_s + bytes * self.kv_transfer_s_per_byte
             } else {
-                j += 1;
+                now_s
+            };
+            if !f.started {
+                f.started = true;
+                f.first_token_s = t;
+                self.ttft_ms.push((t - f.arrival_s).max(0.0) * 1e3);
+            }
+            if f.remaining_out == 0 {
+                self.retire(f, t);
+            } else if t > now_s {
+                // KV still in flight to the decode pool: hold the sequence
+                // out of decode until the transfer lands.
+                f.ready_s = t;
+                self.transferring.push(f);
+            } else {
+                self.active.push(f);
             }
         }
-        self.active.append(&mut self.fresh);
     }
 
     /// A request reached its EOS / length limit: record its metrics and
     /// release its KV.
     fn retire(&mut self, a: Active, now_s: f64) {
+        debug_assert_eq!(
+            a.prompt_landed, a.prompt_tokens,
+            "chunk conservation: first-time chunk tokens must sum to the prompt"
+        );
         self.completed += 1;
         self.e2e_ms.push((now_s - a.arrival_s).max(0.0) * 1e3);
         self.finished.push(RequestRecord {
@@ -424,6 +735,7 @@ impl Batcher {
             prompt_tokens: a.prompt_tokens,
             output_tokens: a.output_tokens,
             preemptions: a.preemptions,
+            chunks: a.chunks,
         });
     }
 }
@@ -442,6 +754,7 @@ mod tests {
             max_batch_tokens: 0,
             kv_budget_bytes: budget_tokens as f64,
             kv_bytes_per_token: 1.0,
+            prefill_chunk_tokens: 0,
         }
     }
 
@@ -554,6 +867,7 @@ mod tests {
         let r = &b.finished[0];
         assert_eq!((r.id, r.prompt_tokens, r.output_tokens), (7, 10, 3));
         assert_eq!(r.preemptions, 0);
+        assert_eq!(r.chunks, 1, "monolithic prefill is one chunk");
         assert!((r.ttft_ms() - 100.0).abs() < 1e-9);
         assert!((r.e2e_ms() - 400.0).abs() < 1e-9);
         // 2 decode tokens over (0.4 - 0.1)s -> 150 ms/token.
@@ -734,5 +1048,188 @@ mod tests {
         }
         assert_eq!(last, [10, 10], "both outputs fully emitted");
         assert!(b.progress_of(99).is_none());
+    }
+
+    // -----------------------------------------------------------------
+    // Chunked prefill + disaggregation.
+    // -----------------------------------------------------------------
+
+    fn chunk_limits(chunk: usize, budget_tokens: f64) -> BatchLimits {
+        BatchLimits {
+            max_batch_tokens: 0,
+            kv_budget_bytes: budget_tokens,
+            kv_bytes_per_token: 1.0,
+            prefill_chunk_tokens: chunk,
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_spreads_prompt_and_records_ttft_on_last_chunk() {
+        // A 10-token prompt under a 4-token chunk budget lands in 4+4+2;
+        // the first token (and TTFT) only appears when the last chunk
+        // completes.
+        let mut b = Batcher::with_limits(chunk_limits(4, f64::INFINITY));
+        b.enqueue(&[req(0, 0.0, 10, 3)]);
+        let mut landed = Vec::new();
+        for t in [0.0, 0.1, 0.2] {
+            let it = b.next_iteration(t).unwrap();
+            landed.push(it.prefill_tokens);
+            assert_eq!(it.decode_seqs, 0, "still prefilling");
+            assert!(b.ttft_ms.is_empty(), "no token before the last chunk");
+            assert_eq!(b.progress_of(0), Some(0));
+            b.complete_iteration(t + 0.05);
+        }
+        assert_eq!(landed, vec![4, 4, 2], "chunk tokens sum to the prompt");
+        // The last chunk completed at t=0.25: TTFT recorded there.
+        assert_eq!(b.ttft_ms.len(), 1);
+        assert!((b.ttft_ms[0] - 250.0).abs() < 1e-9);
+        assert_eq!(b.progress_of(0), Some(1));
+        assert_eq!(b.kv_tokens_in_use(), 10);
+        drain(&mut b, 0.3);
+        assert_eq!(b.completed, 1);
+        assert_eq!(b.finished[0].chunks, 3);
+        assert_eq!(b.tokens_prefilled, 10);
+        assert_eq!(b.tokens_recomputed, 0);
+    }
+
+    #[test]
+    fn stall_free_packing_decodes_first() {
+        // Chunk budget 8 with 3 decoding sequences leaves 5 tokens of
+        // prefill per iteration: the long prompt trickles in around the
+        // decodes instead of stalling them.
+        let mut b = Batcher::with_limits(chunk_limits(8, f64::INFINITY));
+        b.enqueue(&[req(0, 0.0, 1, 10), req(1, 0.0, 1, 10), req(2, 0.0, 1, 10)]);
+        b.next_iteration(0.0).unwrap();
+        b.complete_iteration(0.05);
+        b.enqueue(&[req(3, 0.05, 40, 2)]);
+        let it = b.next_iteration(0.1).unwrap();
+        assert_eq!(it.decode_seqs, 3);
+        assert_eq!(it.prefill_tokens, 5, "decode packs first, prefill fills the rest");
+        assert_eq!(it.total_tokens(), 8, "iteration bounded by the chunk budget");
+        b.complete_iteration(0.15);
+        drain(&mut b, 0.2);
+        assert_eq!(b.completed, 4);
+        let r3 = b.finished.iter().find(|r| r.id == 3).unwrap();
+        assert!(r3.chunks >= 5, "40-token prompt over <=5-token chunks: {}", r3.chunks);
+    }
+
+    #[test]
+    fn mid_prefill_preemption_resumes_from_last_chunk() {
+        // Satellite regression: a sequence preempted *between chunks* must
+        // resume from its last completed chunk — recomputing only the
+        // tokens whose KV had landed (14 here), never the un-chunked
+        // prompt tail (16 would be the whole prompt).
+        //
+        // Budget 24 tokens, chunk 8. req0 (prompt 8, output 4) prefills
+        // monolithically within one chunk and decodes; req1 (prompt 16,
+        // output 4) lands 7+7 chunks around req0's decode, then decode
+        // growth (11 + 14 + 1 > 24) preempts it at 14 landed tokens.
+        let mut b = Batcher::with_limits(chunk_limits(8, 24.0));
+        b.enqueue(&[req(0, 0.0, 8, 4), req(1, 0.0, 16, 4)]);
+        let mut clock = 0.0;
+        let mut guard = 0;
+        while !b.idle() {
+            // Landed prefill never exceeds the target, and the KV ledger
+            // respects the budget mid-chunk.
+            if let Some((landed, target)) = b.prefill_progress_of(1) {
+                assert!(landed <= target);
+            }
+            assert!(b.kv_bytes_in_use() <= 24.0 + 1e-9);
+            match b.next_iteration(clock) {
+                Some(_) => b.complete_iteration(clock + 0.05),
+                None => clock = b.next_arrival().unwrap_or(clock).max(clock),
+            }
+            clock += 0.05;
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        assert_eq!(b.completed, 2);
+        assert_eq!((b.preemptions, b.resumes), (1, 1));
+        let r1 = b.finished.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(r1.preemptions, 1, "req1 was preempted mid-prefill");
+        // The pinned accounting: exactly the 14 landed tokens are
+        // recomputed (7+7 chunks), and first-time prefill still conserves
+        // both prompts (8 + 16).
+        assert_eq!(b.tokens_recomputed, 14, "recompute = landed chunks only");
+        assert_eq!(b.tokens_prefilled, 24, "first-time prefill = sum of prompts");
+        assert_eq!(r1.chunks, 5, "2 chunks pre-preemption + 3 on resume");
+        assert_eq!(b.ttft_ms.len(), 2, "TTFT recorded once per request");
+    }
+
+    #[test]
+    fn joint_mid_prefill_saturation_cannot_deadlock() {
+        // Two prompts whose chunks jointly fill the budget mid-prefill:
+        // without the one-token headroom rule the batcher would park both
+        // forever (nothing decoding, zero headroom, nothing preemptible by
+        // the decode-growth rule alone).
+        let mut b = Batcher::with_limits(chunk_limits(64, 100.0));
+        b.enqueue(&[req(0, 0.0, 80, 4), req(1, 0.0, 60, 4)]);
+        drain(&mut b, 0.0);
+        assert_eq!(b.completed, 2, "both must drain");
+        assert!(b.preemptions >= 1, "the younger mid-prefill seq was evicted");
+        assert_eq!(b.resumes, b.preemptions);
+    }
+
+    #[test]
+    fn transfer_link_delays_first_token_and_bills_bytes() {
+        // Disaggregated handoff: 512 KV bytes over a link that moves
+        // 1000 bytes/s delays TTFT by 0.512 s and accumulates the bytes.
+        let mut b = Batcher::with_limits(BatchLimits {
+            kv_bytes_per_token: 64.0,
+            ..BatchLimits::default()
+        })
+        .with_transfer_link(1e-6); // 1e-6 GB/s = 1000 B/s
+        b.enqueue(&[req(0, 0.0, 8, 2)]);
+        b.next_iteration(0.0).unwrap();
+        b.complete_iteration(0.1);
+        // 8 tokens x 64 B = 512 B -> 0.512 s transfer on top of t=0.1.
+        assert_eq!(b.ttft_ms.len(), 1);
+        assert!((b.ttft_ms[0] - 612.0).abs() < 1e-6, "{}", b.ttft_ms[0]);
+        assert!((b.kv_transfer_bytes - 512.0).abs() < 1e-9);
+        drain(&mut b, 0.2);
+        assert_eq!(b.completed, 1);
+        let r = &b.finished[0];
+        assert!(r.finish_s >= r.first_token_s);
+    }
+
+    #[test]
+    fn degenerate_zero_token_requests_are_clamped_and_drain() {
+        // A 0-token prompt or output could never complete its phase (no
+        // prefill / no decode work to schedule), so enqueue clamps both to
+        // one token — in chunked and monolithic mode alike.
+        for limits in [chunk_limits(4, f64::INFINITY), BatchLimits::default()] {
+            let mut b = Batcher::with_limits(limits);
+            b.enqueue(&[req(0, 0.0, 0, 0), req(1, 0.0, 3, 2)]);
+            drain(&mut b, 0.0);
+            assert_eq!(b.completed, 2, "degenerate requests must still drain");
+            let r0 = b.finished.iter().find(|r| r.id == 0).unwrap();
+            assert_eq!((r0.prompt_tokens, r0.output_tokens), (1, 1), "clamped");
+        }
+    }
+
+    #[test]
+    fn chunked_matches_monolithic_token_totals() {
+        // The same workload drained chunked and monolithic conserves the
+        // same prefill/decode token totals — chunking reshapes iterations,
+        // not work.
+        let reqs =
+            [req(0, 0.0, 37, 5), req(1, 0.2, 120, 3), req(2, 0.4, 9, 8), req(3, 1.1, 64, 1)];
+        let mut mono = Batcher::new();
+        mono.enqueue(&reqs);
+        drain(&mut mono, 0.0);
+        let mut chunked = Batcher::with_limits(BatchLimits {
+            prefill_chunk_tokens: 16,
+            ..BatchLimits::default()
+        });
+        chunked.enqueue(&reqs);
+        drain(&mut chunked, 0.0);
+        assert_eq!(chunked.completed, mono.completed);
+        assert_eq!(chunked.tokens_prefilled, mono.tokens_prefilled);
+        assert_eq!(chunked.tokens_decoded, mono.tokens_decoded);
+        assert!(chunked.chunks_landed > mono.chunks_landed);
+        for r in &chunked.finished {
+            let m = mono.finished.iter().find(|x| x.id == r.id).unwrap();
+            assert_eq!(r.output_tokens, m.output_tokens);
+        }
     }
 }

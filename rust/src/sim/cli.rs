@@ -3,7 +3,7 @@
 //! through the continuous batcher under the chosen policy.
 
 use crate::baselines::PolicyKind;
-use crate::config::{ClusterSpec, DatasetSpec, ModelSpec};
+use crate::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec};
 use crate::metrics::SloSpec;
 use crate::sim::{run, SimConfig};
 use crate::util::cli::Args;
@@ -50,12 +50,33 @@ pub fn replay(args: &Args) {
     if let Some(path) = args.opt_str("cluster") {
         cfg.cluster = ClusterSpec::load(std::path::Path::new(path)).expect("cluster config");
     }
+    // Chunked prefill: `--chunk-tokens 512` packs decode first and fills
+    // the remainder of each iteration with prefill chunks (stall-free
+    // batching). Disaggregation: `--disagg` splits the cluster into
+    // prefill/decode pools (`--prefill-gpus` overrides the even split) and
+    // bills the KV handoff over `--link-gbps`.
+    cfg.prefill_chunk_tokens = args.usize("chunk-tokens", 0);
+    if args.flag("disagg") {
+        let mut d = DisaggSpec::even_split(&cfg.cluster);
+        // Both pools must carve out of the real cluster: prefill gets at
+        // most n_gpus - 1 so the decode pool is never a phantom GPU.
+        let max_prefill = cfg.cluster.n_gpus.saturating_sub(1).max(1);
+        d.prefill_gpus = args.usize("prefill-gpus", d.prefill_gpus).clamp(1, max_prefill);
+        d.decode_gpus = cfg.cluster.n_gpus.saturating_sub(d.prefill_gpus).max(1);
+        d.link_gbps = args.f64("link-gbps", d.link_gbps);
+        assert!(
+            d.link_gbps.is_finite() && d.link_gbps > 0.0,
+            "--link-gbps expects a positive finite GB/s (a zero-cost link is colocation)"
+        );
+        cfg.disagg = Some(d);
+    }
 
     let report = run(&cfg);
     println!("{}", report.summary_line());
     println!("{}", report.slo_line());
     println!("{}", report.request_slo_line(&SloSpec::default()));
     println!("{}", report.pressure_line());
+    println!("{}", report.phase_line());
     if args.flag("cdf") {
         let cdf = report.layer_cdf();
         for q in [1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {

@@ -17,7 +17,8 @@ use std::time::Instant;
 
 use crate::baselines::PolicyKind;
 use crate::cluster::{Cluster, CostModel};
-use crate::config::{ClusterSpec, DatasetSpec, ModelSpec, MoelessParams};
+use crate::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec, MoelessParams};
+use crate::engine::Policy;
 use crate::metrics::RunReport;
 use crate::router::{BatchLimits, Batcher};
 use crate::workload::{RoutingModel, Scenario};
@@ -53,6 +54,14 @@ pub struct SimConfig {
     /// Explicit KV budget override in GB (tests / CLI); `None` derives
     /// `cluster.kv_budget_gb(&model) * kv_frac`.
     pub kv_budget_override_gb: Option<f64>,
+    /// Chunked-prefill iteration budget: decode tokens pack first, prefill
+    /// chunks fill the remainder (stall-free batching). 0 = monolithic
+    /// prefill.
+    pub prefill_chunk_tokens: usize,
+    /// Prefill/decode disaggregation: partition the cluster into two
+    /// pools with an explicit KV-transfer link between the phases.
+    /// `None` = colocated (single pool).
+    pub disagg: Option<DisaggSpec>,
 }
 
 impl SimConfig {
@@ -74,13 +83,81 @@ impl SimConfig {
             max_batch_tokens: 0,
             kv_frac: 1.0,
             kv_budget_override_gb: None,
+            prefill_chunk_tokens: 0,
+            disagg: None,
         }
     }
 
-    /// The KV-cache budget (GB) this run's batcher is gated on.
+    /// The KV-cache budget (GB) this run's batcher is gated on. In
+    /// disaggregated mode the KV cache lives in the decode pool, so the
+    /// carve-out is derived from that pool's memory, not the whole
+    /// cluster.
     pub fn kv_budget_gb(&self) -> f64 {
-        self.kv_budget_override_gb
-            .unwrap_or_else(|| self.cluster.kv_budget_gb(&self.model) * self.kv_frac)
+        self.kv_budget_override_gb.unwrap_or_else(|| {
+            let host = match self.disagg {
+                Some(d) => DisaggSpec::pool_cluster(&self.cluster, d.decode_gpus),
+                None => self.cluster.clone(),
+            };
+            host.kv_budget_gb(&self.model) * self.kv_frac
+        })
+    }
+}
+
+/// One execution pool: a policy driving a (sub-)cluster. Colocated runs
+/// have one; disaggregated runs have a prefill pool and a decode pool.
+struct Pool {
+    policy: Box<dyn Policy>,
+    cluster: Cluster,
+    cm: CostModel,
+    /// Virtual seconds this pool spent computing (utilization numerator).
+    busy_s: f64,
+}
+
+impl Pool {
+    fn new(cfg: &SimConfig, spec: &ClusterSpec, seed: u64) -> Pool {
+        let policy: Box<dyn Policy> = if cfg.autotune && cfg.policy == PolicyKind::Moeless {
+            Box::new(
+                crate::engine::MoelessPolicy::new(&cfg.model, spec, cfg.params.clone(), seed)
+                    .with_autotune(),
+            )
+        } else {
+            cfg.policy.build(&cfg.model, spec, &cfg.params, seed)
+        };
+        Pool {
+            policy,
+            cluster: Cluster::new(spec.clone()),
+            cm: CostModel::new(&cfg.model, spec),
+            busy_s: 0.0,
+        }
+    }
+
+    /// Run one layer forward of `tokens` tokens; accounts serverless cost
+    /// and cold starts into the report, returns (forward ms, replicas,
+    /// prediction accuracy).
+    fn run_layer(
+        &mut self,
+        routing: &mut RoutingModel,
+        layer: usize,
+        tokens: f64,
+        clock: f64,
+        report: &mut RunReport,
+    ) -> (f64, f64, f64) {
+        let loads = routing.layer_loads(layer, tokens);
+        self.cluster.reset_loads();
+        let out = self.policy.run_layer(layer, &loads, &mut self.cluster, &self.cm, clock);
+        if self.policy.resident_model_mem_gb(&self.cm).is_none() {
+            // Serverless: pay per active instance per layer forward.
+            report.cost_gb_s += out.cost.expert_cost_gb_s();
+        }
+        report.cold_starts += out.cold_starts as u64;
+        (out.cost.forward_ms(), out.replicas as f64, out.pred_accuracy)
+    }
+
+    /// Serverful residency + misc memory billed over the iteration wall
+    /// time (the whole model stays resident regardless of activity).
+    fn bill_resident(&self, iter_ms: f64, report: &mut RunReport) {
+        let resident = self.policy.resident_model_mem_gb(&self.cm).unwrap_or(0.0);
+        report.cost_gb_s += iter_ms / 1e3 * (resident + self.cm.misc_mem_gb);
     }
 }
 
@@ -89,35 +166,37 @@ pub fn run(cfg: &SimConfig) -> RunReport {
     let wall_start = Instant::now();
     let trace = cfg.scenario.generate(&cfg.dataset, cfg.duration_s, cfg.base_rps, cfg.seed);
     let mut routing = RoutingModel::new(&cfg.model, cfg.seed ^ 0x9e37);
-    let mut policy: Box<dyn crate::engine::Policy> =
-        if cfg.autotune && cfg.policy == PolicyKind::Moeless {
-            Box::new(
-                crate::engine::MoelessPolicy::new(
-                    &cfg.model,
-                    &cfg.cluster,
-                    cfg.params.clone(),
-                    cfg.seed ^ 0x51ce,
-                )
-                .with_autotune(),
-            )
-        } else {
-            cfg.policy.build(&cfg.model, &cfg.cluster, &cfg.params, cfg.seed ^ 0x51ce)
-        };
-    let cm = CostModel::new(&cfg.model, &cfg.cluster);
-    let mut cluster = Cluster::new(cfg.cluster.clone());
+    // Colocated: one pool over the whole cluster. Disaggregated: a prefill
+    // pool and a decode pool partition it, each with its own policy state.
+    let mut main_pool = Pool::new(
+        cfg,
+        &cfg.disagg
+            .map(|d| DisaggSpec::pool_cluster(&cfg.cluster, d.prefill_gpus))
+            .unwrap_or_else(|| cfg.cluster.clone()),
+        cfg.seed ^ 0x51ce,
+    );
+    let mut decode_pool = cfg.disagg.map(|d| {
+        Pool::new(cfg, &DisaggSpec::pool_cluster(&cfg.cluster, d.decode_gpus), cfg.seed ^ 0xdeca)
+    });
     let kv_budget_gb = cfg.kv_budget_gb();
     let mut batcher = Batcher::with_limits(BatchLimits {
         max_batch_tokens: cfg.max_batch_tokens,
         kv_budget_bytes: kv_budget_gb * 1e9,
         kv_bytes_per_token: cfg.model.kv_bytes_per_token(),
+        prefill_chunk_tokens: cfg.prefill_chunk_tokens,
     });
+    if let Some(d) = cfg.disagg {
+        batcher = batcher.with_transfer_link(d.link_gbps);
+    }
     batcher.enqueue(&trace);
 
     let mut report = RunReport {
-        policy: policy.name().to_string(),
+        policy: main_pool.policy.name().to_string(),
         model: cfg.model.name.clone(),
         dataset: cfg.dataset.name.clone(),
         kv_budget_gb,
+        prefill_chunk_tokens: cfg.prefill_chunk_tokens,
+        disagg: cfg.disagg.is_some(),
         ..Default::default()
     };
 
@@ -134,9 +213,22 @@ pub fn run(cfg: &SimConfig) -> RunReport {
             // batcher is waiting on the future only.
             match batcher.next_arrival() {
                 Some(t) if t < cfg.duration_s => {
-                    debug_assert!(t > clock, "idle jump must advance the clock");
+                    // (A requeued-but-headroom-blocked arrival can sit in
+                    // the past while a KV handoff is the real wake-up —
+                    // the defensive bump below covers that disagg corner.)
+                    debug_assert!(
+                        t > clock || batcher.transferring_len() > 0,
+                        "idle jump must advance the clock"
+                    );
                     if t <= clock {
-                        clock += 1e-3; // defensive: never wedge the clock
+                        // A blocked requeued arrival in the past can mask
+                        // the real wake-up (a KV handoff completing): jump
+                        // straight to it rather than milli-stepping
+                        // through the transfer.
+                        clock = match batcher.next_transfer_ready() {
+                            Some(r) if r > clock => r,
+                            _ => clock + 1e-3, // defensive: never wedge
+                        };
                     } else {
                         clock = t;
                     }
@@ -149,30 +241,91 @@ pub fn run(cfg: &SimConfig) -> RunReport {
         routing.step(clock - last_clock);
         last_clock = clock;
 
-        let mut iter_ms = 0.0f64;
-        for layer in 0..cfg.model.n_layers {
-            let loads = routing.layer_loads(layer, iter.total_tokens() as f64);
-            cluster.reset_loads();
-            let out = policy.run_layer(layer, &loads, &mut cluster, &cm, clock);
-            let fwd = out.cost.forward_ms();
-            iter_ms += fwd;
-            report.layer_forward_ms.push(fwd);
-            if policy.resident_model_mem_gb(&cm).is_none() {
-                // Serverless: pay per active instance per layer forward.
-                report.cost_gb_s += out.cost.expert_cost_gb_s();
+        let iter_ms = if let Some(dec) = decode_pool.as_mut() {
+            // Disaggregated: the prefill pool chews the prompt chunks while
+            // the decode pool generates — concurrently, so the iteration
+            // costs the slower pool's time. A pool with no tokens this
+            // iteration idles (no forward, no expert cost).
+            let mut pre_ms = 0.0f64;
+            let mut dec_ms = 0.0f64;
+            // Buffered per-layer forwards: the gauge records the pool that
+            // ends up determining the iteration (max of per-pool sums), so
+            // layer_forward_ms stays consistent with the clock advance.
+            let mut pre_layers = Vec::with_capacity(cfg.model.n_layers);
+            let mut dec_layers = Vec::with_capacity(cfg.model.n_layers);
+            for layer in 0..cfg.model.n_layers {
+                let pre = if iter.prefill_tokens > 0 {
+                    Some(main_pool.run_layer(
+                        &mut routing,
+                        layer,
+                        iter.prefill_tokens as f64,
+                        clock,
+                        &mut report,
+                    ))
+                } else {
+                    None
+                };
+                let dco = if iter.decode_seqs > 0 {
+                    Some(dec.run_layer(
+                        &mut routing,
+                        layer,
+                        iter.decode_seqs as f64,
+                        clock,
+                        &mut report,
+                    ))
+                } else {
+                    None
+                };
+                let (pf, pr, pa) = pre.unwrap_or((0.0, 0.0, 0.0));
+                let (df, dr, da) = dco.unwrap_or((0.0, 0.0, 0.0));
+                pre_ms += pf;
+                dec_ms += df;
+                pre_layers.push(pf);
+                dec_layers.push(df);
+                // The cluster-wide replica count is the pools' sum;
+                // accuracy averages only the pools that actually ran (an
+                // idle pool must not fabricate a perfect sample).
+                report.replicas_per_layer.push(pr + dr);
+                let pools_ran = usize::from(pre.is_some()) + usize::from(dco.is_some());
+                report.pred_accuracy.push((pa + da) / pools_ran.max(1) as f64);
             }
-            report.replicas_per_layer.push(out.replicas as f64);
-            report.pred_accuracy.push(out.pred_accuracy);
-            report.cold_starts += out.cold_starts as u64;
-        }
-        // Serverful: the whole model's experts are resident for the entire
-        // busy window regardless of activity (static EP allocation);
-        // non-expert memory is resident for every policy.
-        let resident = policy.resident_model_mem_gb(&cm).unwrap_or(0.0);
-        report.cost_gb_s += iter_ms / 1e3 * (resident + cm.misc_mem_gb);
+            report
+                .layer_forward_ms
+                .extend(if pre_ms >= dec_ms { pre_layers } else { dec_layers });
+            let iter_ms = pre_ms.max(dec_ms);
+            main_pool.busy_s += pre_ms / 1e3;
+            dec.busy_s += dec_ms / 1e3;
+            main_pool.bill_resident(iter_ms, &mut report);
+            dec.bill_resident(iter_ms, &mut report);
+            iter_ms
+        } else {
+            let mut iter_ms = 0.0f64;
+            for layer in 0..cfg.model.n_layers {
+                let (fwd, replicas, acc) = main_pool.run_layer(
+                    &mut routing,
+                    layer,
+                    iter.total_tokens() as f64,
+                    clock,
+                    &mut report,
+                );
+                iter_ms += fwd;
+                report.layer_forward_ms.push(fwd);
+                report.replicas_per_layer.push(replicas);
+                report.pred_accuracy.push(acc);
+            }
+            // Serverful: the whole model's experts are resident for the
+            // entire busy window regardless of activity (static EP
+            // allocation); non-expert memory is resident for every policy.
+            main_pool.busy_s += iter_ms / 1e3;
+            main_pool.bill_resident(iter_ms, &mut report);
+            iter_ms
+        };
         clock += iter_ms / 1e3;
         batcher.complete_iteration(clock);
-        policy.end_iteration(&mut cluster, clock);
+        main_pool.policy.end_iteration(&mut main_pool.cluster, clock);
+        if let Some(dec) = decode_pool.as_mut() {
+            dec.policy.end_iteration(&mut dec.cluster, clock);
+        }
         report.iterations += 1;
         report.tokens_processed += iter.total_tokens() as u64;
         // Memory-pressure gauges, sampled once per iteration.
@@ -187,9 +340,20 @@ pub fn run(cfg: &SimConfig) -> RunReport {
             break;
         }
     }
-    policy.finish(&mut cluster, clock);
-    report.residency_gb_s = policy.residency_gb_s();
-    report.warm_fraction = policy.warm_fraction();
+    main_pool.policy.finish(&mut main_pool.cluster, clock);
+    report.residency_gb_s = main_pool.policy.residency_gb_s();
+    report.warm_fraction = main_pool.policy.warm_fraction();
+    if let Some(dec) = decode_pool.as_mut() {
+        dec.policy.finish(&mut dec.cluster, clock);
+        report.residency_gb_s += dec.policy.residency_gb_s();
+        report.warm_fraction = 0.5 * (report.warm_fraction + dec.policy.warm_fraction());
+        if clock > 0.0 {
+            report.prefill_pool_util = main_pool.busy_s / clock;
+            report.decode_pool_util = dec.busy_s / clock;
+        }
+    }
+    report.kv_transfer_gb = batcher.kv_transfer_bytes / 1e9;
+    report.prefill_chunks = batcher.chunks_landed;
     report.completed_requests = batcher.completed;
     report.preemptions = batcher.preemptions;
     report.resumes = batcher.resumes;
@@ -365,6 +529,74 @@ mod tests {
             tight.ttft_cdf().p(99.0),
             base.ttft_cdf().p(99.0)
         );
+    }
+
+    #[test]
+    fn chunked_prefill_runs_deterministically_and_reshapes_iterations() {
+        let mk = |chunk: usize| {
+            let mut cfg = SimConfig::new(
+                ModelSpec::mixtral_8x7b(),
+                DatasetSpec::lmsys(),
+                PolicyKind::Moeless,
+            );
+            cfg.duration_s = 20.0;
+            cfg.base_rps = 3.0;
+            cfg.seed = 11;
+            cfg.prefill_chunk_tokens = chunk;
+            cfg
+        };
+        let mono = run(&mk(0));
+        let chunked = run(&mk(128));
+        assert_eq!(chunked.prefill_chunk_tokens, 128);
+        assert!(chunked.completed_requests > 0);
+        // Chunking splits prompts across iterations: more chunks than
+        // admissions, more (smaller) iterations than monolithic.
+        assert!(chunked.prefill_chunks > chunked.completed_requests);
+        assert!(chunked.mean_chunks_per_request() > 1.0);
+        // Bounded per-iteration prefill can only split work across more
+        // (smaller) iterations, never merge it into fewer.
+        assert!(chunked.iterations >= mono.iterations);
+        assert_eq!(mono.prefill_chunk_tokens, 0);
+        assert!(
+            (mono.mean_chunks_per_request() - 1.0).abs() < 1e-12,
+            "monolithic = one chunk per request: {}",
+            mono.mean_chunks_per_request()
+        );
+        // Determinism.
+        let again = run(&mk(128));
+        assert_eq!(chunked.requests, again.requests);
+        assert_eq!(chunked.layer_forward_ms, again.layer_forward_ms);
+    }
+
+    #[test]
+    fn disagg_partitions_pools_and_bills_kv_transfer() {
+        use crate::config::DisaggSpec;
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.duration_s = 20.0;
+        cfg.base_rps = 3.0;
+        cfg.seed = 11;
+        cfg.prefill_chunk_tokens = 256;
+        cfg.disagg = Some(DisaggSpec::even_split(&cfg.cluster));
+        let r = run(&cfg);
+        assert!(r.disagg);
+        assert!(r.completed_requests > 0);
+        assert!(r.kv_transfer_gb > 0.0, "phase handoffs must ship KV");
+        assert!(r.prefill_pool_util > 0.0 && r.prefill_pool_util <= 1.0 + 1e-9);
+        assert!(r.decode_pool_util > 0.0 && r.decode_pool_util <= 1.0 + 1e-9);
+        // Vector gauges keep the one-entry-per-layer-per-iteration shape.
+        assert_eq!(r.layer_forward_ms.len() as u64, r.iterations * 32);
+        assert_eq!(r.replicas_per_layer.len() as u64, r.iterations * 32);
+        for req in &r.requests {
+            assert!(req.finish_s >= req.first_token_s, "decode never precedes the handoff");
+        }
+        // Deterministic.
+        let again = run(&cfg);
+        assert_eq!(r.requests, again.requests);
+        assert!((r.kv_transfer_gb - again.kv_transfer_gb).abs() < 1e-12);
     }
 
     #[test]

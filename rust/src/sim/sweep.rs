@@ -8,7 +8,7 @@
 //! seeded by its own (policy, scenario, seed) coordinates.
 
 use crate::baselines::PolicyKind;
-use crate::config::{DatasetSpec, ModelSpec};
+use crate::config::{DatasetSpec, DisaggSpec, ModelSpec};
 use crate::metrics::{RunReport, SloSpec};
 use crate::sim::{run, SimConfig};
 use crate::util::stats::Cdf;
@@ -32,6 +32,10 @@ pub struct SweepSpec {
     pub kv_frac: f64,
     /// Per-iteration token cap forwarded to every cell (0 = unlimited).
     pub max_batch_tokens: usize,
+    /// Chunked-prefill budget forwarded to every cell (0 = monolithic).
+    pub prefill_chunk_tokens: usize,
+    /// Prefill/decode disaggregation forwarded to every cell.
+    pub disagg: Option<DisaggSpec>,
 }
 
 impl SweepSpec {
@@ -47,6 +51,8 @@ impl SweepSpec {
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             kv_frac: 1.0,
             max_batch_tokens: 0,
+            prefill_chunk_tokens: 0,
+            disagg: None,
         }
     }
 
@@ -71,6 +77,8 @@ impl SweepSpec {
         cfg.seed = seed;
         cfg.kv_frac = self.kv_frac;
         cfg.max_batch_tokens = self.max_batch_tokens;
+        cfg.prefill_chunk_tokens = self.prefill_chunk_tokens;
+        cfg.disagg = self.disagg;
         cfg
     }
 }
@@ -122,6 +130,11 @@ pub struct SloSummary {
     /// KV-pressure churn pooled across the group's seeds.
     pub preemptions: u64,
     pub rejected: u64,
+    /// Mean prefill chunks per request across the group (1.0 monolithic).
+    pub chunks_per_req: f64,
+    /// KV shipped prefill→decode, summed across the group's seeds (GB; 0
+    /// when colocated).
+    pub kv_transfer_gb: f64,
 }
 
 impl SloSummary {
@@ -130,7 +143,8 @@ impl SloSummary {
         format!(
             "slo {:<8} {:<16} ttft p50={:>5.0} p95={:>5.0} p99={:>5.0}ms | \
              tpot p50={:>5.1} p95={:>5.1} p99={:>5.1}ms | \
-             e2e p50={:>5.2}s | goodput={:.2}req/s reqs={} seeds={} preempt={} rej={}",
+             e2e p50={:>5.2}s | goodput={:.2}req/s reqs={} seeds={} preempt={} rej={} \
+             chunks/req={:.1} kvxfer={:.3}GB",
             self.scenario,
             self.policy,
             self.ttft_p50_ms,
@@ -145,6 +159,8 @@ impl SloSummary {
             self.seeds,
             self.preemptions,
             self.rejected,
+            self.chunks_per_req,
+            self.kv_transfer_gb,
         )
     }
 }
@@ -172,16 +188,20 @@ pub fn summarize(cells: &[SweepCell], slo: &SloSpec) -> Vec<SloSummary> {
             let mut goodput = 0.0;
             let mut preemptions = 0u64;
             let mut rejected = 0u64;
+            let mut chunks = 0u64;
+            let mut kv_transfer_gb = 0.0f64;
             for c in &group {
                 for r in &c.report.requests {
                     ttft.push(r.ttft_ms());
                     tpot.push(r.tpot_ms());
                     e2e.push(r.e2e_ms());
+                    chunks += r.chunks as u64;
                 }
                 completed += c.report.completed_requests;
                 goodput += c.report.goodput_rps(slo);
                 preemptions += c.report.preemptions;
                 rejected += c.report.rejected_requests;
+                kv_transfer_gb += c.report.kv_transfer_gb;
             }
             let (t, p, e) = (Cdf::of(ttft), Cdf::of(tpot), Cdf::of(e2e));
             SloSummary {
@@ -199,6 +219,8 @@ pub fn summarize(cells: &[SweepCell], slo: &SloSpec) -> Vec<SloSummary> {
                 goodput_rps: goodput / group.len().max(1) as f64,
                 preemptions,
                 rejected,
+                chunks_per_req: chunks as f64 / t.len().max(1) as f64,
+                kv_transfer_gb,
             }
         })
         .collect()
@@ -251,6 +273,27 @@ mod tests {
         }
         let rows = summarize(&cells, &SloSpec::default());
         assert!(rows[0].line().contains("preempt="));
+    }
+
+    #[test]
+    fn chunk_and_disagg_knobs_forward_into_cells() {
+        let mut spec = small_spec();
+        spec.threads = 2;
+        spec.policies = vec![PolicyKind::Moeless];
+        spec.scenarios = vec![Scenario::poisson()];
+        spec.seeds = vec![1];
+        spec.prefill_chunk_tokens = 128;
+        spec.disagg = Some(DisaggSpec::even_split(&crate::config::ClusterSpec::a6000_x8()));
+        let cells = run_sweep(&spec);
+        for c in &cells {
+            assert_eq!(c.report.prefill_chunk_tokens, 128);
+            assert!(c.report.disagg);
+            assert!(c.report.kv_transfer_gb > 0.0);
+        }
+        let rows = summarize(&cells, &SloSpec::default());
+        assert!(rows[0].kv_transfer_gb > 0.0);
+        assert!(rows[0].chunks_per_req >= 1.0);
+        assert!(rows[0].line().contains("kvxfer="), "{}", rows[0].line());
     }
 
     #[test]

@@ -8,4 +8,4 @@ pub mod trace;
 
 pub use arrivals::{ArrivalKind, Scenario};
 pub use routing::RoutingModel;
-pub use trace::{azure_like_trace, burst_trace, TraceRequest};
+pub use trace::{azure_like_trace, burst_trace, interference_trace, TraceRequest};

@@ -73,6 +73,53 @@ pub fn burst_trace(n: usize, at_s: f64, prompt_tokens: usize, output_tokens: usi
         .collect()
 }
 
+/// Long-prompt interference mix: a steady decode-heavy stream of small
+/// requests (one every `1/small_rps` seconds) with a huge prompt injected
+/// every `long_every_s` seconds. The chunked-prefill regression scenario:
+/// under monolithic prefill each long prompt stalls every co-scheduled
+/// decode for its whole length, spiking tail TPOT; stall-free chunking
+/// bounds the stall at `prefill_chunk_tokens` per iteration. Arrivals are
+/// arithmetic (no randomness) so the mix is a deterministic golden input.
+#[allow(clippy::too_many_arguments)]
+pub fn interference_trace(
+    duration_s: f64,
+    small_rps: f64,
+    small_prompt: usize,
+    small_output: usize,
+    long_every_s: f64,
+    long_prompt: usize,
+    long_output: usize,
+) -> Vec<TraceRequest> {
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    let mut t = 0.0f64;
+    let gap = 1.0 / small_rps.max(1e-9);
+    while t < duration_s {
+        out.push(TraceRequest {
+            id,
+            arrival_s: t,
+            prompt_tokens: small_prompt,
+            output_tokens: small_output,
+        });
+        id += 1;
+        t += gap;
+    }
+    // Long prompts land mid-interval so they always hit a busy decode set.
+    let mut lt = 0.5 * long_every_s;
+    while lt < duration_s {
+        out.push(TraceRequest {
+            id,
+            arrival_s: lt,
+            prompt_tokens: long_prompt,
+            output_tokens: long_output,
+        });
+        id += 1;
+        lt += long_every_s;
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap().then(a.id.cmp(&b.id)));
+    out
+}
+
 /// Per-second aggregated token arrivals (Fig. 3b's series).
 pub fn tokens_per_second(trace: &[TraceRequest], duration_s: f64) -> Vec<f64> {
     let mut bins = vec![0.0; duration_s.ceil() as usize];
@@ -127,6 +174,18 @@ mod tests {
         assert!(t.iter().all(|r| (r.prompt_tokens, r.output_tokens) == (100, 10)));
         let ids: Vec<u64> = t.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn interference_trace_mixes_steady_and_long() {
+        let t = interference_trace(20.0, 2.0, 32, 50, 10.0, 3000, 8);
+        assert!(t.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        let long: Vec<_> = t.iter().filter(|r| r.prompt_tokens == 3000).collect();
+        assert_eq!(long.len(), 2, "one long prompt per 10s interval");
+        assert!((long[0].arrival_s - 5.0).abs() < 1e-9, "lands mid-interval");
+        assert_eq!(t.iter().filter(|r| r.prompt_tokens == 32).count(), 40);
+        // Deterministic golden input: regenerating yields the same trace.
+        assert_eq!(t, interference_trace(20.0, 2.0, 32, 50, 10.0, 3000, 8));
     }
 
     #[test]

@@ -314,6 +314,7 @@ fn prop_kv_occupancy_and_accounting_invariants() {
             max_batch_tokens: cap,
             kv_budget_bytes: budget_tokens as f64,
             kv_bytes_per_token: 1.0,
+            prefill_chunk_tokens: 0,
         });
         let n = g.usize_in(1, 30);
         let mut reqs = Vec::new();
@@ -377,6 +378,98 @@ fn prop_kv_occupancy_and_accounting_invariants() {
         assert!(b.tokens_recomputed >= owed, "{} < {owed}", b.tokens_recomputed);
         for r in &b.finished {
             assert_eq!(progress[r.id as usize], r.output_tokens, "full output emitted");
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_prefill_conservation() {
+    // Chunked-prefill laws, for any chunk budget, token cap and KV budget:
+    //  (a) the sum of a request's first-time chunk tokens equals its
+    //      prompt (conservation — also pinned by a debug_assert at
+    //      retirement), and every request used at least
+    //      ceil(prompt / chunk) chunks;
+    //  (b) KV occupancy never exceeds the budget mid-chunk;
+    //  (c) progress stays monotone when preemption lands between chunks,
+    //      and landed prefill never exceeds its target.
+    property(60, |g| {
+        let chunk = g.usize_in(1, 64);
+        let budget_tokens = g.usize_in(32, 400);
+        let cap = if g.bool() { g.usize_in(16, 128) } else { 0 };
+        let mut b = Batcher::with_limits(BatchLimits {
+            max_batch_tokens: cap,
+            kv_budget_bytes: budget_tokens as f64,
+            kv_bytes_per_token: 1.0,
+            prefill_chunk_tokens: chunk,
+        });
+        let n = g.usize_in(1, 25);
+        let mut reqs = Vec::new();
+        for i in 0..n {
+            reqs.push(TraceRequest {
+                id: i as u64,
+                arrival_s: g.f64_in(0.0, 5.0),
+                prompt_tokens: g.usize_in(1, 120),
+                output_tokens: g.usize_in(1, 20),
+            });
+        }
+        reqs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let feasible_prompt: u64 = reqs
+            .iter()
+            .filter(|r| r.prompt_tokens + r.output_tokens <= budget_tokens)
+            .map(|r| r.prompt_tokens as u64)
+            .sum();
+        b.enqueue(&reqs);
+
+        let mut clock = 0.0f64;
+        let mut progress = vec![0usize; n];
+        let mut guard = 0;
+        while !b.idle() {
+            match b.next_iteration(clock) {
+                Some(_) => b.complete_iteration(clock + 0.02),
+                None => clock = b.next_arrival().unwrap_or(clock).max(clock),
+            }
+            clock += 0.05;
+            // (b) mid-chunk occupancy respects the budget.
+            assert!(
+                b.kv_bytes_in_use() <= budget_tokens as f64 + 1e-9,
+                "occupancy {} over budget {budget_tokens}",
+                b.kv_bytes_in_use()
+            );
+            // (c) monotone output progress; landed prefill <= target.
+            for r in &reqs {
+                if let Some(p) = b.progress_of(r.id) {
+                    let seen = &mut progress[r.id as usize];
+                    assert!(p >= *seen, "id {}: progress {p} < {}", r.id, *seen);
+                    *seen = p;
+                }
+                if let Some((landed, target)) = b.prefill_progress_of(r.id) {
+                    assert!(landed <= target, "id {}: {landed} > {target}", r.id);
+                }
+            }
+            guard += 1;
+            assert!(guard < 500_000, "chunked batcher must drain");
+        }
+
+        // (a) conservation at drain: first-time prefill tokens equal the
+        // admitted prompts exactly — recompute is ledgered separately —
+        // and chunk counts are bounded below by the chunk budget.
+        assert_eq!(b.tokens_prefilled, feasible_prompt);
+        assert_eq!(b.completed, b.admitted);
+        assert_eq!(b.resumes, b.preemptions);
+        for r in &b.finished {
+            assert_eq!(progress[r.id as usize], r.output_tokens);
+            let min_chunks = r.prompt_tokens.div_ceil(chunk) as u32;
+            assert!(
+                r.chunks >= min_chunks,
+                "id {}: {} chunks < ceil({}/{chunk})",
+                r.id,
+                r.chunks,
+                r.prompt_tokens
+            );
+            if r.preemptions == 0 && b.preemptions == 0 {
+                // Without churn anywhere, recompute never touches this run.
+                assert_eq!(b.tokens_recomputed, 0);
+            }
         }
     });
 }
