@@ -74,7 +74,7 @@ fn main() {
     println!("\n=== layer-level comparison: {} on {} ({seconds:.0}s diurnal trace) ===", model.name, dataset.name);
     let reports = run_paper_set(&model, &dataset, seconds, seed);
     for r in &reports {
-        series_summary(&model.name, &r.policy, &r.layer_cdf());
+        series_summary(&model.name, &r.policy, r.layer_latency());
         println!(
             "   cost {:8.1} GB·s | replicas/layer {:5.1} | completed {:4} reqs | warm {:.3}",
             r.cost_gb_s,

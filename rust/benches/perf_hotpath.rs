@@ -59,7 +59,7 @@ fn main() {
         cfg.seed = 9;
         let m = b.run(&format!("sim.run 20s {}", kind.name()), || run(&cfg));
         let r = run(&cfg);
-        let lfps = r.layer_forward_ms.len() as f64 / (m.mean_ns / 1e9);
+        let lfps = r.layer_forward.len() as f64 / (m.mean_ns / 1e9);
         println!("  -> {:.0} simulated layer-forwards/s ({} iters)", lfps, r.iterations);
     }
 }

@@ -7,6 +7,7 @@ use std::time::Instant;
 
 use moeless::baselines::PolicyKind;
 use moeless::config::{DatasetSpec, ModelSpec};
+use moeless::experiments::simperf;
 use moeless::router::{BatchLimits, Batcher};
 use moeless::sim::sweep::{run_sweep, SweepSpec};
 use moeless::sim::{run, SimConfig};
@@ -124,4 +125,22 @@ fn main() {
         par_s,
         seq_s / par_s.max(1e-9)
     );
+
+    // The saturated configuration: a simultaneous burst far over the KV
+    // budget — thousands of in-flight sequences with continuous
+    // preemption/resume churn, where the pre-PR4 core's per-iteration
+    // O(n) chain-sums, linear victim scans and positional queue inserts
+    // go quadratic. Measured against the frozen reference implementation
+    // on this machine; the same numbers land in BENCH_sim.json via
+    // `moeless bench --exp simperf`.
+    fig_header(
+        "PERF simcore",
+        "saturated drain — pre-PR4 reference core vs incrementally-indexed core",
+    );
+    for scale in ["quick", "saturated"] {
+        let r = simperf::measure_scale(scale);
+        for line in simperf::report_lines(&r) {
+            println!("{line}");
+        }
+    }
 }

@@ -19,10 +19,10 @@ pub fn fig17_ablation(scale: Scale) {
             cfg.base_rps = scale.base_rps;
             cfg.seed = scale.seed;
             let r = run(&cfg);
-            let cdf = r.layer_cdf();
-            series_summary(&model.name, &r.policy, &cdf);
+            let lat = r.layer_latency();
+            series_summary(&model.name, &r.policy, lat);
             for q in [25.0, 50.0, 75.0, 90.0, 99.0] {
-                println!("row {} {} p{q} {:.3}ms", model.name, r.policy, cdf.p(q));
+                println!("row {} {} p{q} {:.3}ms", model.name, r.policy, lat.p(q));
             }
             results.push(r);
         }

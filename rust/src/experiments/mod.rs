@@ -13,6 +13,7 @@ pub mod motivation;
 pub mod overall;
 pub mod prediction;
 pub mod sensitivity;
+pub mod simperf;
 pub mod tables;
 
 use crate::util::cli::Args;
@@ -60,6 +61,12 @@ impl Scale {
 pub fn run_from_cli(args: &Args) {
     let scale = if args.flag("full") { Scale::full() } else { Scale::from_env() };
     let exp = args.str("exp", "all");
+    if exp == "simperf" {
+        // The perf-trajectory harness takes its own flags
+        // (--quick/--floor-rps/--out) and writes BENCH_sim.json.
+        simperf::run_from_args(args);
+        return;
+    }
     run_experiment(&exp, scale);
 }
 

@@ -91,7 +91,7 @@ pub fn fig4_motivation(scale: Scale) {
         cfg.base_rps = scale.base_rps;
         cfg.seed = scale.seed;
         let r = run(&cfg);
-        series_summary("fig4-latency", r.policy.as_str(), &r.layer_cdf());
+        series_summary("fig4-latency", r.policy.as_str(), r.layer_latency());
         println!("row {} cost={:.1}GBs", r.policy, r.cost_gb_s);
         reports.push(r);
     }

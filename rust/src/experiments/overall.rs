@@ -23,10 +23,10 @@ pub fn fig8_9_forward(scale: Scale, dataset_name: &str) {
         fig_header(fig, &format!("MoE layer forward time CDF — {} on {}", model.name, dataset.name));
         let reports = run_paper_set(&model, &dataset, scale.duration_s, scale.seed);
         for r in &reports {
-            let cdf = r.layer_cdf();
-            series_summary(&format!("{}-{}", model.name, dataset.name), &r.policy, &cdf);
+            let lat = r.layer_latency();
+            series_summary(&format!("{}-{}", model.name, dataset.name), &r.policy, lat);
             for q in [10.0, 25.0, 50.0, 75.0, 90.0, 99.0] {
-                println!("row {} p{q} {:.3}ms", r.policy, cdf.p(q));
+                println!("row {} p{q} {:.3}ms", r.policy, lat.p(q));
             }
         }
         avg_meg.push(reports[0].mean_layer_ms());

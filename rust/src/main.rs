@@ -45,6 +45,10 @@ fn main() {
                           --disagg [--prefill-gpus N --link-gbps F] splits the\n\
                           cluster into prefill/decode pools with a billed KV handoff)\n\
                  bench   run one paper experiment (--exp fig1|fig3|...|table2)\n\
+                         or the perf-trajectory harness (--exp simperf\n\
+                         [--quick] [--floor-rps F] [--out PATH] — measures\n\
+                         the pre-PR4 reference core vs the optimized core\n\
+                         and writes BENCH_sim.json)\n\
                  report  print model/cluster inventory (Table 1)"
             );
             std::process::exit(2);

@@ -2,7 +2,7 @@
 //! evaluation measures, captured per run and rendered in the uniform
 //! bench-output format.
 
-use crate::util::stats::{Cdf, Summary};
+use crate::util::stats::{percentile_unsorted, Cdf, GaugeStats, MeanAcc, QuantileSketch};
 
 /// Per-request serving record — the request-level simulator's primitive.
 /// One is emitted when the continuous batcher retires a request (EOS /
@@ -79,21 +79,29 @@ impl SloSpec {
 
 /// Accumulated measurements of one serving run (one policy × model ×
 /// dataset × trace).
+///
+/// Memory discipline: per-layer-per-iteration and per-iteration gauges are
+/// *streaming* (fixed-size sketch / running accumulators), so the report
+/// is O(1) in simulated duration; only per-request populations
+/// (`requests`, `ttft_ms`, `e2e_ms`) are retained in full.
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {
     pub policy: String,
     pub model: String,
     pub dataset: String,
-    /// Every MoE layer forward latency (ms) across all layers/iterations —
-    /// the Figs. 8/9/17 CDF population.
-    pub layer_forward_ms: Vec<f64>,
+    /// MoE layer forward latencies (ms) across all layers/iterations —
+    /// the Figs. 8/9/17 CDF population, held as a fixed-size streaming
+    /// sketch (exact mean/min/max, ~1%-resolution percentiles) instead of
+    /// the unbounded push-vector it replaced.
+    pub layer_forward: QuantileSketch,
     /// §3.3 inference cost (GB·s): expert terms + misc terms.
     pub cost_gb_s: f64,
     /// Serverless keep-alive residency overhead (GB·s), reported alongside.
     pub residency_gb_s: f64,
-    /// Replica count charged per layer forward (Figs. 13-16 right axes).
-    pub replicas_per_layer: Vec<f64>,
-    pub pred_accuracy: Vec<f64>,
+    /// Replica count charged per layer forward (Figs. 13-16 right axes),
+    /// as a running mean.
+    pub replicas_per_layer: MeanAcc,
+    pub pred_accuracy: MeanAcc,
     /// Request-level SLO metrics: time-to-first-token and end-to-end
     /// latency per completed request (ms).
     pub ttft_ms: Vec<f64>,
@@ -110,12 +118,12 @@ pub struct RunReport {
     /// KV-cache budget the batcher was gated on (GB; infinite when
     /// unconstrained).
     pub kv_budget_gb: f64,
-    /// Per-iteration KV-cache utilization (bytes in use / budget; all
-    /// zeros when unconstrained).
-    pub kv_util: Vec<f64>,
-    /// Per-iteration admission-queue depth (pending arrivals + preempted
-    /// sequences awaiting resume).
-    pub queue_depth: Vec<f64>,
+    /// Per-iteration KV-cache utilization gauge (bytes in use / budget;
+    /// all zeros when unconstrained): running mean + peak.
+    pub kv_util: GaugeStats,
+    /// Per-iteration admission-queue depth gauge (pending arrivals +
+    /// preempted sequences awaiting resume): running mean + peak.
+    pub queue_depth: GaugeStats,
     /// Preemption events under KV pressure (youngest-first,
     /// recompute-on-resume).
     pub preemptions: u64,
@@ -154,23 +162,24 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    pub fn layer_cdf(&self) -> Cdf {
-        Cdf::of(self.layer_forward_ms.clone())
+    /// The layer-forward latency distribution (streaming sketch view).
+    pub fn layer_latency(&self) -> &QuantileSketch {
+        &self.layer_forward
     }
 
     pub fn mean_layer_ms(&self) -> f64 {
-        Summary::of(&self.layer_forward_ms).mean
+        self.layer_forward.mean()
     }
 
     pub fn mean_replicas(&self) -> f64 {
-        Summary::of(&self.replicas_per_layer).mean
+        self.replicas_per_layer.mean()
     }
 
     pub fn mean_pred_accuracy(&self) -> f64 {
         if self.pred_accuracy.is_empty() {
             1.0
         } else {
-            Summary::of(&self.pred_accuracy).mean
+            self.pred_accuracy.mean()
         }
     }
 
@@ -190,9 +199,11 @@ impl RunReport {
 
     /// Tail inter-token latency (ms) — the interference headline: a
     /// monolithic long-prompt prefill stalls every co-scheduled decode and
-    /// shows up here; chunked prefill keeps it flat.
+    /// shows up here; chunked prefill keeps it flat. Computed by selection
+    /// (no full sort).
     pub fn tpot_p99_ms(&self) -> f64 {
-        self.tpot_cdf().p(99.0)
+        let mut tpot: Vec<f64> = self.requests.iter().map(|r| r.tpot_ms()).collect();
+        percentile_unsorted(&mut tpot, 99.0)
     }
 
     /// Mean prefill chunks per completed request (1.0 under monolithic
@@ -219,18 +230,18 @@ impl RunReport {
     /// unlike [`RunReport::ttft_cdf`], which also counts requests still in
     /// flight at shutdown.
     pub fn request_slo_line(&self, slo: &SloSpec) -> String {
-        let t = Cdf::of(self.requests.iter().map(|r| r.ttft_ms()).collect());
-        let p = self.tpot_cdf();
+        let mut t: Vec<f64> = self.requests.iter().map(|r| r.ttft_ms()).collect();
+        let mut p: Vec<f64> = self.requests.iter().map(|r| r.tpot_ms()).collect();
         format!(
             "req policy={:<16} ttft p50={:.0}ms p95={:.0}ms p99={:.0}ms | \
              tpot p50={:.1}ms p95={:.1}ms p99={:.1}ms | goodput={:.2}req/s ({} completed)",
             self.policy,
-            t.p(50.0),
-            t.p(95.0),
-            t.p(99.0),
-            p.p(50.0),
-            p.p(95.0),
-            p.p(99.0),
+            percentile_unsorted(&mut t, 50.0),
+            percentile_unsorted(&mut t, 95.0),
+            percentile_unsorted(&mut t, 99.0),
+            percentile_unsorted(&mut p, 50.0),
+            percentile_unsorted(&mut p, 95.0),
+            percentile_unsorted(&mut p, 99.0),
             self.goodput_rps(slo),
             self.completed_requests,
         )
@@ -252,21 +263,42 @@ impl RunReport {
 
     /// Peak per-iteration KV-cache utilization (0 when unconstrained).
     pub fn peak_kv_util(&self) -> f64 {
-        self.kv_util.iter().cloned().fold(0.0, f64::max)
+        self.kv_util.peak
     }
 
     /// Peak admission-queue depth across iterations.
     pub fn peak_queue_depth(&self) -> f64 {
-        self.queue_depth.iter().cloned().fold(0.0, f64::max)
+        self.queue_depth.peak
     }
 
     /// Mean admission-queue depth across iterations.
     pub fn mean_queue_depth(&self) -> f64 {
-        if self.queue_depth.is_empty() {
-            0.0
-        } else {
-            Summary::of(&self.queue_depth).mean
-        }
+        self.queue_depth.mean()
+    }
+
+    /// Approximate resident bytes of this report (struct + retained
+    /// per-request vectors + the fixed-size sketch) — the memory metric
+    /// `bench --exp simperf` records as `peak_report_bytes`.
+    pub fn approx_bytes(&self) -> u64 {
+        use std::mem::size_of;
+        (size_of::<RunReport>()
+            + self.requests.capacity() * size_of::<RequestRecord>()
+            + (self.ttft_ms.capacity() + self.e2e_ms.capacity()) * size_of::<f64>()
+            + self.layer_forward.heap_bytes()
+            + self.policy.capacity()
+            + self.model.capacity()
+            + self.dataset.capacity()) as u64
+    }
+
+    /// Bytes the pre-streaming report layout would have held for this run:
+    /// the replaced push-vectors kept one f64 per layer-forward for
+    /// `layer_forward_ms`, `replicas_per_layer` and `pred_accuracy`, plus
+    /// one per iteration for `kv_util` and `queue_depth`. Derived, not
+    /// measured — the before/after memory row of `BENCH_sim.json`.
+    pub fn legacy_report_bytes(&self) -> u64 {
+        let per_layer = self.layer_forward.len() as u64;
+        self.approx_bytes() - self.layer_forward.heap_bytes() as u64
+            + 8 * (3 * per_layer + 2 * self.iterations)
     }
 
     /// One-line memory-pressure summary: KV budget/utilization, the
@@ -329,7 +361,7 @@ impl RunReport {
             self.model,
             self.dataset,
             self.mean_layer_ms(),
-            self.layer_cdf().p(99.0),
+            self.layer_forward.p(99.0),
             self.cost_gb_s,
             self.mean_replicas(),
             self.mean_pred_accuracy(),
@@ -360,9 +392,9 @@ mod tests {
     fn report_aggregates() {
         let r = RunReport {
             policy: "x".into(),
-            layer_forward_ms: vec![1.0, 2.0, 3.0],
-            replicas_per_layer: vec![8.0, 10.0],
-            pred_accuracy: vec![0.9, 0.8],
+            layer_forward: QuantileSketch::of(&[1.0, 2.0, 3.0]),
+            replicas_per_layer: MeanAcc::of(&[8.0, 10.0]),
+            pred_accuracy: MeanAcc::of(&[0.9, 0.8]),
             tokens_processed: 500,
             sim_duration_s: 10.0,
             ..Default::default()
@@ -372,6 +404,12 @@ mod tests {
         assert!((r.mean_pred_accuracy() - 0.85).abs() < 1e-12);
         assert!((r.tokens_per_s() - 50.0).abs() < 1e-12);
         assert!(r.summary_line().contains("policy=x"));
+        assert_eq!(r.layer_latency().len(), 3);
+        assert!(r.layer_latency().p(99.0) <= 3.0 + 1e-12);
+        // The streaming report is O(1) in duration: its footprint is the
+        // fixed sketch + retained per-request vectors only.
+        assert!(r.approx_bytes() > 0);
+        assert!(r.legacy_report_bytes() >= r.approx_bytes() - r.layer_forward.heap_bytes() as u64);
     }
 
     #[test]
@@ -379,8 +417,8 @@ mod tests {
         let r = RunReport {
             policy: "x".into(),
             kv_budget_gb: 12.0,
-            kv_util: vec![0.2, 0.9, 0.5],
-            queue_depth: vec![0.0, 4.0, 2.0],
+            kv_util: GaugeStats::of(&[0.2, 0.9, 0.5]),
+            queue_depth: GaugeStats::of(&[0.0, 4.0, 2.0]),
             preemptions: 3,
             resumes: 3,
             rejected_requests: 1,

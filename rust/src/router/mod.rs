@@ -57,8 +57,34 @@
 //! that sequence's first token (TTFT) by the transfer time; transferred
 //! bytes accumulate in `kv_transfer_bytes`. The transfer overlaps with
 //! compute — it delays the transferring request, not the iteration clock.
+//!
+//! # Allocation-lean indexing (PR 4)
+//!
+//! The batcher is the request-path hot loop, so its bookkeeping is
+//! incremental rather than recomputed:
+//!
+//! * **KV ledger**: `kv_tokens_in_use` is a running counter updated at
+//!   chunk-land / decode / preempt / retire, not a chain-sum over
+//!   `active ∪ fresh ∪ transferring` on every admission check.
+//! * **Ordered indexes**: decoding sequences live in a `BTreeMap` keyed by
+//!   `(arrival_s, id)` (bit-packed — valid because [`enqueue`]
+//!   (Batcher::enqueue) rejects non-finite/negative arrivals), so the
+//!   preemption victim is the last key, O(log n) instead of a linear
+//!   max-scan; mid-prefill sequences carry a monotone admission stamp
+//!   (FIFO chunk continuation) plus the same ordered side-index; the
+//!   resume queue is a `BTreeMap` in `(arrival_s, id)` order, replacing
+//!   the positional `Vec` insert.
+//! * **Map-backed progress**: `progress_of` / `prefill_progress_of`
+//!   resolve through a per-id locator map instead of scanning every
+//!   state set.
+//!
+//! The pre-PR-4 implementation is retained verbatim as [`reference`]; the
+//! golden-equivalence suite asserts the two produce identical outputs and
+//! `bench --exp simperf` measures them side by side.
 
-use std::collections::VecDeque;
+pub mod reference;
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use crate::metrics::RequestRecord;
 use crate::workload::TraceRequest;
@@ -119,6 +145,14 @@ impl IterationBatch {
     }
 }
 
+/// Age-ordering key: `(arrival_s.to_bits(), id)`. For finite non-negative
+/// floats the IEEE-754 bit pattern orders exactly like the number, so the
+/// tuple orders by arrival time with the id as tie-break — precisely the
+/// `(arrival_s, id)` preemption/resume order, but `Ord` (no
+/// `partial_cmp().unwrap()` on the hot path). [`Batcher::enqueue`]
+/// enforces the domain (finite, >= 0, -0.0 normalized).
+type SeqKey = (u64, u64);
+
 /// In-flight sequence state.
 #[derive(Clone, Copy, Debug)]
 struct Active {
@@ -160,6 +194,10 @@ struct Active {
 }
 
 impl Active {
+    fn key(&self) -> SeqKey {
+        (self.arrival_s.to_bits(), self.id)
+    }
+
     /// Output tokens emitted so far.
     fn emitted(&self) -> usize {
         self.output_tokens - self.remaining_out
@@ -178,26 +216,61 @@ impl Active {
     }
 }
 
+/// Where a known request id currently lives (the `progress_of` locator).
+#[derive(Clone, Copy, Debug)]
+enum Loc {
+    /// Queued, not yet admitted.
+    Pending,
+    /// Prefill phase, keyed by its admission stamp in `fresh`.
+    Fresh(u64),
+    /// Decoding, keyed by `(arrival bits, id)` in `active`.
+    Active(SeqKey),
+    /// Preempted, awaiting resume in `requeued`.
+    Requeued(SeqKey),
+    /// KV handoff in flight (small set; resolved by scan).
+    Transferring,
+    /// Retired with this many output tokens.
+    Finished(usize),
+}
+
 /// The continuous batcher: admission queue + in-flight set + KV ledger.
 #[derive(Debug, Default)]
 pub struct Batcher {
     limits: BatchLimits,
     pending: VecDeque<TraceRequest>,
-    /// Preempted sequences awaiting re-admission, kept in arrival order;
-    /// they re-enter ahead of `pending` (they arrived no later than
-    /// anything still queued).
-    requeued: VecDeque<Active>,
-    active: Vec<Active>,
-    /// Prefill-phase sequences: admitted, but their (first or resumed)
-    /// token only comes when the last prefill chunk completes — they join
-    /// decode from the *next* iteration. Monolithic prefill drains this
-    /// every iteration; chunked prefill keeps partially-landed sequences
-    /// here across iterations, FIFO.
-    fresh: Vec<Active>,
+    /// Preempted sequences awaiting re-admission, ordered by
+    /// `(arrival_s, id)`; they re-enter ahead of `pending` (they arrived
+    /// no later than anything still queued).
+    requeued: BTreeMap<SeqKey, Active>,
+    /// Decoding sequences, ordered by `(arrival_s, id)` — the preemption
+    /// victim is always the last key.
+    active: BTreeMap<SeqKey, Active>,
+    /// Prefill-phase sequences keyed by a monotone admission stamp:
+    /// iteration order is exactly the FIFO chunk-continuation order.
+    /// Monolithic prefill drains this every iteration; chunked prefill
+    /// keeps partially-landed sequences here across iterations.
+    fresh: BTreeMap<u64, Active>,
+    /// Age index over `fresh`: `(arrival_s, id)` -> admission stamp, for
+    /// O(log n) youngest-victim lookup.
+    fresh_index: BTreeMap<SeqKey, u64>,
+    /// Next admission stamp (monotone across the run).
+    admit_stamp: u64,
     /// Sequences whose prefill completed but whose KV is still in flight
     /// to the decode pool (disaggregated mode): they hold cache but join
     /// decode only once `ready_s` passes.
     transferring: Vec<Active>,
+    /// Running KV ledger: tokens materialized across
+    /// `active ∪ fresh ∪ transferring`, updated incrementally at
+    /// chunk-land / decode / preempt / retire.
+    kv_tokens_held: usize,
+    /// Per-id locator for `progress_of` / `prefill_progress_of`.
+    loc: HashMap<u64, Loc>,
+    /// Scratch (reused across iterations, no per-iteration allocation).
+    retire_keys: Vec<SeqKey>,
+    fresh_done: Vec<u64>,
+    /// Debug-build ledger-audit counter (the O(n) recount cross-check runs
+    /// on a 1-in-64 sample so debug perf measurements stay meaningful).
+    ledger_audit_tick: u64,
     /// Seconds to ship one KV byte from the prefill pool to the decode
     /// pool at phase handoff (0 = colocated, no transfer).
     kv_transfer_s_per_byte: f64,
@@ -266,12 +339,31 @@ impl Batcher {
     /// machinery treats "no prefill and no decode" as idle, so a 0-token
     /// phase could never complete (the workload generators already clamp
     /// to >= 1).
+    ///
+    /// Arrivals are validated here: a NaN, infinite or negative
+    /// `arrival_s` poisons every age-ordered structure downstream (the
+    /// preemption and resume orders), so a malformed trace is rejected at
+    /// the door with a panic naming the offending request instead of
+    /// corrupting scheduling order later. `-0.0` is normalized to `+0.0`
+    /// so the bit-packed ordering key agrees with numeric order.
     pub fn enqueue(&mut self, reqs: &[TraceRequest]) {
-        self.pending.extend(reqs.iter().map(|r| TraceRequest {
-            prompt_tokens: r.prompt_tokens.max(1),
-            output_tokens: r.output_tokens.max(1),
-            ..*r
-        }));
+        for r in reqs {
+            assert!(
+                r.arrival_s.is_finite() && r.arrival_s >= 0.0,
+                "Batcher::enqueue: request {} has arrival_s = {} — arrivals must be \
+                 finite and non-negative (poisoned trace rejected)",
+                r.id,
+                r.arrival_s
+            );
+            let arrival_s = if r.arrival_s == 0.0 { 0.0 } else { r.arrival_s };
+            self.loc.insert(r.id, Loc::Pending);
+            self.pending.push_back(TraceRequest {
+                arrival_s,
+                prompt_tokens: r.prompt_tokens.max(1),
+                output_tokens: r.output_tokens.max(1),
+                ..*r
+            });
+        }
     }
 
     pub fn pending_len(&self) -> usize {
@@ -313,40 +405,58 @@ impl Batcher {
     }
 
     /// KV-cache entries currently materialized across in-flight sequences
-    /// (in-transit phase-handoff KV counts once).
+    /// (in-transit phase-handoff KV counts once). O(1): a running counter,
+    /// not a chain-sum (`recount_kv` cross-checks it in debug builds).
     pub fn kv_tokens_in_use(&self) -> usize {
+        self.kv_tokens_held
+    }
+
+    /// KV-cache bytes currently materialized.
+    pub fn kv_bytes_in_use(&self) -> f64 {
+        self.kv_tokens_held as f64 * self.limits.kv_bytes_per_token
+    }
+
+    /// The O(n) recount the incremental ledger replaced — audit use only
+    /// (sampled debug cross-check + the ledger unit test).
+    fn recount_kv(&self) -> usize {
         self.active
-            .iter()
-            .chain(self.fresh.iter())
+            .values()
+            .chain(self.fresh.values())
             .chain(self.transferring.iter())
             .map(|a| a.kv_tokens)
             .sum()
     }
 
-    /// KV-cache bytes currently materialized.
-    pub fn kv_bytes_in_use(&self) -> f64 {
-        self.kv_tokens_in_use() as f64 * self.limits.kv_bytes_per_token
+    /// Debug-build ledger audit: cross-check the running counter against
+    /// the O(n) recount on a 1-in-64 sample of calls. Sampled so that
+    /// debug-build perf measurements (the tier-1 `perf_trajectory` gate)
+    /// are not dominated by the audit itself; the per-step exactness is
+    /// separately pinned by `kv_ledger_matches_recount_under_churn` and
+    /// the golden-equivalence lockstep. Compiled out of release builds.
+    fn audit_ledger(&mut self) {
+        if cfg!(debug_assertions) {
+            self.ledger_audit_tick = self.ledger_audit_tick.wrapping_add(1);
+            if self.ledger_audit_tick & 63 == 0 {
+                assert_eq!(self.kv_tokens_held, self.recount_kv(), "KV ledger out of sync");
+            }
+        }
     }
 
     /// Output tokens emitted so far for request `id`: 0 while queued or
     /// prefilling, the full output once finished, `None` for unknown ids.
     /// Monotone over a request's lifetime — preemption never rolls
-    /// progress back.
+    /// progress back. Map-backed: O(log n) via the per-id locator.
     pub fn progress_of(&self, id: u64) -> Option<usize> {
-        if let Some(a) = self
-            .active
-            .iter()
-            .chain(self.fresh.iter())
-            .chain(self.transferring.iter())
-            .chain(self.requeued.iter())
-            .find(|a| a.id == id)
-        {
-            return Some(a.emitted());
+        match self.loc.get(&id)? {
+            Loc::Pending => Some(0),
+            Loc::Fresh(stamp) => self.fresh.get(stamp).map(|a| a.emitted()),
+            Loc::Active(k) => self.active.get(k).map(|a| a.emitted()),
+            Loc::Requeued(k) => self.requeued.get(k).map(|a| a.emitted()),
+            Loc::Transferring => {
+                self.transferring.iter().find(|a| a.id == id).map(|a| a.emitted())
+            }
+            Loc::Finished(out) => Some(*out),
         }
-        if self.pending.iter().any(|r| r.id == id) {
-            return Some(0);
-        }
-        self.finished.iter().find(|r| r.id == id).map(|r| r.output_tokens)
     }
 
     /// Prefill progress of request `id`: `(kv tokens landed, prefill
@@ -354,7 +464,10 @@ impl Batcher {
     /// chunk-conservation observable: landed never exceeds the target and
     /// only moves forward between preemptions.
     pub fn prefill_progress_of(&self, id: u64) -> Option<(usize, usize)> {
-        self.fresh.iter().find(|a| a.id == id).map(|a| (a.kv_tokens, a.prefill_target))
+        match self.loc.get(&id)? {
+            Loc::Fresh(stamp) => self.fresh.get(stamp).map(|a| (a.kv_tokens, a.prefill_target)),
+            _ => None,
+        }
     }
 
     /// Earliest instant new work becomes available (for clock jumps when
@@ -364,7 +477,7 @@ impl Batcher {
     /// when nothing is running: a fully-preempted state cannot stall), and
     /// KV-transfer completion times of sequences mid-handoff.
     pub fn next_arrival(&self) -> Option<f64> {
-        let requeued = self.requeued.front().map(|a| a.arrival_s);
+        let requeued = self.requeued.values().next().map(|a| a.arrival_s);
         let pending = self.pending.front().map(|r| r.arrival_s);
         let ready = self.next_transfer_ready().unwrap_or(f64::INFINITY);
         let queued = match (requeued, pending) {
@@ -382,37 +495,32 @@ impl Batcher {
     /// Preempt the youngest in-flight sequence (decode or mid-prefill),
     /// adjusting `projected` by the KV it frees. Returns false when no
     /// victim may be taken (the oldest survivor is never preempted).
+    /// O(log n): the victim is the last key of the age-ordered indexes.
     fn preempt_youngest(&mut self, projected: &mut usize) -> bool {
         if self.active.len() + self.fresh.len() <= 1 {
             return false;
         }
-        let key = |a: &Active| (a.arrival_s, a.id);
-        let youngest_active = self
-            .active
-            .iter()
-            .enumerate()
-            .max_by(|(_, a), (_, b)| key(a).partial_cmp(&key(b)).unwrap())
-            .map(|(i, a)| (i, key(a)));
-        let youngest_fresh = self
-            .fresh
-            .iter()
-            .enumerate()
-            .max_by(|(_, a), (_, b)| key(a).partial_cmp(&key(b)).unwrap())
-            .map(|(i, a)| (i, key(a)));
+        let youngest_active = self.active.keys().next_back().copied();
+        let youngest_fresh = self.fresh_index.iter().next_back().map(|(k, s)| (*k, *s));
         let from_fresh = match (youngest_active, youngest_fresh) {
-            (Some((_, ka)), Some((_, kf))) => kf > ka,
+            (Some(ka), Some((kf, _))) => kf > ka,
             (None, Some(_)) => true,
             _ => false,
         };
         let mut a = if from_fresh {
-            let (i, _) = youngest_fresh.unwrap();
-            *projected -= self.fresh[i].kv_tokens;
-            // `remove` keeps the FIFO chunk-continuation order intact.
-            self.fresh.remove(i)
+            let (kf, stamp) = youngest_fresh.unwrap();
+            self.fresh_index.remove(&kf);
+            let a = self.fresh.remove(&stamp).expect("fresh_index in sync with fresh");
+            *projected -= a.kv_tokens;
+            a
         } else {
-            let (i, _) = youngest_active.unwrap();
-            *projected -= self.active[i].kv_tokens + 1;
-            self.active.swap_remove(i)
+            let ka = match youngest_active {
+                Some(k) => k,
+                None => return false,
+            };
+            let a = self.active.remove(&ka).expect("key just observed");
+            *projected -= a.kv_tokens + 1;
+            a
         };
         // The high-water mark is what the resume must recompute: a decoding
         // sequence reprocesses prompt + emitted (the last emitted token is
@@ -423,15 +531,13 @@ impl Batcher {
         } else {
             a.processed_hwm.max(a.prompt_tokens + a.emitted())
         };
+        self.kv_tokens_held -= a.kv_tokens;
         a.kv_tokens = 0;
         a.preemptions += 1;
         self.preemptions += 1;
-        let pos = self
-            .requeued
-            .iter()
-            .position(|r| (r.arrival_s, r.id) > (a.arrival_s, a.id))
-            .unwrap_or(self.requeued.len());
-        self.requeued.insert(pos, a);
+        let k = a.key();
+        self.loc.insert(a.id, Loc::Requeued(k));
+        self.requeued.insert(k, a);
         true
     }
 
@@ -456,28 +562,25 @@ impl Batcher {
         while t < self.transferring.len() {
             if self.transferring[t].ready_s <= now_s + 1e-12 {
                 let a = self.transferring.swap_remove(t);
-                self.active.push(a);
+                let k = a.key();
+                self.loc.insert(a.id, Loc::Active(k));
+                self.active.insert(k, a);
             } else {
                 t += 1;
             }
         }
 
         // Decode growth: each decoding sequence appends one token's KV this
-        // iteration, on top of the KV held by mid-prefill sequences. If the
-        // total exceeds the budget, preempt the youngest sequences (never
-        // the oldest — forward progress is guaranteed). When nothing is
-        // decoding but chunked prefills are parked on zero headroom, demand
-        // one spare token of room so the oldest prefill can always land a
-        // chunk (two half-prefilled prompts jointly filling the budget
-        // would otherwise deadlock).
+        // iteration, on top of the KV held by mid-prefill sequences. The
+        // running ledger makes the projection O(1): held tokens + one per
+        // decoding sequence. If the total exceeds the budget, preempt the
+        // youngest sequences (never the oldest — forward progress is
+        // guaranteed). When nothing is decoding but chunked prefills are
+        // parked on zero headroom, demand one spare token of room so the
+        // oldest prefill can always land a chunk (two half-prefilled
+        // prompts jointly filling the budget would otherwise deadlock).
         let mut preempted = 0usize;
-        let mut kv_projected: usize = self.active.iter().map(|a| a.kv_tokens + 1).sum::<usize>()
-            + self
-                .fresh
-                .iter()
-                .chain(self.transferring.iter())
-                .map(|a| a.kv_tokens)
-                .sum::<usize>();
+        let mut kv_projected: usize = self.kv_tokens_held + self.active.len();
         if kv_gated {
             loop {
                 let min_room = usize::from(self.active.is_empty() && !self.fresh.is_empty());
@@ -505,12 +608,14 @@ impl Batcher {
         };
 
         // Continue in-progress prefills first (they already hold KV;
-        // finishing them frees the phase pipeline), FIFO.
+        // finishing them frees the phase pipeline), FIFO by admission
+        // stamp.
         if chunk > 0 {
             let mut recomputed = 0u64;
             let mut prefilled = 0u64;
             let mut landed = 0u64;
-            for a in &mut self.fresh {
+            let mut kv_added = 0usize;
+            for a in self.fresh.values_mut() {
                 if chunk_left == 0 {
                     break;
                 }
@@ -528,6 +633,7 @@ impl Batcher {
                 recomputed += r;
                 prefilled += f;
                 landed += 1;
+                kv_added += take;
                 prefill += take;
                 kv_projected += take;
                 chunk_left -= take;
@@ -535,6 +641,7 @@ impl Batcher {
             self.tokens_recomputed += recomputed;
             self.tokens_prefilled += prefilled;
             self.chunks_landed += landed;
+            self.kv_tokens_held += kv_added;
         }
 
         // Admission: resumed sequences first (they arrived no later than
@@ -544,7 +651,7 @@ impl Batcher {
                 break;
             }
             let resume = !self.requeued.is_empty();
-            let need_tokens = if let Some(a) = self.requeued.front() {
+            let need_tokens = if let Some(a) = self.requeued.values().next() {
                 a.prompt_tokens + a.emitted()
             } else if let Some(r) = self.pending.front() {
                 if r.arrival_s > now_s {
@@ -553,7 +660,8 @@ impl Batcher {
                 // Peak KV demand (prompt + full output) can never fit:
                 // reject outright rather than deadlock the queue.
                 if kv_gated && ((r.prompt_tokens + r.output_tokens) as f64) * bpt > budget + 1e-9 {
-                    self.pending.pop_front();
+                    let dropped = self.pending.pop_front().expect("front just observed");
+                    self.loc.remove(&dropped.id);
                     self.rejected += 1;
                     continue;
                 }
@@ -603,12 +711,13 @@ impl Batcher {
             };
 
             let mut a = if resume {
-                let mut a = self.requeued.pop_front().unwrap();
+                let k = *self.requeued.keys().next().expect("resume checked non-empty");
+                let mut a = self.requeued.remove(&k).expect("key just observed");
                 a.prefill_target = a.prompt_tokens + a.emitted();
                 self.resumes += 1;
                 a
             } else {
-                let r = self.pending.pop_front().unwrap();
+                let r = self.pending.pop_front().expect("front just observed");
                 self.admitted += 1;
                 Active {
                     id: r.id,
@@ -631,12 +740,18 @@ impl Batcher {
             self.tokens_recomputed += r;
             self.tokens_prefilled += f;
             self.chunks_landed += 1;
+            self.kv_tokens_held += take;
             prefill += take;
             kv_projected += take;
             chunk_left = chunk_left.saturating_sub(take);
-            self.fresh.push(a);
+            let stamp = self.admit_stamp;
+            self.admit_stamp += 1;
+            self.loc.insert(a.id, Loc::Fresh(stamp));
+            self.fresh_index.insert(a.key(), stamp);
+            self.fresh.insert(stamp, a);
         }
 
+        self.audit_ledger();
         if prefill == 0 && decode == 0 {
             // No prefill and nothing decoding. Chunked mid-prefill
             // sequences cannot be parked here: the preemption pass
@@ -668,23 +783,38 @@ impl Batcher {
     /// link is configured) and join the decode set. Partially-prefilled
     /// sequences stay for the next iteration's chunks.
     pub fn complete_iteration(&mut self, now_s: f64) {
-        let mut i = 0;
-        while i < self.active.len() {
-            self.active[i].kv_tokens += 1;
-            self.active[i].remaining_out -= 1;
-            if self.active[i].remaining_out == 0 {
-                let a = self.active.swap_remove(i);
-                self.retire(a, now_s);
-            } else {
-                i += 1;
+        // Decode: each active sequence appends one KV entry and emits one
+        // token; sequences reaching their output length retire.
+        self.kv_tokens_held += self.active.len();
+        let mut retire_keys = std::mem::take(&mut self.retire_keys);
+        retire_keys.clear();
+        for (k, a) in self.active.iter_mut() {
+            a.kv_tokens += 1;
+            a.remaining_out -= 1;
+            if a.remaining_out == 0 {
+                retire_keys.push(*k);
             }
         }
-        let fresh = std::mem::take(&mut self.fresh);
-        for mut f in fresh {
-            if f.kv_tokens < f.prefill_target {
-                self.fresh.push(f); // still mid-prefill (chunked)
-                continue;
+        for k in &retire_keys {
+            let a = self.active.remove(k).expect("retire key just collected");
+            self.kv_tokens_held -= a.kv_tokens;
+            self.retire(a, now_s);
+        }
+        retire_keys.clear();
+        self.retire_keys = retire_keys;
+
+        // Prefill completions, FIFO by admission stamp (identical to the
+        // pre-index drain order).
+        let mut fresh_done = std::mem::take(&mut self.fresh_done);
+        fresh_done.clear();
+        for (stamp, f) in self.fresh.iter() {
+            if f.kv_tokens >= f.prefill_target {
+                fresh_done.push(*stamp);
             }
+        }
+        for stamp in &fresh_done {
+            let mut f = self.fresh.remove(stamp).expect("done stamp just collected");
+            self.fresh_index.remove(&f.key());
             // The completing prefill emits one token (the first, or — on
             // resume — the next). Saturating: outputs are clamped >= 1 at
             // enqueue, so this only guards hand-built state.
@@ -706,16 +836,23 @@ impl Batcher {
                 self.ttft_ms.push((t - f.arrival_s).max(0.0) * 1e3);
             }
             if f.remaining_out == 0 {
+                self.kv_tokens_held -= f.kv_tokens;
                 self.retire(f, t);
             } else if t > now_s {
                 // KV still in flight to the decode pool: hold the sequence
                 // out of decode until the transfer lands.
                 f.ready_s = t;
+                self.loc.insert(f.id, Loc::Transferring);
                 self.transferring.push(f);
             } else {
-                self.active.push(f);
+                let k = f.key();
+                self.loc.insert(f.id, Loc::Active(k));
+                self.active.insert(k, f);
             }
         }
+        fresh_done.clear();
+        self.fresh_done = fresh_done;
+        self.audit_ledger();
     }
 
     /// A request reached its EOS / length limit: record its metrics and
@@ -726,6 +863,7 @@ impl Batcher {
             "chunk conservation: first-time chunk tokens must sum to the prompt"
         );
         self.completed += 1;
+        self.loc.insert(a.id, Loc::Finished(a.output_tokens));
         self.e2e_ms.push((now_s - a.arrival_s).max(0.0) * 1e3);
         self.finished.push(RequestRecord {
             id: a.id,
@@ -984,6 +1122,10 @@ mod tests {
         drain(&mut b, 0.1);
         assert_eq!(b.completed, 1);
         assert_eq!(b.admitted, 1);
+        // The rejected request vanishes from the progress map, like the
+        // pre-index scan behavior (not in any queue, never finished).
+        assert_eq!(b.progress_of(0), None);
+        assert_eq!(b.progress_of(1), Some(3));
     }
 
     #[test]
@@ -1231,5 +1373,112 @@ mod tests {
             let m = mono.finished.iter().find(|x| x.id == r.id).unwrap();
             assert_eq!(r.output_tokens, m.output_tokens);
         }
+    }
+
+    // -----------------------------------------------------------------
+    // PR 4: arrival validation + incremental-index invariants.
+    // -----------------------------------------------------------------
+
+    #[test]
+    #[should_panic(expected = "poisoned trace rejected")]
+    fn enqueue_rejects_nan_arrival() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(0, f64::NAN, 10, 2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "poisoned trace rejected")]
+    fn enqueue_rejects_negative_arrival() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(0, -1.0, 10, 2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "poisoned trace rejected")]
+    fn enqueue_rejects_infinite_arrival() {
+        let mut b = Batcher::new();
+        b.enqueue(&[req(0, f64::INFINITY, 10, 2)]);
+    }
+
+    #[test]
+    fn poisoned_tail_rejected_before_corrupting_order() {
+        // A trace that goes bad mid-stream: the batcher must refuse at
+        // enqueue (panic above) rather than let a NaN arrival poison the
+        // (arrival, id) preemption order. A *valid* prefix fed earlier
+        // stays schedulable.
+        let mut b = Batcher::with_limits(kv_limits(25));
+        b.enqueue(&[req(0, 0.0, 10, 10), req(1, 0.0, 10, 10)]);
+        let poisoned = [req(2, f64::NAN, 5, 5)];
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            b.enqueue(&poisoned);
+        }));
+        assert!(panicked.is_err(), "NaN arrival must be rejected");
+        // The earlier, valid requests still drain with preemption churn —
+        // the ordered indexes were never poisoned.
+        drain(&mut b, 0.0);
+        assert_eq!(b.completed, 2);
+        assert!(b.preemptions >= 1);
+    }
+
+    #[test]
+    fn negative_zero_arrival_is_normalized() {
+        // -0.0 passes the >= 0.0 gate but its sign bit would invert the
+        // bit-packed ordering; enqueue normalizes it to +0.0.
+        let mut b = Batcher::with_limits(kv_limits(25));
+        b.enqueue(&[req(0, -0.0, 10, 10), req(1, 0.0, 10, 10)]);
+        drain(&mut b, 0.0);
+        assert_eq!(b.completed, 2);
+        // id 0 is the older sequence (tie on arrival, lower id): it is
+        // never preempted.
+        let r0 = b.finished.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(r0.preemptions, 0);
+        assert!((r0.arrival_s - 0.0).abs() == 0.0 && r0.arrival_s.is_sign_positive());
+    }
+
+    #[test]
+    fn kv_ledger_matches_recount_under_churn() {
+        // The running counter must agree with the O(n) chain-sum it
+        // replaced at every observation point of a churny drain
+        // (admissions, chunked prefill, preemption, resume, retirement).
+        let mut b = Batcher::with_limits(chunk_limits(16, 60.0));
+        b.enqueue(&[
+            req(0, 0.0, 30, 8),
+            req(1, 0.1, 25, 6),
+            req(2, 0.2, 20, 10),
+            req(3, 0.3, 40, 3),
+        ]);
+        let mut clock = 0.0;
+        let mut guard = 0;
+        while !b.idle() {
+            match b.next_iteration(clock) {
+                Some(_) => b.complete_iteration(clock + 0.05),
+                None => clock = b.next_arrival().unwrap_or(clock).max(clock),
+            }
+            assert_eq!(b.kv_tokens_in_use(), b.recount_kv(), "ledger drifted");
+            clock += 0.05;
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert_eq!(b.completed, 4);
+        assert_eq!(b.kv_tokens_in_use(), 0);
+        assert_eq!(b.recount_kv(), 0);
+    }
+
+    #[test]
+    fn resume_order_is_oldest_first() {
+        // Three same-arrival sequences under a budget that forces the two
+        // youngest out: resumes must come back in (arrival, id) order —
+        // the ordered requeue index replacing the positional insert.
+        let mut b = Batcher::with_limits(kv_limits(40));
+        b.enqueue(&[req(0, 0.0, 10, 12), req(1, 0.0, 10, 12), req(2, 0.0, 10, 12)]);
+        drain(&mut b, 0.0);
+        assert_eq!(b.completed, 3);
+        assert!(b.preemptions >= 2, "budget forces repeated eviction");
+        let by_id = |id: u64| b.finished.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).preemptions, 0, "oldest never preempted");
+        // Younger ids bear at least as many preemptions as older ones.
+        assert!(by_id(2).preemptions >= by_id(1).preemptions);
+        // Every preemption resumed and finished.
+        assert_eq!(b.resumes, b.preemptions);
     }
 }

@@ -1,0 +1,491 @@
+//! The pre-PR-4 continuous batcher, kept as a **reference
+//! implementation**.
+//!
+//! PR 4 rewrote [`super::Batcher`] for throughput: incremental KV
+//! accounting, ordered `(arrival_s, id)` indexes for preemption and the
+//! resume queue, and map-backed progress lookups. The rewrite must be
+//! *behavior-preserving*: same admissions, same preemption victims, same
+//! iteration compositions, same per-request records, bit for bit. This
+//! module is the executable specification of "same": the naive
+//! chain-summing, linear-scanning core exactly as it shipped before the
+//! rewrite.
+//!
+//! Two consumers:
+//! * the golden-equivalence suite (`tests/golden_equivalence.rs`) drives
+//!   both batchers through identical traces and asserts identical
+//!   outputs;
+//! * `bench --exp simperf` measures both on the same machine, so
+//!   `BENCH_sim.json` always carries honest before/after numbers.
+//!
+//! Keep this file frozen: it changes only if the *intended semantics* of
+//! the batcher change, in which case both implementations move together.
+
+use std::collections::VecDeque;
+
+use crate::metrics::RequestRecord;
+use crate::workload::TraceRequest;
+
+use super::{BatchLimits, IterationBatch};
+
+/// In-flight sequence state (pre-PR-4 layout).
+#[derive(Clone, Copy, Debug)]
+struct Active {
+    id: u64,
+    arrival_s: f64,
+    first_token_s: f64,
+    started: bool,
+    prompt_tokens: usize,
+    output_tokens: usize,
+    remaining_out: usize,
+    kv_tokens: usize,
+    ready_s: f64,
+    prefill_target: usize,
+    processed_hwm: usize,
+    prompt_landed: usize,
+    chunks: u32,
+    preemptions: u32,
+}
+
+impl Active {
+    fn emitted(&self) -> usize {
+        self.output_tokens - self.remaining_out
+    }
+
+    fn land_chunk(&mut self, take: usize) -> (u64, u64) {
+        let off = self.kv_tokens;
+        let recomp = take.min(self.processed_hwm.saturating_sub(off));
+        self.kv_tokens += take;
+        self.processed_hwm = self.processed_hwm.max(self.kv_tokens);
+        self.prompt_landed += take - recomp;
+        self.chunks += 1;
+        (recomp as u64, (take - recomp) as u64)
+    }
+}
+
+/// The pre-PR-4 continuous batcher: admission queue + in-flight set + KV
+/// ledger, with O(n) chain-sums and linear scans on the hot path.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    limits: BatchLimits,
+    pending: VecDeque<TraceRequest>,
+    requeued: VecDeque<Active>,
+    active: Vec<Active>,
+    fresh: Vec<Active>,
+    transferring: Vec<Active>,
+    kv_transfer_s_per_byte: f64,
+    pub admitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub delayed_admissions: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    pub chunks_landed: u64,
+    pub kv_transfer_bytes: f64,
+    pub tokens_prefilled: u64,
+    pub tokens_decoded: u64,
+    pub tokens_recomputed: u64,
+    pub ttft_ms: Vec<f64>,
+    pub e2e_ms: Vec<f64>,
+    pub finished: Vec<RequestRecord>,
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher::default()
+    }
+
+    pub fn with_limits(limits: BatchLimits) -> Batcher {
+        Batcher { limits, ..Batcher::default() }
+    }
+
+    pub fn with_transfer_link(mut self, link_gbps: f64) -> Batcher {
+        assert!(
+            link_gbps.is_finite() && link_gbps > 0.0,
+            "transfer link must be a positive finite GB/s (got {link_gbps})"
+        );
+        self.kv_transfer_s_per_byte = 1.0 / (link_gbps * 1e9);
+        self
+    }
+
+    pub fn enqueue(&mut self, reqs: &[TraceRequest]) {
+        self.pending.extend(reqs.iter().map(|r| TraceRequest {
+            prompt_tokens: r.prompt_tokens.max(1),
+            output_tokens: r.output_tokens.max(1),
+            ..*r
+        }));
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn requeued_len(&self) -> usize {
+        self.requeued.len()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.pending.len() + self.requeued.len()
+    }
+
+    pub fn transferring_len(&self) -> usize {
+        self.transferring.len()
+    }
+
+    pub fn next_transfer_ready(&self) -> Option<f64> {
+        self.transferring.iter().map(|a| a.ready_s).reduce(f64::min)
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.active.len() + self.fresh.len() + self.transferring.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.pending.is_empty()
+            && self.requeued.is_empty()
+            && self.active.is_empty()
+            && self.fresh.is_empty()
+            && self.transferring.is_empty()
+    }
+
+    /// KV entries in use, chain-summed over every in-flight sequence —
+    /// the O(n) observation the rewrite replaced with a running counter.
+    pub fn kv_tokens_in_use(&self) -> usize {
+        self.active
+            .iter()
+            .chain(self.fresh.iter())
+            .chain(self.transferring.iter())
+            .map(|a| a.kv_tokens)
+            .sum()
+    }
+
+    pub fn kv_bytes_in_use(&self) -> f64 {
+        self.kv_tokens_in_use() as f64 * self.limits.kv_bytes_per_token
+    }
+
+    pub fn progress_of(&self, id: u64) -> Option<usize> {
+        if let Some(a) = self
+            .active
+            .iter()
+            .chain(self.fresh.iter())
+            .chain(self.transferring.iter())
+            .chain(self.requeued.iter())
+            .find(|a| a.id == id)
+        {
+            return Some(a.emitted());
+        }
+        if self.pending.iter().any(|r| r.id == id) {
+            return Some(0);
+        }
+        self.finished.iter().find(|r| r.id == id).map(|r| r.output_tokens)
+    }
+
+    pub fn prefill_progress_of(&self, id: u64) -> Option<(usize, usize)> {
+        self.fresh.iter().find(|a| a.id == id).map(|a| (a.kv_tokens, a.prefill_target))
+    }
+
+    pub fn next_arrival(&self) -> Option<f64> {
+        let requeued = self.requeued.front().map(|a| a.arrival_s);
+        let pending = self.pending.front().map(|r| r.arrival_s);
+        let ready = self.next_transfer_ready().unwrap_or(f64::INFINITY);
+        let queued = match (requeued, pending) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, None) => a,
+            (None, b) => b,
+        };
+        match queued {
+            Some(t) => Some(t.min(ready)),
+            None if ready.is_finite() => Some(ready),
+            None => None,
+        }
+    }
+
+    /// Preempt the youngest in-flight sequence via linear max-scans over
+    /// `active` and `fresh`, plus a positional insert into the resume
+    /// queue — the O(n)-per-victim path the rewrite replaced with ordered
+    /// indexes.
+    fn preempt_youngest(&mut self, projected: &mut usize) -> bool {
+        if self.active.len() + self.fresh.len() <= 1 {
+            return false;
+        }
+        let key = |a: &Active| (a.arrival_s, a.id);
+        let youngest_active = self
+            .active
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| key(a).partial_cmp(&key(b)).unwrap())
+            .map(|(i, a)| (i, key(a)));
+        let youngest_fresh = self
+            .fresh
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| key(a).partial_cmp(&key(b)).unwrap())
+            .map(|(i, a)| (i, key(a)));
+        let from_fresh = match (youngest_active, youngest_fresh) {
+            (Some((_, ka)), Some((_, kf))) => kf > ka,
+            (None, Some(_)) => true,
+            _ => false,
+        };
+        let mut a = if from_fresh {
+            let (i, _) = youngest_fresh.unwrap();
+            *projected -= self.fresh[i].kv_tokens;
+            self.fresh.remove(i)
+        } else {
+            let (i, _) = youngest_active.unwrap();
+            *projected -= self.active[i].kv_tokens + 1;
+            self.active.swap_remove(i)
+        };
+        a.processed_hwm = if from_fresh {
+            a.processed_hwm.max(a.kv_tokens)
+        } else {
+            a.processed_hwm.max(a.prompt_tokens + a.emitted())
+        };
+        a.kv_tokens = 0;
+        a.preemptions += 1;
+        self.preemptions += 1;
+        let pos = self
+            .requeued
+            .iter()
+            .position(|r| (r.arrival_s, r.id) > (a.arrival_s, a.id))
+            .unwrap_or(self.requeued.len());
+        self.requeued.insert(pos, a);
+        true
+    }
+
+    pub fn next_iteration(&mut self, now_s: f64) -> Option<IterationBatch> {
+        let BatchLimits {
+            max_batch_tokens: cap,
+            kv_budget_bytes: budget,
+            kv_bytes_per_token: bpt,
+            prefill_chunk_tokens: chunk,
+        } = self.limits;
+        let kv_gated = budget.is_finite() && bpt > 0.0;
+
+        let mut t = 0;
+        while t < self.transferring.len() {
+            if self.transferring[t].ready_s <= now_s + 1e-12 {
+                let a = self.transferring.swap_remove(t);
+                self.active.push(a);
+            } else {
+                t += 1;
+            }
+        }
+
+        let mut preempted = 0usize;
+        let mut kv_projected: usize = self.active.iter().map(|a| a.kv_tokens + 1).sum::<usize>()
+            + self
+                .fresh
+                .iter()
+                .chain(self.transferring.iter())
+                .map(|a| a.kv_tokens)
+                .sum::<usize>();
+        if kv_gated {
+            loop {
+                let min_room = usize::from(self.active.is_empty() && !self.fresh.is_empty());
+                if ((kv_projected + min_room) as f64) * bpt <= budget + 1e-9 {
+                    break;
+                }
+                if !self.preempt_youngest(&mut kv_projected) {
+                    break;
+                }
+                preempted += 1;
+            }
+        }
+
+        let decode = self.active.len();
+        let mut prefill = 0usize;
+        let decode_share = if self.kv_transfer_s_per_byte > 0.0 { 0 } else { decode };
+        let mut chunk_left =
+            if chunk == 0 { usize::MAX } else { chunk.saturating_sub(decode_share) };
+        let headroom = |kv_projected: usize| -> usize {
+            (((budget + 1e-9) / bpt) as usize).saturating_sub(kv_projected)
+        };
+
+        if chunk > 0 {
+            let mut recomputed = 0u64;
+            let mut prefilled = 0u64;
+            let mut landed = 0u64;
+            for a in &mut self.fresh {
+                if chunk_left == 0 {
+                    break;
+                }
+                let mut take = (a.prefill_target - a.kv_tokens).min(chunk_left);
+                if cap > 0 {
+                    take = take.min(cap.saturating_sub(decode_share + prefill));
+                }
+                if kv_gated {
+                    take = take.min(headroom(kv_projected));
+                }
+                if take == 0 {
+                    continue;
+                }
+                let (r, f) = a.land_chunk(take);
+                recomputed += r;
+                prefilled += f;
+                landed += 1;
+                prefill += take;
+                kv_projected += take;
+                chunk_left -= take;
+            }
+            self.tokens_recomputed += recomputed;
+            self.tokens_prefilled += prefilled;
+            self.chunks_landed += landed;
+        }
+
+        loop {
+            if chunk_left == 0 {
+                break;
+            }
+            let resume = !self.requeued.is_empty();
+            let need_tokens = if let Some(a) = self.requeued.front() {
+                a.prompt_tokens + a.emitted()
+            } else if let Some(r) = self.pending.front() {
+                if r.arrival_s > now_s {
+                    break;
+                }
+                if kv_gated && ((r.prompt_tokens + r.output_tokens) as f64) * bpt > budget + 1e-9 {
+                    self.pending.pop_front();
+                    self.rejected += 1;
+                    continue;
+                }
+                r.prompt_tokens
+            } else {
+                break;
+            };
+
+            let take = if chunk == 0 {
+                let nothing_running = decode == 0 && prefill == 0;
+                let over_cap = cap > 0 && decode_share + prefill + need_tokens > cap;
+                let over_kv =
+                    kv_gated && ((kv_projected + need_tokens) as f64) * bpt > budget + 1e-9;
+                let admit_alone = nothing_running && !(over_kv && kv_projected > 0);
+                if (over_cap || over_kv) && !admit_alone {
+                    self.delayed_admissions += 1;
+                    break;
+                }
+                need_tokens
+            } else {
+                let mut take = need_tokens.min(chunk_left);
+                if cap > 0 {
+                    take = take.min(cap.saturating_sub(decode_share + prefill));
+                }
+                if kv_gated {
+                    take = take.min(headroom(kv_projected));
+                }
+                if take == 0 {
+                    self.delayed_admissions += 1;
+                    break;
+                }
+                take
+            };
+
+            let mut a = if resume {
+                let mut a = self.requeued.pop_front().unwrap();
+                a.prefill_target = a.prompt_tokens + a.emitted();
+                self.resumes += 1;
+                a
+            } else {
+                let r = self.pending.pop_front().unwrap();
+                self.admitted += 1;
+                Active {
+                    id: r.id,
+                    arrival_s: r.arrival_s,
+                    first_token_s: 0.0,
+                    started: false,
+                    prompt_tokens: r.prompt_tokens,
+                    output_tokens: r.output_tokens,
+                    remaining_out: r.output_tokens,
+                    kv_tokens: 0,
+                    ready_s: 0.0,
+                    prefill_target: r.prompt_tokens,
+                    processed_hwm: 0,
+                    prompt_landed: 0,
+                    chunks: 0,
+                    preemptions: 0,
+                }
+            };
+            let (r, f) = a.land_chunk(take);
+            self.tokens_recomputed += r;
+            self.tokens_prefilled += f;
+            self.chunks_landed += 1;
+            prefill += take;
+            kv_projected += take;
+            chunk_left = chunk_left.saturating_sub(take);
+            self.fresh.push(a);
+        }
+
+        if prefill == 0 && decode == 0 {
+            debug_assert!(
+                self.fresh.is_empty() || !self.transferring.is_empty(),
+                "a parked prefill with no pending wake-up would stall the clock"
+            );
+            return None;
+        }
+        self.tokens_decoded += decode as u64;
+        Some(IterationBatch {
+            prefill_tokens: prefill,
+            decode_seqs: decode,
+            preempted_seqs: preempted,
+        })
+    }
+
+    pub fn complete_iteration(&mut self, now_s: f64) {
+        let mut i = 0;
+        while i < self.active.len() {
+            self.active[i].kv_tokens += 1;
+            self.active[i].remaining_out -= 1;
+            if self.active[i].remaining_out == 0 {
+                let a = self.active.swap_remove(i);
+                self.retire(a, now_s);
+            } else {
+                i += 1;
+            }
+        }
+        let fresh = std::mem::take(&mut self.fresh);
+        for mut f in fresh {
+            if f.kv_tokens < f.prefill_target {
+                self.fresh.push(f);
+                continue;
+            }
+            f.remaining_out = f.remaining_out.saturating_sub(1);
+            let t = if f.remaining_out > 0 && self.kv_transfer_s_per_byte > 0.0 {
+                let bytes = f.kv_tokens as f64 * self.limits.kv_bytes_per_token;
+                self.kv_transfer_bytes += bytes;
+                now_s + bytes * self.kv_transfer_s_per_byte
+            } else {
+                now_s
+            };
+            if !f.started {
+                f.started = true;
+                f.first_token_s = t;
+                self.ttft_ms.push((t - f.arrival_s).max(0.0) * 1e3);
+            }
+            if f.remaining_out == 0 {
+                self.retire(f, t);
+            } else if t > now_s {
+                f.ready_s = t;
+                self.transferring.push(f);
+            } else {
+                self.active.push(f);
+            }
+        }
+    }
+
+    fn retire(&mut self, a: Active, now_s: f64) {
+        debug_assert_eq!(
+            a.prompt_landed, a.prompt_tokens,
+            "chunk conservation: first-time chunk tokens must sum to the prompt"
+        );
+        self.completed += 1;
+        self.e2e_ms.push((now_s - a.arrival_s).max(0.0) * 1e3);
+        self.finished.push(RequestRecord {
+            id: a.id,
+            arrival_s: a.arrival_s,
+            first_token_s: a.first_token_s,
+            finish_s: now_s,
+            prompt_tokens: a.prompt_tokens,
+            output_tokens: a.output_tokens,
+            preemptions: a.preemptions,
+            chunks: a.chunks,
+        });
+    }
+}

@@ -78,9 +78,9 @@ pub fn replay(args: &Args) {
     println!("{}", report.pressure_line());
     println!("{}", report.phase_line());
     if args.flag("cdf") {
-        let cdf = report.layer_cdf();
+        let lat = report.layer_latency();
         for q in [1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {
-            println!("cdf p{q:<5} {:.3}ms", cdf.p(q));
+            println!("cdf p{q:<5} {:.3}ms", lat.p(q));
         }
     }
 }

@@ -21,7 +21,7 @@ use crate::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec, MoelessPara
 use crate::engine::Policy;
 use crate::metrics::RunReport;
 use crate::router::{BatchLimits, Batcher};
-use crate::workload::{RoutingModel, Scenario};
+use crate::workload::{RoutingModel, Scenario, TraceRequest};
 
 /// Everything one simulation run needs.
 #[derive(Clone, Debug)]
@@ -111,6 +111,9 @@ struct Pool {
     cm: CostModel,
     /// Virtual seconds this pool spent computing (utilization numerator).
     busy_s: f64,
+    /// Per-layer load scratch, reused every `run_layer` call so the layer
+    /// loop allocates nothing.
+    loads: Vec<f64>,
 }
 
 impl Pool {
@@ -128,6 +131,7 @@ impl Pool {
             cluster: Cluster::new(spec.clone()),
             cm: CostModel::new(&cfg.model, spec),
             busy_s: 0.0,
+            loads: Vec::new(),
         }
     }
 
@@ -142,9 +146,9 @@ impl Pool {
         clock: f64,
         report: &mut RunReport,
     ) -> (f64, f64, f64) {
-        let loads = routing.layer_loads(layer, tokens);
+        routing.layer_loads_into(layer, tokens, &mut self.loads);
         self.cluster.reset_loads();
-        let out = self.policy.run_layer(layer, &loads, &mut self.cluster, &self.cm, clock);
+        let out = self.policy.run_layer(layer, &self.loads, &mut self.cluster, &self.cm, clock);
         if self.policy.resident_model_mem_gb(&self.cm).is_none() {
             // Serverless: pay per active instance per layer forward.
             report.cost_gb_s += out.cost.expert_cost_gb_s();
@@ -161,10 +165,65 @@ impl Pool {
     }
 }
 
+/// What the idle clock driver should do when the batcher has no runnable
+/// iteration (pure decision function — unit-tested directly).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Wake {
+    /// Jump the clock to this instant and re-enter the loop.
+    At(f64),
+    /// Nothing left inside the horizon: the run is over.
+    Drained,
+    /// A past arrival is blocked and no future wake-up exists — a
+    /// scheduler invariant violation (the batcher guarantees this state
+    /// is unreachable; the caller debug-asserts and stops instead of
+    /// milli-stepping forever).
+    Stalled,
+}
+
+/// Exact idle wake-up: replaces the old defensive `clock + 1e-3`
+/// milli-step. `next_arrival` already folds the earliest KV-handoff
+/// completion in; when it reports a *past* instant (a preempted-requeued
+/// sequence blocked on headroom), the only legal wake-up is a transfer
+/// completing strictly in the future — jump straight to it.
+fn idle_wakeup(
+    clock: f64,
+    duration_s: f64,
+    next_arrival: Option<f64>,
+    next_transfer: Option<f64>,
+) -> Wake {
+    let Some(t) = next_arrival else { return Wake::Drained };
+    if t >= duration_s {
+        return Wake::Drained;
+    }
+    if t > clock {
+        return Wake::At(t);
+    }
+    // A blocked requeued arrival in the past masks the real wake-up: the
+    // KV handoff completing (`next_iteration` admits a requeued sequence
+    // whenever nothing is running, so a past target here implies KV in
+    // transit holds the headroom).
+    match next_transfer {
+        Some(r) if r > clock => Wake::At(r),
+        _ => Wake::Stalled,
+    }
+}
+
 /// Run one simulation to completion and return its report.
 pub fn run(cfg: &SimConfig) -> RunReport {
-    let wall_start = Instant::now();
     let trace = cfg.scenario.generate(&cfg.dataset, cfg.duration_s, cfg.base_rps, cfg.seed);
+    run_with_trace(cfg, &trace)
+}
+
+/// Run one simulation over a pre-generated arrival trace.
+///
+/// Trace generation is policy-independent, so multi-policy sweeps
+/// ([`sweep::run_sweep`]) generate each `(scenario, seed)` trace once and
+/// share it across policy cells instead of regenerating (or cloning a
+/// replay trace) per cell. `cfg.scenario` is ignored here — the trace IS
+/// the scenario; [`run`] is the convenience wrapper that derives it from
+/// `cfg.scenario`.
+pub fn run_with_trace(cfg: &SimConfig, trace: &[TraceRequest]) -> RunReport {
+    let wall_start = Instant::now();
     let mut routing = RoutingModel::new(&cfg.model, cfg.seed ^ 0x9e37);
     // Colocated: one pool over the whole cluster. Disaggregated: a prefill
     // pool and a decode pool partition it, each with its own policy state.
@@ -188,7 +247,7 @@ pub fn run(cfg: &SimConfig) -> RunReport {
     if let Some(d) = cfg.disagg {
         batcher = batcher.with_transfer_link(d.link_gbps);
     }
-    batcher.enqueue(&trace);
+    batcher.enqueue(trace);
 
     let mut report = RunReport {
         policy: main_pool.policy.name().to_string(),
@@ -202,39 +261,41 @@ pub fn run(cfg: &SimConfig) -> RunReport {
 
     let mut clock = 0.0f64;
     let mut last_clock = 0.0f64;
+    // Disaggregated-mode per-layer forward buffers, hoisted out of the
+    // loop (cleared per iteration, never reallocated).
+    let mut pre_layers: Vec<f64> = Vec::with_capacity(cfg.model.n_layers);
+    let mut dec_layers: Vec<f64> = Vec::with_capacity(cfg.model.n_layers);
     while clock < cfg.duration_s {
         let Some(iter) = batcher.next_iteration(clock) else {
-            // Idle: jump to the next arrival (or finish). The jump must
-            // strictly advance the virtual clock — a requeued (preempted)
-            // sequence reports a past arrival, and re-entering the loop at
-            // the same instant would spin forever. `next_iteration`
-            // guarantees such a sequence is admitted when nothing is in
-            // flight, so a backwards/stationary target here means the
-            // batcher is waiting on the future only.
-            match batcher.next_arrival() {
-                Some(t) if t < cfg.duration_s => {
-                    // (A requeued-but-headroom-blocked arrival can sit in
-                    // the past while a KV handoff is the real wake-up —
-                    // the defensive bump below covers that disagg corner.)
-                    debug_assert!(
-                        t > clock || batcher.transferring_len() > 0,
-                        "idle jump must advance the clock"
-                    );
-                    if t <= clock {
-                        // A blocked requeued arrival in the past can mask
-                        // the real wake-up (a KV handoff completing): jump
-                        // straight to it rather than milli-stepping
-                        // through the transfer.
-                        clock = match batcher.next_transfer_ready() {
-                            Some(r) if r > clock => r,
-                            _ => clock + 1e-3, // defensive: never wedge
-                        };
-                    } else {
-                        clock = t;
-                    }
+            // Idle: jump to the exact next wake-up (or finish). The jump
+            // must strictly advance the virtual clock — a requeued
+            // (preempted) sequence reports a past arrival, and re-entering
+            // the loop at the same instant would spin forever.
+            // `next_iteration` guarantees such a sequence is admitted when
+            // nothing is in flight, so a stationary target here means the
+            // batcher is waiting on a KV handoff — `idle_wakeup` jumps
+            // straight to its completion instead of the old defensive
+            // 1 ms creep.
+            match idle_wakeup(
+                clock,
+                cfg.duration_s,
+                batcher.next_arrival(),
+                batcher.next_transfer_ready(),
+            ) {
+                Wake::At(t) => {
+                    clock = t;
                     continue;
                 }
-                _ => break,
+                Wake::Drained => break,
+                Wake::Stalled => {
+                    // Unreachable by the batcher's scheduling invariants
+                    // (see `idle_wakeup`): surface loudly in debug builds,
+                    // stop cleanly instead of creeping in release.
+                    if cfg!(debug_assertions) {
+                        unreachable!("idle with no future wake-up: scheduler stalled");
+                    }
+                    break;
+                }
             }
         };
         // Popularity drifts with virtual time.
@@ -250,9 +311,10 @@ pub fn run(cfg: &SimConfig) -> RunReport {
             let mut dec_ms = 0.0f64;
             // Buffered per-layer forwards: the gauge records the pool that
             // ends up determining the iteration (max of per-pool sums), so
-            // layer_forward_ms stays consistent with the clock advance.
-            let mut pre_layers = Vec::with_capacity(cfg.model.n_layers);
-            let mut dec_layers = Vec::with_capacity(cfg.model.n_layers);
+            // the layer-forward sketch stays consistent with the clock
+            // advance.
+            pre_layers.clear();
+            dec_layers.clear();
             for layer in 0..cfg.model.n_layers {
                 let pre = if iter.prefill_tokens > 0 {
                     Some(main_pool.run_layer(
@@ -285,13 +347,13 @@ pub fn run(cfg: &SimConfig) -> RunReport {
                 // The cluster-wide replica count is the pools' sum;
                 // accuracy averages only the pools that actually ran (an
                 // idle pool must not fabricate a perfect sample).
-                report.replicas_per_layer.push(pr + dr);
+                report.replicas_per_layer.add(pr + dr);
                 let pools_ran = usize::from(pre.is_some()) + usize::from(dco.is_some());
-                report.pred_accuracy.push((pa + da) / pools_ran.max(1) as f64);
+                report.pred_accuracy.add((pa + da) / pools_ran.max(1) as f64);
             }
-            report
-                .layer_forward_ms
-                .extend(if pre_ms >= dec_ms { pre_layers } else { dec_layers });
+            for &fwd in if pre_ms >= dec_ms { &pre_layers } else { &dec_layers } {
+                report.layer_forward.add(fwd);
+            }
             let iter_ms = pre_ms.max(dec_ms);
             main_pool.busy_s += pre_ms / 1e3;
             dec.busy_s += dec_ms / 1e3;
@@ -309,9 +371,9 @@ pub fn run(cfg: &SimConfig) -> RunReport {
                     &mut report,
                 );
                 iter_ms += fwd;
-                report.layer_forward_ms.push(fwd);
-                report.replicas_per_layer.push(replicas);
-                report.pred_accuracy.push(acc);
+                report.layer_forward.add(fwd);
+                report.replicas_per_layer.add(replicas);
+                report.pred_accuracy.add(acc);
             }
             // Serverful: the whole model's experts are resident for the
             // entire busy window regardless of activity (static EP
@@ -328,9 +390,11 @@ pub fn run(cfg: &SimConfig) -> RunReport {
         }
         report.iterations += 1;
         report.tokens_processed += iter.total_tokens() as u64;
-        // Memory-pressure gauges, sampled once per iteration.
-        report.queue_depth.push(batcher.queue_depth() as f64);
-        report.kv_util.push(if kv_budget_gb.is_finite() && kv_budget_gb > 0.0 {
+        // Memory-pressure gauges, sampled once per iteration (O(1): the
+        // batcher's KV ledger is a running counter, and the gauges are
+        // streaming accumulators).
+        report.queue_depth.add(batcher.queue_depth() as f64);
+        report.kv_util.add(if kv_budget_gb.is_finite() && kv_budget_gb > 0.0 {
             batcher.kv_bytes_in_use() / (kv_budget_gb * 1e9)
         } else {
             0.0
@@ -403,7 +467,8 @@ mod tests {
         assert!(r.iterations > 10, "{}", r.iterations);
         assert!(r.completed_requests > 0);
         assert!(r.tokens_processed > 100);
-        assert_eq!(r.layer_forward_ms.len() as u64, r.iterations * 32);
+        assert_eq!(r.layer_forward.len() as u64, r.iterations * 32);
+        assert!(r.layer_forward.min() > 0.0 && r.layer_forward.max().is_finite());
         assert!(r.cost_gb_s > 0.0);
     }
 
@@ -426,7 +491,7 @@ mod tests {
     fn deterministic_given_seed() {
         let a = quick(PolicyKind::Moeless);
         let b = quick(PolicyKind::Moeless);
-        assert_eq!(a.layer_forward_ms, b.layer_forward_ms);
+        assert_eq!(a.layer_forward, b.layer_forward);
         assert_eq!(a.cost_gb_s, b.cost_gb_s);
     }
 
@@ -478,8 +543,8 @@ mod tests {
         // acceptance baseline that preserves PR 1's latency ordering.
         let r = quick(PolicyKind::Moeless);
         assert!(r.kv_budget_gb.is_finite() && r.kv_budget_gb > 0.0);
-        assert_eq!(r.kv_util.len() as u64, r.iterations);
-        assert_eq!(r.queue_depth.len() as u64, r.iterations);
+        assert_eq!(r.kv_util.n, r.iterations);
+        assert_eq!(r.queue_depth.n, r.iterations);
         assert_eq!((r.preemptions, r.rejected_requests), (0, 0));
         assert!(r.peak_kv_util() > 0.0 && r.peak_kv_util() < 1.0);
         let mut cfg = SimConfig::new(
@@ -492,7 +557,7 @@ mod tests {
         cfg.seed = 11;
         cfg.kv_frac = f64::INFINITY;
         let unconstrained = run(&cfg);
-        assert_eq!(r.layer_forward_ms, unconstrained.layer_forward_ms);
+        assert_eq!(r.layer_forward, unconstrained.layer_forward);
         assert_eq!(r.requests, unconstrained.requests);
         assert_eq!(unconstrained.peak_kv_util(), 0.0, "gauge off when unconstrained");
     }
@@ -565,7 +630,7 @@ mod tests {
         // Determinism.
         let again = run(&mk(128));
         assert_eq!(chunked.requests, again.requests);
-        assert_eq!(chunked.layer_forward_ms, again.layer_forward_ms);
+        assert_eq!(chunked.layer_forward, again.layer_forward);
     }
 
     #[test]
@@ -587,9 +652,10 @@ mod tests {
         assert!(r.kv_transfer_gb > 0.0, "phase handoffs must ship KV");
         assert!(r.prefill_pool_util > 0.0 && r.prefill_pool_util <= 1.0 + 1e-9);
         assert!(r.decode_pool_util > 0.0 && r.decode_pool_util <= 1.0 + 1e-9);
-        // Vector gauges keep the one-entry-per-layer-per-iteration shape.
-        assert_eq!(r.layer_forward_ms.len() as u64, r.iterations * 32);
-        assert_eq!(r.replicas_per_layer.len() as u64, r.iterations * 32);
+        // Streaming gauges keep the one-entry-per-layer-per-iteration
+        // sample counts.
+        assert_eq!(r.layer_forward.len() as u64, r.iterations * 32);
+        assert_eq!(r.replicas_per_layer.n, r.iterations * 32);
         for req in &r.requests {
             assert!(req.finish_s >= req.first_token_s, "decode never precedes the handoff");
         }
@@ -612,7 +678,77 @@ mod tests {
         b.scenario = Scenario::replay(recorded);
         // The replay of the diurnal trace is the diurnal run, bit for bit.
         let (ra, rb) = (run(&a), run(&b));
-        assert_eq!(ra.layer_forward_ms, rb.layer_forward_ms);
+        assert_eq!(ra.layer_forward, rb.layer_forward);
         assert_eq!(ra.requests, rb.requests);
+    }
+
+    #[test]
+    fn run_with_trace_matches_run() {
+        // The sweep's trace-sharing entry point is the same computation as
+        // `run` deriving the trace from `cfg.scenario` — bit for bit.
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.scenario = crate::workload::Scenario::bursty();
+        cfg.duration_s = 15.0;
+        cfg.base_rps = 4.0;
+        cfg.seed = 21;
+        let via_run = run(&cfg);
+        let trace = cfg.scenario.generate(&cfg.dataset, cfg.duration_s, cfg.base_rps, cfg.seed);
+        let via_shared = run_with_trace(&cfg, &trace);
+        assert_eq!(via_run.requests, via_shared.requests);
+        assert_eq!(via_run.layer_forward, via_shared.layer_forward);
+        assert_eq!(via_run.cost_gb_s, via_shared.cost_gb_s);
+        assert_eq!(via_run.iterations, via_shared.iterations);
+    }
+
+    #[test]
+    fn idle_wakeup_is_exact() {
+        use super::{idle_wakeup, Wake};
+        // Future arrival inside the horizon: jump exactly there.
+        assert_eq!(idle_wakeup(1.0, 100.0, Some(5.0), None), Wake::At(5.0));
+        // Arrival beyond the horizon (or none): drained.
+        assert_eq!(idle_wakeup(1.0, 100.0, Some(100.0), None), Wake::Drained);
+        assert_eq!(idle_wakeup(1.0, 100.0, None, None), Wake::Drained);
+        // The previously milli-stepped corner: a requeued sequence's past
+        // arrival masks the real wake-up — a KV handoff completing. The
+        // exact jump goes straight to the transfer, not clock + 1e-3.
+        assert_eq!(idle_wakeup(2.0, 100.0, Some(0.5), Some(2.75)), Wake::At(2.75));
+        // Transfer completions already past re-enter immediately via
+        // next_iteration, so only a *future* transfer is a wake-up; with
+        // none, the state is a scheduler stall, not a creep-forward.
+        assert_eq!(idle_wakeup(2.0, 100.0, Some(0.5), Some(2.0)), Wake::Stalled);
+        assert_eq!(idle_wakeup(2.0, 100.0, Some(0.5), None), Wake::Stalled);
+        // A stationary arrival exactly at the clock counts as past.
+        assert_eq!(idle_wakeup(2.0, 100.0, Some(2.0), Some(3.0)), Wake::At(3.0));
+    }
+
+    #[test]
+    fn disagg_under_kv_pressure_drains_without_millistep() {
+        // End-to-end cover for the exact-wake-up path: disaggregated mode
+        // with a KV budget tight enough to park requeued sequences behind
+        // in-transit handoffs. The run must drain deterministically (the
+        // old code crept by 1e-3 in the worst corner; the new code jumps
+        // to the transfer completion).
+        use crate::config::DisaggSpec;
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.duration_s = 20.0;
+        cfg.base_rps = 4.0;
+        cfg.seed = 17;
+        cfg.prefill_chunk_tokens = 128;
+        cfg.kv_budget_override_gb = Some(1.5);
+        cfg.disagg = Some(DisaggSpec { link_gbps: 0.05, ..DisaggSpec::even_split(&cfg.cluster) });
+        let r = run(&cfg);
+        assert!(r.completed_requests > 0);
+        assert!(r.kv_transfer_gb > 0.0);
+        let again = run(&cfg);
+        assert_eq!(r.requests, again.requests);
+        assert_eq!(r.iterations, again.iterations);
     }
 }

@@ -7,13 +7,15 @@
 //! are deterministic and independent of the thread count: every cell is
 //! seeded by its own (policy, scenario, seed) coordinates.
 
+use std::collections::HashMap;
+
 use crate::baselines::PolicyKind;
 use crate::config::{DatasetSpec, DisaggSpec, ModelSpec};
 use crate::metrics::{RunReport, SloSpec};
-use crate::sim::{run, SimConfig};
-use crate::util::stats::Cdf;
+use crate::sim::{run_with_trace, SimConfig};
+use crate::util::stats::percentile_unsorted;
 use crate::util::threadpool::scoped_map;
-use crate::workload::Scenario;
+use crate::workload::{Scenario, TraceRequest};
 
 /// The sweep's cross product: policies × scenarios × seeds on one
 /// (model, dataset) at a fixed duration and mean rate.
@@ -69,9 +71,11 @@ impl SweepSpec {
         out
     }
 
-    fn config_for(&self, policy: PolicyKind, scenario: &Scenario, seed: u64) -> SimConfig {
+    /// Cell config minus the scenario: sweep cells run through
+    /// [`run_with_trace`] over a shared pre-generated trace, so the
+    /// scenario field stays at its default and is never consulted.
+    fn config_for(&self, policy: PolicyKind, seed: u64) -> SimConfig {
         let mut cfg = SimConfig::new(self.model.clone(), self.dataset.clone(), policy);
-        cfg.scenario = scenario.clone();
         cfg.duration_s = self.duration_s;
         cfg.base_rps = self.base_rps;
         cfg.seed = seed;
@@ -93,17 +97,42 @@ pub struct SweepCell {
 }
 
 /// Run every cell of the sweep, sharded across `spec.threads` workers.
+///
+/// Arrival-trace generation is policy-independent, so each
+/// `(scenario, seed)` trace is generated **once** and shared by reference
+/// across every policy cell (the scoped workers borrow the map) — a
+/// replay scenario's recorded trace is no longer cloned per cell, and
+/// synthetic scenarios are not regenerated |policies| times. Cell outputs
+/// are identical to running each cell standalone (pinned by
+/// `run_with_trace_matches_run` and `shared_trace_cells_match_standalone_runs`).
 pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepCell> {
-    let cells = spec.cells();
-    let reports = scoped_map(&cells, spec.threads.max(1), |(policy, scenario, seed)| {
-        run(&spec.config_for(*policy, scenario, *seed))
+    let mut traces: HashMap<(usize, u64), Vec<TraceRequest>> = HashMap::new();
+    for (si, scenario) in spec.scenarios.iter().enumerate() {
+        for &seed in &spec.seeds {
+            let trace = scenario.generate(&spec.dataset, spec.duration_s, spec.base_rps, seed);
+            traces.insert((si, seed), trace);
+        }
+    }
+    // Scenario-major cell order (keeps chunked sharding balanced), same as
+    // `cells()`.
+    let mut jobs: Vec<(PolicyKind, usize, u64)> = Vec::new();
+    for si in 0..spec.scenarios.len() {
+        for &policy in &spec.policies {
+            for &seed in &spec.seeds {
+                jobs.push((policy, si, seed));
+            }
+        }
+    }
+    let reports = scoped_map(&jobs, spec.threads.max(1), |job| {
+        let (policy, si, seed) = *job;
+        let cfg = spec.config_for(policy, seed);
+        run_with_trace(&cfg, traces[&(si, seed)].as_slice())
     });
-    cells
-        .into_iter()
+    jobs.into_iter()
         .zip(reports)
-        .map(|((policy, scenario, seed), report)| SweepCell {
+        .map(|((policy, si, seed), report)| SweepCell {
             policy,
-            scenario: scenario.name,
+            scenario: spec.scenarios[si].name.clone(),
             seed,
             report,
         })
@@ -203,23 +232,25 @@ pub fn summarize(cells: &[SweepCell], slo: &SloSpec) -> Vec<SloSummary> {
                 rejected += c.report.rejected_requests;
                 kv_transfer_gb += c.report.kv_transfer_gb;
             }
-            let (t, p, e) = (Cdf::of(ttft), Cdf::of(tpot), Cdf::of(e2e));
+            // Selection, not sort: each percentile is O(n) on the pooled
+            // sample, with no extra allocation.
+            let pooled = ttft.len();
             SloSummary {
                 scenario,
                 policy,
                 seeds: group.len(),
                 completed,
-                ttft_p50_ms: t.p(50.0),
-                ttft_p95_ms: t.p(95.0),
-                ttft_p99_ms: t.p(99.0),
-                tpot_p50_ms: p.p(50.0),
-                tpot_p95_ms: p.p(95.0),
-                tpot_p99_ms: p.p(99.0),
-                e2e_p50_ms: e.p(50.0),
+                ttft_p50_ms: percentile_unsorted(&mut ttft, 50.0),
+                ttft_p95_ms: percentile_unsorted(&mut ttft, 95.0),
+                ttft_p99_ms: percentile_unsorted(&mut ttft, 99.0),
+                tpot_p50_ms: percentile_unsorted(&mut tpot, 50.0),
+                tpot_p95_ms: percentile_unsorted(&mut tpot, 95.0),
+                tpot_p99_ms: percentile_unsorted(&mut tpot, 99.0),
+                e2e_p50_ms: percentile_unsorted(&mut e2e, 50.0),
                 goodput_rps: goodput / group.len().max(1) as f64,
                 preemptions,
                 rejected,
-                chunks_per_req: chunks as f64 / t.len().max(1) as f64,
+                chunks_per_req: chunks as f64 / pooled.max(1) as f64,
                 kv_transfer_gb,
             }
         })
@@ -252,8 +283,30 @@ mod tests {
         let seq = run_sweep(&seq_spec);
         for (a, b) in par.iter().zip(&seq) {
             assert_eq!((a.scenario.as_str(), a.seed), (b.scenario.as_str(), b.seed));
-            assert_eq!(a.report.layer_forward_ms, b.report.layer_forward_ms);
+            assert_eq!(a.report.layer_forward, b.report.layer_forward);
             assert_eq!(a.report.requests, b.report.requests);
+        }
+    }
+
+    #[test]
+    fn shared_trace_cells_match_standalone_runs() {
+        // The shared trace must not change any cell: each sweep cell
+        // equals a standalone `run` with the scenario set on the config.
+        use crate::sim::run;
+        let mut spec = small_spec();
+        spec.threads = 2;
+        let cells = run_sweep(&spec);
+        for c in &cells {
+            let scenario = spec
+                .scenarios
+                .iter()
+                .find(|s| s.name == c.scenario)
+                .expect("cell scenario in spec");
+            let mut cfg = spec.config_for(c.policy, c.seed);
+            cfg.scenario = scenario.clone();
+            let standalone = run(&cfg);
+            assert_eq!(standalone.requests, c.report.requests, "{} {}", c.scenario, c.seed);
+            assert_eq!(standalone.layer_forward, c.report.layer_forward);
         }
     }
 

@@ -14,7 +14,7 @@
 
 use std::time::Instant;
 
-use crate::util::stats::{percentile, Summary};
+use crate::util::stats::{percentile_unsorted, Quantiles, Summary};
 
 /// Timing result of one benchmark target.
 #[derive(Clone, Debug)]
@@ -85,14 +85,15 @@ impl Bencher {
             std::hint::black_box(f());
             samples_ns.push(t.elapsed().as_nanos() as f64);
         }
-        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Selection, not a full sort: only two order statistics are
+        // reported.
         let s = Summary::of(&samples_ns);
         let m = Measurement {
             name: name.to_string(),
             iters: samples_ns.len(),
             mean_ns: s.mean,
-            p50_ns: percentile(&samples_ns, 50.0),
-            p99_ns: percentile(&samples_ns, 99.0),
+            p50_ns: percentile_unsorted(&mut samples_ns, 50.0),
+            p99_ns: percentile_unsorted(&mut samples_ns, 99.0),
             min_ns: s.min,
         };
         println!("{}", m.report());
@@ -116,8 +117,9 @@ pub fn series(name: &str, points: &[(f64, f64)], xfmt: &str, yfmt: &str) {
     }
 }
 
-/// Print a one-line series summary (CDF-style figures).
-pub fn series_summary(name: &str, label: &str, values_ms: &crate::util::stats::Cdf) {
+/// Print a one-line series summary (CDF-style figures). Accepts any
+/// quantile view — the exact `Cdf` or the streaming `QuantileSketch`.
+pub fn series_summary(name: &str, label: &str, values_ms: &impl Quantiles) {
     println!(
         "series {name:<28} {label}: mean={:.3}ms p50={:.3}ms p90={:.3}ms p99={:.3}ms n={}",
         values_ms.mean(),

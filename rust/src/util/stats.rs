@@ -67,6 +67,294 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Percentile by selection (`select_nth_unstable`) instead of a full sort.
+///
+/// Same linear-interpolation definition as [`percentile`] — it returns the
+/// identical value for the identical multiset — but O(n) per query instead
+/// of O(n log n) for the sort, and it never allocates. The slice is
+/// reordered (partially partitioned) in place. Call sites that need one or
+/// a few percentiles of a large throwaway sample (the request-path
+/// reporting hot spots) use this; call sites that need a full CDF keep
+/// [`Cdf`].
+pub fn percentile_unsorted(xs: &mut [f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let pos = q / 100.0 * (xs.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let cmp = |a: &f64, b: &f64| a.partial_cmp(b).unwrap();
+    let (left, hi_v, _) = xs.select_nth_unstable_by(hi, cmp);
+    let hi_v = *hi_v;
+    if lo == hi {
+        return hi_v;
+    }
+    // `left` holds the hi smallest-but-one elements; the lo-th order
+    // statistic lives there.
+    let (_, lo_v, _) = left.select_nth_unstable_by(lo, cmp);
+    *lo_v + (pos - lo as f64) * (hi_v - *lo_v)
+}
+
+/// Common read-only quantile interface over the exact [`Cdf`] and the
+/// streaming [`QuantileSketch`] (what `benchkit::series_summary` prints).
+pub trait Quantiles {
+    fn p(&self, q: f64) -> f64;
+    fn mean(&self) -> f64;
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Streaming accumulator for a mean: running sum + count, O(1) memory.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MeanAcc {
+    pub n: u64,
+    pub sum: f64,
+}
+
+impl MeanAcc {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+    }
+
+    pub fn of(xs: &[f64]) -> MeanAcc {
+        let mut acc = MeanAcc::default();
+        for &x in xs {
+            acc.add(x);
+        }
+        acc
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+/// Streaming accumulator for a per-iteration gauge: running sum, count and
+/// peak — O(1) memory regardless of how long the run is. The peak starts
+/// at 0.0, matching the old `fold(0.0, f64::max)` over the push-vector it
+/// replaces (gauges are non-negative).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GaugeStats {
+    pub n: u64,
+    pub sum: f64,
+    pub peak: f64,
+}
+
+impl GaugeStats {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        if x > self.peak {
+            self.peak = x;
+        }
+    }
+
+    pub fn of(xs: &[f64]) -> GaugeStats {
+        let mut acc = GaugeStats::default();
+        for &x in xs {
+            acc.add(x);
+        }
+        acc
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+/// Geometric bucket floor of the [`QuantileSketch`] (values at or below
+/// this land in bucket 0).
+const SKETCH_FLOOR: f64 = 1e-6;
+/// Geometric bucket growth factor: ~1% relative resolution per bucket.
+const SKETCH_GROWTH: f64 = 1.01;
+/// Bucket count covering [1e-6, ~1e9) — 15 decades at 1% resolution.
+const SKETCH_BUCKETS: usize = 3472;
+
+/// Fixed-size streaming quantile sketch: a geometric (log-spaced)
+/// histogram with ~1% relative resolution over 15 decades, plus exact
+/// running count/sum/min/max. Memory is O(1) in the number of samples
+/// (one fixed bucket array), unlike [`Cdf`], which retains every sample —
+/// this is what keeps `RunReport` bounded in simulated duration. Mean,
+/// min, max (and therefore p0/p100) are exact; interior percentiles are
+/// bucket midpoints, within ~0.5% relative error. Deterministic: equal
+/// input streams produce equal sketches (`PartialEq`).
+#[derive(Clone, PartialEq)]
+pub struct QuantileSketch {
+    count: u64,
+    sum: f64,
+    lo: f64,
+    hi: f64,
+    /// Lazily allocated on first `add` (empty sketches cost nothing).
+    buckets: Vec<u64>,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch {
+            count: 0,
+            sum: 0.0,
+            lo: f64::INFINITY,
+            hi: f64::NEG_INFINITY,
+            buckets: Vec::new(),
+        }
+    }
+}
+
+impl std::fmt::Debug for QuantileSketch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("QuantileSketch")
+            .field("count", &self.count)
+            .field("mean", &self.mean())
+            .field("min", &self.min())
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+impl QuantileSketch {
+    pub fn of(xs: &[f64]) -> QuantileSketch {
+        let mut s = QuantileSketch::default();
+        for &x in xs {
+            s.add(x);
+        }
+        s
+    }
+
+    fn bucket_of(x: f64) -> usize {
+        if x.is_nan() || x <= SKETCH_FLOOR {
+            return 0; // underflow (and NaN, defensively)
+        }
+        let idx = (x / SKETCH_FLOOR).ln() / SKETCH_GROWTH.ln();
+        (idx as usize).min(SKETCH_BUCKETS - 1)
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0u64; SKETCH_BUCKETS];
+        }
+        self.count += 1;
+        self.sum += x;
+        if x < self.lo {
+            self.lo = x;
+        }
+        if x > self.hi {
+            self.hi = x;
+        }
+        self.buckets[Self::bucket_of(x)] += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean of everything added.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.lo
+        }
+    }
+
+    /// Exact maximum (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.hi
+        }
+    }
+
+    /// Approximate percentile: the geometric midpoint of the bucket
+    /// holding the rank, clamped to the exact [min, max]. p0 and p100 are
+    /// exact.
+    pub fn p(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min();
+        }
+        if q >= 100.0 {
+            return self.max();
+        }
+        let rank = q / 100.0 * (self.count - 1) as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum as f64 > rank {
+                let mid = if i == 0 {
+                    SKETCH_FLOOR
+                } else {
+                    let lo_edge = SKETCH_FLOOR * SKETCH_GROWTH.powi(i as i32);
+                    let hi_edge = lo_edge * SKETCH_GROWTH;
+                    (lo_edge * hi_edge).sqrt()
+                };
+                return if self.lo <= self.hi { mid.clamp(self.lo, self.hi) } else { mid };
+            }
+        }
+        self.max()
+    }
+
+    /// (value, cumulative fraction) rows at the given percentiles — the
+    /// same figure-regeneration shape as [`Cdf::rows`].
+    pub fn rows(&self, qs: &[f64]) -> Vec<(f64, f64)> {
+        qs.iter().map(|&q| (self.p(q), q / 100.0)).collect()
+    }
+
+    /// Heap footprint (the fixed bucket array) — the report-memory metric.
+    pub fn heap_bytes(&self) -> usize {
+        self.buckets.capacity() * std::mem::size_of::<u64>()
+    }
+}
+
+impl Quantiles for QuantileSketch {
+    fn p(&self, q: f64) -> f64 {
+        QuantileSketch::p(self, q)
+    }
+
+    fn mean(&self) -> f64 {
+        QuantileSketch::mean(self)
+    }
+
+    fn len(&self) -> usize {
+        QuantileSketch::len(self)
+    }
+}
+
 /// An empirical CDF over a sample — the paper's Figs. 8/9/17 primitive.
 #[derive(Clone, Debug)]
 pub struct Cdf {
@@ -105,6 +393,20 @@ impl Cdf {
     /// series the bench harness prints for figure regeneration.
     pub fn rows(&self, qs: &[f64]) -> Vec<(f64, f64)> {
         qs.iter().map(|&q| (self.p(q), q / 100.0)).collect()
+    }
+}
+
+impl Quantiles for Cdf {
+    fn p(&self, q: f64) -> f64 {
+        Cdf::p(self, q)
+    }
+
+    fn mean(&self) -> f64 {
+        Cdf::mean(self)
+    }
+
+    fn len(&self) -> usize {
+        Cdf::len(self)
     }
 }
 
@@ -213,6 +515,79 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 30.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_unsorted_matches_sorted_percentile() {
+        // Selection must reproduce the sort-based definition exactly,
+        // including the interpolation arithmetic.
+        let base = [7.0, 1.0, 9.0, 3.0, 5.0, 2.0, 8.0, 6.0, 4.0, 0.0];
+        let mut sorted = base.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 1.0, 25.0, 37.5, 50.0, 75.0, 99.0, 100.0] {
+            let mut scratch = base.to_vec();
+            assert_eq!(
+                percentile_unsorted(&mut scratch, q),
+                percentile(&sorted, q),
+                "q={q}"
+            );
+        }
+        assert_eq!(percentile_unsorted(&mut [], 50.0), 0.0);
+        assert_eq!(percentile_unsorted(&mut [4.0], 99.0), 4.0);
+    }
+
+    #[test]
+    fn mean_acc_and_gauge_stats_stream() {
+        let m = MeanAcc::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.n, 4);
+        assert!((m.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(MeanAcc::default().mean(), 0.0);
+        let g = GaugeStats::of(&[0.2, 0.9, 0.5]);
+        assert_eq!(g.n, 3);
+        assert!((g.peak - 0.9).abs() < 1e-12);
+        assert!((g.mean() - (1.6 / 3.0)).abs() < 1e-12);
+        let empty = GaugeStats::default();
+        assert_eq!((empty.peak, empty.mean()), (0.0, 0.0));
+    }
+
+    #[test]
+    fn sketch_tracks_exact_moments_and_approximate_quantiles() {
+        // 1..=1000: mean/min/max exact, interior percentiles within the
+        // sketch's ~1% relative resolution of the true order statistics.
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = QuantileSketch::of(&xs);
+        assert_eq!(s.len(), 1000);
+        assert!((s.mean() - 500.5).abs() < 1e-9);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 1000.0);
+        assert_eq!(s.p(0.0), 1.0);
+        assert_eq!(s.p(100.0), 1000.0);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [10.0, 50.0, 90.0, 99.0] {
+            let exact = percentile(&sorted, q);
+            let approx = s.p(q);
+            assert!(
+                (approx - exact).abs() / exact < 0.02,
+                "q={q}: sketch {approx} vs exact {exact}"
+            );
+        }
+        // Monotone in q.
+        assert!(s.p(50.0) <= s.p(90.0) && s.p(90.0) <= s.p(99.0));
+        // Deterministic: same stream, same sketch.
+        assert_eq!(s, QuantileSketch::of(&xs));
+        // Empty sketch degrades to zeros, costs no heap.
+        let empty = QuantileSketch::default();
+        assert_eq!((empty.len(), empty.heap_bytes()), (0, 0));
+        assert_eq!((empty.p(50.0), empty.mean(), empty.min(), empty.max()), (0.0, 0.0, 0.0, 0.0));
+        // Sub-floor and huge values clamp into the end buckets.
+        let mut tiny = QuantileSketch::default();
+        tiny.add(0.0);
+        tiny.add(1e12);
+        assert_eq!(tiny.min(), 0.0);
+        assert_eq!(tiny.max(), 1e12);
+        assert!(tiny.p(40.0) >= 0.0 && tiny.p(40.0) <= 1e12);
+        assert_eq!(tiny.rows(&[100.0])[0].0, 1e12);
     }
 
     #[test]

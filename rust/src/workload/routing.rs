@@ -28,6 +28,9 @@ pub struct RoutingModel {
     /// Batch-level multiplicative noise strength.
     pub batch_sigma: f64,
     rng: Pcg,
+    /// Largest-remainder scratch, reused across `layer_loads` calls so the
+    /// per-layer hot path allocates nothing.
+    rema: Vec<(usize, f64)>,
 }
 
 impl RoutingModel {
@@ -43,6 +46,7 @@ impl RoutingModel {
             drift_sigma: 0.03,
             batch_sigma: 0.45,
             rng,
+            rema: Vec::new(),
         }
     }
 
@@ -65,18 +69,29 @@ impl RoutingModel {
     /// Realized expert loads (token counts) for one layer of one iteration
     /// routing `n_tokens` tokens to `top_k` experts each.
     pub fn layer_loads(&mut self, layer: usize, n_tokens: f64) -> Vec<f64> {
+        let mut w = Vec::new();
+        self.layer_loads_into(layer, n_tokens, &mut w);
+        w
+    }
+
+    /// Allocation-free variant of [`layer_loads`](RoutingModel::layer_loads):
+    /// fills `out` in place (cleared first), reusing the caller's buffer
+    /// and the model's internal rounding scratch — the simulation loop
+    /// calls this once per layer per iteration. Identical arithmetic (and
+    /// RNG consumption) to `layer_loads`, so results are bit-for-bit the
+    /// same.
+    pub fn layer_loads_into(&mut self, layer: usize, n_tokens: f64, out: &mut Vec<f64>) {
         let n_routed = n_tokens * self.top_k as f64;
-        let pop = &self.pops[layer];
+        out.clear();
         // Batch-level multiplicative noise, renormalized; then integer-ish
         // loads by largest-remainder rounding to keep the total exact.
-        let mut w: Vec<f64> = pop
-            .iter()
-            .map(|&p| p * self.rng.lognormal(0.0, self.batch_sigma))
-            .collect();
-        let total: f64 = w.iter().sum();
-        w.iter_mut().for_each(|x| *x = *x / total * n_routed);
-        round_preserving_sum(&mut w);
-        w
+        let pop = &self.pops[layer];
+        let rng = &mut self.rng;
+        let sigma = self.batch_sigma;
+        out.extend(pop.iter().map(|&p| p * rng.lognormal(0.0, sigma)));
+        let total: f64 = out.iter().sum();
+        out.iter_mut().for_each(|x| *x = *x / total * n_routed);
+        round_preserving_sum(out, &mut self.rema);
     }
 
     /// Loads for every layer of an iteration.
@@ -101,11 +116,12 @@ impl RoutingModel {
 }
 
 /// Round entries to integers while preserving the (integral) total —
-/// largest-remainder method.
-fn round_preserving_sum(w: &mut [f64]) {
+/// largest-remainder method. `rema` is caller-provided scratch (cleared
+/// here) so the per-layer hot path allocates nothing.
+fn round_preserving_sum(w: &mut [f64], rema: &mut Vec<(usize, f64)>) {
     let target: f64 = w.iter().sum::<f64>().round();
     let mut floor_sum = 0.0;
-    let mut rema: Vec<(usize, f64)> = Vec::with_capacity(w.len());
+    rema.clear();
     for (i, x) in w.iter_mut().enumerate() {
         let f = x.floor();
         rema.push((i, *x - f));
@@ -114,7 +130,7 @@ fn round_preserving_sum(w: &mut [f64]) {
     }
     let mut need = (target - floor_sum) as i64;
     rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-    for (i, _) in rema {
+    for &(i, _) in rema.iter() {
         if need <= 0 {
             break;
         }
@@ -193,9 +209,24 @@ mod tests {
     #[test]
     fn round_preserving_sum_exact() {
         let mut w = vec![1.2, 2.7, 3.1];
-        round_preserving_sum(&mut w);
+        let mut scratch = Vec::new();
+        round_preserving_sum(&mut w, &mut scratch);
         assert_eq!(w.iter().sum::<f64>(), 7.0);
         assert!(w.iter().all(|x| x.fract() == 0.0));
+    }
+
+    #[test]
+    fn layer_loads_into_matches_allocating_variant() {
+        // Same seed, same calls: the scratch-reusing path must consume the
+        // RNG identically and produce bit-identical loads.
+        let mut a = RoutingModel::new(&model(), 11);
+        let mut b = RoutingModel::new(&model(), 11);
+        let mut buf = Vec::new();
+        for (layer, tokens) in [(0usize, 50.0), (3, 700.0), (0, 2.0), (7, 123.0)] {
+            let via_alloc = a.layer_loads(layer, tokens);
+            b.layer_loads_into(layer, tokens, &mut buf);
+            assert_eq!(via_alloc, buf, "layer={layer} tokens={tokens}");
+        }
     }
 
     #[test]

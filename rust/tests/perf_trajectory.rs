@@ -1,0 +1,54 @@
+//! Perf-trajectory guard + recorder.
+//!
+//! Measures the frozen pre-PR-4 reference core against the optimized
+//! core (same machine, same process) at the quick and saturated scales,
+//! asserts the optimized core wins on the saturated drain, and records
+//! the numbers to `BENCH_sim.json` at the repository root — so every
+//! tier-1 run leaves a fresh before/after perf record behind.
+//! `cargo run --release -- bench --exp simperf` produces the release
+//! version of the same file (CI uploads it as an artifact); this test's
+//! record is tagged `"build": "debug"` under `cargo test`.
+//!
+//! The speedup floor here is deliberately conservative (the measured gap
+//! on the saturated configuration is the quadratic-vs-log regime, well
+//! above it); set `MOELESS_SKIP_PERF=1` to skip on constrained machines.
+
+use moeless::experiments::simperf;
+
+#[test]
+fn perf_trajectory_beats_reference_and_records_bench_sim_json() {
+    if std::env::var("MOELESS_SKIP_PERF").is_ok() {
+        eprintln!("perf_trajectory skipped (MOELESS_SKIP_PERF set)");
+        return;
+    }
+    let quick = simperf::measure_scale("quick");
+    let saturated = simperf::measure_scale("saturated");
+
+    // The saturated drain is the churn regime: preemption/resume must
+    // actually fire or the configuration is mis-sized.
+    assert!(
+        saturated.drain_current.preemptions > 100,
+        "saturated config must churn: {} preemptions",
+        saturated.drain_current.preemptions
+    );
+    assert_eq!(saturated.drain_current.completed, 2500, "every request drains");
+
+    let speedup = saturated.drain_speedup();
+    assert!(
+        speedup >= 1.5,
+        "optimized core must beat the pre-PR4 reference on the saturated drain \
+         (baseline {:.3}s vs current {:.3}s = {speedup:.2}x)",
+        saturated.drain_baseline.wall_s,
+        saturated.drain_current.wall_s,
+    );
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim.json");
+    simperf::write_bench_json(&path, &[quick, saturated]);
+    eprintln!(
+        "perf_trajectory: saturated speedup {speedup:.2}x \
+         (baseline {:.3}s -> current {:.3}s); recorded {}",
+        saturated.drain_baseline.wall_s,
+        saturated.drain_current.wall_s,
+        path.display()
+    );
+}

@@ -533,6 +533,6 @@ fn prop_tiny_cluster_never_panics() {
         cfg.base_rps = g.f64_in(0.5, 6.0);
         cfg.seed = g.seed;
         let r = run(&cfg);
-        assert!(r.layer_forward_ms.iter().all(|&x| x.is_finite()));
+        assert!(r.layer_forward.mean().is_finite() && r.layer_forward.max().is_finite());
     });
 }
