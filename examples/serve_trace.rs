@@ -17,7 +17,7 @@
 use std::time::Instant;
 
 use moeless::baselines::PolicyKind;
-use moeless::config::{DatasetSpec, DisaggSpec, ModelSpec};
+use moeless::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec};
 use moeless::metrics::{reduction_pct, SloSpec};
 use moeless::sim::sweep::{run_sweep, summarize, SweepSpec};
 use moeless::sim::{run, run_paper_set, SimConfig};
@@ -142,5 +142,35 @@ fn main() {
             r.goodput_rps(&slo),
             r.phase_line()
         );
+    }
+
+    // --- heterogeneous fleet A/B: the same bursty stream on the uniform -
+    // --- testbed vs a mixed 2xH100 + 6xA6000 fleet, capacity-aware vs ---
+    // --- token-balanced decisions (evaluation always on real speeds). ---
+    println!(
+        "\n=== heterogeneous fleet: {} on {} (bursty, {seconds:.0}s) ===",
+        model.name, dataset.name
+    );
+    for (label, cluster, aware) in [
+        ("uniform-a6000x8", ClusterSpec::a6000_x8(), true),
+        ("hetero-aware", ClusterSpec::hetero_h100_a6000(), true),
+        ("hetero-balanced", ClusterSpec::hetero_h100_a6000(), false),
+    ] {
+        let mut cfg = SimConfig::new(model.clone(), dataset.clone(), PolicyKind::Moeless);
+        cfg.scenario = Scenario::bursty();
+        cfg.duration_s = seconds;
+        cfg.base_rps = rps;
+        cfg.seed = seed;
+        cfg.cluster = cluster;
+        cfg.cluster.capacity_aware = aware;
+        let r = run(&cfg);
+        println!(
+            "   {label:<16} mean_layer={:6.3}ms p99={:6.3}ms ttft p99={:5.0}ms dollar=${:.4}",
+            r.mean_layer_ms(),
+            r.layer_forward.p(99.0),
+            r.ttft_cdf().p(99.0),
+            r.dollar_cost
+        );
+        println!("   {label:<16} {}", r.gpu_line());
     }
 }

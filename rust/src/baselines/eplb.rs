@@ -35,7 +35,7 @@ impl EplbPolicy {
         let slots = model.n_experts + model.n_experts.div_ceil(4);
         EplbPolicy {
             n_experts: model.n_experts,
-            n_gpus: cluster.n_gpus,
+            n_gpus: cluster.n_gpus(),
             slots_per_layer: slots,
             interval_s,
             last_rebalance_s: f64::NEG_INFINITY,
@@ -91,7 +91,7 @@ impl Policy for EplbPolicy {
         &mut self,
         layer: usize,
         actual: &[f64],
-        _cluster: &mut Cluster,
+        cluster: &mut Cluster,
         cost: &CostModel,
         now_s: f64,
     ) -> LayerOutcome {
@@ -108,7 +108,7 @@ impl Policy for EplbPolicy {
         let mut out = static_layer_outcome(
             actual,
             &replicas,
-            self.n_gpus,
+            cluster,
             |e, k| {
                 placements
                     .get(e)

@@ -19,7 +19,7 @@ impl MegatronPolicy {
     pub fn new(model: &ModelSpec, cluster: &ClusterSpec) -> MegatronPolicy {
         MegatronPolicy {
             n_experts: model.n_experts,
-            n_gpus: cluster.n_gpus,
+            n_gpus: cluster.n_gpus(),
             replicas: vec![1; model.n_experts],
         }
     }
@@ -39,11 +39,11 @@ impl Policy for MegatronPolicy {
         &mut self,
         layer: usize,
         actual: &[f64],
-        _cluster: &mut Cluster,
+        cluster: &mut Cluster,
         cost: &CostModel,
         _now_s: f64,
     ) -> LayerOutcome {
-        static_layer_outcome(actual, &self.replicas, self.n_gpus, |e, _| self.gpu_of(layer, e), cost)
+        static_layer_outcome(actual, &self.replicas, cluster, |e, _| self.gpu_of(layer, e), cost)
     }
 
     fn resident_model_mem_gb(&self, cost: &CostModel) -> Option<f64> {

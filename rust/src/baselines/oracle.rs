@@ -19,7 +19,7 @@ pub struct OraclePolicy {
 
 impl OraclePolicy {
     pub fn new(model: &ModelSpec, cluster: &ClusterSpec) -> OraclePolicy {
-        OraclePolicy { n_experts: model.n_experts, n_gpus: cluster.n_gpus }
+        OraclePolicy { n_experts: model.n_experts, n_gpus: cluster.n_gpus() }
     }
 }
 
@@ -32,15 +32,30 @@ impl Policy for OraclePolicy {
         &mut self,
         _layer: usize,
         actual: &[f64],
-        _cluster: &mut Cluster,
+        cluster: &mut Cluster,
         cost: &CostModel,
         _now_s: f64,
     ) -> LayerOutcome {
         let total: f64 = actual.iter().sum();
-        let per_expert = total / self.n_experts as f64;
-        // Experts spread evenly over GPUs: per-GPU load is also perfectly
-        // balanced.
-        let per_gpu = total / self.n_gpus as f64;
+        // Perfect balancing on a capability-aware oracle: every term is
+        // taken at its own optimum (the lossy idealized bound). Compute:
+        // equal expert token shares served at the fleet's mean speed.
+        // Communication: aggregation split proportional to per-device
+        // bandwidth, so the comm straggler is total/Σcomm_speeds — no
+        // bandwidth-aware policy can beat it. On a uniform fleet both
+        // denominators are exactly the old E and G.
+        let per_expert = total / self.n_experts as f64 / cost.mean_speed();
+        let per_gpu = total / cost.total_comm_speed();
+        // Served-work signal: tokens split proportional to compute speed
+        // (the compute-side optimal allocation), equal time everywhere.
+        let total_speed = cost.total_speed();
+        let eff_ms_each = cost.alpha_ms * (total / total_speed);
+        for g in 0..self.n_gpus {
+            let tokens_g = total * cost.speed(g) / total_speed;
+            if tokens_g > 0.0 {
+                cluster.note_served(g, tokens_g, eff_ms_each);
+            }
+        }
         LayerOutcome {
             cost: cost.layer(per_expert, per_gpu, self.n_experts, 0.0),
             replicas: self.n_experts,

@@ -4,11 +4,20 @@
 use crate::config::{ClusterSpec, ModelSpec};
 
 /// Latency/cost coefficients for (model, cluster).
+///
+/// Per-device capability enters as *normalized speeds* (A6000 = 1.0):
+/// α and β are calibrated for the reference device, and a replica on
+/// device g runs at `alpha_ms × load / speed(g)` (comm at
+/// `beta_ms × load / comm_speed(g)`). Call sites therefore evaluate the
+/// §3.3 terms over *effective* (speed-normalized) loads; on a uniform
+/// A6000 fleet every speed is exactly 1.0 and the arithmetic is
+/// bit-identical to the pre-refactor scalar model.
 #[derive(Clone, Debug)]
 pub struct CostModel {
-    /// α scaled to this model's expert size (ms per routed token).
+    /// α scaled to this model's expert size (ms per routed token on the
+    /// reference-speed device).
     pub alpha_ms: f64,
-    /// β (ms per token aggregated on a GPU).
+    /// β (ms per token aggregated on a reference-speed GPU).
     pub beta_ms: f64,
     /// Non-MoE per-layer latency constant (ms).
     pub t_misc_ms: f64,
@@ -17,6 +26,12 @@ pub struct CostModel {
     /// Non-expert resident memory (GB).
     pub misc_mem_gb: f64,
     pub n_layers: usize,
+    /// Per-device normalized compute speeds (the real hardware — the
+    /// evaluation side never flattens these, even when decision-side
+    /// capacity awareness is ablated).
+    pub speeds: Vec<f64>,
+    /// Per-device normalized communication speeds (HBM-derived).
+    pub comm_speeds: Vec<f64>,
 }
 
 /// One MoE layer forward's cost breakdown.
@@ -60,11 +75,53 @@ impl CostModel {
             expert_mem_gb: model.expert_mem_gb,
             misc_mem_gb: model.misc_mem_gb,
             n_layers: model.n_layers,
+            speeds: cluster.gpus.iter().map(|g| g.speed()).collect(),
+            comm_speeds: cluster.gpus.iter().map(|g| g.comm_speed()).collect(),
+        }
+    }
+
+    /// Normalized compute speed of device `g` (1.0 past the known fleet —
+    /// degenerate callers fall back to reference speed).
+    #[inline]
+    pub fn speed(&self, g: usize) -> f64 {
+        self.speeds.get(g).copied().unwrap_or(1.0)
+    }
+
+    /// Normalized communication speed of device `g`.
+    #[inline]
+    pub fn comm_speed(&self, g: usize) -> f64 {
+        self.comm_speeds.get(g).copied().unwrap_or(1.0)
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.speeds.len()
+    }
+
+    /// Aggregate normalized compute capacity of the fleet.
+    pub fn total_speed(&self) -> f64 {
+        self.speeds.iter().sum()
+    }
+
+    /// Aggregate normalized communication capacity of the fleet.
+    pub fn total_comm_speed(&self) -> f64 {
+        self.comm_speeds.iter().sum()
+    }
+
+    /// Mean normalized compute capacity (exactly 1.0 on uniform A6000).
+    pub fn mean_speed(&self) -> f64 {
+        if self.speeds.is_empty() {
+            1.0
+        } else {
+            self.total_speed() / self.speeds.len() as f64
         }
     }
 
     /// Layer forward from the straggler load, the max per-GPU aggregated
-    /// load, the replica count, and any cold-start penalty.
+    /// load, the replica count, and any cold-start penalty. Loads are
+    /// *effective* (speed-normalized) token counts: callers on
+    /// heterogeneous fleets divide each replica/GPU load by its device's
+    /// `speed`/`comm_speed` first (a no-op division by 1.0 on the uniform
+    /// reference fleet).
     pub fn layer(
         &self,
         max_replica_load: f64,
@@ -138,6 +195,26 @@ mod tests {
         let warm = m.layer(500.0, 500.0, 8, 0.0);
         let cold = m.layer(500.0, 500.0, 8, 45.0);
         assert!((cold.forward_ms() - warm.forward_ms() - 45.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_device_speeds_normalize_against_a6000() {
+        let u = CostModel::new(&ModelSpec::mixtral_8x7b(), &ClusterSpec::a6000_x8());
+        assert_eq!(u.n_gpus(), 8);
+        for g in 0..8 {
+            assert_eq!(u.speed(g), 1.0, "uniform A6000 must normalize to exactly 1.0");
+            assert_eq!(u.comm_speed(g), 1.0);
+        }
+        assert_eq!(u.mean_speed(), 1.0);
+        let h = CostModel::new(&ModelSpec::mixtral_8x7b(), &ClusterSpec::hetero_h100_a6000());
+        assert!(h.speed(0) > 6.0 && h.speed(2) == 1.0);
+        assert!(h.comm_speed(0) > 4.0 && h.comm_speed(2) == 1.0);
+        // The same token load costs less wall-clock on the fast device.
+        let on_a6000 = h.alpha_ms * (1000.0 / h.speed(2));
+        let on_h100 = h.alpha_ms * (1000.0 / h.speed(0));
+        assert!(on_h100 < on_a6000 / 6.0);
+        // Out-of-fleet indexes degrade to reference speed, never panic.
+        assert_eq!(h.speed(99), 1.0);
     }
 
     #[test]

@@ -19,13 +19,19 @@ pub use cost::{CostModel, LayerCost};
 use crate::config::ClusterSpec;
 
 /// One GPU's live accounting: resident memory and the current layer's
-/// aggregated routed-token load.
+/// aggregated routed-token load, plus the *decision* speed the placement
+/// layers normalize by (the device's real normalized capacity, or exactly
+/// 1.0 when the spec disables capacity awareness — token balancing).
 #[derive(Clone, Debug)]
 pub struct Gpu {
     pub id: usize,
     pub mem_capacity_gb: f64,
     pub mem_used_gb: f64,
     pub load_tokens: f64,
+    /// Normalized decision speed (A6000 = 1.0; uniform fleets are all
+    /// equal, making every time comparison bit-identical to the old
+    /// token comparison).
+    pub speed: f64,
 }
 
 impl Gpu {
@@ -36,31 +42,60 @@ impl Gpu {
     pub fn can_fit(&self, gb: f64) -> bool {
         self.free_gb() >= gb - 1e-9
     }
+
+    /// Current load expressed as normalized time (tokens / speed): the
+    /// quantity capacity-aware balancing equalizes.
+    pub fn load_time(&self) -> f64 {
+        self.load_tokens / self.speed
+    }
 }
 
 /// The cluster: GPUs + spec. Placement decisions mutate per-GPU memory and
-/// load trackers; the engine resets loads each layer.
+/// load trackers; the engine resets loads each layer. Per-GPU served
+/// totals (`served_tokens`/`served_ms`) accumulate over the whole run for
+/// the utilization/imbalance report signals.
 #[derive(Clone, Debug)]
 pub struct Cluster {
     pub spec: ClusterSpec,
     pub gpus: Vec<Gpu>,
+    /// All devices share one decision speed (always true for uniform
+    /// fleets and for `capacity_aware: false`): the branch condition that
+    /// keeps the old token-balancing code path bit-for-bit intact.
+    pub uniform_speed: bool,
+    /// Cumulative routed tokens served per GPU (report signal).
+    pub served_tokens: Vec<f64>,
+    /// Cumulative effective compute milliseconds per GPU (α-scaled,
+    /// speed-normalized — report signal).
+    pub served_ms: Vec<f64>,
 }
 
 impl Cluster {
     pub fn new(spec: ClusterSpec) -> Cluster {
-        let gpus = (0..spec.n_gpus)
-            .map(|id| Gpu {
+        let gpus: Vec<Gpu> = spec
+            .gpus
+            .iter()
+            .enumerate()
+            .map(|(id, g)| Gpu {
                 id,
-                mem_capacity_gb: spec.mem_per_gpu_gb,
+                mem_capacity_gb: g.mem_gb,
                 mem_used_gb: 0.0,
                 load_tokens: 0.0,
+                speed: if spec.capacity_aware { g.speed() } else { 1.0 },
             })
             .collect();
-        Cluster { spec, gpus }
+        let uniform_speed = gpus.windows(2).all(|w| w[0].speed == w[1].speed);
+        let n = gpus.len();
+        Cluster { spec, gpus, uniform_speed, served_tokens: vec![0.0; n], served_ms: vec![0.0; n] }
     }
 
     pub fn n_gpus(&self) -> usize {
         self.gpus.len()
+    }
+
+    /// Record served work on GPU `g` (run-cumulative report signals).
+    pub fn note_served(&mut self, g: usize, tokens: f64, eff_ms: f64) {
+        self.served_tokens[g] += tokens;
+        self.served_ms[g] += eff_ms;
     }
 
     /// Reserve `gb` on GPU `g`; false (and no change) if it doesn't fit.
@@ -93,17 +128,37 @@ impl Cluster {
 
     /// Least-loaded GPU (JSQ) that can fit `gb`; `None` if the cluster is
     /// memory-exhausted everywhere.
+    ///
+    /// Uniform fleets compare raw token loads with the pinned
+    /// lowest-index tie-break (the pre-refactor behavior, bit for bit).
+    /// Heterogeneous fleets compare normalized *time* (tokens / speed)
+    /// instead — the least-busy-in-wall-clock device — spilling to the
+    /// fastest device on time ties, then the lowest index.
     pub fn least_loaded_with_room(&self, gb: f64) -> Option<usize> {
-        self.gpus
-            .iter()
-            .filter(|g| g.can_fit(gb))
-            .min_by(|a, b| {
-                a.load_tokens
-                    .partial_cmp(&b.load_tokens)
-                    .unwrap()
-                    .then(a.id.cmp(&b.id))
-            })
-            .map(|g| g.id)
+        if self.uniform_speed {
+            self.gpus
+                .iter()
+                .filter(|g| g.can_fit(gb))
+                .min_by(|a, b| {
+                    a.load_tokens
+                        .partial_cmp(&b.load_tokens)
+                        .unwrap()
+                        .then(a.id.cmp(&b.id))
+                })
+                .map(|g| g.id)
+        } else {
+            self.gpus
+                .iter()
+                .filter(|g| g.can_fit(gb))
+                .min_by(|a, b| {
+                    a.load_time()
+                        .partial_cmp(&b.load_time())
+                        .unwrap()
+                        .then(b.speed.partial_cmp(&a.speed).unwrap())
+                        .then(a.id.cmp(&b.id))
+                })
+                .map(|g| g.id)
+        }
     }
 
     pub fn total_mem_used_gb(&self) -> f64 {
@@ -114,6 +169,7 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::GpuSpec;
 
     fn cluster() -> Cluster {
         Cluster::new(ClusterSpec::a6000_x8())
@@ -124,6 +180,26 @@ mod tests {
         let c = cluster();
         assert_eq!(c.n_gpus(), 8);
         assert!((c.gpus[0].free_gb() - 48.0).abs() < 1e-9);
+        assert!(c.uniform_speed);
+        assert!(c.gpus.iter().all(|g| g.speed == 1.0));
+    }
+
+    #[test]
+    fn hetero_construction_carries_per_device_capability() {
+        let c = Cluster::new(ClusterSpec::hetero_h100_a6000());
+        assert!(!c.uniform_speed);
+        assert!((c.gpus[0].free_gb() - 80.0).abs() < 1e-9);
+        assert!((c.gpus[2].free_gb() - 48.0).abs() < 1e-9);
+        assert!(c.gpus[0].speed > 6.0);
+        assert_eq!(c.gpus[2].speed, 1.0);
+        // Token-balanced ablation: decision speeds flatten to 1.0, but the
+        // per-device memory stays real.
+        let mut spec = ClusterSpec::hetero_h100_a6000();
+        spec.capacity_aware = false;
+        let t = Cluster::new(spec);
+        assert!(t.uniform_speed);
+        assert!(t.gpus.iter().all(|g| g.speed == 1.0));
+        assert!((t.gpus[0].free_gb() - 80.0).abs() < 1e-9);
     }
 
     #[test]
@@ -161,5 +237,65 @@ mod tests {
         assert!((c.max_gpu_load() - 150.0).abs() < 1e-9);
         c.reset_loads();
         assert_eq!(c.max_gpu_load(), 0.0);
+    }
+
+    #[test]
+    fn jsq_ties_pin_lowest_index() {
+        // Equal loads everywhere: the winner is deterministically GPU 0,
+        // and after loading it, deterministically GPU 1 — never a
+        // representation-order accident.
+        let mut c = cluster();
+        assert_eq!(c.least_loaded_with_room(1.0), Some(0));
+        c.add_load(0, 5.0);
+        assert_eq!(c.least_loaded_with_room(1.0), Some(1));
+        for g in 1..8 {
+            c.add_load(g, 5.0);
+        }
+        assert_eq!(c.least_loaded_with_room(1.0), Some(0));
+    }
+
+    #[test]
+    fn hetero_jsq_balances_time_and_spills_to_fastest() {
+        // 2×H100 (speed ~6.4) + 6×A6000: an idle fleet ties on time 0, so
+        // the fastest device wins (index 0 holds an H100).
+        let mut c = Cluster::new(ClusterSpec::hetero_h100_a6000());
+        assert_eq!(c.least_loaded_with_room(1.0), Some(0));
+        // Load H100-0 with 6× the tokens of an A6000: its *time* is still
+        // under an A6000 carrying the same tokens, so with every A6000 at
+        // 100 tokens, the H100 at 600 tokens is less busy in wall-clock.
+        c.add_load(0, 600.0);
+        c.add_load(1, 620.0);
+        for g in 2..8 {
+            c.add_load(g, 100.0);
+        }
+        let pick = c.least_loaded_with_room(1.0).unwrap();
+        assert_eq!(pick, 0, "600/6.38 < 100/1: the loaded H100 is still the least busy");
+        // Token-balancing would have picked an A6000 (lowest tokens).
+        let min_tokens = (0..8).min_by(|&a, &b| {
+            c.gpus[a].load_tokens.partial_cmp(&c.gpus[b].load_tokens).unwrap()
+        });
+        assert_ne!(min_tokens, Some(0));
+    }
+
+    #[test]
+    fn note_served_accumulates_per_gpu() {
+        let mut c = Cluster::new(ClusterSpec::a6000_x8().with_n_gpus(2));
+        c.note_served(0, 100.0, 0.45);
+        c.note_served(0, 50.0, 0.20);
+        c.note_served(1, 10.0, 0.05);
+        assert!((c.served_tokens[0] - 150.0).abs() < 1e-12);
+        assert!((c.served_ms[0] - 0.65).abs() < 1e-12);
+        assert!((c.served_tokens[1] - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hetero_cluster_respects_per_device_memory() {
+        // Memory-skewed fleet: the 24 GB L4s fill long before the 80 GB
+        // A100s; reservations respect each device's own capacity.
+        let mut c = Cluster::new(ClusterSpec::hetero_mem_skewed());
+        assert!(c.reserve(7, 24.0));
+        assert!(!c.reserve(7, 1.0), "L4 is full at 24 GB");
+        assert!(c.reserve(0, 79.0), "A100 holds 80 GB");
+        assert!((GpuSpec::l4().mem_gb - 24.0).abs() < 1e-12);
     }
 }

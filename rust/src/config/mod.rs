@@ -167,16 +167,165 @@ fn ramp_stability(n_layers: usize, lo: f64, hi: f64) -> Vec<f64> {
         .collect()
 }
 
+/// The A6000 reference compute throughput (bf16 tensor TFLOPS): per-device
+/// speeds are normalized against it, so an A6000 has speed exactly 1.0 and
+/// the paper's α coefficient keeps its calibration.
+pub const REF_TFLOPS: f64 = 155.0;
+/// The A6000 reference memory bandwidth (GB/s): normalizes the per-device
+/// communication speed the β term divides by.
+pub const REF_HBM_GBPS: f64 = 768.0;
+
+/// One GPU's capability: the per-device unit the cluster is an ordered
+/// list of. Uniform fleets hold n identical entries; heterogeneous fleets
+/// mix them (the scenario the placement/scaling layers normalize over).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    /// Device label for reports ("a6000", "h100", ...).
+    pub name: String,
+    /// Device memory (GB).
+    pub mem_gb: f64,
+    /// Dense bf16 tensor throughput (TFLOPS) — normalized into the
+    /// compute speed the α term divides by.
+    pub tflops: f64,
+    /// Memory bandwidth (GB/s) — normalized into the communication speed
+    /// the β term divides by.
+    pub hbm_gbps: f64,
+    /// Residency price ($ per device-hour) for the dollar-cost bill.
+    pub cost_per_hour: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA RTX A6000: the paper's §6.1 testbed device (the speed-1.0
+    /// reference).
+    pub fn a6000() -> GpuSpec {
+        GpuSpec {
+            name: "a6000".into(),
+            mem_gb: 48.0,
+            tflops: REF_TFLOPS,
+            hbm_gbps: REF_HBM_GBPS,
+            cost_per_hour: 0.80,
+        }
+    }
+
+    /// NVIDIA H100 SXM: the fast/expensive end of a mixed fleet.
+    pub fn h100() -> GpuSpec {
+        GpuSpec {
+            name: "h100".into(),
+            mem_gb: 80.0,
+            tflops: 989.0,
+            hbm_gbps: 3350.0,
+            cost_per_hour: 3.90,
+        }
+    }
+
+    /// NVIDIA A100 80GB: the memory-rich middle tier.
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            name: "a100".into(),
+            mem_gb: 80.0,
+            tflops: 312.0,
+            hbm_gbps: 2039.0,
+            cost_per_hour: 1.90,
+        }
+    }
+
+    /// NVIDIA L4: the cheap, small decode-class device.
+    pub fn l4() -> GpuSpec {
+        GpuSpec {
+            name: "l4".into(),
+            mem_gb: 24.0,
+            tflops: 121.0,
+            hbm_gbps: 300.0,
+            cost_per_hour: 0.40,
+        }
+    }
+
+    /// Normalized compute capacity (A6000 = 1.0): what the α straggler
+    /// term divides by.
+    pub fn speed(&self) -> f64 {
+        self.tflops / REF_TFLOPS
+    }
+
+    /// Normalized communication capacity (A6000 = 1.0): what the β
+    /// all-to-all term divides by.
+    pub fn comm_speed(&self) -> f64 {
+        self.hbm_gbps / REF_HBM_GBPS
+    }
+
+    /// Parse one per-GPU entry: `mem_gb` and `tflops` are required,
+    /// `name`/`hbm_gbps`/`cost_per_hour` optional (A6000 defaults);
+    /// unknown keys and non-positive capabilities are structured errors.
+    pub fn from_json(j: &Json) -> anyhow::Result<GpuSpec> {
+        let obj = match j {
+            Json::Obj(m) => m,
+            other => anyhow::bail!("gpu entry must be an object, got {other:?}"),
+        };
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "name" | "mem_gb" | "tflops" | "hbm_gbps" | "cost_per_hour")
+            {
+                anyhow::bail!("gpu entry: unknown field {key:?}");
+            }
+        }
+        let num = |key: &str| -> anyhow::Result<Option<f64>> {
+            match obj.get(key) {
+                None => Ok(None),
+                Some(Json::Num(x)) => Ok(Some(*x)),
+                Some(other) => anyhow::bail!("gpu entry: {key} must be a number, got {other:?}"),
+            }
+        };
+        let base = GpuSpec::a6000();
+        let mem_gb = num("mem_gb")?
+            .ok_or_else(|| anyhow::Error::msg("gpu entry: missing required field \"mem_gb\""))?;
+        let tflops = num("tflops")?
+            .ok_or_else(|| anyhow::Error::msg("gpu entry: missing required field \"tflops\""))?;
+        let hbm_gbps = num("hbm_gbps")?.unwrap_or(base.hbm_gbps);
+        let cost_per_hour = num("cost_per_hour")?.unwrap_or(base.cost_per_hour);
+        let name = match obj.get("name") {
+            None => "custom".to_string(),
+            Some(Json::Str(s)) => s.clone(),
+            Some(other) => anyhow::bail!("gpu entry: name must be a string, got {other:?}"),
+        };
+        let spec = GpuSpec { name, mem_gb, tflops, hbm_gbps, cost_per_hour };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        if !(self.mem_gb > 0.0 && self.mem_gb.is_finite()) {
+            anyhow::bail!("gpu {:?}: mem_gb must be positive, got {}", self.name, self.mem_gb);
+        }
+        if !(self.tflops > 0.0 && self.tflops.is_finite()) {
+            anyhow::bail!("gpu {:?}: tflops must be positive, got {}", self.name, self.tflops);
+        }
+        if !(self.hbm_gbps > 0.0 && self.hbm_gbps.is_finite()) {
+            anyhow::bail!("gpu {:?}: hbm_gbps must be positive, got {}", self.name, self.hbm_gbps);
+        }
+        if !(self.cost_per_hour >= 0.0 && self.cost_per_hour.is_finite()) {
+            anyhow::bail!(
+                "gpu {:?}: cost_per_hour must be >= 0, got {}",
+                self.name,
+                self.cost_per_hour
+            );
+        }
+        Ok(())
+    }
+}
+
 /// The GPU testbed (paper §6.1: 8×A6000-48GB, pairwise NVLink) plus the
-/// §3.3 cost-model coefficients.
+/// §3.3 cost-model coefficients. Devices are an ordered per-GPU list
+/// ([`GpuSpec`]), so mixed fleets (H100 + A6000, memory-skewed pools) are
+/// first-class; uniform fleets are the n-identical-entries special case
+/// and behave bit-for-bit like the pre-refactor scalar spec.
 #[derive(Clone, Debug)]
 pub struct ClusterSpec {
-    pub n_gpus: usize,
-    pub mem_per_gpu_gb: f64,
+    /// The ordered device list; index = GPU id everywhere.
+    pub gpus: Vec<GpuSpec>,
     /// α: expert processing ms per routed token, for a Mixtral-sized expert
-    /// (scaled by expert FLOPs for other models).
+    /// on the *reference-speed* (A6000) device; a device at speed s takes
+    /// α/s per token (scaled by expert FLOPs for other models).
     pub alpha_ms_per_token: f64,
-    /// β: all-to-all communication ms per token aggregated on one GPU.
+    /// β: all-to-all communication ms per token aggregated on one
+    /// reference-speed GPU (divided by the device's comm speed).
     pub beta_ms_per_token: f64,
     /// T_misc: non-MoE per-layer latency constant (attention etc.).
     pub t_misc_ms: f64,
@@ -185,56 +334,294 @@ pub struct ClusterSpec {
     pub cold_start_ms: f64,
     /// GB/s of the host<->GPU link (PCIe 5.0 x16 per §6.1).
     pub pcie_gbps: f64,
+    /// When false, placement/scaling *decisions* ignore device speeds
+    /// (token balancing) while the cost model still evaluates on the real
+    /// hardware — the ablation baseline capacity-aware placement is
+    /// measured against. No-op on uniform fleets.
+    pub capacity_aware: bool,
 }
 
 impl ClusterSpec {
-    pub fn a6000_x8() -> ClusterSpec {
+    /// A uniform fleet of `n` identical devices with the paper's §3.3
+    /// coefficients.
+    pub fn uniform(n: usize, gpu: GpuSpec) -> ClusterSpec {
         ClusterSpec {
-            n_gpus: 8,
-            mem_per_gpu_gb: 48.0,
+            gpus: vec![gpu; n],
             alpha_ms_per_token: 0.0045,
             beta_ms_per_token: 0.0004,
             t_misc_ms: 0.9,
             cold_start_ms: 45.0,
             pcie_gbps: 64.0,
+            capacity_aware: true,
         }
     }
 
-    /// Total cluster memory (GB).
+    /// The paper's testbed: 8×A6000-48GB.
+    pub fn a6000_x8() -> ClusterSpec {
+        Self::uniform(8, GpuSpec::a6000())
+    }
+
+    /// A uniform fast fleet: 8×H100-80GB.
+    pub fn h100_x8() -> ClusterSpec {
+        Self::uniform(8, GpuSpec::h100())
+    }
+
+    /// The mixed preset: 2×H100 + 6×A6000 (fast devices first). The
+    /// capacity-aware layers route heavy replicas to the H100s; the
+    /// token-balanced ablation treats all eight as equals.
+    pub fn hetero_h100_a6000() -> ClusterSpec {
+        let mut spec = Self::uniform(8, GpuSpec::a6000());
+        spec.gpus[0] = GpuSpec::h100();
+        spec.gpus[1] = GpuSpec::h100();
+        spec
+    }
+
+    /// A memory-skewed fleet at uniform-ish speeds: 2×A100-80GB +
+    /// 4×A6000-48GB + 2×L4-24GB — the per-device `mem_gb` constraints
+    /// (KV budget, placement fit) diverge from the per-device speeds.
+    pub fn hetero_mem_skewed() -> ClusterSpec {
+        let mut gpus = vec![GpuSpec::a100(), GpuSpec::a100()];
+        gpus.extend(std::iter::repeat_with(GpuSpec::a6000).take(4));
+        gpus.push(GpuSpec::l4());
+        gpus.push(GpuSpec::l4());
+        ClusterSpec { gpus, ..Self::a6000_x8() }
+    }
+
+    /// Preset lookup for `--cluster <name>` (file paths are tried next).
+    pub fn by_name(name: &str) -> Option<ClusterSpec> {
+        match name {
+            "a6000x8" | "a6000_x8" | "a6000-x8" => Some(Self::a6000_x8()),
+            "h100x8" | "h100_x8" | "h100-x8" => Some(Self::h100_x8()),
+            "hetero-h100-a6000" | "hetero_h100_a6000" => Some(Self::hetero_h100_a6000()),
+            "hetero-mem-skewed" | "hetero_mem_skewed" => Some(Self::hetero_mem_skewed()),
+            _ => None,
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// Resize to `n` devices, repeating the first device's spec (uniform
+    /// fleets stay uniform; the builder most call sites use).
+    pub fn with_n_gpus(mut self, n: usize) -> ClusterSpec {
+        let proto = self.gpus.first().cloned().unwrap_or_else(GpuSpec::a6000);
+        self.gpus.resize(n, proto);
+        self
+    }
+
+    /// Set every device's memory to `gb` (uniform-memory builder).
+    pub fn with_mem_per_gpu(mut self, gb: f64) -> ClusterSpec {
+        for g in &mut self.gpus {
+            g.mem_gb = gb;
+        }
+        self
+    }
+
+    /// The sub-cluster holding the devices at `indices` (disaggregation
+    /// pools; an index may repeat for deliberately oversubscribed
+    /// degenerate splits).
+    pub fn subset(&self, indices: &[usize]) -> ClusterSpec {
+        ClusterSpec {
+            gpus: indices.iter().map(|&i| self.gpus[i].clone()).collect(),
+            ..self.clone()
+        }
+    }
+
+    pub fn mem_gb(&self, g: usize) -> f64 {
+        self.gpus[g].mem_gb
+    }
+
+    /// Normalized compute speed of device `g` (A6000 = 1.0).
+    pub fn speed(&self, g: usize) -> f64 {
+        self.gpus[g].speed()
+    }
+
+    /// Normalized communication speed of device `g` (A6000 = 1.0).
+    pub fn comm_speed(&self, g: usize) -> f64 {
+        self.gpus[g].comm_speed()
+    }
+
+    /// Whether every device is capability-identical (speeds and memory):
+    /// the case whose decisions must match the pre-refactor scalar model
+    /// bit for bit.
+    pub fn is_uniform(&self) -> bool {
+        self.gpus.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// Total cluster memory (GB), summed over the actual device list.
     pub fn total_mem_gb(&self) -> f64 {
-        self.n_gpus as f64 * self.mem_per_gpu_gb
+        self.gpus.iter().map(|g| g.mem_gb).sum()
+    }
+
+    /// Aggregate normalized compute capacity (Σ speeds; a uniform A6000
+    /// fleet sums to exactly n).
+    pub fn total_speed(&self) -> f64 {
+        self.gpus.iter().map(|g| g.speed()).sum()
+    }
+
+    /// Mean normalized compute capacity (exactly 1.0 on a uniform A6000
+    /// fleet).
+    pub fn mean_speed(&self) -> f64 {
+        if self.gpus.is_empty() {
+            1.0
+        } else {
+            self.total_speed() / self.gpus.len() as f64
+        }
+    }
+
+    /// Aggregate residency price ($/h with every device reserved) — the
+    /// serverful bill rate.
+    pub fn total_cost_per_hour(&self) -> f64 {
+        self.gpus.iter().map(|g| g.cost_per_hour).sum()
     }
 
     /// The KV-cache budget (GB) carved out of cluster memory alongside
     /// the expert-weight occupancy: total memory minus the resident
     /// non-expert footprint minus the full expert set (the worst-case
     /// weight residency — serverless policies that keep fewer experts
-    /// live run *under* this carve-out, never over it). Sequences are
-    /// assumed balanced across GPUs, so the aggregate equals n_gpus ×
-    /// the per-GPU carve-out. Floored at 5% of cluster memory so
-    /// pathologically small clusters degrade (reject/preempt) instead of
-    /// dividing by nothing.
+    /// live run *under* this carve-out, never over it). Total memory is
+    /// the sum over the actual per-device list, so memory-skewed fleets
+    /// budget from what the hardware really has. Floored at 5% of
+    /// cluster memory so pathologically small clusters degrade
+    /// (reject/preempt) instead of dividing by nothing.
     pub fn kv_budget_gb(&self, model: &ModelSpec) -> f64 {
         (self.total_mem_gb() - model.misc_mem_gb - model.full_expert_set_gb())
             .max(0.05 * self.total_mem_gb())
     }
 
-    pub fn from_json(j: &Json) -> ClusterSpec {
-        let base = Self::a6000_x8();
-        ClusterSpec {
-            n_gpus: j.opt("n_gpus").map(|v| v.as_usize()).unwrap_or(base.n_gpus),
-            mem_per_gpu_gb: j.opt("mem_per_gpu_gb").map(|v| v.as_f64()).unwrap_or(base.mem_per_gpu_gb),
-            alpha_ms_per_token: j.opt("alpha_ms_per_token").map(|v| v.as_f64()).unwrap_or(base.alpha_ms_per_token),
-            beta_ms_per_token: j.opt("beta_ms_per_token").map(|v| v.as_f64()).unwrap_or(base.beta_ms_per_token),
-            t_misc_ms: j.opt("t_misc_ms").map(|v| v.as_f64()).unwrap_or(base.t_misc_ms),
-            cold_start_ms: j.opt("cold_start_ms").map(|v| v.as_f64()).unwrap_or(base.cold_start_ms),
-            pcie_gbps: j.opt("pcie_gbps").map(|v| v.as_f64()).unwrap_or(base.pcie_gbps),
+    /// Parse a cluster spec. Two forms:
+    ///
+    /// * per-GPU array: `{"gpus": [{"mem_gb": 80, "tflops": 989, ...}, ...]}`
+    /// * uniform shorthand: `{"n_gpus": 8, "mem_per_gpu_gb": 48, "tflops": 155, ...}`
+    ///
+    /// Mixing the two (a `gpus` array next to a uniform-shorthand field)
+    /// is a duplicate-specification error; missing required per-GPU
+    /// fields, unknown keys and non-positive capabilities are structured
+    /// errors — never panics.
+    pub fn from_json(j: &Json) -> anyhow::Result<ClusterSpec> {
+        let obj = match j {
+            Json::Obj(m) => m,
+            other => anyhow::bail!("cluster spec must be a JSON object, got {other:?}"),
+        };
+        const UNIFORM_KEYS: [&str; 5] =
+            ["n_gpus", "mem_per_gpu_gb", "tflops", "hbm_gbps", "cost_per_hour"];
+        const SHARED_KEYS: [&str; 6] = [
+            "alpha_ms_per_token",
+            "beta_ms_per_token",
+            "t_misc_ms",
+            "cold_start_ms",
+            "pcie_gbps",
+            "capacity_aware",
+        ];
+        for key in obj.keys() {
+            let known = key == "gpus"
+                || UNIFORM_KEYS.contains(&key.as_str())
+                || SHARED_KEYS.contains(&key.as_str());
+            if !known {
+                anyhow::bail!("cluster spec: unknown field {key:?}");
+            }
         }
+        let num = |key: &str| -> anyhow::Result<Option<f64>> {
+            match obj.get(key) {
+                None => Ok(None),
+                Some(Json::Num(x)) => Ok(Some(*x)),
+                Some(other) => anyhow::bail!("cluster spec: {key} must be a number, got {other:?}"),
+            }
+        };
+
+        let base = Self::a6000_x8();
+        let gpus: Vec<GpuSpec> = if let Some(entry) = obj.get("gpus") {
+            // Per-GPU array form: the uniform shorthand keys would silently
+            // contradict it — reject the duplicate specification.
+            for dup in UNIFORM_KEYS {
+                if obj.contains_key(dup) {
+                    anyhow::bail!(
+                        "cluster spec: duplicate specification — \
+                         \"gpus\" array conflicts with uniform field {dup:?}"
+                    );
+                }
+            }
+            let arr = match entry {
+                Json::Arr(v) => v,
+                other => anyhow::bail!("cluster spec: gpus must be an array, got {other:?}"),
+            };
+            if arr.is_empty() {
+                anyhow::bail!("cluster spec: gpus array must not be empty");
+            }
+            arr.iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    GpuSpec::from_json(e)
+                        .map_err(|err| anyhow::Error::msg(format!("gpus[{i}]: {err}")))
+                })
+                .collect::<anyhow::Result<Vec<GpuSpec>>>()?
+        } else {
+            // Uniform shorthand (back-compatible with the scalar spec).
+            let n = match num("n_gpus")? {
+                None => base.n_gpus(),
+                Some(x) => {
+                    // Bounded so a malformed spec returns a structured
+                    // error instead of aborting on a huge allocation.
+                    if !(x.is_finite() && (1.0..=65_536.0).contains(&x) && x.fract() == 0.0) {
+                        anyhow::bail!(
+                            "cluster spec: n_gpus must be an integer in 1..=65536, got {x}"
+                        );
+                    }
+                    x as usize
+                }
+            };
+            let proto = GpuSpec {
+                name: "custom".into(),
+                mem_gb: num("mem_per_gpu_gb")?.unwrap_or(48.0),
+                tflops: num("tflops")?.unwrap_or(REF_TFLOPS),
+                hbm_gbps: num("hbm_gbps")?.unwrap_or(REF_HBM_GBPS),
+                cost_per_hour: num("cost_per_hour")?.unwrap_or(0.80),
+            };
+            proto.validate()?;
+            vec![proto; n]
+        };
+
+        let spec = ClusterSpec {
+            gpus,
+            alpha_ms_per_token: num("alpha_ms_per_token")?.unwrap_or(base.alpha_ms_per_token),
+            beta_ms_per_token: num("beta_ms_per_token")?.unwrap_or(base.beta_ms_per_token),
+            t_misc_ms: num("t_misc_ms")?.unwrap_or(base.t_misc_ms),
+            cold_start_ms: num("cold_start_ms")?.unwrap_or(base.cold_start_ms),
+            pcie_gbps: num("pcie_gbps")?.unwrap_or(base.pcie_gbps),
+            capacity_aware: match obj.get("capacity_aware") {
+                None => true,
+                Some(Json::Bool(b)) => *b,
+                Some(other) => {
+                    anyhow::bail!("cluster spec: capacity_aware must be a bool, got {other:?}")
+                }
+            },
+        };
+        if !(spec.alpha_ms_per_token > 0.0 && spec.alpha_ms_per_token.is_finite()) {
+            anyhow::bail!(
+                "cluster spec: alpha_ms_per_token must be positive, got {}",
+                spec.alpha_ms_per_token
+            );
+        }
+        if !(spec.beta_ms_per_token >= 0.0 && spec.beta_ms_per_token.is_finite()) {
+            anyhow::bail!(
+                "cluster spec: beta_ms_per_token must be >= 0, got {}",
+                spec.beta_ms_per_token
+            );
+        }
+        if !(spec.t_misc_ms >= 0.0 && spec.cold_start_ms >= 0.0) {
+            anyhow::bail!("cluster spec: t_misc_ms and cold_start_ms must be >= 0");
+        }
+        if !(spec.pcie_gbps > 0.0 && spec.pcie_gbps.is_finite()) {
+            anyhow::bail!("cluster spec: pcie_gbps must be positive, got {}", spec.pcie_gbps);
+        }
+        Ok(spec)
     }
 
     pub fn load(path: &Path) -> anyhow::Result<ClusterSpec> {
         let j = Json::parse_file(path).map_err(anyhow::Error::msg)?;
-        Ok(Self::from_json(&j))
+        Self::from_json(&j)
+            .map_err(|e| anyhow::Error::msg(format!("{}: {e}", path.display())))
     }
 }
 
@@ -252,6 +639,11 @@ pub struct DisaggSpec {
     pub decode_gpus: usize,
     /// GB/s of the prefill→decode KV-transfer link.
     pub link_gbps: f64,
+    /// Assign the *fastest* devices to the prefill pool (compute-bound
+    /// phase) instead of the first-listed ones — the
+    /// fast-prefill/cheap-decode split a mixed fleet enables. Ties and
+    /// uniform fleets keep the listed device order.
+    pub fastest_prefill: bool,
 }
 
 impl DisaggSpec {
@@ -261,18 +653,64 @@ impl DisaggSpec {
     /// cluster degenerates to two 1-GPU pools (oversubscribed — the
     /// numbers then model 2 GPUs, not 1).
     pub fn even_split(cluster: &ClusterSpec) -> DisaggSpec {
-        let prefill = (cluster.n_gpus / 2).max(1);
+        let prefill = (cluster.n_gpus() / 2).max(1);
         DisaggSpec {
             prefill_gpus: prefill,
-            decode_gpus: cluster.n_gpus.saturating_sub(prefill).max(1),
+            decode_gpus: cluster.n_gpus().saturating_sub(prefill).max(1),
             link_gbps: cluster.pcie_gbps,
+            fastest_prefill: false,
         }
     }
 
-    /// The pool's own cluster spec: the base testbed with `gpus` GPUs.
-    pub fn pool_cluster(base: &ClusterSpec, gpus: usize) -> ClusterSpec {
-        ClusterSpec { n_gpus: gpus.max(1), ..base.clone() }
+    /// The even split with the fastest devices steered to prefill.
+    pub fn fastest_split(cluster: &ClusterSpec) -> DisaggSpec {
+        DisaggSpec { fastest_prefill: true, ..Self::even_split(cluster) }
     }
+
+    /// The global device indices of the (prefill, decode) pools, each
+    /// ascending. By default prefill takes the first-listed devices; with
+    /// `fastest_prefill` it takes the highest-`tflops` ones (ties keep
+    /// the lower index — deterministic). On degenerate clusters smaller
+    /// than `prefill_gpus + decode_gpus` the decode pool re-uses devices
+    /// from the front (documented oversubscription). The pools are sized
+    /// exactly as requested: when `prefill_gpus + decode_gpus < n_gpus`
+    /// the surplus devices are left out of both pools and serve nothing
+    /// (a deliberate partial-fleet split — same semantics as the
+    /// pre-refactor count-sized pools; their `RunReport` per-GPU entries
+    /// stay zero). `even_split`/`fastest_split` always cover the fleet.
+    pub fn split_indices(&self, base: &ClusterSpec) -> (Vec<usize>, Vec<usize>) {
+        let n = base.n_gpus().max(1);
+        let mut order: Vec<usize> = (0..n).collect();
+        if self.fastest_prefill {
+            order.sort_by(|&a, &b| {
+                base.gpus[b]
+                    .tflops
+                    .partial_cmp(&base.gpus[a].tflops)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+        }
+        let p = self.prefill_gpus.clamp(1, n);
+        let mut prefill: Vec<usize> = order[..p].to_vec();
+        let mut decode: Vec<usize> = order[p..].to_vec();
+        let mut wrap = 0usize;
+        while decode.len() < self.decode_gpus.max(1) {
+            decode.push(order[wrap % n]);
+            wrap += 1;
+        }
+        decode.truncate(self.decode_gpus.max(1));
+        prefill.sort_unstable();
+        decode.sort_unstable();
+        (prefill, decode)
+    }
+
+    /// The two pools' own cluster specs, carrying the actual per-device
+    /// capabilities of the split (not a uniform resize).
+    pub fn pools(&self, base: &ClusterSpec) -> (ClusterSpec, ClusterSpec) {
+        let (pre, dec) = self.split_indices(base);
+        (base.subset(&pre), base.subset(&dec))
+    }
+
 }
 
 /// MoEless's own knobs (§4, §6.4 sensitivity ranges).
@@ -399,10 +837,131 @@ mod tests {
     #[test]
     fn cluster_spec_json_overrides() {
         let j = Json::parse(r#"{"n_gpus": 4, "t_misc_ms": 1.5}"#).unwrap();
-        let c = ClusterSpec::from_json(&j);
-        assert_eq!(c.n_gpus, 4);
+        let c = ClusterSpec::from_json(&j).unwrap();
+        assert_eq!(c.n_gpus(), 4);
         assert!((c.t_misc_ms - 1.5).abs() < 1e-12);
-        assert!((c.mem_per_gpu_gb - 48.0).abs() < 1e-12); // default retained
+        assert!((c.mem_gb(0) - 48.0).abs() < 1e-12); // default retained
+        assert!(c.capacity_aware);
+    }
+
+    #[test]
+    fn cluster_spec_json_per_gpu_array() {
+        let j = Json::parse(
+            r#"{"gpus": [
+                {"name": "h100", "mem_gb": 80, "tflops": 989, "hbm_gbps": 3350, "cost_per_hour": 3.9},
+                {"mem_gb": 48, "tflops": 155}
+            ], "capacity_aware": false}"#,
+        )
+        .unwrap();
+        let c = ClusterSpec::from_json(&j).unwrap();
+        assert_eq!(c.n_gpus(), 2);
+        assert_eq!(c.gpus[0].name, "h100");
+        assert!((c.mem_gb(0) - 80.0).abs() < 1e-12);
+        assert!((c.speed(0) - 989.0 / REF_TFLOPS).abs() < 1e-12);
+        // Entry 1 omitted the optional fields: A6000 defaults, speed 1.0.
+        assert_eq!(c.speed(1), 1.0);
+        assert_eq!(c.comm_speed(1), 1.0);
+        assert!(!c.capacity_aware);
+        assert!(!c.is_uniform());
+        assert!((c.total_mem_gb() - 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_spec_json_structured_errors() {
+        let cases = [
+            // Duplicate specification: per-GPU array + uniform shorthand.
+            (r#"{"gpus": [{"mem_gb": 48, "tflops": 155}], "n_gpus": 4}"#, "duplicate"),
+            // Missing required per-GPU fields.
+            (r#"{"gpus": [{"tflops": 155}]}"#, "mem_gb"),
+            (r#"{"gpus": [{"mem_gb": 48}]}"#, "tflops"),
+            // Non-positive capabilities.
+            (r#"{"gpus": [{"mem_gb": 0, "tflops": 155}]}"#, "mem_gb"),
+            (r#"{"gpus": [{"mem_gb": 48, "tflops": -1}]}"#, "tflops"),
+            (r#"{"mem_per_gpu_gb": -3}"#, "mem_gb"),
+            (r#"{"n_gpus": 0}"#, "n_gpus"),
+            (r#"{"n_gpus": 2.5}"#, "n_gpus"),
+            (r#"{"n_gpus": 1e12}"#, "n_gpus"),
+            (r#"{"alpha_ms_per_token": 0}"#, "alpha_ms_per_token"),
+            // Unknown / mistyped fields.
+            (r#"{"gpus": [{"mem_gb": 48, "tflops": 155, "memgb": 1}]}"#, "unknown"),
+            (r#"{"n_gpu": 4}"#, "unknown"),
+            (r#"{"n_gpus": "four"}"#, "number"),
+            (r#"{"gpus": {}}"#, "array"),
+            (r#"{"gpus": []}"#, "empty"),
+            (r#"{"capacity_aware": 1}"#, "bool"),
+        ];
+        for (src, needle) in cases {
+            let j = Json::parse(src).unwrap();
+            let err = ClusterSpec::from_json(&j).expect_err(src).to_string();
+            assert!(err.contains(needle), "{src}: error {err:?} should mention {needle:?}");
+        }
+        // load() reports the path on malformed files, instead of panicking.
+        let dir = std::env::temp_dir().join("moeless_cluster_spec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, r#"{"n_gpus": 0}"#).unwrap();
+        let err = ClusterSpec::load(&path).unwrap_err().to_string();
+        assert!(err.contains("bad.json") && err.contains("n_gpus"), "{err}");
+        assert!(ClusterSpec::load(&dir.join("missing.json")).is_err());
+    }
+
+    #[test]
+    fn hetero_presets_and_speeds() {
+        let h = ClusterSpec::hetero_h100_a6000();
+        assert_eq!(h.n_gpus(), 8);
+        assert!(!h.is_uniform());
+        assert!((h.total_mem_gb() - (2.0 * 80.0 + 6.0 * 48.0)).abs() < 1e-9);
+        assert!(h.speed(0) > 6.0 && h.speed(0) < 7.0, "{}", h.speed(0));
+        assert_eq!(h.speed(2), 1.0);
+        assert!(h.total_speed() > 8.0);
+        assert!(h.total_cost_per_hour() > ClusterSpec::a6000_x8().total_cost_per_hour());
+        // The uniform testbed normalizes to exactly 1.0 everywhere.
+        let u = ClusterSpec::a6000_x8();
+        assert!(u.is_uniform());
+        for g in 0..8 {
+            assert_eq!(u.speed(g), 1.0);
+            assert_eq!(u.comm_speed(g), 1.0);
+        }
+        assert_eq!(u.total_speed(), 8.0);
+        assert_eq!(u.mean_speed(), 1.0);
+        // Memory-skewed preset: per-device memory varies.
+        let m = ClusterSpec::hetero_mem_skewed();
+        assert!((m.mem_gb(0) - 80.0).abs() < 1e-12);
+        assert!((m.mem_gb(7) - 24.0).abs() < 1e-12);
+        // by_name roundtrip for the CLI.
+        assert_eq!(ClusterSpec::by_name("hetero-h100-a6000").unwrap().n_gpus(), 8);
+        assert!(ClusterSpec::by_name("tpu-v5").is_none());
+    }
+
+    #[test]
+    fn uniform_vs_explicit_vec_identical() {
+        // The per-GPU array form with n identical entries IS the uniform
+        // spec: every derived quantity matches a6000_x8() exactly.
+        let j = Json::parse(
+            r#"{"gpus": [
+                {"mem_gb": 48, "tflops": 155, "hbm_gbps": 768, "cost_per_hour": 0.8},
+                {"mem_gb": 48, "tflops": 155, "hbm_gbps": 768, "cost_per_hour": 0.8},
+                {"mem_gb": 48, "tflops": 155, "hbm_gbps": 768, "cost_per_hour": 0.8},
+                {"mem_gb": 48, "tflops": 155, "hbm_gbps": 768, "cost_per_hour": 0.8},
+                {"mem_gb": 48, "tflops": 155, "hbm_gbps": 768, "cost_per_hour": 0.8},
+                {"mem_gb": 48, "tflops": 155, "hbm_gbps": 768, "cost_per_hour": 0.8},
+                {"mem_gb": 48, "tflops": 155, "hbm_gbps": 768, "cost_per_hour": 0.8},
+                {"mem_gb": 48, "tflops": 155, "hbm_gbps": 768, "cost_per_hour": 0.8}
+            ]}"#,
+        )
+        .unwrap();
+        let v = ClusterSpec::from_json(&j).unwrap();
+        let u = ClusterSpec::a6000_x8();
+        assert!(v.is_uniform());
+        assert_eq!(v.total_mem_gb(), u.total_mem_gb());
+        assert_eq!(v.total_speed(), u.total_speed());
+        let model = ModelSpec::mixtral_8x7b();
+        assert_eq!(v.kv_budget_gb(&model), u.kv_budget_gb(&model));
+        for g in 0..8 {
+            assert_eq!(v.speed(g), u.speed(g));
+            assert_eq!(v.comm_speed(g), u.comm_speed(g));
+            assert_eq!(v.mem_gb(g), u.mem_gb(g));
+        }
     }
 
     #[test]
@@ -436,7 +995,7 @@ mod tests {
             );
         }
         // A cluster too small for the expert set still yields the 5% floor.
-        let tiny = ClusterSpec { n_gpus: 1, mem_per_gpu_gb: 2.0, ..ClusterSpec::a6000_x8() };
+        let tiny = ClusterSpec::a6000_x8().with_n_gpus(1).with_mem_per_gpu(2.0);
         let kv = tiny.kv_budget_gb(&ModelSpec::mixtral_8x7b());
         assert!((kv - 0.1).abs() < 1e-9, "floor = 5% of 2 GB, got {kv}");
     }
@@ -447,13 +1006,44 @@ mod tests {
         let d = DisaggSpec::even_split(&c);
         assert_eq!((d.prefill_gpus, d.decode_gpus), (4, 4));
         assert!((d.link_gbps - c.pcie_gbps).abs() < 1e-12);
-        let pool = DisaggSpec::pool_cluster(&c, d.prefill_gpus);
-        assert_eq!(pool.n_gpus, 4);
-        assert!((pool.mem_per_gpu_gb - c.mem_per_gpu_gb).abs() < 1e-12);
+        assert!(!d.fastest_prefill);
+        // The index split partitions the device list exactly.
+        let (pre, dec) = d.split_indices(&c);
+        assert_eq!(pre, vec![0, 1, 2, 3]);
+        assert_eq!(dec, vec![4, 5, 6, 7]);
+        let (pre_pool, dec_pool) = d.pools(&c);
+        assert_eq!((pre_pool.n_gpus(), dec_pool.n_gpus()), (4, 4));
+        assert!((pre_pool.mem_gb(0) - c.mem_gb(0)).abs() < 1e-12);
         // Degenerate 1-GPU clusters still yield non-empty pools (documented
         // oversubscription: disaggregation needs >= 2 GPUs to be faithful).
-        let one = DisaggSpec::even_split(&ClusterSpec { n_gpus: 1, ..ClusterSpec::a6000_x8() });
+        let tiny = ClusterSpec::a6000_x8().with_n_gpus(1);
+        let one = DisaggSpec::even_split(&tiny);
         assert!(one.prefill_gpus >= 1 && one.decode_gpus >= 1);
+        let (p1, d1) = one.split_indices(&tiny);
+        assert_eq!((p1, d1), (vec![0], vec![0]));
+    }
+
+    #[test]
+    fn fastest_prefill_steers_fast_devices() {
+        // 2×H100 at indices 0-1 plus 6×A6000: the fastest-prefill split
+        // must put both H100s in the prefill pool even when they are not
+        // the first `prefill_gpus` indices.
+        let mut c = ClusterSpec::a6000_x8();
+        c.gpus[5] = GpuSpec::h100();
+        c.gpus[6] = GpuSpec::h100();
+        let d = DisaggSpec { prefill_gpus: 2, decode_gpus: 6, ..DisaggSpec::fastest_split(&c) };
+        assert!(d.fastest_prefill);
+        let (pre, dec) = d.split_indices(&c);
+        assert_eq!(pre, vec![5, 6], "the H100s prefill");
+        assert_eq!(dec, vec![0, 1, 2, 3, 4, 7]);
+        let (pre_pool, dec_pool) = d.pools(&c);
+        assert!(pre_pool.gpus.iter().all(|g| g.name == "h100"));
+        assert!(dec_pool.gpus.iter().all(|g| g.name == "a6000"));
+        // On a uniform fleet the fastest split ties back to listed order.
+        let u = ClusterSpec::a6000_x8();
+        let (pu, du) = DisaggSpec::fastest_split(&u).split_indices(&u);
+        assert_eq!(pu, vec![0, 1, 2, 3]);
+        assert_eq!(du, vec![4, 5, 6, 7]);
     }
 
     #[test]

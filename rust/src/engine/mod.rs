@@ -78,18 +78,34 @@ pub trait Policy: Send {
     fn warm_fraction(&self) -> f64 {
         1.0
     }
+
+    /// Per-GPU keep-alive residency (GB·s per device) for serverless
+    /// policies — the input the per-device `cost_per_hour` dollar bill is
+    /// derived from. Serverful policies return `None` (they bill the
+    /// whole reserved fleet instead).
+    fn residency_gb_s_by_gpu(&self) -> Option<&[f64]> {
+        None
+    }
 }
 
 /// Helper shared by serverful baselines: evaluate the §3.3 terms for a
 /// static replica assignment. `replicas[e]` instances of expert `e`, each
 /// taking `actual[e] / replicas[e]` load, placed per `gpu_of(e, r)`.
+///
+/// Per-device capability: each replica's straggler contribution is its
+/// load divided by its device's compute speed, and each GPU's all-to-all
+/// contribution is its aggregated tokens divided by its communication
+/// speed (both exactly 1.0 across a uniform A6000 fleet — bit-identical
+/// to the scalar model). Per-GPU served work is accumulated into the
+/// cluster's run-cumulative report signals.
 pub fn static_layer_outcome(
     actual: &[f64],
     replicas: &[usize],
-    n_gpus: usize,
+    cluster: &mut Cluster,
     gpu_of: impl Fn(usize, usize) -> usize,
     cost: &CostModel,
 ) -> LayerOutcome {
+    let n_gpus = cluster.n_gpus();
     let mut max_rep = 0.0f64;
     let mut gpu_loads = vec![0.0f64; n_gpus];
     let mut total = 0usize;
@@ -99,12 +115,19 @@ pub fn static_layer_outcome(
             continue;
         }
         let per = w / r as f64;
-        max_rep = max_rep.max(per);
         for k in 0..r {
-            gpu_loads[gpu_of(e, k)] += per;
+            let g = gpu_of(e, k);
+            max_rep = max_rep.max(per / cost.speed(g));
+            gpu_loads[g] += per;
         }
     }
-    let max_gpu = gpu_loads.into_iter().fold(0.0, f64::max);
+    let mut max_gpu = 0.0f64;
+    for (g, &t) in gpu_loads.iter().enumerate() {
+        max_gpu = max_gpu.max(t / cost.comm_speed(g));
+        if t > 0.0 {
+            cluster.note_served(g, t, cost.alpha_ms * (t / cost.speed(g)));
+        }
+    }
     LayerOutcome {
         cost: cost.layer(max_rep, max_gpu, total, 0.0),
         replicas: total,
@@ -117,33 +140,63 @@ pub fn static_layer_outcome(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ClusterSpec, ModelSpec};
+    use crate::config::{ClusterSpec, GpuSpec, ModelSpec};
+
+    fn cm_and_cluster(n: usize) -> (CostModel, Cluster) {
+        let spec = ClusterSpec::a6000_x8().with_n_gpus(n);
+        (CostModel::new(&ModelSpec::mixtral_8x7b(), &spec), Cluster::new(spec))
+    }
 
     #[test]
     fn static_outcome_matches_hand_calc() {
-        let cm = CostModel::new(&ModelSpec::mixtral_8x7b(), &ClusterSpec::a6000_x8());
+        let (cm, mut cluster) = cm_and_cluster(4);
         let actual = vec![800.0, 100.0, 100.0, 100.0];
         let replicas = vec![1usize; 4];
-        let out = static_layer_outcome(&actual, &replicas, 4, |e, _| e % 4, &cm);
+        let out = static_layer_outcome(&actual, &replicas, &mut cluster, |e, _| e % 4, &cm);
         assert!((out.cost.expert_ms - cm.alpha_ms * 800.0).abs() < 1e-9);
         assert!((out.cost.comm_ms - 2.0 * 0.0004 * 800.0).abs() < 1e-9);
         assert_eq!(out.replicas, 4);
+        // Per-GPU served work is recorded for the report signals.
+        assert!((cluster.served_tokens[0] - 800.0).abs() < 1e-9);
+        assert!((cluster.served_ms[0] - cm.alpha_ms * 800.0).abs() < 1e-9);
     }
 
     #[test]
     fn replicas_cut_the_straggler() {
-        let cm = CostModel::new(&ModelSpec::mixtral_8x7b(), &ClusterSpec::a6000_x8());
+        let (cm, mut cluster) = cm_and_cluster(4);
         let actual = vec![800.0, 100.0];
-        let one = static_layer_outcome(&actual, &[1, 1], 4, |e, _| e, &cm);
-        let four = static_layer_outcome(&actual, &[4, 1], 4, |e, k| (e + k) % 4, &cm);
+        let one = static_layer_outcome(&actual, &[1, 1], &mut cluster, |e, _| e, &cm);
+        let four = static_layer_outcome(&actual, &[4, 1], &mut cluster, |e, k| (e + k) % 4, &cm);
         assert!(four.cost.expert_ms < one.cost.expert_ms / 3.0);
     }
 
     #[test]
     fn zero_replica_zero_load_ok() {
-        let cm = CostModel::new(&ModelSpec::mixtral_8x7b(), &ClusterSpec::a6000_x8());
-        let out = static_layer_outcome(&[0.0, 0.0], &[0, 0], 4, |_, _| 0, &cm);
+        let (cm, mut cluster) = cm_and_cluster(4);
+        let out = static_layer_outcome(&[0.0, 0.0], &[0, 0], &mut cluster, |_, _| 0, &cm);
         assert_eq!(out.cost.expert_ms, 0.0);
         assert_eq!(out.replicas, 0);
+    }
+
+    #[test]
+    fn static_outcome_is_speed_normalized_on_hetero_fleets() {
+        // Two devices: speed 4.0 (620 TFLOPS) and 1.0. The same 800-token
+        // expert is 4x cheaper in wall-clock on the fast device, and the
+        // comm term divides by the device's own bandwidth ratio.
+        let mut spec = ClusterSpec::a6000_x8().with_n_gpus(2);
+        spec.gpus[0] = GpuSpec {
+            name: "fast4x".into(),
+            tflops: 620.0,
+            hbm_gbps: 2.0 * 768.0,
+            ..GpuSpec::a6000()
+        };
+        let cm = CostModel::new(&ModelSpec::mixtral_8x7b(), &spec);
+        let mut cluster = Cluster::new(spec);
+        let on_fast = static_layer_outcome(&[800.0], &[1], &mut cluster, |_, _| 0, &cm);
+        let on_slow = static_layer_outcome(&[800.0], &[1], &mut cluster, |_, _| 1, &cm);
+        assert!((on_fast.cost.expert_ms - cm.alpha_ms * 200.0).abs() < 1e-9);
+        assert!((on_slow.cost.expert_ms - cm.alpha_ms * 800.0).abs() < 1e-9);
+        assert!((on_fast.cost.comm_ms - 2.0 * cm.beta_ms * 400.0).abs() < 1e-9);
+        assert!((on_slow.cost.comm_ms - 2.0 * cm.beta_ms * 800.0).abs() < 1e-9);
     }
 }

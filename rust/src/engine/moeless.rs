@@ -41,6 +41,10 @@ pub struct MoelessPolicy {
     /// paper's future-work extension; `engine::autotune`).
     pub tuner: Option<crate::engine::AutoTuner>,
     rr_counter: usize,
+    /// Scratch for the mixed-fleet scaler's speed view (filled from the
+    /// cluster's decision speeds each layer; stays empty — and
+    /// unallocated — on uniform fleets).
+    speeds_scratch: Vec<f64>,
 }
 
 impl MoelessPolicy {
@@ -76,6 +80,7 @@ impl MoelessPolicy {
                 cluster_spec.cold_start_ms,
                 model.n_layers,
                 model.n_experts,
+                cluster_spec.n_gpus(),
             ),
             n_experts: model.n_experts,
             top_k: model.top_k,
@@ -85,6 +90,7 @@ impl MoelessPolicy {
             ablate_placement: false,
             tuner: None,
             rr_counter: 0,
+            speeds_scratch: Vec::new(),
         }
     }
 
@@ -126,15 +132,22 @@ impl Policy for MoelessPolicy {
         self.predictor.observe(layer, actual, now_s);
 
         // Step 2: scale. Predicted loads below one token round to zero —
-        // the serverless scale-to-zero that serverful EP cannot do.
+        // the serverless scale-to-zero that serverful EP cannot do. On a
+        // mixed fleet the capacity-weighted scaler balances wall-clock
+        // time instead of token counts; a fleet with one shared decision
+        // speed takes the exact incremental token path.
         let pred_loads: Vec<f64> =
             pred.loads.iter().map(|&w| if w < 0.5 { 0.0 } else { w }).collect();
         let plan = if self.ablate_scaling {
             crate::scaler::ScalePlan {
                 replicas: pred_loads.iter().map(|&w| usize::from(w > 0.0)).collect(),
             }
-        } else {
+        } else if cluster.uniform_speed {
             self.scaler.scale(&pred_loads)
+        } else {
+            self.speeds_scratch.clear();
+            self.speeds_scratch.extend(cluster.gpus.iter().map(|g| g.speed));
+            self.scaler.scale_weighted(&pred_loads, &self.speeds_scratch)
         };
 
         // Step 3: place (warm-start reuse against live instances).
@@ -198,20 +211,28 @@ impl Policy for MoelessPolicy {
         };
 
         // Serve: actual loads split evenly over the effective replicas.
+        // The straggler and all-to-all terms are speed-normalized per
+        // device (dividing by exactly 1.0 across a uniform A6000 fleet).
         let mut max_rep = 0.0f64;
         let mut gpu_loads = vec![0.0f64; cluster.n_gpus()];
         for p in &placement.placements {
             let r = replicas[p.expert] as f64;
             let actual_per = actual[p.expert] / r;
-            max_rep = max_rep.max(actual_per);
+            max_rep = max_rep.max(actual_per / cost.speed(p.gpu));
             gpu_loads[p.gpu] += actual_per;
         }
         for &(e, gpu) in &repair_pairs {
             let actual_per = actual[e] / replicas[e] as f64;
-            max_rep = max_rep.max(actual_per);
+            max_rep = max_rep.max(actual_per / cost.speed(gpu));
             gpu_loads[gpu] += actual_per;
         }
-        let max_gpu = gpu_loads.into_iter().fold(0.0, f64::max);
+        let mut max_gpu = 0.0f64;
+        for (g, &t) in gpu_loads.iter().enumerate() {
+            max_gpu = max_gpu.max(t / cost.comm_speed(g));
+            if t > 0.0 {
+                cluster.note_served(g, t, cost.alpha_ms * (t / cost.speed(g)));
+            }
+        }
 
         let total_replicas: usize = replicas.iter().sum();
         let lc = cost.layer(max_rep, max_gpu, total_replicas, repair.critical_cold_ms);
@@ -249,6 +270,10 @@ impl Policy for MoelessPolicy {
 
     fn warm_fraction(&self) -> f64 {
         self.manager.warm_fraction()
+    }
+
+    fn residency_gb_s_by_gpu(&self) -> Option<&[f64]> {
+        Some(&self.manager.residency_gb_s_by_gpu)
     }
 }
 
@@ -307,5 +332,50 @@ mod tests {
         p.finish(&mut cluster, 5.0);
         assert_eq!(cluster.total_mem_used_gb(), 0.0);
         assert!(p.residency_gb_s() > 0.0);
+        // Per-GPU residency is tracked and consistent with the total.
+        let by_gpu: f64 = p.residency_gb_s_by_gpu().unwrap().iter().sum();
+        assert!((by_gpu - p.residency_gb_s()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hetero_capacity_aware_beats_token_balanced_steady_state() {
+        // Same model, same loads, same mixed 2×H100 + 6×A6000 fleet; the
+        // only difference is whether placement/scaling decisions see the
+        // per-device speeds. Evaluation always runs on the real hardware.
+        // In steady state the capacity-aware policy must serve the layer
+        // faster: heavy replicas run on H100s instead of wherever token
+        // counts balanced.
+        // One dominant hot expert: its replicas carry ~100 tokens each
+        // after scaling, and the time-greedy placer stacks them on the
+        // H100s (each H100 absorbs several heavy replicas before its
+        // completion time reaches one A6000-hosted replica), collapsing
+        // the straggler term by the speed ratio. Token balancing spreads
+        // the same replicas across the A6000s and pays full price.
+        let model = ModelSpec::mixtral_8x7b();
+        let loads = vec![900.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0];
+        let mut forward = |aware: bool| -> f64 {
+            let mut spec = ClusterSpec::hetero_h100_a6000();
+            spec.capacity_aware = aware;
+            let mut policy = MoelessPolicy::new(&model, &spec, MoelessParams::default(), 7);
+            let cm = CostModel::new(&model, &spec);
+            let mut cluster = Cluster::new(spec);
+            // Warm up past the cold-start transient, then measure.
+            for t in 0..6 {
+                policy.run_layer(0, &loads, &mut cluster, &cm, t as f64);
+                policy.end_iteration(&mut cluster, t as f64);
+            }
+            let mut total = 0.0;
+            for t in 6..12 {
+                total += policy.run_layer(0, &loads, &mut cluster, &cm, t as f64).cost.forward_ms();
+                policy.end_iteration(&mut cluster, t as f64);
+            }
+            total
+        };
+        let aware = forward(true);
+        let balanced = forward(false);
+        assert!(
+            aware < balanced,
+            "capacity-aware {aware:.3}ms must beat token-balanced {balanced:.3}ms"
+        );
     }
 }

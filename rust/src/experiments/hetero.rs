@@ -1,0 +1,117 @@
+//! `moeless bench --exp hetero` — the heterogeneous-fleet section: mixed
+//! device fleets (H100 + A6000, memory-skewed pools) served under
+//! capacity-aware vs token-balanced decisions, plus the
+//! fastest-GPUs-to-prefill disaggregated split.
+//!
+//! Four sub-sections, all in the uniform greppable format:
+//! 1. fleet inventory — the per-device specs of each preset;
+//! 2. uniform vs mixed fleet under MoEless (same workload);
+//! 3. capacity-aware vs token-balanced ablation on the mixed fleet
+//!    (the decision layers are the only difference — evaluation always
+//!    runs on the real per-device speeds);
+//! 4. disaggregation on the mixed fleet: even first-N split vs the
+//!    fastest-GPUs-to-prefill split.
+
+use crate::baselines::PolicyKind;
+use crate::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec};
+use crate::experiments::Scale;
+use crate::metrics::{reduction_pct, RunReport, SloSpec};
+use crate::sim::{run, SimConfig};
+use crate::util::benchkit::fig_header;
+use crate::workload::Scenario;
+
+fn cfg_on(cluster: ClusterSpec, scale: Scale) -> SimConfig {
+    let mut cfg = SimConfig::new(
+        ModelSpec::mixtral_8x7b(),
+        DatasetSpec::lmsys(),
+        PolicyKind::Moeless,
+    );
+    cfg.cluster = cluster;
+    cfg.scenario = Scenario::bursty();
+    // Bounded: the hetero section is a comparison, not an endurance run.
+    cfg.duration_s = scale.duration_s.min(60.0);
+    cfg.base_rps = scale.base_rps;
+    cfg.seed = scale.seed;
+    cfg
+}
+
+fn report_lines(label: &str, r: &RunReport) {
+    let slo = SloSpec::default();
+    println!(
+        "hetero {label:<22} mean_layer={:.3}ms p99={:.3}ms ttft_p99={:.0}ms \
+         goodput={:.2}req/s dollar=${:.4}",
+        r.mean_layer_ms(),
+        r.layer_forward.p(99.0),
+        r.ttft_cdf().p(99.0),
+        r.goodput_rps(&slo),
+        r.dollar_cost,
+    );
+    println!("hetero {label:<22} {}", r.gpu_line());
+}
+
+/// The `--exp hetero` driver.
+pub fn hetero(scale: Scale) {
+    fig_header(
+        "HETERO",
+        "mixed-fleet serving: per-device capability through cost, placement, scaling, disagg",
+    );
+
+    // 1. Fleet inventory.
+    for spec in [
+        ClusterSpec::a6000_x8(),
+        ClusterSpec::hetero_h100_a6000(),
+        ClusterSpec::hetero_mem_skewed(),
+    ] {
+        let devices = spec
+            .gpus
+            .iter()
+            .map(|g| format!("{}({:.0}GB,{:.0}TF)", g.name, g.mem_gb, g.tflops))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "hetero fleet n={} total_mem={:.0}GB total_speed={:.2} rate=${:.2}/h | {}",
+            spec.n_gpus(),
+            spec.total_mem_gb(),
+            spec.total_speed(),
+            spec.total_cost_per_hour(),
+            devices
+        );
+    }
+
+    // 2. Uniform vs mixed fleet.
+    let uniform = run(&cfg_on(ClusterSpec::a6000_x8(), scale));
+    let mixed = run(&cfg_on(ClusterSpec::hetero_h100_a6000(), scale));
+    report_lines("uniform-a6000x8", &uniform);
+    report_lines("hetero-h100-a6000", &mixed);
+
+    // 3. Capacity-aware vs token-balanced on the mixed fleet.
+    let mut balanced_cluster = ClusterSpec::hetero_h100_a6000();
+    balanced_cluster.capacity_aware = false;
+    let balanced = run(&cfg_on(balanced_cluster, scale));
+    report_lines("hetero-token-balanced", &balanced);
+    println!(
+        "hetero capacity-aware wins: mean_layer -{:.1}% p99 -{:.1}% vs token-balanced",
+        reduction_pct(balanced.mean_layer_ms(), mixed.mean_layer_ms()),
+        reduction_pct(balanced.layer_forward.p(99.0), mixed.layer_forward.p(99.0)),
+    );
+
+    // 4. Disaggregation on the mixed fleet: even vs fastest-prefill. The
+    // H100s sit at the *end* of the device list here, so the first-N even
+    // split hands prefill to A6000s while the fastest split steers it to
+    // the H100s — the fast-prefill/cheap-decode configuration.
+    let mut tail_fast = ClusterSpec::a6000_x8();
+    tail_fast.gpus[6] = crate::config::GpuSpec::h100();
+    tail_fast.gpus[7] = crate::config::GpuSpec::h100();
+    for (label, fastest) in [("disagg-even-split", false), ("disagg-fastest-prefill", true)] {
+        let mut cfg = cfg_on(tail_fast.clone(), scale);
+        cfg.prefill_chunk_tokens = 256;
+        let mut d = DisaggSpec::even_split(&cfg.cluster);
+        d.prefill_gpus = 2;
+        d.decode_gpus = 6;
+        d.fastest_prefill = fastest;
+        cfg.disagg = Some(d);
+        let r = run(&cfg);
+        report_lines(label, &r);
+        println!("hetero {label:<22} {}", r.phase_line());
+    }
+}

@@ -9,6 +9,7 @@
 //! trace durations while preserving every qualitative relationship.
 
 pub mod ablation;
+pub mod hetero;
 pub mod motivation;
 pub mod overall;
 pub mod prediction;
@@ -87,12 +88,14 @@ pub fn run_experiment(exp: &str, scale: Scale) {
         "fig15" | "fig16" => sensitivity::fig15_16_cv(scale),
         "fig17" => ablation::fig17_ablation(scale),
         "slo" => overall::request_slo(scale),
+        "hetero" => hetero::hetero(scale),
         "table1" => tables::print_table1(),
         "table2" => tables::print_table2(),
         "all" => {
             for e in [
                 "table1", "table2", "fig1", "fig3", "fig4", "fig6", "fig7", "fig8",
                 "fig9", "fig10", "fig11", "fig12", "fig13", "fig15", "fig17", "slo",
+                "hetero",
             ] {
                 run_experiment(e, scale);
             }

@@ -26,7 +26,8 @@
 //!   `benches/perf_request_path.rs`).
 //!
 //! Schema of `BENCH_sim.json` (documented in the README):
-//! `{schema, build, unix_time_s, scales: {<scale>: {drain: {requests,
+//! `{schema, build, machine: {host, cpus, os, arch}, unix_time_s,
+//! scales: {<scale>: {drain: {requests,
 //! iterations, preemptions, baseline: {wall_s, requests_per_s,
 //! iterations_per_s}, current: {...}, speedup}, sim?: {completed_requests,
 //! iterations, wall_s, sim_requests_per_s, iterations_per_s,
@@ -258,6 +259,29 @@ pub fn measure_scale(scale: &'static str) -> ScaleReport {
     ScaleReport { scale, drain_baseline: baseline, drain_current: current, sim }
 }
 
+/// The machine tag: host, logical CPU count, OS and arch — so a committed
+/// `BENCH_sim.json` baseline says which hardware produced it and absolute
+/// numbers are never compared across different machines by accident.
+fn machine_json() -> Json {
+    let host = std::env::var("HOSTNAME")
+        .ok()
+        .filter(|h| !h.is_empty())
+        .or_else(|| {
+            std::fs::read_to_string("/etc/hostname")
+                .ok()
+                .map(|s| s.trim().to_string())
+                .filter(|h| !h.is_empty())
+        })
+        .unwrap_or_else(|| "unknown".into());
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    let mut m = Json::obj();
+    m.set("host", Json::Str(host))
+        .set("cpus", Json::Num(cpus as f64))
+        .set("os", Json::Str(std::env::consts::OS.into()))
+        .set("arch", Json::Str(std::env::consts::ARCH.into()));
+    m
+}
+
 fn outcome_json(o: &DrainOutcome) -> Json {
     let mut j = Json::obj();
     j.set("wall_s", Json::Num(o.wall_s))
@@ -300,6 +324,7 @@ pub fn to_json(reports: &[ScaleReport]) -> Json {
             "build",
             Json::Str(if cfg!(debug_assertions) { "debug".into() } else { "release".into() }),
         )
+        .set("machine", machine_json())
         .set(
             "unix_time_s",
             Json::Num(
@@ -410,6 +435,10 @@ mod tests {
         assert!(r.drain_current.completed > 100, "{}", r.drain_current.completed);
         let doc = to_json(&[r]);
         assert_eq!(doc.get("schema").as_str(), "moeless.simperf/v1");
+        // Machine-tagged: host/cpus/os/arch identify the producing box.
+        let machine = doc.get("machine");
+        assert!(!machine.get("host").as_str().is_empty());
+        assert!(!machine.get("os").as_str().is_empty());
         let drain = doc.get("scales").get("quick").get("drain");
         assert!(drain.get("speedup").as_f64() > 0.0);
         assert!(drain.get("baseline").get("wall_s").as_f64() > 0.0);

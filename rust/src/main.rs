@@ -42,9 +42,15 @@ fn main() {
                           gate admission on KV-cache headroom / batch size;\n\
                           --chunk-tokens N enables stall-free chunked prefill —\n\
                           decode packs first, prefill chunks fill the remainder;\n\
-                          --disagg [--prefill-gpus N --link-gbps F] splits the\n\
-                          cluster into prefill/decode pools with a billed KV handoff)\n\
-                 bench   run one paper experiment (--exp fig1|fig3|...|table2)\n\
+                          --disagg [--prefill-gpus N --link-gbps F --fastest-prefill]\n\
+                          splits the cluster into prefill/decode pools with a\n\
+                          billed KV handoff; --cluster <preset|file.json> serves\n\
+                          on a per-GPU fleet — presets a6000x8 | h100x8 |\n\
+                          hetero-h100-a6000 | hetero-mem-skewed, or a JSON spec\n\
+                          (uniform shorthand or per-GPU array, see README);\n\
+                          --token-balanced ablates capacity-aware decisions)\n\
+                 bench   run one paper experiment (--exp fig1|fig3|...|table2,\n\
+                         --exp hetero for the mixed-fleet section)\n\
                          or the perf-trajectory harness (--exp simperf\n\
                          [--quick] [--floor-rps F] [--out PATH] — measures\n\
                          the pre-PR4 reference core vs the optimized core\n\

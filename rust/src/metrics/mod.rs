@@ -155,6 +155,18 @@ pub struct RunReport {
     /// only; 0 when colocated).
     pub prefill_pool_util: f64,
     pub decode_pool_util: f64,
+    /// Routed tokens served per GPU over the whole run (global device
+    /// indices; disaggregated pools fold back through their split).
+    pub gpu_tokens: Vec<f64>,
+    /// Effective compute milliseconds per GPU (α-scaled, divided by the
+    /// device's normalized speed) — the *time* view the heterogeneous
+    /// balance signals derive from.
+    pub gpu_busy_ms: Vec<f64>,
+    /// Residency bill at per-device `cost_per_hour` rates: serverful
+    /// policies reserve the whole fleet for every busy second; serverless
+    /// policies pay for the device fractions their instances actually
+    /// occupied.
+    pub dollar_cost: f64,
     /// Virtual seconds of serving simulated.
     pub sim_duration_s: f64,
     /// Wall-clock seconds the simulation itself took (perf metric).
@@ -261,6 +273,61 @@ impl RunReport {
         )
     }
 
+    /// Per-GPU utilization: each device's effective compute time as a
+    /// fraction of the simulated duration (empty when the run recorded no
+    /// per-GPU signals).
+    pub fn gpu_util(&self) -> Vec<f64> {
+        if self.sim_duration_s <= 0.0 {
+            return vec![0.0; self.gpu_busy_ms.len()];
+        }
+        self.gpu_busy_ms.iter().map(|&ms| ms / 1e3 / self.sim_duration_s).collect()
+    }
+
+    fn imbalance(xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        xs.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    /// Max/mean ratio of per-GPU effective compute *time* (1.0 = perfectly
+    /// balanced wall-clock; the quantity capacity-aware placement drives
+    /// down on mixed fleets).
+    pub fn gpu_time_imbalance(&self) -> f64 {
+        Self::imbalance(&self.gpu_busy_ms)
+    }
+
+    /// Max/mean ratio of per-GPU routed *tokens* (skews toward fast
+    /// devices on a capacity-aware mixed fleet — by design).
+    pub fn gpu_token_imbalance(&self) -> f64 {
+        Self::imbalance(&self.gpu_tokens)
+    }
+
+    /// One-line per-GPU summary: utilization per device plus the
+    /// time/token imbalance ratios and the per-device-rate dollar bill.
+    pub fn gpu_line(&self) -> String {
+        let utils = self
+            .gpu_util()
+            .iter()
+            .map(|u| format!("{u:.3}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!(
+            "gpu policy={:<16} n_gpus={} util=[{}] time_imb={:.2} token_imb={:.2} \
+             dollar_cost=${:.4}",
+            self.policy,
+            self.gpu_tokens.len(),
+            utils,
+            self.gpu_time_imbalance(),
+            self.gpu_token_imbalance(),
+            self.dollar_cost,
+        )
+    }
+
     /// Peak per-iteration KV-cache utilization (0 when unconstrained).
     pub fn peak_kv_util(&self) -> f64 {
         self.kv_util.peak
@@ -283,7 +350,11 @@ impl RunReport {
         use std::mem::size_of;
         (size_of::<RunReport>()
             + self.requests.capacity() * size_of::<RequestRecord>()
-            + (self.ttft_ms.capacity() + self.e2e_ms.capacity()) * size_of::<f64>()
+            + (self.ttft_ms.capacity()
+                + self.e2e_ms.capacity()
+                + self.gpu_tokens.capacity()
+                + self.gpu_busy_ms.capacity())
+                * size_of::<f64>()
             + self.layer_forward.heap_bytes()
             + self.policy.capacity()
             + self.model.capacity()
@@ -329,7 +400,7 @@ impl RunReport {
         format!(
             "phase policy={:<16} chunk_tokens={} chunks={} chunks/req={:.2} \
              tpot p99={:.1}ms | disagg={} kv_transfer={:.4}GB \
-             pool_util prefill={:.3} decode={:.3}",
+             pool_util prefill={:.3} decode={:.3} | gpu_util_max={:.3} gpu_imb={:.2}",
             self.policy,
             self.prefill_chunk_tokens,
             self.prefill_chunks,
@@ -339,6 +410,8 @@ impl RunReport {
             self.kv_transfer_gb,
             self.prefill_pool_util,
             self.decode_pool_util,
+            self.gpu_util().iter().cloned().fold(0.0, f64::max),
+            self.gpu_time_imbalance(),
         )
     }
 
@@ -481,6 +554,34 @@ mod tests {
         assert_eq!(empty.mean_chunks_per_request(), 0.0);
         assert!(empty.phase_line().contains("disagg=off"));
         assert!(empty.tpot_p99_ms().is_finite(), "empty percentile degrades to 0, not NaN");
+    }
+
+    #[test]
+    fn gpu_signals_summarized() {
+        let r = RunReport {
+            policy: "x".into(),
+            sim_duration_s: 10.0,
+            // GPU 0 did 4x the effective work of each of the other three.
+            gpu_busy_ms: vec![4000.0, 1000.0, 1000.0, 1000.0],
+            gpu_tokens: vec![8000.0, 1000.0, 1000.0, 1000.0],
+            dollar_cost: 0.125,
+            ..Default::default()
+        };
+        let util = r.gpu_util();
+        assert_eq!(util.len(), 4);
+        assert!((util[0] - 0.4).abs() < 1e-12 && (util[1] - 0.1).abs() < 1e-12);
+        // time imbalance = 4.0 / 1.75; token imbalance = 8.0 / 2.75.
+        assert!((r.gpu_time_imbalance() - 4.0 / 1.75).abs() < 1e-9);
+        assert!((r.gpu_token_imbalance() - 8.0 / 2.75).abs() < 1e-9);
+        assert!(r.gpu_time_imbalance() < r.gpu_token_imbalance());
+        let line = r.gpu_line();
+        assert!(line.contains("n_gpus=4") && line.contains("dollar_cost=$0.1250"), "{line}");
+        assert!(r.phase_line().contains("gpu_imb="), "{}", r.phase_line());
+        // Empty reports degrade to zeros, never NaN.
+        let empty = RunReport::default();
+        assert_eq!(empty.gpu_time_imbalance(), 0.0);
+        assert!(empty.gpu_util().is_empty());
+        assert!(empty.gpu_line().contains("n_gpus=0"));
     }
 
     #[test]

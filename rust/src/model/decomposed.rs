@@ -62,7 +62,7 @@ impl DecomposedServer {
         let dims = ModelDims::from_store(&store);
         // Tier-A "GPUs": 8 simulated slots; memory per expert instance is
         // the real tile+weights footprint (tiny).
-        let spec = ClusterSpec { n_gpus: 8, mem_per_gpu_gb: 1.0, ..ClusterSpec::a6000_x8() };
+        let spec = ClusterSpec::a6000_x8().with_n_gpus(8).with_mem_per_gpu(1.0);
         let expert_mem = 0.01;
         let max_slots = (dims.n_experts as f64 * params.mem_cap_factor).round() as usize;
         DecomposedServer {
@@ -77,6 +77,7 @@ impl DecomposedServer {
                 spec.cold_start_ms,
                 dims.n_layers,
                 dims.n_experts,
+                spec.n_gpus(),
             ),
             cluster: Cluster::new(spec),
             params,

@@ -73,6 +73,15 @@ impl Placer {
     /// * `cluster` — provides JSQ state; this function tracks its own
     ///   tentative per-GPU load/memory so the caller applies effects via
     ///   the serverless manager afterwards.
+    ///
+    /// Capacity awareness: on a fleet whose decision speeds are all equal
+    /// (any uniform fleet, or `capacity_aware: false`) this is the exact
+    /// pre-refactor token-balancing greedy, bit for bit. On a mixed fleet
+    /// it balances normalized *time* instead — each candidate GPU is
+    /// scored by its completion time `T_g + load/speed_g` after taking the
+    /// replica, so heavy replicas spill to the fastest GPU with room;
+    /// ties break toward the faster device, then the lowest index
+    /// (deterministic).
     pub fn place(
         &self,
         replicas: &[usize],
@@ -82,7 +91,17 @@ impl Placer {
         expert_mem_gb: f64,
     ) -> PlacePlan {
         let n_gpus = cluster.n_gpus();
+        let uniform = cluster.uniform_speed;
         let mut gpu_load = vec![0.0f64; n_gpus];
+        // Per-GPU decision speeds and normalized time (tokens/speed) —
+        // only consulted (and only allocated) on non-uniform fleets, so
+        // the uniform hot path keeps its pre-refactor arithmetic and
+        // allocation profile.
+        let (speed, mut gpu_time) = if uniform {
+            (Vec::new(), Vec::new())
+        } else {
+            (cluster.gpus.iter().map(|g| g.speed).collect::<Vec<f64>>(), vec![0.0f64; n_gpus])
+        };
         let mut gpu_free: Vec<f64> = cluster.gpus.iter().map(|g| g.free_gb()).collect();
         // Remaining warm instances usable per expert (each reusable once).
         let warm: &mut [Vec<usize>] = previous;
@@ -114,35 +133,56 @@ impl Placer {
             // Warm-start reuse (line 5-6): a live instance of this expert
             // exists — no data transfer, no init. The instance already
             // holds memory, so no new reservation.
-            if let Some(pos) = pick_warm(&warm[p.expert], &gpu_load) {
+            let warm_pick = if uniform {
+                pick_warm_tokens(&warm[p.expert], &gpu_load)
+            } else {
+                pick_warm_time(&warm[p.expert], &gpu_time, &speed, p.load)
+            };
+            if let Some(pos) = warm_pick {
                 let gpu = warm[p.expert].swap_remove(pos);
                 p.gpu = gpu;
                 p.reused = true;
                 gpu_load[gpu] += p.load;
+                if !uniform {
+                    gpu_time[gpu] += p.load / speed[gpu];
+                }
                 continue;
             }
-            // JSQ (line 8): least-loaded GPU with room.
-            let fit = (0..n_gpus)
-                .filter(|&g| gpu_free[g] >= expert_mem_gb - 1e-9)
-                .min_by(|&a, &b| {
-                    gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b))
-                });
-            let gpu = match fit {
+            // JSQ (line 8): least-loaded GPU with room — by tokens on a
+            // uniform fleet, by resulting completion time on a mixed one.
+            let pick_from = |require_room: bool| -> Option<usize> {
+                let cands = (0..n_gpus)
+                    .filter(|&g| !require_room || gpu_free[g] >= expert_mem_gb - 1e-9);
+                if uniform {
+                    cands.min_by(|&a, &b| {
+                        gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b))
+                    })
+                } else {
+                    cands.min_by(|&a, &b| {
+                        let ta = gpu_time[a] + p.load / speed[a];
+                        let tb = gpu_time[b] + p.load / speed[b];
+                        ta.partial_cmp(&tb)
+                            .unwrap()
+                            .then(speed[b].partial_cmp(&speed[a]).unwrap())
+                            .then(a.cmp(&b))
+                    })
+                }
+            };
+            let gpu = match pick_from(true) {
                 Some(g) => g,
                 // Memory exhausted everywhere: fall back to least-loaded
                 // and record the eviction debt — the serverless manager
                 // evicts an idle instance to make room and bills it.
                 None => {
                     evictions_owed += 1;
-                    (0..n_gpus)
-                        .min_by(|&a, &b| {
-                            gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b))
-                        })
-                        .unwrap()
+                    pick_from(false).unwrap()
                 }
             };
             p.gpu = gpu;
             gpu_load[gpu] += p.load;
+            if !uniform {
+                gpu_time[gpu] += p.load / speed[gpu];
+            }
             // Saturate at zero: an eviction frees exactly the slot this
             // replica consumes, so the tracker never goes negative.
             gpu_free[gpu] = (gpu_free[gpu] - expert_mem_gb).max(0.0);
@@ -153,8 +193,9 @@ impl Placer {
 }
 
 /// Among warm candidate GPUs, prefer the least-loaded one (locality first,
-/// then balance among the local options).
-fn pick_warm(cands: &[usize], gpu_load: &[f64]) -> Option<usize> {
+/// then balance among the local options) — the uniform-fleet token rule,
+/// lowest GPU id on ties.
+fn pick_warm_tokens(cands: &[usize], gpu_load: &[f64]) -> Option<usize> {
     cands
         .iter()
         .enumerate()
@@ -164,13 +205,44 @@ fn pick_warm(cands: &[usize], gpu_load: &[f64]) -> Option<usize> {
         .map(|(pos, _)| pos)
 }
 
+/// Warm pick on a mixed fleet: prefer the candidate whose completion time
+/// after taking this replica is smallest; ties to the faster device, then
+/// the lower GPU id.
+fn pick_warm_time(cands: &[usize], gpu_time: &[f64], speed: &[f64], load: f64) -> Option<usize> {
+    cands
+        .iter()
+        .enumerate()
+        .min_by(|(_, &a), (_, &b)| {
+            let ta = gpu_time[a] + load / speed[a];
+            let tb = gpu_time[b] + load / speed[b];
+            ta.partial_cmp(&tb)
+                .unwrap()
+                .then(speed[b].partial_cmp(&speed[a]).unwrap())
+                .then(a.cmp(&b))
+        })
+        .map(|(pos, _)| pos)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ClusterSpec;
+    use crate::config::{ClusterSpec, GpuSpec};
 
     fn cluster(n: usize) -> Cluster {
-        Cluster::new(ClusterSpec { n_gpus: n, ..ClusterSpec::a6000_x8() })
+        Cluster::new(ClusterSpec::a6000_x8().with_n_gpus(n))
+    }
+
+    /// One 4x-speed device (620 TFLOPS = exactly 4.0 normalized) plus
+    /// `slow` A6000s — hand-checkable hetero arithmetic.
+    fn hetero_4x(slow: usize) -> Cluster {
+        let mut spec = ClusterSpec::a6000_x8().with_n_gpus(slow + 1);
+        spec.gpus[0] = GpuSpec {
+            name: "fast4x".into(),
+            tflops: 620.0,
+            mem_gb: 80.0,
+            ..GpuSpec::a6000()
+        };
+        Cluster::new(spec)
     }
 
     fn no_prev(n: usize) -> Vec<Vec<usize>> {
@@ -263,5 +335,105 @@ mod tests {
         let a = Placer.place(args.0, args.1, &mut no_prev(3), &c, 0.33);
         let b = Placer.place(args.0, args.1, &mut no_prev(3), &c, 0.33);
         assert_eq!(a.placements, b.placements);
+    }
+
+    #[test]
+    fn uniform_ties_pin_lowest_index() {
+        // Equal loads on an empty uniform cluster: the greedy must fill
+        // GPUs 0, 1, 2, 3 in that exact order — the pinned tie-break the
+        // hetero goldens depend on.
+        let c = cluster(4);
+        let plan = Placer.place(&[1, 1, 1, 1], &[10.0; 4], &mut no_prev(4), &c, 0.33);
+        let gpus: Vec<usize> = plan.placements.iter().map(|p| p.gpu).collect();
+        assert_eq!(gpus, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn hetero_stacks_heavy_replicas_on_the_fast_gpu() {
+        // Speeds [4, 1, 1, 1], loads [100, 90, 80] (one replica each).
+        // Completion-time greedy: 100 -> fast (25); 90 -> fast (25+22.5 =
+        // 47.5 < 90 on a slow GPU); 80 -> fast (47.5+20 = 67.5 < 80).
+        // Token balancing would spread them for a makespan of 90.
+        let c = hetero_4x(3);
+        let plan = Placer.place(&[1, 1, 1], &[100.0, 90.0, 80.0], &mut no_prev(3), &c, 0.33);
+        assert!(plan.placements.iter().all(|p| p.gpu == 0), "{:?}", plan.placements);
+        let time: f64 = plan.placements.iter().map(|p| p.load / 4.0).sum();
+        assert!((time - 67.5).abs() < 1e-9);
+
+        // The token-balanced ablation (capacity_aware = false) spreads by
+        // tokens: evaluated on the real speeds its makespan is 90.
+        let mut spec = c.spec.clone();
+        spec.capacity_aware = false;
+        let t = Cluster::new(spec);
+        let tb = Placer.place(&[1, 1, 1], &[100.0, 90.0, 80.0], &mut no_prev(3), &t, 0.33);
+        let mut times = [0.0f64; 4];
+        for p in &tb.placements {
+            times[p.gpu] += p.load / if p.gpu == 0 { 4.0 } else { 1.0 };
+        }
+        let tb_makespan = times.iter().cloned().fold(0.0, f64::max);
+        assert!((tb_makespan - 90.0).abs() < 1e-9, "{times:?}");
+        assert!(67.5 < tb_makespan, "capacity-aware beats token-balanced on wall-clock");
+    }
+
+    #[test]
+    fn hetero_time_imbalance_at_most_token_imbalance() {
+        // Speeds [2, 1, 1, 1] (310 TFLOPS = exactly 2.0), loads
+        // [80, 40, 40, 40]: the time-balancing greedy lands 80 on the
+        // fast GPU and one 40 on each slow GPU — per-GPU times all 40
+        // (imbalance 1.0) while tokens are [80, 40, 40, 40]
+        // (imbalance 1.6).
+        let mut spec = ClusterSpec::a6000_x8().with_n_gpus(4);
+        spec.gpus[0] =
+            GpuSpec { name: "fast2x".into(), tflops: 310.0, mem_gb: 80.0, ..GpuSpec::a6000() };
+        let c = Cluster::new(spec);
+        let plan =
+            Placer.place(&[1, 1, 1, 1], &[80.0, 40.0, 40.0, 40.0], &mut no_prev(4), &c, 0.33);
+        let tokens = plan.gpu_loads(4);
+        assert_eq!(tokens, vec![80.0, 40.0, 40.0, 40.0]);
+        let times: Vec<f64> =
+            tokens.iter().enumerate().map(|(g, &t)| t / if g == 0 { 2.0 } else { 1.0 }).collect();
+        let imb = |xs: &[f64]| {
+            let max = xs.iter().cloned().fold(0.0, f64::max);
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            max / mean
+        };
+        assert!((imb(&times) - 1.0).abs() < 1e-9, "{times:?}");
+        assert!((imb(&tokens) - 1.6).abs() < 1e-9);
+        assert!(imb(&times) <= imb(&tokens) + 1e-9);
+    }
+
+    #[test]
+    fn hetero_respects_per_device_memory() {
+        // The fast GPU has room for only one replica: the second-heaviest
+        // must go to a slow device even though the fast one is quicker.
+        let mut spec = ClusterSpec::a6000_x8().with_n_gpus(3);
+        spec.gpus[0] = GpuSpec {
+            name: "fast-small".into(),
+            tflops: 620.0,
+            mem_gb: 0.4,
+            ..GpuSpec::a6000()
+        };
+        let c = Cluster::new(spec);
+        let plan = Placer.place(&[1, 1], &[100.0, 90.0], &mut no_prev(2), &c, 0.33);
+        assert_eq!(plan.evictions_owed, 0);
+        let e0 = plan.placements.iter().find(|p| p.expert == 0).unwrap();
+        let e1 = plan.placements.iter().find(|p| p.expert == 1).unwrap();
+        assert_eq!(e0.gpu, 0, "heaviest takes the fast device");
+        assert_ne!(e1.gpu, 0, "no memory left on the fast device");
+    }
+
+    #[test]
+    fn hetero_tie_breaks_fastest_then_lowest_index() {
+        // Two equally-fast devices at indices 1 and 2 plus a slow index 0:
+        // an empty fleet ties on completion time between the fast pair —
+        // the lower index (1) must win deterministically.
+        let mut spec = ClusterSpec::a6000_x8().with_n_gpus(3);
+        spec.gpus[1] = GpuSpec { name: "fast-a".into(), tflops: 620.0, ..GpuSpec::a6000() };
+        spec.gpus[2] = GpuSpec { name: "fast-b".into(), tflops: 620.0, ..GpuSpec::a6000() };
+        let c = Cluster::new(spec);
+        let plan = Placer.place(&[1], &[40.0], &mut no_prev(1), &c, 0.33);
+        assert_eq!(plan.placements[0].gpu, 1);
+        let again = Placer.place(&[1], &[40.0], &mut no_prev(1), &c, 0.33);
+        assert_eq!(plan.placements, again.placements);
     }
 }

@@ -73,6 +73,34 @@ impl ScalePlan {
             .map(|(e, &r)| loads[e] / r as f64)
             .fold(0.0, f64::max)
     }
+
+    /// Per-replica *times* under the optimistic LPT pairing a
+    /// capacity-aware placer approximates: per-replica loads sorted
+    /// descending, each divided by the fleet speed at its rank
+    /// (fastest-first, cycling) — the multiset the capacity-aware scaler
+    /// evaluates its fluid-target stop rule over. Returns
+    /// `(time, expert)` pairs.
+    pub fn per_replica_times(&self, loads: &[f64], speeds: &[f64]) -> Vec<(f64, usize)> {
+        let mut fleet: Vec<f64> = if speeds.is_empty() { vec![1.0] } else { speeds.to_vec() };
+        fleet.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut per: Vec<(f64, usize)> = Vec::with_capacity(self.total());
+        for (e, &r) in self.replicas.iter().enumerate() {
+            for _ in 0..r {
+                per.push((loads[e] / r as f64, e));
+            }
+        }
+        per.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        per.iter()
+            .enumerate()
+            .map(|(i, &(load, e))| (load / fleet[i % fleet.len()], e))
+            .collect()
+    }
+
+    /// The wall-clock straggler term under the optimistic pairing: max
+    /// per-replica time.
+    pub fn max_per_replica_time(&self, loads: &[f64], speeds: &[f64]) -> f64 {
+        self.per_replica_times(loads, speeds).iter().map(|&(t, _)| t).fold(0.0, f64::max)
+    }
 }
 
 /// Expert Scaler configuration (Algorithm 1 inputs).
@@ -149,6 +177,77 @@ impl Scaler {
             heap.push(HeapEntry { per_replica: per_replica[e], expert: e });
         }
         ScalePlan { replicas }
+    }
+
+    /// Capacity-aware Algorithm 1 for fleets with *unequal* device speeds:
+    /// the stop condition is evaluated over per-replica wall-clock *times*
+    /// under the optimistic LPT pairing ([`ScalePlan::per_replica_times`]:
+    /// heaviest replicas on fastest devices, cycling). A CV target is the
+    /// wrong stop rule here — on a mixed fleet the time CV has a floor set
+    /// by the fleet's speed dispersion that no amount of splitting can
+    /// reach — so the weighted variant reuses `cv_threshold` as a relative
+    /// balance tolerance V instead: stop once the max per-replica time is
+    /// within `(1 + V)` of the fluid ideal `Σloads / Σspeeds` (the
+    /// makespan of a perfectly split layer on the whole fleet). Each
+    /// greedy step grants one more replica to the expert owning the
+    /// max-*time* replica — a straggler stuck on a slow device earns
+    /// replicas a token-count view would not grant — deterministically
+    /// (fixed pairing order, first max wins).
+    ///
+    /// Uniform fleets never take this path (callers branch on the fleet's
+    /// decision speeds), so the incremental [`Scaler::scale`] arithmetic —
+    /// and its bit-exact goldens — are untouched. The fleet is sorted once
+    /// and the pairing scratch is reused across steps; the O(R log R)
+    /// re-sort per step is bounded by `max_replica_slots` and only paid on
+    /// mixed fleets.
+    pub fn scale_weighted(&self, loads: &[f64], speeds: &[f64]) -> ScalePlan {
+        let n = loads.len();
+        let mut replicas = vec![0usize; n];
+        let mut slots = 0usize;
+        let mut total = 0.0f64;
+        for (e, &w) in loads.iter().enumerate() {
+            if w > 0.0 {
+                replicas[e] = 1;
+                slots += 1;
+                total += w;
+            }
+        }
+        if slots == 0 {
+            return ScalePlan { replicas };
+        }
+        let mut fleet: Vec<f64> = if speeds.is_empty() { vec![1.0] } else { speeds.to_vec() };
+        fleet.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let fleet_speed: f64 = fleet.iter().sum();
+        let target = (1.0 + self.cv_threshold) * (total / fleet_speed);
+
+        let mut plan = ScalePlan { replicas };
+        // Pairing scratch, reused across greedy steps (a grant shifts the
+        // global pairing ranks, so the multiset is rebuilt — into the
+        // same buffer). Mirrors `ScalePlan::per_replica_times`.
+        let mut per: Vec<(f64, usize)> = Vec::with_capacity(self.max_replica_slots.max(slots));
+        while plan.total() < self.max_replica_slots {
+            per.clear();
+            for (e, &r) in plan.replicas.iter().enumerate() {
+                for _ in 0..r {
+                    per.push((loads[e] / r as f64, e));
+                }
+            }
+            per.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            let mut max_t = f64::NEG_INFINITY;
+            let mut straggler = usize::MAX;
+            for (i, &(w, e)) in per.iter().enumerate() {
+                let t = w / fleet[i % fleet.len()];
+                if t > max_t {
+                    max_t = t;
+                    straggler = e;
+                }
+            }
+            if straggler == usize::MAX || max_t <= target {
+                break;
+            }
+            plan.replicas[straggler] += 1;
+        }
+        plan
     }
 }
 
@@ -240,5 +339,75 @@ mod tests {
         let lr = plan.per_replica_loads(&[100.0, 30.0, 0.0]);
         assert_eq!(lr, vec![50.0, 50.0, 30.0]);
         assert!((plan.max_per_replica(&[100.0, 30.0, 0.0]) - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_replica_times_pair_heavy_with_fast() {
+        // Speeds [4, 1], plan [2, 1] over loads [100, 30]: per-replica
+        // loads sorted desc are [50 (e0), 50 (e0), 30 (e1)]; fleet sorted
+        // desc cycles [4, 1, 4] -> times [12.5, 50, 7.5].
+        let plan = ScalePlan { replicas: vec![2, 1] };
+        let times = plan.per_replica_times(&[100.0, 30.0], &[4.0, 1.0]);
+        let just: Vec<f64> = times.iter().map(|&(t, _)| t).collect();
+        assert_eq!(just, vec![12.5, 50.0, 7.5]);
+        assert!((plan.max_per_replica_time(&[100.0, 30.0], &[4.0, 1.0]) - 50.0).abs() < 1e-12);
+        // Empty speed list degrades to reference speed 1.0.
+        assert_eq!(plan.max_per_replica_time(&[100.0, 30.0], &[]), 50.0);
+    }
+
+    #[test]
+    fn weighted_scaler_meets_the_fluid_target_and_stops() {
+        // The stop rule: max per-replica time within (1+V) of the fluid
+        // ideal Σloads/Σspeeds — it must actually FIRE on mixed fleets
+        // (a CV target would not: the time CV has a speed-dispersion
+        // floor), so the plan stays well under the cap when the loads
+        // allow it.
+        let s = Scaler::new(0.2, 64);
+        for (loads, speeds) in [
+            (vec![800.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0], vec![4.0, 1.0, 1.0, 1.0]),
+            (vec![100.0, 100.0], vec![4.0, 1.0]),
+            (vec![300.0, 30.0, 30.0], vec![2.0, 2.0, 1.0, 1.0]),
+        ] {
+            let plan = s.scale_weighted(&loads, &speeds);
+            let total: f64 = loads.iter().sum();
+            let fleet: f64 = speeds.iter().sum();
+            assert!(
+                plan.max_per_replica_time(&loads, &speeds) <= 1.2 * total / fleet + 1e-9,
+                "{loads:?} on {speeds:?}: {:?}",
+                plan.replicas
+            );
+            assert!(plan.total() < 64, "the stop rule fires before the cap: {:?}", plan.replicas);
+        }
+    }
+
+    #[test]
+    fn weighted_scaler_grants_replicas_for_slow_device_stragglers() {
+        // Speeds [4, 1]: two equal token loads are *not* time-balanced —
+        // one of them must run at 1/4 speed under the optimistic pairing,
+        // so the weighted scaler splits further than the token scaler
+        // (whose CV of equal loads is 0: no replicas at all).
+        let s = Scaler::new(0.2, 16);
+        let loads = [100.0, 100.0];
+        let token_plan = s.scale(&loads);
+        assert_eq!(token_plan.replicas, vec![1, 1], "token CV of equal loads is 0");
+        let time_plan = s.scale_weighted(&loads, &[4.0, 1.0]);
+        assert!(time_plan.total() > 2, "{:?}", time_plan.replicas);
+        // Extra replicas shrink the wall-clock straggler.
+        assert!(
+            time_plan.max_per_replica_time(&loads, &[4.0, 1.0])
+                < token_plan.max_per_replica_time(&loads, &[4.0, 1.0])
+        );
+        // Deterministic.
+        assert_eq!(time_plan, s.scale_weighted(&loads, &[4.0, 1.0]));
+    }
+
+    #[test]
+    fn weighted_scaler_respects_cap_and_scale_to_zero() {
+        let s = Scaler::new(0.0, 6); // V=0: the fluid ideal is unreachable; cap binds
+        let plan = s.scale_weighted(&[500.0, 0.0, 20.0], &[4.0, 1.0, 1.0]);
+        assert_eq!(plan.replicas[1], 0, "zero-load experts stay at zero");
+        assert_eq!(plan.total(), 6, "the cap binds");
+        assert!(plan.replicas[0] >= plan.replicas[2]);
+        assert_eq!(s.scale_weighted(&[0.0; 4], &[4.0, 1.0]).total(), 0);
     }
 }

@@ -77,6 +77,9 @@ pub struct FunctionManager {
     /// GB·s of instance residency (the serverless memory bill, including
     /// keep-alive idle time).
     pub residency_gb_s: f64,
+    /// Residency split by hosting GPU (GB·s per device) — the input the
+    /// per-device `cost_per_hour` dollar bill is computed from.
+    pub residency_gb_s_by_gpu: Vec<f64>,
     pub peak_instances: usize,
 }
 
@@ -87,6 +90,7 @@ impl FunctionManager {
         cold_start_ms: f64,
         n_layers: usize,
         n_experts: usize,
+        n_gpus: usize,
     ) -> Self {
         FunctionManager {
             slots: vec![Vec::new(); n_layers.max(1) * n_experts.max(1)],
@@ -101,6 +105,7 @@ impl FunctionManager {
             prewarm_hits: 0,
             forced_evictions: 0,
             residency_gb_s: 0.0,
+            residency_gb_s_by_gpu: vec![0.0; n_gpus.max(1)],
             peak_instances: 0,
         }
     }
@@ -286,7 +291,11 @@ impl FunctionManager {
             while i < v.len() {
                 if !v[i].busy && now_s - v[i].last_used_s > keep {
                     let inst = v.swap_remove(i);
-                    residency += (now_s - inst.created_s).max(0.0) * mem;
+                    let gb_s = (now_s - inst.created_s).max(0.0) * mem;
+                    residency += gb_s;
+                    if let Some(r) = self.residency_gb_s_by_gpu.get_mut(inst.gpu) {
+                        *r += gb_s;
+                    }
                     cluster.release(inst.gpu, mem);
                     freed += 1;
                 } else {
@@ -301,7 +310,11 @@ impl FunctionManager {
     }
 
     fn account(&mut self, inst: &Instance, now_s: f64) {
-        self.residency_gb_s += (now_s - inst.created_s).max(0.0) * self.expert_mem_gb;
+        let gb_s = (now_s - inst.created_s).max(0.0) * self.expert_mem_gb;
+        self.residency_gb_s += gb_s;
+        if let Some(r) = self.residency_gb_s_by_gpu.get_mut(inst.gpu) {
+            *r += gb_s;
+        }
     }
 
     /// Drain everything (end of run) and finalize accounting.
@@ -310,7 +323,11 @@ impl FunctionManager {
         let mut residency = 0.0;
         for v in &mut self.slots {
             for inst in v.drain(..) {
-                residency += (now_s - inst.created_s).max(0.0) * mem;
+                let gb_s = (now_s - inst.created_s).max(0.0) * mem;
+                residency += gb_s;
+                if let Some(r) = self.residency_gb_s_by_gpu.get_mut(inst.gpu) {
+                    *r += gb_s;
+                }
                 cluster.release(inst.gpu, mem);
             }
         }
@@ -335,7 +352,7 @@ mod tests {
     fn setup() -> (Cluster, FunctionManager) {
         (
             Cluster::new(ClusterSpec::a6000_x8()),
-            FunctionManager::new(0.33, 10.0, 45.0, 4, 8),
+            FunctionManager::new(0.33, 10.0, 45.0, 4, 8, 8),
         )
     }
 
@@ -407,9 +424,9 @@ mod tests {
 
     #[test]
     fn memory_pressure_evicts_stalest() {
-        let spec = ClusterSpec { n_gpus: 1, mem_per_gpu_gb: 1.0, ..ClusterSpec::a6000_x8() };
+        let spec = ClusterSpec::a6000_x8().with_n_gpus(1).with_mem_per_gpu(1.0);
         let mut c = Cluster::new(spec);
-        let mut fm = FunctionManager::new(0.4, 100.0, 45.0, 4, 8);
+        let mut fm = FunctionManager::new(0.4, 100.0, 45.0, 4, 8, 1);
         fm.apply_layer(&mut c, 0, &[(0, 0), (1, 0)], 0.0); // 0.8 GB used
         fm.apply_layer(&mut c, 0, &[], 1.0); // release busy flags
         // A third expert needs eviction of the stalest idle instance.
@@ -436,6 +453,22 @@ mod tests {
         assert_eq!(fm.live_count(), 0);
         assert!((fm.residency_gb_s - 10.0 * 0.33).abs() < 1e-9);
         assert_eq!(c.total_mem_used_gb(), 0.0);
+    }
+
+    #[test]
+    fn residency_splits_by_hosting_gpu() {
+        // One instance on GPU 0 for 10 s, one on GPU 3 for 6 s: the
+        // per-device split must sum to the total and attribute each
+        // instance to its host (the per-device dollar bill's input).
+        let (mut c, mut fm) = setup();
+        fm.apply_layer(&mut c, 0, &[(0, 0)], 0.0);
+        fm.apply_layer(&mut c, 1, &[(1, 3)], 4.0);
+        fm.drain(&mut c, 10.0);
+        assert!((fm.residency_gb_s_by_gpu[0] - 10.0 * 0.33).abs() < 1e-9);
+        assert!((fm.residency_gb_s_by_gpu[3] - 6.0 * 0.33).abs() < 1e-9);
+        let split: f64 = fm.residency_gb_s_by_gpu.iter().sum();
+        assert!((split - fm.residency_gb_s).abs() < 1e-9);
+        assert!(fm.residency_gb_s_by_gpu[1].abs() < 1e-12);
     }
 
     #[test]

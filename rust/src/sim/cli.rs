@@ -47,23 +47,36 @@ pub fn replay(args: &Args) {
     if args.opts.contains_key("kv-budget-gb") {
         cfg.kv_budget_override_gb = Some(args.f64("kv-budget-gb", 0.0));
     }
-    if let Some(path) = args.opt_str("cluster") {
-        cfg.cluster = ClusterSpec::load(std::path::Path::new(path)).expect("cluster config");
+    // Cluster: a preset name (`--cluster hetero-h100-a6000`) or a JSON
+    // file — either the uniform shorthand or a per-GPU array (see the
+    // README's cluster-spec schema). `--token-balanced` ablates the
+    // capacity-aware placement/scaling decisions (the cost model still
+    // evaluates on the real per-device speeds).
+    if let Some(name_or_path) = args.opt_str("cluster") {
+        cfg.cluster = ClusterSpec::by_name(name_or_path).unwrap_or_else(|| {
+            ClusterSpec::load(std::path::Path::new(name_or_path))
+                .unwrap_or_else(|e| panic!("--cluster: {e}"))
+        });
+    }
+    if args.flag("token-balanced") {
+        cfg.cluster.capacity_aware = false;
     }
     // Chunked prefill: `--chunk-tokens 512` packs decode first and fills
     // the remainder of each iteration with prefill chunks (stall-free
     // batching). Disaggregation: `--disagg` splits the cluster into
-    // prefill/decode pools (`--prefill-gpus` overrides the even split) and
-    // bills the KV handoff over `--link-gbps`.
+    // prefill/decode pools (`--prefill-gpus` overrides the even split;
+    // `--fastest-prefill` steers the fastest devices to the prefill pool)
+    // and bills the KV handoff over `--link-gbps`.
     cfg.prefill_chunk_tokens = args.usize("chunk-tokens", 0);
     if args.flag("disagg") {
         let mut d = DisaggSpec::even_split(&cfg.cluster);
         // Both pools must carve out of the real cluster: prefill gets at
         // most n_gpus - 1 so the decode pool is never a phantom GPU.
-        let max_prefill = cfg.cluster.n_gpus.saturating_sub(1).max(1);
+        let max_prefill = cfg.cluster.n_gpus().saturating_sub(1).max(1);
         d.prefill_gpus = args.usize("prefill-gpus", d.prefill_gpus).clamp(1, max_prefill);
-        d.decode_gpus = cfg.cluster.n_gpus.saturating_sub(d.prefill_gpus).max(1);
+        d.decode_gpus = cfg.cluster.n_gpus().saturating_sub(d.prefill_gpus).max(1);
         d.link_gbps = args.f64("link-gbps", d.link_gbps);
+        d.fastest_prefill = args.flag("fastest-prefill");
         assert!(
             d.link_gbps.is_finite() && d.link_gbps > 0.0,
             "--link-gbps expects a positive finite GB/s (a zero-cost link is colocation)"
@@ -77,6 +90,7 @@ pub fn replay(args: &Args) {
     println!("{}", report.request_slo_line(&SloSpec::default()));
     println!("{}", report.pressure_line());
     println!("{}", report.phase_line());
+    println!("{}", report.gpu_line());
     if args.flag("cdf") {
         let lat = report.layer_latency();
         for q in [1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {

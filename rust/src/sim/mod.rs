@@ -90,12 +90,13 @@ impl SimConfig {
 
     /// The KV-cache budget (GB) this run's batcher is gated on. In
     /// disaggregated mode the KV cache lives in the decode pool, so the
-    /// carve-out is derived from that pool's memory, not the whole
-    /// cluster.
+    /// carve-out is derived from that pool's *actual devices* (their
+    /// summed per-device memory — a memory-skewed split budgets what its
+    /// hardware really has), not the whole cluster.
     pub fn kv_budget_gb(&self) -> f64 {
         self.kv_budget_override_gb.unwrap_or_else(|| {
             let host = match self.disagg {
-                Some(d) => DisaggSpec::pool_cluster(&self.cluster, d.decode_gpus),
+                Some(d) => d.pools(&self.cluster).1,
                 None => self.cluster.clone(),
             };
             host.kv_budget_gb(&self.model) * self.kv_frac
@@ -159,10 +160,39 @@ impl Pool {
 
     /// Serverful residency + misc memory billed over the iteration wall
     /// time (the whole model stays resident regardless of activity).
+    /// Serverful policies also bill dollars at the pool's aggregate
+    /// per-device rate — the whole fleet is reserved while serving;
+    /// serverless policies pay per-instance residency dollars at finish
+    /// instead ([`bill_serverless_dollars`]).
     fn bill_resident(&self, iter_ms: f64, report: &mut RunReport) {
-        let resident = self.policy.resident_model_mem_gb(&self.cm).unwrap_or(0.0);
-        report.cost_gb_s += iter_ms / 1e3 * (resident + self.cm.misc_mem_gb);
+        match self.policy.resident_model_mem_gb(&self.cm) {
+            Some(resident) => {
+                report.cost_gb_s += iter_ms / 1e3 * (resident + self.cm.misc_mem_gb);
+                report.dollar_cost +=
+                    iter_ms / 1e3 / 3600.0 * self.cluster.spec.total_cost_per_hour();
+            }
+            None => report.cost_gb_s += iter_ms / 1e3 * self.cm.misc_mem_gb,
+        }
     }
+}
+
+/// The serverless dollar bill of one pool: each device's keep-alive
+/// residency (GB·s) as a fraction of that device's memory, priced at the
+/// device's own `cost_per_hour` — pay-as-you-go on the hardware actually
+/// occupied.
+fn bill_serverless_dollars(policy: &dyn Policy, spec: &crate::config::ClusterSpec) -> f64 {
+    let Some(res) = policy.residency_gb_s_by_gpu() else { return 0.0 };
+    res.iter()
+        .enumerate()
+        .map(|(g, &gb_s)| {
+            let Some(gpu) = spec.gpus.get(g) else { return 0.0 };
+            if gpu.mem_gb > 0.0 {
+                gb_s / gpu.mem_gb / 3600.0 * gpu.cost_per_hour
+            } else {
+                0.0
+            }
+        })
+        .sum()
 }
 
 /// What the idle clock driver should do when the batcher has no runnable
@@ -226,17 +256,17 @@ pub fn run_with_trace(cfg: &SimConfig, trace: &[TraceRequest]) -> RunReport {
     let wall_start = Instant::now();
     let mut routing = RoutingModel::new(&cfg.model, cfg.seed ^ 0x9e37);
     // Colocated: one pool over the whole cluster. Disaggregated: a prefill
-    // pool and a decode pool partition it, each with its own policy state.
+    // pool and a decode pool partition the *device list* (each pool spec
+    // carries its devices' actual capabilities — with `fastest_prefill`
+    // the fastest devices serve prefill), each with its own policy state.
+    let pool_specs = cfg.disagg.map(|d| d.pools(&cfg.cluster));
     let mut main_pool = Pool::new(
         cfg,
-        &cfg.disagg
-            .map(|d| DisaggSpec::pool_cluster(&cfg.cluster, d.prefill_gpus))
-            .unwrap_or_else(|| cfg.cluster.clone()),
+        pool_specs.as_ref().map(|(pre, _)| pre).unwrap_or(&cfg.cluster),
         cfg.seed ^ 0x51ce,
     );
-    let mut decode_pool = cfg.disagg.map(|d| {
-        Pool::new(cfg, &DisaggSpec::pool_cluster(&cfg.cluster, d.decode_gpus), cfg.seed ^ 0xdeca)
-    });
+    let mut decode_pool =
+        pool_specs.as_ref().map(|(_, dec)| Pool::new(cfg, dec, cfg.seed ^ 0xdeca));
     let kv_budget_gb = cfg.kv_budget_gb();
     let mut batcher = Batcher::with_limits(BatchLimits {
         max_batch_tokens: cfg.max_batch_tokens,
@@ -407,13 +437,39 @@ pub fn run_with_trace(cfg: &SimConfig, trace: &[TraceRequest]) -> RunReport {
     main_pool.policy.finish(&mut main_pool.cluster, clock);
     report.residency_gb_s = main_pool.policy.residency_gb_s();
     report.warm_fraction = main_pool.policy.warm_fraction();
+    report.dollar_cost += bill_serverless_dollars(main_pool.policy.as_ref(), &main_pool.cluster.spec);
     if let Some(dec) = decode_pool.as_mut() {
         dec.policy.finish(&mut dec.cluster, clock);
         report.residency_gb_s += dec.policy.residency_gb_s();
         report.warm_fraction = 0.5 * (report.warm_fraction + dec.policy.warm_fraction());
+        report.dollar_cost += bill_serverless_dollars(dec.policy.as_ref(), &dec.cluster.spec);
         if clock > 0.0 {
             report.prefill_pool_util = main_pool.busy_s / clock;
             report.decode_pool_util = dec.busy_s / clock;
+        }
+    }
+    // Per-GPU served-work signals, mapped back to the global device
+    // indices (disaggregated pools report through their split's index
+    // lists; a degenerate oversubscribed split accumulates).
+    report.gpu_tokens = vec![0.0; cfg.cluster.n_gpus()];
+    report.gpu_busy_ms = vec![0.0; cfg.cluster.n_gpus()];
+    match cfg.disagg {
+        None => {
+            report.gpu_tokens.copy_from_slice(&main_pool.cluster.served_tokens);
+            report.gpu_busy_ms.copy_from_slice(&main_pool.cluster.served_ms);
+        }
+        Some(d) => {
+            let (pre_idx, dec_idx) = d.split_indices(&cfg.cluster);
+            for (local, &global) in pre_idx.iter().enumerate() {
+                report.gpu_tokens[global] += main_pool.cluster.served_tokens[local];
+                report.gpu_busy_ms[global] += main_pool.cluster.served_ms[local];
+            }
+            if let Some(dec) = decode_pool.as_ref() {
+                for (local, &global) in dec_idx.iter().enumerate() {
+                    report.gpu_tokens[global] += dec.cluster.served_tokens[local];
+                    report.gpu_busy_ms[global] += dec.cluster.served_ms[local];
+                }
+            }
         }
     }
     report.kv_transfer_gb = batcher.kv_transfer_bytes / 1e9;
@@ -514,6 +570,40 @@ mod tests {
         }
         use crate::metrics::SloSpec;
         assert!(r.goodput_rps(&SloSpec::unbounded()) > 0.0);
+    }
+
+    #[test]
+    fn per_gpu_signals_and_dollars_populate() {
+        // Colocated uniform run: per-GPU served tokens/time cover the
+        // fleet and sum to the run's work; serverless residency bills a
+        // positive dollar cost.
+        let r = quick(PolicyKind::Moeless);
+        assert_eq!(r.gpu_tokens.len(), 8);
+        assert_eq!(r.gpu_busy_ms.len(), 8);
+        assert!(r.gpu_busy_ms.iter().sum::<f64>() > 0.0);
+        assert!(r.gpu_util().iter().all(|&u| u >= 0.0 && u.is_finite()));
+        assert!(r.gpu_time_imbalance() >= 1.0, "{}", r.gpu_time_imbalance());
+        assert!(r.dollar_cost > 0.0);
+        // Serverful runs bill the whole fleet: strictly more dollars than
+        // the serverless run on the same workload.
+        let meg = quick(PolicyKind::Megatron);
+        assert!(meg.dollar_cost > r.dollar_cost, "{} vs {}", meg.dollar_cost, r.dollar_cost);
+        // Disaggregated runs fold pool-local signals back to global
+        // device indices: every device is covered, none double-counted.
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.duration_s = 20.0;
+        cfg.base_rps = 3.0;
+        cfg.seed = 11;
+        cfg.prefill_chunk_tokens = 256;
+        cfg.disagg = Some(DisaggSpec::even_split(&cfg.cluster));
+        let d = run(&cfg);
+        assert_eq!(d.gpu_tokens.len(), 8);
+        assert!(d.gpu_tokens[..4].iter().sum::<f64>() > 0.0, "prefill pool worked");
+        assert!(d.gpu_tokens[4..].iter().sum::<f64>() > 0.0, "decode pool worked");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use std::collections::HashMap;
 
 use crate::baselines::PolicyKind;
-use crate::config::{DatasetSpec, DisaggSpec, ModelSpec};
+use crate::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec};
 use crate::metrics::{RunReport, SloSpec};
 use crate::sim::{run_with_trace, SimConfig};
 use crate::util::stats::percentile_unsorted;
@@ -23,6 +23,9 @@ use crate::workload::{Scenario, TraceRequest};
 pub struct SweepSpec {
     pub model: ModelSpec,
     pub dataset: DatasetSpec,
+    /// The fleet every cell serves on (uniform A6000 by default; set a
+    /// heterogeneous preset or parsed JSON spec to sweep mixed fleets).
+    pub cluster: ClusterSpec,
     pub policies: Vec<PolicyKind>,
     pub scenarios: Vec<Scenario>,
     pub seeds: Vec<u64>,
@@ -45,6 +48,7 @@ impl SweepSpec {
         SweepSpec {
             model,
             dataset,
+            cluster: ClusterSpec::a6000_x8(),
             policies: PolicyKind::paper_set().to_vec(),
             scenarios: Scenario::paper_set(),
             seeds: vec![42],
@@ -76,6 +80,7 @@ impl SweepSpec {
     /// scenario field stays at its default and is never consulted.
     fn config_for(&self, policy: PolicyKind, seed: u64) -> SimConfig {
         let mut cfg = SimConfig::new(self.model.clone(), self.dataset.clone(), policy);
+        cfg.cluster = self.cluster.clone();
         cfg.duration_s = self.duration_s;
         cfg.base_rps = self.base_rps;
         cfg.seed = seed;
@@ -164,6 +169,11 @@ pub struct SloSummary {
     /// KV shipped prefill→decode, summed across the group's seeds (GB; 0
     /// when colocated).
     pub kv_transfer_gb: f64,
+    /// Mean per-GPU *time* imbalance (max/mean effective compute) across
+    /// the group's cells — the heterogeneous-fleet balance signal.
+    pub gpu_time_imbalance: f64,
+    /// Mean per-device-rate dollar bill across the group's cells.
+    pub dollar_cost: f64,
 }
 
 impl SloSummary {
@@ -173,7 +183,7 @@ impl SloSummary {
             "slo {:<8} {:<16} ttft p50={:>5.0} p95={:>5.0} p99={:>5.0}ms | \
              tpot p50={:>5.1} p95={:>5.1} p99={:>5.1}ms | \
              e2e p50={:>5.2}s | goodput={:.2}req/s reqs={} seeds={} preempt={} rej={} \
-             chunks/req={:.1} kvxfer={:.3}GB",
+             chunks/req={:.1} kvxfer={:.3}GB gpu_imb={:.2} cost=${:.4}",
             self.scenario,
             self.policy,
             self.ttft_p50_ms,
@@ -190,6 +200,8 @@ impl SloSummary {
             self.rejected,
             self.chunks_per_req,
             self.kv_transfer_gb,
+            self.gpu_time_imbalance,
+            self.dollar_cost,
         )
     }
 }
@@ -219,6 +231,8 @@ pub fn summarize(cells: &[SweepCell], slo: &SloSpec) -> Vec<SloSummary> {
             let mut rejected = 0u64;
             let mut chunks = 0u64;
             let mut kv_transfer_gb = 0.0f64;
+            let mut gpu_imb = 0.0f64;
+            let mut dollar_cost = 0.0f64;
             for c in &group {
                 for r in &c.report.requests {
                     ttft.push(r.ttft_ms());
@@ -231,6 +245,8 @@ pub fn summarize(cells: &[SweepCell], slo: &SloSpec) -> Vec<SloSummary> {
                 preemptions += c.report.preemptions;
                 rejected += c.report.rejected_requests;
                 kv_transfer_gb += c.report.kv_transfer_gb;
+                gpu_imb += c.report.gpu_time_imbalance();
+                dollar_cost += c.report.dollar_cost;
             }
             // Selection, not sort: each percentile is O(n) on the pooled
             // sample, with no extra allocation.
@@ -252,6 +268,8 @@ pub fn summarize(cells: &[SweepCell], slo: &SloSpec) -> Vec<SloSummary> {
                 rejected,
                 chunks_per_req: chunks as f64 / pooled.max(1) as f64,
                 kv_transfer_gb,
+                gpu_time_imbalance: gpu_imb / group.len().max(1) as f64,
+                dollar_cost: dollar_cost / group.len().max(1) as f64,
             }
         })
         .collect()
@@ -347,6 +365,28 @@ mod tests {
         assert!(rows[0].kv_transfer_gb > 0.0);
         assert!(rows[0].chunks_per_req >= 1.0);
         assert!(rows[0].line().contains("kvxfer="), "{}", rows[0].line());
+    }
+
+    #[test]
+    fn hetero_cluster_forwards_into_cells() {
+        let mut spec = small_spec();
+        spec.threads = 2;
+        spec.policies = vec![PolicyKind::Moeless];
+        spec.scenarios = vec![Scenario::poisson()];
+        spec.seeds = vec![1];
+        spec.cluster = ClusterSpec::hetero_h100_a6000();
+        let cells = run_sweep(&spec);
+        for c in &cells {
+            assert_eq!(c.report.gpu_tokens.len(), 8);
+            assert!(c.report.gpu_busy_ms.iter().sum::<f64>() > 0.0);
+            assert!(c.report.dollar_cost > 0.0, "serverless residency bills dollars");
+            // KV budget derives from the mixed fleet's summed memory.
+            let derived = ClusterSpec::hetero_h100_a6000().kv_budget_gb(&spec.model);
+            assert!((c.report.kv_budget_gb - derived).abs() < 1e-9);
+        }
+        let rows = summarize(&cells, &SloSpec::default());
+        assert!(rows[0].gpu_time_imbalance > 0.0);
+        assert!(rows[0].line().contains("gpu_imb="), "{}", rows[0].line());
     }
 
     #[test]

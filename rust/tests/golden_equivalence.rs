@@ -175,6 +175,111 @@ fn disaggregated_kv_pressure_matches_reference() {
 }
 
 #[test]
+fn uniform_vec_gpu_spec_matches_legacy_uniform_run() {
+    // The heterogeneous-resource refactor's golden: a uniform fleet
+    // expressed three ways — the preset, the uniform JSON shorthand, and
+    // an explicit per-GPU array of identical devices — must produce
+    // bit-identical end-to-end runs (same iteration compositions, same
+    // per-request records, same cost).
+    use moeless::baselines::PolicyKind;
+    use moeless::config::{ClusterSpec, ModelSpec};
+    use moeless::sim::{run, SimConfig};
+    use moeless::util::json::Json;
+
+    let entry = r#"{"mem_gb": 48, "tflops": 155, "hbm_gbps": 768, "cost_per_hour": 0.8}"#;
+    let arr = format!(r#"{{"gpus": [{}]}}"#, [entry; 8].join(","));
+    let shorthand = Json::parse(r#"{"n_gpus": 8, "mem_per_gpu_gb": 48}"#).unwrap();
+    let per_gpu = Json::parse(&arr).unwrap();
+
+    let mut reports = Vec::new();
+    for cluster in [
+        ClusterSpec::a6000_x8(),
+        ClusterSpec::from_json(&shorthand).unwrap(),
+        ClusterSpec::from_json(&per_gpu).unwrap(),
+    ] {
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.cluster = cluster;
+        cfg.duration_s = 20.0;
+        cfg.base_rps = 4.0;
+        cfg.seed = 11;
+        cfg.prefill_chunk_tokens = 256;
+        reports.push(run(&cfg));
+    }
+    for r in &reports[1..] {
+        assert_eq!(reports[0].requests, r.requests, "per-request records diverged");
+        assert_eq!(reports[0].layer_forward, r.layer_forward, "layer forwards diverged");
+        assert_eq!(reports[0].cost_gb_s, r.cost_gb_s);
+        assert_eq!(reports[0].iterations, r.iterations);
+        assert_eq!(reports[0].gpu_tokens, r.gpu_tokens);
+    }
+    // The capacity-aware flag is a decision-side switch: on a uniform
+    // fleet flipping it off must change nothing, bit for bit.
+    let mut cfg = SimConfig::new(
+        ModelSpec::mixtral_8x7b(),
+        DatasetSpec::lmsys(),
+        PolicyKind::Moeless,
+    );
+    cfg.cluster = ClusterSpec::a6000_x8();
+    cfg.cluster.capacity_aware = false;
+    cfg.duration_s = 20.0;
+    cfg.base_rps = 4.0;
+    cfg.seed = 11;
+    cfg.prefill_chunk_tokens = 256;
+    let flipped = run(&cfg);
+    assert_eq!(reports[0].requests, flipped.requests);
+    assert_eq!(reports[0].layer_forward, flipped.layer_forward);
+}
+
+#[test]
+fn hetero_json_matches_preset_and_is_deterministic() {
+    // A mixed fleet parsed from the per-GPU JSON array equals the
+    // equivalent preset run, and hetero runs replay deterministically
+    // (the stable-tie-break prerequisite for hetero goldens).
+    use moeless::baselines::PolicyKind;
+    use moeless::config::{ClusterSpec, ModelSpec};
+    use moeless::sim::{run, SimConfig};
+    use moeless::util::json::Json;
+
+    let h100 = r#"{"name":"h100","mem_gb":80,"tflops":989,"hbm_gbps":3350,"cost_per_hour":3.9}"#;
+    let a6000 = r#"{"name":"a6000","mem_gb":48,"tflops":155,"hbm_gbps":768,"cost_per_hour":0.8}"#;
+    let mut entries = vec![h100, h100];
+    entries.extend([a6000; 6]);
+    let json = Json::parse(&format!(r#"{{"gpus": [{}]}}"#, entries.join(","))).unwrap();
+    let parsed = ClusterSpec::from_json(&json).unwrap();
+
+    let mk = |cluster: ClusterSpec| {
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.cluster = cluster;
+        cfg.duration_s = 20.0;
+        cfg.base_rps = 4.0;
+        cfg.seed = 11;
+        cfg
+    };
+    let via_json = run(&mk(parsed));
+    let via_preset = run(&mk(ClusterSpec::hetero_h100_a6000()));
+    assert_eq!(via_json.requests, via_preset.requests);
+    assert_eq!(via_json.layer_forward, via_preset.layer_forward);
+    assert_eq!(via_json.gpu_tokens, via_preset.gpu_tokens);
+    let again = run(&mk(ClusterSpec::hetero_h100_a6000()));
+    assert_eq!(via_preset.requests, again.requests);
+    assert_eq!(via_preset.gpu_busy_ms, again.gpu_busy_ms);
+    // The mixed fleet actually engages the capacity-aware path: the
+    // H100s carry a disproportionate token share.
+    let h100_tokens: f64 = via_preset.gpu_tokens[..2].iter().sum();
+    let total: f64 = via_preset.gpu_tokens.iter().sum();
+    assert!(total > 0.0);
+    assert!(h100_tokens > 2.0 / 8.0 * total, "fast devices absorb an outsized share");
+}
+
+#[test]
 fn randomized_differential_matches_reference() {
     // Fixed-seed randomized sweep over traces × limits: any divergence
     // between the cores fails with the generating seed.

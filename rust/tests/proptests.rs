@@ -125,7 +125,7 @@ fn prop_placer_places_every_replica_exactly_once() {
         let replicas: Vec<usize> =
             loads.iter().map(|&w| if w > 0.0 { g.usize_in(1, 4) } else { 0 }).collect();
         let n_gpus = g.usize_in(1, 8);
-        let cluster = Cluster::new(ClusterSpec { n_gpus, ..ClusterSpec::a6000_x8() });
+        let cluster = Cluster::new(ClusterSpec::a6000_x8().with_n_gpus(n_gpus));
         let mut prev: Vec<Vec<usize>> = (0..n)
             .map(|_| g.vec_of(0, 2, |g| g.usize_in(0, n_gpus - 1)))
             .collect();
@@ -155,7 +155,7 @@ fn prop_placer_balance_not_catastrophic() {
         let loads = g.loads(n, 800.0);
         let replicas: Vec<usize> = loads.iter().map(|&w| usize::from(w > 0.0)).collect();
         let n_gpus = g.usize_in(1, 8);
-        let cluster = Cluster::new(ClusterSpec { n_gpus, ..ClusterSpec::a6000_x8() });
+        let cluster = Cluster::new(ClusterSpec::a6000_x8().with_n_gpus(n_gpus));
         let mut prev = vec![Vec::new(); n];
         let plan = Placer.place(&replicas, &loads, &mut prev, &cluster, 0.33);
         let total: f64 = loads.iter().sum();
@@ -174,7 +174,7 @@ fn prop_placer_warm_reuse_monotone() {
         let loads: Vec<f64> = (0..n).map(|_| g.f64_in(1.0, 100.0)).collect();
         let replicas = vec![1usize; n];
         let n_gpus = 4;
-        let cluster = Cluster::new(ClusterSpec { n_gpus, ..ClusterSpec::a6000_x8() });
+        let cluster = Cluster::new(ClusterSpec::a6000_x8().with_n_gpus(n_gpus));
         let mut prev: Vec<Vec<usize>> = (0..n).map(|e| vec![e % n_gpus]).collect();
         let plan = Placer.place(&replicas, &loads, &mut prev, &cluster, 0.33);
         assert_eq!(plan.reused_count(), n, "all single replicas reuse their old home");
@@ -185,7 +185,7 @@ fn prop_placer_warm_reuse_monotone() {
 fn placer_fallback_records_eviction_debt() {
     // A fully memory-exhausted cluster still places every replica, but each
     // placement owes the serverless manager one eviction.
-    let mut cluster = Cluster::new(ClusterSpec { n_gpus: 2, ..ClusterSpec::a6000_x8() });
+    let mut cluster = Cluster::new(ClusterSpec::a6000_x8().with_n_gpus(2));
     assert!(cluster.reserve(0, 48.0));
     assert!(cluster.reserve(1, 48.0));
     let mut prev = vec![Vec::new(); 3];
@@ -199,7 +199,7 @@ fn placer_fallback_records_eviction_debt() {
 fn placer_partial_room_owes_only_the_overflow() {
     // One free slot on a 2-GPU cluster: the first replica fits, the second
     // owes an eviction.
-    let spec = ClusterSpec { n_gpus: 2, mem_per_gpu_gb: 1.0, ..ClusterSpec::a6000_x8() };
+    let spec = ClusterSpec::a6000_x8().with_n_gpus(2).with_mem_per_gpu(1.0);
     let mut cluster = Cluster::new(spec);
     assert!(cluster.reserve(0, 1.0));
     assert!(cluster.reserve(1, 0.5)); // 0.5 GB free on GPU 1: one 0.4 GB slot
@@ -207,6 +207,138 @@ fn placer_partial_room_owes_only_the_overflow() {
     let plan = Placer.place(&[1, 1], &[50.0, 40.0], &mut prev, &cluster, 0.4);
     assert_eq!(plan.placements.len(), 2);
     assert_eq!(plan.evictions_owed, 1);
+}
+
+/// Random heterogeneous fleet: 1-6 devices with independently drawn
+/// memory, speed and bandwidth.
+fn random_hetero_spec(g: &mut moeless::util::quickcheck::Gen) -> ClusterSpec {
+    use moeless::config::GpuSpec;
+    let n = g.usize_in(1, 6);
+    let mut spec = ClusterSpec::a6000_x8().with_n_gpus(n);
+    for d in &mut spec.gpus {
+        *d = GpuSpec {
+            name: "rand".into(),
+            mem_gb: g.f64_in(0.5, 96.0),
+            tflops: g.f64_in(50.0, 1200.0),
+            hbm_gbps: g.f64_in(100.0, 4000.0),
+            cost_per_hour: g.f64_in(0.1, 5.0),
+        };
+    }
+    spec
+}
+
+#[test]
+fn prop_hetero_placer_never_exceeds_device_memory() {
+    // For any mixed fleet and any replica plan: as long as the placer did
+    // not have to fall back to eviction debt, the *new* (non-reused)
+    // instances it assigns to a device always fit that device's own
+    // remaining memory.
+    property(150, |g| {
+        let spec = random_hetero_spec(g);
+        let n_gpus = spec.gpus.len();
+        let free: Vec<f64> = spec.gpus.iter().map(|d| d.mem_gb).collect();
+        let cluster = Cluster::new(spec);
+        let n = g.usize_in(1, 12);
+        let loads = g.loads(n, 900.0);
+        let replicas: Vec<usize> =
+            loads.iter().map(|&w| if w > 0.0 { g.usize_in(1, 3) } else { 0 }).collect();
+        let expert_mem = g.f64_in(0.05, 2.0);
+        let mut prev = vec![Vec::new(); n];
+        let plan = Placer.place(&replicas, &loads, &mut prev, &cluster, expert_mem);
+        assert_eq!(plan.placements.len(), replicas.iter().sum::<usize>());
+        if plan.evictions_owed == 0 {
+            let mut used = vec![0.0f64; n_gpus];
+            for p in &plan.placements {
+                used[p.gpu] += expert_mem;
+            }
+            for (gpu, (&u, &f)) in used.iter().zip(&free).enumerate() {
+                assert!(u <= f + 1e-6, "gpu {gpu}: placed {u} GB > capacity {f} GB");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_hetero_placer_time_balance_bound() {
+    // Greedy completion-time balancing on unrelated-speed machines (no
+    // memory pressure): the per-GPU wall-clock makespan is bounded by the
+    // perfectly-split time plus one worst item on the slowest device —
+    // the standard list-scheduling guarantee, generalized by speeds.
+    property(150, |g| {
+        let mut spec = random_hetero_spec(g);
+        for d in &mut spec.gpus {
+            d.mem_gb = 512.0; // no memory pressure: pure balancing
+        }
+        let speeds: Vec<f64> = spec.gpus.iter().map(|d| d.tflops / 155.0).collect();
+        let n_gpus = speeds.len();
+        let cluster = Cluster::new(spec);
+        let n = g.usize_in(1, 12);
+        let loads = g.loads(n, 800.0);
+        let replicas: Vec<usize> = loads.iter().map(|&w| usize::from(w > 0.0)).collect();
+        let mut prev = vec![Vec::new(); n];
+        let plan = Placer.place(&replicas, &loads, &mut prev, &cluster, 0.33);
+        let tokens = plan.gpu_loads(n_gpus);
+        let max_time = tokens
+            .iter()
+            .zip(&speeds)
+            .map(|(&t, &s)| t / s)
+            .fold(0.0, f64::max);
+        let total: f64 = loads.iter().sum();
+        let total_speed: f64 = speeds.iter().sum();
+        let min_speed = speeds.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max_single = loads.iter().cloned().fold(0.0, f64::max);
+        let bound = total / total_speed + max_single / min_speed + 1e-6;
+        assert!(max_time <= bound, "makespan {max_time} > bound {bound}");
+    });
+}
+
+#[test]
+fn prop_hetero_capacity_aware_never_loses_beyond_one_item_of_slack() {
+    // Comparative guarantee on any speed-skewed, memory-rich fleet: the
+    // capacity-aware plan's wall-clock makespan never exceeds the
+    // token-balanced ablation's makespan (evaluated on the same real
+    // speeds) by more than one worst item on the slowest device. Proof
+    // sketch: the capacity-aware greedy is bounded by
+    // total/Σspeeds + max_item/min_speed, while *no* assignment — the
+    // token-balanced one included — can beat total/Σspeeds.
+    property(150, |g| {
+        use moeless::config::GpuSpec;
+        let slow = g.usize_in(1, 5);
+        let mut spec = ClusterSpec::a6000_x8().with_n_gpus(slow + 1).with_mem_per_gpu(512.0);
+        let ratio = g.f64_in(2.0, 8.0);
+        spec.gpus[0] = GpuSpec {
+            name: "fast".into(),
+            tflops: 155.0 * ratio,
+            mem_gb: 512.0,
+            ..GpuSpec::a6000()
+        };
+        let speeds: Vec<f64> = spec.gpus.iter().map(|d| d.tflops / 155.0).collect();
+        let n_gpus = speeds.len();
+        let mut token_spec = spec.clone();
+        token_spec.capacity_aware = false;
+        let (aware, token) = (Cluster::new(spec), Cluster::new(token_spec));
+
+        let n = g.usize_in(1, 10);
+        let loads = g.loads(n, 600.0);
+        if loads.iter().all(|&w| w == 0.0) {
+            return;
+        }
+        let replicas: Vec<usize> = loads.iter().map(|&w| usize::from(w > 0.0)).collect();
+        let makespan = |cluster: &Cluster| {
+            let mut prev = vec![Vec::new(); n];
+            let plan = Placer.place(&replicas, &loads, &mut prev, cluster, 0.33);
+            plan.gpu_loads(n_gpus)
+                .iter()
+                .zip(&speeds)
+                .map(|(&t, &s)| t / s)
+                .fold(0.0, f64::max)
+        };
+        let max_single = loads.iter().cloned().fold(0.0, f64::max);
+        let min_speed = speeds.iter().cloned().fold(f64::INFINITY, f64::min);
+        let slack = max_single / min_speed + 1e-6;
+        let (a, t) = (makespan(&aware), makespan(&token));
+        assert!(a <= t + slack, "aware makespan {a} > token-balanced {t} + slack {slack}");
+    });
 }
 
 #[test]
@@ -233,7 +365,7 @@ fn prop_manager_memory_conservation() {
     property(60, |g| {
         let spec = ClusterSpec::a6000_x8();
         let mut cluster = Cluster::new(spec);
-        let mut fm = FunctionManager::new(0.33, g.f64_in(0.5, 20.0), 45.0, 4, 8);
+        let mut fm = FunctionManager::new(0.33, g.f64_in(0.5, 20.0), 45.0, 4, 8, 8);
         let steps = g.usize_in(1, 40);
         for t in 0..steps {
             let n_place = g.usize_in(0, 12);
@@ -527,8 +659,9 @@ fn prop_tiny_cluster_never_panics() {
             *g.pick(&[PolicyKind::Moeless, PolicyKind::MoelessAblated]),
         );
         // Pathologically small GPUs: evictions and placement fallbacks fire.
-        cfg.cluster.n_gpus = g.usize_in(1, 2);
-        cfg.cluster.mem_per_gpu_gb = g.f64_in(0.5, 2.0);
+        cfg.cluster = ClusterSpec::a6000_x8()
+            .with_n_gpus(g.usize_in(1, 2))
+            .with_mem_per_gpu(g.f64_in(0.5, 2.0));
         cfg.duration_s = 4.0;
         cfg.base_rps = g.f64_in(0.5, 6.0);
         cfg.seed = g.seed;
