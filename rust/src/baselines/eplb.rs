@@ -62,17 +62,18 @@ impl EplbPolicy {
         let mut order: Vec<usize> = (0..self.n_experts).collect();
         order.sort_by(|&a, &b| {
             (loads[b] / plan.replicas[b].max(1) as f64)
-                .partial_cmp(&(loads[a] / plan.replicas[a].max(1) as f64))
-                .unwrap()
+                .total_cmp(&(loads[a] / plan.replicas[a].max(1) as f64))
                 .then(a.cmp(&b))
         });
         let mut gpu_load = vec![0.0f64; self.n_gpus];
         let mut placement = vec![Vec::new(); self.n_experts];
         for &e in &order {
             for _ in 0..plan.replicas[e] {
-                let g = (0..self.n_gpus)
-                    .min_by(|&a, &b| gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b)))
-                    .unwrap();
+                let g = crate::util::fail::expect_invariant(
+                    (0..self.n_gpus)
+                        .min_by(|&a, &b| gpu_load[a].total_cmp(&gpu_load[b]).then(a.cmp(&b))),
+                    "EPLB fleet has at least one GPU",
+                );
                 gpu_load[g] += loads[e] / plan.replicas[e] as f64;
                 placement[e].push(g);
             }

@@ -83,7 +83,10 @@ impl Cluster {
                 speed: if spec.capacity_aware { g.speed() } else { 1.0 },
             })
             .collect();
-        let uniform_speed = gpus.windows(2).all(|w| w[0].speed == w[1].speed);
+        // Bitwise identity is the contract here: "uniform" means every
+        // speed is the *same value*, not merely close — the uniform path
+        // must reproduce the pre-refactor comparisons exactly.
+        let uniform_speed = gpus.windows(2).all(|w| w[0].speed.to_bits() == w[1].speed.to_bits());
         let n = gpus.len();
         Cluster { spec, gpus, uniform_speed, served_tokens: vec![0.0; n], served_ms: vec![0.0; n] }
     }
@@ -139,12 +142,7 @@ impl Cluster {
             self.gpus
                 .iter()
                 .filter(|g| g.can_fit(gb))
-                .min_by(|a, b| {
-                    a.load_tokens
-                        .partial_cmp(&b.load_tokens)
-                        .unwrap()
-                        .then(a.id.cmp(&b.id))
-                })
+                .min_by(|a, b| a.load_tokens.total_cmp(&b.load_tokens).then(a.id.cmp(&b.id)))
                 .map(|g| g.id)
         } else {
             self.gpus
@@ -152,9 +150,8 @@ impl Cluster {
                 .filter(|g| g.can_fit(gb))
                 .min_by(|a, b| {
                     a.load_time()
-                        .partial_cmp(&b.load_time())
-                        .unwrap()
-                        .then(b.speed.partial_cmp(&a.speed).unwrap())
+                        .total_cmp(&b.load_time())
+                        .then(b.speed.total_cmp(&a.speed))
                         .then(a.id.cmp(&b.id))
                 })
                 .map(|g| g.id)

@@ -563,7 +563,7 @@ impl ClusterSpec {
                 Some(x) => {
                     // Bounded so a malformed spec returns a structured
                     // error instead of aborting on a huge allocation.
-                    if !(x.is_finite() && (1.0..=65_536.0).contains(&x) && x.fract() == 0.0) {
+                    if !((1.0..=65_536.0).contains(&x) && crate::util::float::is_integer(x)) {
                         anyhow::bail!(
                             "cluster spec: n_gpus must be an integer in 1..=65536, got {x}"
                         );

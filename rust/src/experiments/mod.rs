@@ -59,16 +59,16 @@ impl Scale {
 }
 
 /// Dispatch `moeless bench --exp <id>`.
-pub fn run_from_cli(args: &Args) {
+pub fn run_from_cli(args: &Args) -> anyhow::Result<()> {
     let scale = if args.flag("full") { Scale::full() } else { Scale::from_env() };
     let exp = args.str("exp", "all");
     if exp == "simperf" {
         // The perf-trajectory harness takes its own flags
         // (--quick/--floor-rps/--out) and writes BENCH_sim.json.
-        simperf::run_from_args(args);
-        return;
+        return simperf::run_from_args(args);
     }
     run_experiment(&exp, scale);
+    Ok(())
 }
 
 /// Run one experiment id (or "all").

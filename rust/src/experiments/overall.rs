@@ -14,7 +14,10 @@ use crate::workload::{interference_trace, Scenario};
 /// Figs. 8/9: CDF of MoE layer forward time for the four approaches across
 /// the three models on one dataset.
 pub fn fig8_9_forward(scale: Scale, dataset_name: &str) {
-    let dataset = DatasetSpec::by_name(dataset_name).unwrap();
+    let dataset = crate::util::fail::expect_invariant(
+        DatasetSpec::by_name(dataset_name),
+        "fig8/9 callers pass a known dataset name",
+    );
     let fig = if dataset_name == "lmsys" { "FIG 8" } else { "FIG 9" };
     let mut avg_meg = Vec::new();
     let mut avg_eplb = Vec::new();

@@ -25,7 +25,11 @@ use crate::workload::RoutingModel;
 /// Load the Tier-A measured profile if artifacts were built.
 pub fn tier_a_profile() -> Option<Json> {
     let path = artifacts_dir().join("predictor_profile.json");
-    path.exists().then(|| Json::parse_file(&path).unwrap())
+    path.exists().then(|| {
+        Json::parse_file(&path).unwrap_or_else(|e| {
+            crate::util::fail::unrecoverable(&format!("{}: {e}", path.display()))
+        })
+    })
 }
 
 /// Fig. 6: (a) cosine similarity of gate inputs across distances; (b)

@@ -157,7 +157,7 @@ pub fn drain_config(scale: &'static str) -> DrainConfig {
             },
             iter_s: 0.05,
         },
-        other => panic!("unknown simperf scale {other:?}"),
+        other => crate::util::fail::unrecoverable(&format!("unknown simperf scale {other:?}")),
     }
 }
 
@@ -339,10 +339,10 @@ pub fn to_json(reports: &[ScaleReport]) -> Json {
 }
 
 /// Write the document to `path` (creating or overwriting).
-pub fn write_bench_json(path: &std::path::Path, reports: &[ScaleReport]) {
+pub fn write_bench_json(path: &std::path::Path, reports: &[ScaleReport]) -> anyhow::Result<()> {
+    use anyhow::Context;
     let doc = to_json(reports);
-    std::fs::write(path, doc.to_string())
-        .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+    std::fs::write(path, doc.to_string()).with_context(|| format!("write {}", path.display()))
 }
 
 /// One greppable line per scale.
@@ -381,7 +381,7 @@ pub fn report_lines(r: &ScaleReport) -> Vec<String> {
 /// [--out PATH]`. `--quick` runs only the quick scale (the CI smoke);
 /// `--floor-rps` fails the process when the quick end-to-end
 /// simulated-requests/sec lands below the floor (regression gate).
-pub fn run_from_args(args: &Args) {
+pub fn run_from_args(args: &Args) -> anyhow::Result<()> {
     let names: Vec<&'static str> =
         if args.flag("quick") { vec!["quick"] } else { scale_names().to_vec() };
     let mut reports = Vec::new();
@@ -402,7 +402,7 @@ pub fn run_from_args(args: &Args) {
         Some(p) => p.to_string(),
         None => std::env::var("MOELESS_BENCH_PATH").unwrap_or_else(|_| "BENCH_sim.json".into()),
     });
-    write_bench_json(&path, &reports);
+    write_bench_json(&path, &reports)?;
     println!("simperf wrote {}", path.display());
 
     let floor = args.f64("floor-rps", 0.0);
@@ -421,6 +421,7 @@ pub fn run_from_args(args: &Args) {
         }
         println!("simperf floor ok: {quick_rps:.1} req/s >= {floor:.1} req/s");
     }
+    Ok(())
 }
 
 #[cfg(test)]

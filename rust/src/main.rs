@@ -25,12 +25,20 @@ fn serve(_args: &Args) {
     std::process::exit(2);
 }
 
+/// Print a structured subcommand error on stderr and exit nonzero.
+fn exit_on_error(result: anyhow::Result<()>) {
+    if let Err(e) = result {
+        eprintln!("moeless: error: {e}");
+        std::process::exit(1);
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("serve") => serve(&args),
-        Some("replay") => moeless::sim::cli::replay(&args),
-        Some("bench") => moeless::experiments::run_from_cli(&args),
+        Some("replay") => exit_on_error(moeless::sim::cli::replay(&args)),
+        Some("bench") => exit_on_error(moeless::experiments::run_from_cli(&args)),
         Some("report") => moeless::experiments::tables::print_table1(),
         _ => {
             eprintln!(

@@ -39,7 +39,10 @@ pub fn serve(args: &Args) {
                 (0..len).map(|_| rng.below(d.vocab) as i32).collect()
             })
             .collect();
-        let (seqs, stats) = srv.generate(&prompts, n_new).expect("serving failed");
+        let (seqs, stats) = srv.generate(&prompts, n_new).unwrap_or_else(|e| {
+            eprintln!("moeless: serve failed: {e}");
+            std::process::exit(1);
+        });
         tokens_out += seqs.len() * n_new;
         println!(
             "batch {round}: generated {}x{} tokens | expert invocations {} | cold {} warm {} \

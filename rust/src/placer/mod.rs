@@ -10,6 +10,7 @@
 //! `max_g Σ W` (the all-to-all straggler term of §3.3) tight.
 
 use crate::cluster::Cluster;
+use crate::util::fail;
 
 /// A placed replica: expert, replica ordinal, GPU, assigned load, and
 /// whether a previous live instance was reused (warm start).
@@ -121,11 +122,7 @@ impl Placer {
             }
         }
         work.sort_by(|a, b| {
-            b.load
-                .partial_cmp(&a.load)
-                .unwrap()
-                .then(a.expert.cmp(&b.expert))
-                .then(a.replica.cmp(&b.replica))
+            b.load.total_cmp(&a.load).then(a.expert.cmp(&b.expert)).then(a.replica.cmp(&b.replica))
         });
 
         let mut evictions_owed = 0usize;
@@ -139,6 +136,7 @@ impl Placer {
                 pick_warm_time(&warm[p.expert], &gpu_time, &speed, p.load)
             };
             if let Some(pos) = warm_pick {
+                // pallas-lint: allow(P1) — O(1) unordered removal from the warm-candidate set: picks tie-break on GPU id, never on position, so candidate order is immaterial
                 let gpu = warm[p.expert].swap_remove(pos);
                 p.gpu = gpu;
                 p.reused = true;
@@ -154,17 +152,12 @@ impl Placer {
                 let cands = (0..n_gpus)
                     .filter(|&g| !require_room || gpu_free[g] >= expert_mem_gb - 1e-9);
                 if uniform {
-                    cands.min_by(|&a, &b| {
-                        gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b))
-                    })
+                    cands.min_by(|&a, &b| gpu_load[a].total_cmp(&gpu_load[b]).then(a.cmp(&b)))
                 } else {
                     cands.min_by(|&a, &b| {
                         let ta = gpu_time[a] + p.load / speed[a];
                         let tb = gpu_time[b] + p.load / speed[b];
-                        ta.partial_cmp(&tb)
-                            .unwrap()
-                            .then(speed[b].partial_cmp(&speed[a]).unwrap())
-                            .then(a.cmp(&b))
+                        ta.total_cmp(&tb).then(speed[b].total_cmp(&speed[a])).then(a.cmp(&b))
                     })
                 }
             };
@@ -175,7 +168,10 @@ impl Placer {
                 // evicts an idle instance to make room and bills it.
                 None => {
                     evictions_owed += 1;
-                    pick_from(false).unwrap()
+                    fail::expect_invariant(
+                        pick_from(false),
+                        "unfiltered pick always finds a GPU on a non-empty fleet",
+                    )
                 }
             };
             p.gpu = gpu;
@@ -199,9 +195,7 @@ fn pick_warm_tokens(cands: &[usize], gpu_load: &[f64]) -> Option<usize> {
     cands
         .iter()
         .enumerate()
-        .min_by(|(_, &a), (_, &b)| {
-            gpu_load[a].partial_cmp(&gpu_load[b]).unwrap().then(a.cmp(&b))
-        })
+        .min_by(|(_, &a), (_, &b)| gpu_load[a].total_cmp(&gpu_load[b]).then(a.cmp(&b)))
         .map(|(pos, _)| pos)
 }
 
@@ -215,10 +209,7 @@ fn pick_warm_time(cands: &[usize], gpu_time: &[f64], speed: &[f64], load: f64) -
         .min_by(|(_, &a), (_, &b)| {
             let ta = gpu_time[a] + load / speed[a];
             let tb = gpu_time[b] + load / speed[b];
-            ta.partial_cmp(&tb)
-                .unwrap()
-                .then(speed[b].partial_cmp(&speed[a]).unwrap())
-                .then(a.cmp(&b))
+            ta.total_cmp(&tb).then(speed[b].total_cmp(&speed[a])).then(a.cmp(&b))
         })
         .map(|(pos, _)| pos)
 }

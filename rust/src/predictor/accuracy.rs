@@ -4,7 +4,7 @@
 /// Indices of the k largest entries (ties broken toward lower index).
 pub fn topk_indices(loads: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..loads.len()).collect();
-    idx.sort_by(|&a, &b| loads[b].partial_cmp(&loads[a]).unwrap().then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| loads[b].total_cmp(&loads[a]).then(a.cmp(&b)));
     idx.truncate(k.min(loads.len()));
     idx.sort();
     idx
@@ -41,7 +41,9 @@ pub fn l1_error(pred: &[f64], actual: &[f64]) -> f64 {
     let sp: f64 = pred.iter().sum();
     let sa: f64 = actual.iter().sum();
     if sp <= 0.0 || sa <= 0.0 {
-        return if sp == sa { 0.0 } else { 1.0 };
+        // Degenerate mass: only an exactly-equal pair of non-positive
+        // sums (in practice: both zero) counts as identical shape.
+        return if crate::util::float::approx_eq(sp, sa, 0.0) { 0.0 } else { 1.0 };
     }
     0.5 * pred
         .iter()

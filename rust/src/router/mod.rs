@@ -87,6 +87,7 @@ pub mod reference;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use crate::metrics::RequestRecord;
+use crate::util::fail;
 use crate::workload::TraceRequest;
 
 /// Admission limits: per-iteration token cap + KV-cache budget + the
@@ -355,7 +356,10 @@ impl Batcher {
                 r.id,
                 r.arrival_s
             );
-            let arrival_s = if r.arrival_s == 0.0 { 0.0 } else { r.arrival_s };
+            // IEEE: `-0.0 + 0.0 == +0.0`, and every other finite value is
+            // unchanged — this normalizes the sign of zero without a
+            // float compare (the assert above already rejected NaN/inf).
+            let arrival_s = r.arrival_s + 0.0;
             self.loc.insert(r.id, Loc::Pending);
             self.pending.push_back(TraceRequest {
                 arrival_s,
@@ -508,9 +512,11 @@ impl Batcher {
             _ => false,
         };
         let mut a = if from_fresh {
-            let (kf, stamp) = youngest_fresh.unwrap();
+            let (kf, stamp) =
+                fail::expect_invariant(youngest_fresh, "from_fresh implies a youngest fresh entry");
             self.fresh_index.remove(&kf);
-            let a = self.fresh.remove(&stamp).expect("fresh_index in sync with fresh");
+            let a =
+                fail::expect_invariant(self.fresh.remove(&stamp), "fresh_index in sync with fresh");
             *projected -= a.kv_tokens;
             a
         } else {
@@ -518,7 +524,7 @@ impl Batcher {
                 Some(k) => k,
                 None => return false,
             };
-            let a = self.active.remove(&ka).expect("key just observed");
+            let a = fail::expect_invariant(self.active.remove(&ka), "key just observed");
             *projected -= a.kv_tokens + 1;
             a
         };
@@ -561,6 +567,7 @@ impl Batcher {
         let mut t = 0;
         while t < self.transferring.len() {
             if self.transferring[t].ready_s <= now_s + 1e-12 {
+                // pallas-lint: allow(P1) — O(1) unordered removal: arrivals drain into the keyed age-ordered `active` index, so transfer-buffer order is immaterial (pinned by golden_equivalence)
                 let a = self.transferring.swap_remove(t);
                 let k = a.key();
                 self.loc.insert(a.id, Loc::Active(k));
@@ -660,7 +667,8 @@ impl Batcher {
                 // Peak KV demand (prompt + full output) can never fit:
                 // reject outright rather than deadlock the queue.
                 if kv_gated && ((r.prompt_tokens + r.output_tokens) as f64) * bpt > budget + 1e-9 {
-                    let dropped = self.pending.pop_front().expect("front just observed");
+                    let dropped =
+                        fail::expect_invariant(self.pending.pop_front(), "front just observed");
                     self.loc.remove(&dropped.id);
                     self.rejected += 1;
                     continue;
@@ -711,13 +719,16 @@ impl Batcher {
             };
 
             let mut a = if resume {
-                let k = *self.requeued.keys().next().expect("resume checked non-empty");
-                let mut a = self.requeued.remove(&k).expect("key just observed");
+                let k = *fail::expect_invariant(
+                    self.requeued.keys().next(),
+                    "resume checked non-empty",
+                );
+                let mut a = fail::expect_invariant(self.requeued.remove(&k), "key just observed");
                 a.prefill_target = a.prompt_tokens + a.emitted();
                 self.resumes += 1;
                 a
             } else {
-                let r = self.pending.pop_front().expect("front just observed");
+                let r = fail::expect_invariant(self.pending.pop_front(), "front just observed");
                 self.admitted += 1;
                 Active {
                     id: r.id,
@@ -796,7 +807,7 @@ impl Batcher {
             }
         }
         for k in &retire_keys {
-            let a = self.active.remove(k).expect("retire key just collected");
+            let a = fail::expect_invariant(self.active.remove(k), "retire key just collected");
             self.kv_tokens_held -= a.kv_tokens;
             self.retire(a, now_s);
         }
@@ -813,7 +824,8 @@ impl Batcher {
             }
         }
         for stamp in &fresh_done {
-            let mut f = self.fresh.remove(stamp).expect("done stamp just collected");
+            let mut f =
+                fail::expect_invariant(self.fresh.remove(stamp), "done stamp just collected");
             self.fresh_index.remove(&f.key());
             // The completing prefill emits one token (the first, or — on
             // resume — the next). Saturating: outputs are clamped >= 1 at

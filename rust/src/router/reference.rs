@@ -23,6 +23,7 @@
 use std::collections::VecDeque;
 
 use crate::metrics::RequestRecord;
+use crate::util::fail;
 use crate::workload::TraceRequest;
 
 use super::{BatchLimits, IterationBatch};
@@ -208,17 +209,19 @@ impl Batcher {
             return false;
         }
         let key = |a: &Active| (a.arrival_s, a.id);
+        let cmp_key =
+            |ka: &(f64, u64), kb: &(f64, u64)| ka.0.total_cmp(&kb.0).then(ka.1.cmp(&kb.1));
         let youngest_active = self
             .active
             .iter()
             .enumerate()
-            .max_by(|(_, a), (_, b)| key(a).partial_cmp(&key(b)).unwrap())
+            .max_by(|(_, a), (_, b)| cmp_key(&key(a), &key(b)))
             .map(|(i, a)| (i, key(a)));
         let youngest_fresh = self
             .fresh
             .iter()
             .enumerate()
-            .max_by(|(_, a), (_, b)| key(a).partial_cmp(&key(b)).unwrap())
+            .max_by(|(_, a), (_, b)| cmp_key(&key(a), &key(b)))
             .map(|(i, a)| (i, key(a)));
         let from_fresh = match (youngest_active, youngest_fresh) {
             (Some((_, ka)), Some((_, kf))) => kf > ka,
@@ -226,11 +229,13 @@ impl Batcher {
             _ => false,
         };
         let mut a = if from_fresh {
-            let (i, _) = youngest_fresh.unwrap();
+            let (i, _) =
+                fail::expect_invariant(youngest_fresh, "from_fresh implies a youngest fresh entry");
             *projected -= self.fresh[i].kv_tokens;
             self.fresh.remove(i)
         } else {
-            let (i, _) = youngest_active.unwrap();
+            let (i, _) =
+                fail::expect_invariant(youngest_active, "not-from-fresh implies an active entry");
             *projected -= self.active[i].kv_tokens + 1;
             self.active.swap_remove(i)
         };
@@ -379,12 +384,13 @@ impl Batcher {
             };
 
             let mut a = if resume {
-                let mut a = self.requeued.pop_front().unwrap();
+                let mut a =
+                    fail::expect_invariant(self.requeued.pop_front(), "resume checked non-empty");
                 a.prefill_target = a.prompt_tokens + a.emitted();
                 self.resumes += 1;
                 a
             } else {
-                let r = self.pending.pop_front().unwrap();
+                let r = fail::expect_invariant(self.pending.pop_front(), "front just observed");
                 self.admitted += 1;
                 Active {
                     id: r.id,

@@ -82,14 +82,14 @@ impl ScalePlan {
     /// `(time, expert)` pairs.
     pub fn per_replica_times(&self, loads: &[f64], speeds: &[f64]) -> Vec<(f64, usize)> {
         let mut fleet: Vec<f64> = if speeds.is_empty() { vec![1.0] } else { speeds.to_vec() };
-        fleet.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        fleet.sort_by(|a, b| b.total_cmp(a));
         let mut per: Vec<(f64, usize)> = Vec::with_capacity(self.total());
         for (e, &r) in self.replicas.iter().enumerate() {
             for _ in 0..r {
                 per.push((loads[e] / r as f64, e));
             }
         }
-        per.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        per.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         per.iter()
             .enumerate()
             .map(|(i, &(load, e))| (load / fleet[i % fleet.len()], e))
@@ -216,7 +216,7 @@ impl Scaler {
             return ScalePlan { replicas };
         }
         let mut fleet: Vec<f64> = if speeds.is_empty() { vec![1.0] } else { speeds.to_vec() };
-        fleet.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        fleet.sort_by(|a, b| b.total_cmp(a));
         let fleet_speed: f64 = fleet.iter().sum();
         let target = (1.0 + self.cv_threshold) * (total / fleet_speed);
 
@@ -232,7 +232,7 @@ impl Scaler {
                     per.push((loads[e] / r as f64, e));
                 }
             }
-            per.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            per.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
             let mut max_t = f64::NEG_INFINITY;
             let mut straggler = usize::MAX;
             for (i, &(w, e)) in per.iter().enumerate() {

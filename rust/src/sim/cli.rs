@@ -2,6 +2,8 @@
 //! any arrival scenario (`--scenario poisson|bursty|diurnal|replay`)
 //! through the continuous batcher under the chosen policy.
 
+use anyhow::{bail, Context};
+
 use crate::baselines::PolicyKind;
 use crate::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec};
 use crate::metrics::SloSpec;
@@ -10,14 +12,15 @@ use crate::util::cli::Args;
 use crate::workload::{azure_like_trace, Scenario};
 
 /// Replay an arrival scenario on the cluster simulator and print the run
-/// report (and a CDF when `--cdf` is passed).
-pub fn replay(args: &Args) {
+/// report (and a CDF when `--cdf` is passed). Bad flag values come back as
+/// structured errors; `main` prints them on stderr and exits nonzero.
+pub fn replay(args: &Args) -> anyhow::Result<()> {
     let model = ModelSpec::by_name(&args.str("model", "mixtral-8x7b"))
-        .expect("--model: mixtral-8x7b | phi-3.5-moe | llama-4-scout | tiny-moe");
+        .context("--model: mixtral-8x7b | phi-3.5-moe | llama-4-scout | tiny-moe")?;
     let dataset = DatasetSpec::by_name(&args.str("dataset", "lmsys"))
-        .expect("--dataset: lmsys | sharegpt");
+        .context("--dataset: lmsys | sharegpt")?;
     let policy = PolicyKind::by_name(&args.str("policy", "moeless"))
-        .expect("--policy: megatron-lm | eplb | oracle | moeless | moeless-ablated");
+        .context("--policy: megatron-lm | eplb | oracle | moeless | moeless-ablated")?;
 
     let mut cfg = SimConfig::new(model, dataset, policy);
     cfg.duration_s = args.f64("seconds", 120.0);
@@ -32,8 +35,9 @@ pub fn replay(args: &Args) {
             cfg.base_rps,
             0xA2CE,
         )),
-        name => Scenario::by_name(name)
-            .expect("--scenario: poisson | bursty | diurnal | replay"),
+        name => {
+            Scenario::by_name(name).context("--scenario: poisson | bursty | diurnal | replay")?
+        }
     };
     cfg.params.prediction_distance = args.usize("distance", 1);
     cfg.params.cv_threshold = args.f64("cv", 0.2);
@@ -53,10 +57,11 @@ pub fn replay(args: &Args) {
     // capacity-aware placement/scaling decisions (the cost model still
     // evaluates on the real per-device speeds).
     if let Some(name_or_path) = args.opt_str("cluster") {
-        cfg.cluster = ClusterSpec::by_name(name_or_path).unwrap_or_else(|| {
-            ClusterSpec::load(std::path::Path::new(name_or_path))
-                .unwrap_or_else(|e| panic!("--cluster: {e}"))
-        });
+        cfg.cluster = match ClusterSpec::by_name(name_or_path) {
+            Some(preset) => preset,
+            None => ClusterSpec::load(std::path::Path::new(name_or_path))
+                .with_context(|| format!("--cluster {name_or_path:?}"))?,
+        };
     }
     if args.flag("token-balanced") {
         cfg.cluster.capacity_aware = false;
@@ -77,10 +82,9 @@ pub fn replay(args: &Args) {
         d.decode_gpus = cfg.cluster.n_gpus().saturating_sub(d.prefill_gpus).max(1);
         d.link_gbps = args.f64("link-gbps", d.link_gbps);
         d.fastest_prefill = args.flag("fastest-prefill");
-        assert!(
-            d.link_gbps.is_finite() && d.link_gbps > 0.0,
-            "--link-gbps expects a positive finite GB/s (a zero-cost link is colocation)"
-        );
+        if !(d.link_gbps.is_finite() && d.link_gbps > 0.0) {
+            bail!("--link-gbps expects a positive finite GB/s (a zero-cost link is colocation)");
+        }
         cfg.disagg = Some(d);
     }
 
@@ -97,4 +101,5 @@ pub fn replay(args: &Args) {
             println!("cdf p{q:<5} {:.3}ms", lat.p(q));
         }
     }
+    Ok(())
 }

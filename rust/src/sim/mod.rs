@@ -253,6 +253,7 @@ pub fn run(cfg: &SimConfig) -> RunReport {
 /// the scenario; [`run`] is the convenience wrapper that derives it from
 /// `cfg.scenario`.
 pub fn run_with_trace(cfg: &SimConfig, trace: &[TraceRequest]) -> RunReport {
+    // pallas-lint: allow(D2) — wall-clock here only stamps the report's host wall_s field; every simulated decision runs off the deterministic sim clock
     let wall_start = Instant::now();
     let mut routing = RoutingModel::new(&cfg.model, cfg.seed ^ 0x9e37);
     // Colocated: one pool over the whole cluster. Disaggregated: a prefill

@@ -7,7 +7,7 @@
 //! are deterministic and independent of the thread count: every cell is
 //! seeded by its own (policy, scenario, seed) coordinates.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::baselines::PolicyKind;
 use crate::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec};
@@ -111,7 +111,10 @@ pub struct SweepCell {
 /// are identical to running each cell standalone (pinned by
 /// `run_with_trace_matches_run` and `shared_trace_cells_match_standalone_runs`).
 pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepCell> {
-    let mut traces: HashMap<(usize, u64), Vec<TraceRequest>> = HashMap::new();
+    // BTreeMap, not HashMap: the cache is keyed-lookup only today, but an
+    // ordered index keeps any future iteration over it deterministic by
+    // construction (pallas-lint D1 would flag a HashMap iteration here).
+    let mut traces: BTreeMap<(usize, u64), Vec<TraceRequest>> = BTreeMap::new();
     for (si, scenario) in spec.scenarios.iter().enumerate() {
         for &seed in &spec.seeds {
             let trace = scenario.generate(&spec.dataset, spec.duration_s, spec.base_rps, seed);
@@ -147,7 +150,7 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepCell> {
 /// Request-level summary of one (scenario, policy) group, pooled across
 /// seeds: TTFT/TPOT p50/p95/p99 over every completed request, plus mean
 /// goodput under the SLO.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SloSummary {
     pub scenario: String,
     pub policy: String,
@@ -387,6 +390,19 @@ mod tests {
         let rows = summarize(&cells, &SloSpec::default());
         assert!(rows[0].gpu_time_imbalance > 0.0);
         assert!(rows[0].line().contains("gpu_imb="), "{}", rows[0].line());
+    }
+
+    #[test]
+    fn two_identical_sweeps_produce_identical_summaries() {
+        // Pins the ordered trace cache: two full sweep+summarize passes of
+        // the same spec must agree field-for-field (every f64 bit-equal),
+        // independent of sharding.
+        let mut spec = small_spec();
+        spec.threads = 4;
+        let first = summarize(&run_sweep(&spec), &SloSpec::default());
+        let second = summarize(&run_sweep(&spec), &SloSpec::default());
+        assert_eq!(first, second);
+        assert!(!first.is_empty());
     }
 
     #[test]

@@ -109,11 +109,13 @@ impl Tensor {
 
     pub fn argmax_row(&self, i: usize) -> usize {
         let row = self.row(i);
-        row.iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap()
+        crate::util::fail::expect_invariant(
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i),
+            "argmax over a non-empty row",
+        )
     }
 }
 

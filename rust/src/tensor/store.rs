@@ -96,7 +96,10 @@ impl WeightStore {
                 .with_context(|| format!("reading {}", path.display()))?;
             self.bins.insert(name.to_string(), data);
         }
-        Ok(self.bins.get(name).unwrap())
+        Ok(crate::util::fail::expect_invariant(
+            self.bins.get(name).map(|v| v.as_slice()),
+            "bin just inserted above",
+        ))
     }
 
     pub fn has(&self, name: &str) -> bool {
@@ -127,7 +130,10 @@ impl WeightStore {
         let bytes = &blob[meta.offset..meta.offset + meta.nbytes];
         let mut data = vec![0f32; meta.nbytes / 4];
         for (i, chunk) in bytes.chunks_exact(4).enumerate() {
-            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            data[i] = f32::from_le_bytes(crate::util::fail::expect_invariant(
+                chunk.try_into().ok(),
+                "chunks_exact(4) yields 4-byte chunks",
+            ));
         }
         Ok(Tensor::from_vec(&meta.shape, data))
     }
@@ -138,7 +144,7 @@ impl WeightStore {
         match scope {
             "model" => param.to_string(),
             "layer" | "expert" => format!("layer{layer}.{param}"),
-            other => panic!("unknown weight scope {other:?}"),
+            other => crate::util::fail::unrecoverable(&format!("unknown weight scope {other:?}")),
         }
     }
 }

@@ -3,7 +3,15 @@
 //! Grammar: `prog <subcommand> [--key value]... [--flag]...`. Typed getters
 //! with defaults keep the call sites one-liners.
 
+use crate::util::fail;
 use std::collections::BTreeMap;
+
+/// Bad user input on the command line: print the problem and exit with
+/// the conventional usage status (2) instead of panicking.
+fn usage_error(msg: &str) -> ! {
+    eprintln!("moeless: {msg}");
+    std::process::exit(2)
+}
 
 /// Parsed command line: a subcommand plus `--key value` / `--flag` options.
 #[derive(Clone, Debug, Default)]
@@ -29,7 +37,8 @@ impl Args {
                 if let Some((k, v)) = key.split_once('=') {
                     args.opts.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    args.opts.insert(key.to_string(), it.next().unwrap());
+                    let v = fail::expect_invariant(it.next(), "peeked arg still present");
+                    args.opts.insert(key.to_string(), v);
                 } else {
                     args.flags.push(key.to_string());
                 }
@@ -57,14 +66,22 @@ impl Args {
     pub fn usize(&self, name: &str, default: usize) -> usize {
         self.opts
             .get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    usage_error(&format!("--{name} expects an integer, got {v:?}"))
+                })
+            })
             .unwrap_or(default)
     }
 
     pub fn f64(&self, name: &str, default: f64) -> f64 {
         self.opts
             .get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    usage_error(&format!("--{name} expects a number, got {v:?}"))
+                })
+            })
             .unwrap_or(default)
     }
 

@@ -1,0 +1,41 @@
+//! The single audited panic funnel (pallas-lint rule R1).
+//!
+//! Library code must not `unwrap()`/`expect()`/`panic!` ad hoc: bad
+//! configs and malformed traces become structured `anyhow` errors
+//! instead. What remains are *structural invariants* — conditions the
+//! surrounding code establishes by construction (an index kept in sync
+//! with its backing store, a key inserted on the previous line). Those
+//! route through here, so every abort site in the library is this one,
+//! and every call names the invariant it relies on.
+
+/// Abort on a broken structural invariant. The message should name the
+/// invariant, not the symptom.
+pub fn unrecoverable(context: &str) -> ! {
+    // pallas-lint: allow(R1) — the audited funnel: the one panic every library invariant routes through
+    panic!("internal invariant violated: {context}")
+}
+
+/// Unwrap an `Option` that is `Some` by construction, naming the
+/// invariant that guarantees it.
+pub fn expect_invariant<T>(value: Option<T>, what: &str) -> T {
+    match value {
+        Some(v) => v,
+        None => unrecoverable(what),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::expect_invariant;
+
+    #[test]
+    fn passes_through_some() {
+        assert_eq!(expect_invariant(Some(7), "present"), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "internal invariant violated: gone")]
+    fn names_the_invariant_on_none() {
+        expect_invariant::<u32>(None, "gone");
+    }
+}

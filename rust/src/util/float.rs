@@ -1,0 +1,44 @@
+//! Float comparison helpers (pallas-lint rule D3).
+//!
+//! The sim clock and KV ledgers accumulate rounding, so exact `==` on
+//! them is a latent bug; these helpers make the intended comparison —
+//! tolerance, integrality, bitwise identity — explicit at the call site.
+
+/// Absolute-tolerance equality. The caller picks `eps` for the scale of
+/// the quantity (seconds, tokens, GB); there is no universal default.
+pub fn approx_eq(a: f64, b: f64, eps: f64) -> bool {
+    (a - b).abs() <= eps
+}
+
+/// True iff `x` is a finite mathematical integer (`42.0`, `-0.0`, not
+/// `42.5`, `NaN`, or `inf`). Bitwise compare against the truncation, so
+/// no float `==` and no rounding surprises.
+pub fn is_integer(x: f64) -> bool {
+    x.is_finite() && x.trunc().to_bits() == x.to_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{approx_eq, is_integer};
+
+    #[test]
+    fn approx_eq_is_symmetric_and_bounded() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(approx_eq(1.0 + 1e-12, 1.0, 1e-9));
+        assert!(!approx_eq(1.0, 1.1, 1e-9));
+        assert!(approx_eq(0.0, -0.0, 0.0));
+    }
+
+    #[test]
+    fn is_integer_handles_signs_zeros_and_specials() {
+        assert!(is_integer(42.0));
+        assert!(is_integer(-3.0));
+        assert!(is_integer(0.0));
+        assert!(is_integer(-0.0));
+        assert!(!is_integer(42.5));
+        assert!(!is_integer(f64::NAN));
+        assert!(!is_integer(f64::INFINITY));
+        // Large values past 2^53 are all integers.
+        assert!(is_integer(9.0e15));
+    }
+}

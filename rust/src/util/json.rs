@@ -6,6 +6,7 @@
 //! accessor helpers (`get`, `as_*`, `idx`) give call sites a terse,
 //! fail-fast style: `v.get("tensors").get(name).get("offset").as_usize()`.
 
+use crate::util::fail;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -33,7 +34,7 @@ impl Json {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), val);
         } else {
-            panic!("set() on non-object");
+            fail::unrecoverable("Json::set() on non-object");
         }
         self
     }
@@ -47,14 +48,17 @@ impl Json {
     }
 
     // ------------------------------------------------------------------
-    // Accessors (panic with a path-style message on type mismatch —
-    // manifests are trusted build outputs, not user input).
+    // Accessors (abort with a path-style message on type mismatch —
+    // manifests are trusted build outputs, not user input, so a mismatch
+    // is a structural invariant break and routes through util::fail).
     // ------------------------------------------------------------------
 
     pub fn get(&self, key: &str) -> &Json {
         match self {
-            Json::Obj(m) => m.get(key).unwrap_or_else(|| panic!("missing key {key:?}")),
-            _ => panic!("get({key:?}) on non-object"),
+            Json::Obj(m) => m
+                .get(key)
+                .unwrap_or_else(|| fail::unrecoverable(&format!("Json missing key {key:?}"))),
+            _ => fail::unrecoverable(&format!("Json::get({key:?}) on non-object")),
         }
     }
 
@@ -68,28 +72,28 @@ impl Json {
     pub fn idx(&self, i: usize) -> &Json {
         match self {
             Json::Arr(v) => &v[i],
-            _ => panic!("idx({i}) on non-array"),
+            _ => fail::unrecoverable(&format!("Json::idx({i}) on non-array")),
         }
     }
 
     pub fn as_arr(&self) -> &[Json] {
         match self {
             Json::Arr(v) => v,
-            _ => panic!("not an array: {self:?}"),
+            _ => fail::unrecoverable(&format!("Json not an array: {self:?}")),
         }
     }
 
     pub fn as_obj(&self) -> &BTreeMap<String, Json> {
         match self {
             Json::Obj(m) => m,
-            _ => panic!("not an object"),
+            _ => fail::unrecoverable("Json not an object"),
         }
     }
 
     pub fn as_f64(&self) -> f64 {
         match self {
             Json::Num(x) => *x,
-            _ => panic!("not a number: {self:?}"),
+            _ => fail::unrecoverable(&format!("Json not a number: {self:?}")),
         }
     }
 
@@ -100,14 +104,14 @@ impl Json {
     pub fn as_str(&self) -> &str {
         match self {
             Json::Str(s) => s,
-            _ => panic!("not a string: {self:?}"),
+            _ => fail::unrecoverable(&format!("Json not a string: {self:?}")),
         }
     }
 
     pub fn as_bool(&self) -> bool {
         match self {
             Json::Bool(b) => *b,
-            _ => panic!("not a bool: {self:?}"),
+            _ => fail::unrecoverable(&format!("Json not a bool: {self:?}")),
         }
     }
 
@@ -151,7 +155,7 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
+                if crate::util::float::is_integer(*x) && x.abs() < 9e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -218,7 +222,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), String> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -250,7 +254,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -315,7 +319,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, String> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -338,7 +342,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -349,7 +353,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             m.insert(k, self.value()?);
             self.skip_ws();

@@ -1,9 +1,12 @@
 //! In-tree substrates (S1–S7): everything an offline build can't pull from
 //! crates.io — JSON, PRNG, CLI, thread pool, stats, bench harness,
-//! property testing.
+//! property testing — plus the pallas-lint support modules (`fail`, the
+//! audited panic funnel, and `float`, the D3 comparison helpers).
 
 pub mod benchkit;
 pub mod cli;
+pub mod fail;
+pub mod float;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

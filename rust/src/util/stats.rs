@@ -58,12 +58,12 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let pos = q / 100.0 * (sorted.len() - 1) as f64;
-    let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
-    if lo == hi {
-        sorted[lo]
+    let lo_idx = pos.floor() as usize;
+    let hi_idx = pos.ceil() as usize;
+    if lo_idx == hi_idx {
+        sorted[lo_idx]
     } else {
-        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+        sorted[lo_idx] + (pos - lo_idx as f64) * (sorted[hi_idx] - sorted[lo_idx])
     }
 }
 
@@ -81,18 +81,18 @@ pub fn percentile_unsorted(xs: &mut [f64], q: f64) -> f64 {
         return 0.0;
     }
     let pos = q / 100.0 * (xs.len() - 1) as f64;
-    let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
-    let cmp = |a: &f64, b: &f64| a.partial_cmp(b).unwrap();
-    let (left, hi_v, _) = xs.select_nth_unstable_by(hi, cmp);
+    let lo_idx = pos.floor() as usize;
+    let hi_idx = pos.ceil() as usize;
+    let cmp = |a: &f64, b: &f64| a.total_cmp(b);
+    let (left, hi_v, _) = xs.select_nth_unstable_by(hi_idx, cmp);
     let hi_v = *hi_v;
-    if lo == hi {
+    if lo_idx == hi_idx {
         return hi_v;
     }
     // `left` holds the hi smallest-but-one elements; the lo-th order
     // statistic lives there.
-    let (_, lo_v, _) = left.select_nth_unstable_by(lo, cmp);
-    *lo_v + (pos - lo as f64) * (hi_v - *lo_v)
+    let (_, lo_v, _) = left.select_nth_unstable_by(lo_idx, cmp);
+    *lo_v + (pos - lo_idx as f64) * (hi_v - *lo_v)
 }
 
 /// Common read-only quantile interface over the exact [`Cdf`] and the
@@ -363,7 +363,7 @@ pub struct Cdf {
 
 impl Cdf {
     pub fn of(mut xs: Vec<f64>) -> Cdf {
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(|a, b| a.total_cmp(b));
         Cdf { sorted: xs }
     }
 

@@ -7,6 +7,7 @@
 //! is what the Tier-A serving path uses to fan expert invocations out, and
 //! what parameter sweeps use to run independent simulations.
 
+use crate::util::fail;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -32,13 +33,17 @@ impl ThreadPool {
                 thread::Builder::new()
                     .name(format!("moeless-worker-{i}"))
                     .spawn(move || loop {
-                        let job = rx.lock().unwrap().recv();
+                        // A worker that panicked while holding the lock
+                        // poisons it; the queue itself is still intact.
+                        let job = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
                         match job {
                             Ok(job) => job(),
                             Err(_) => break,
                         }
                     })
-                    .expect("spawn worker")
+                    .unwrap_or_else(|e| {
+                        fail::unrecoverable(&format!("cannot spawn worker thread: {e}"))
+                    })
             })
             .collect();
         ThreadPool { tx: Some(tx), workers, size }
@@ -54,7 +59,10 @@ impl ThreadPool {
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.as_ref().expect("pool shut down").send(Box::new(f)).expect("send job");
+        // `tx` is Some from construction until Drop takes it.
+        let tx = fail::expect_invariant(self.tx.as_ref(), "pool sender alive until Drop");
+        tx.send(Box::new(f))
+            .unwrap_or_else(|_| fail::unrecoverable("job channel closed while pool alive"));
     }
 
     /// Run `f(i)` for i in 0..n on the pool, blocking until all complete.
@@ -77,7 +85,9 @@ impl ThreadPool {
             });
         }
         if n > 0 {
-            done_rx.recv().expect("pool completion");
+            done_rx
+                .recv()
+                .unwrap_or_else(|_| fail::unrecoverable("worker died before completing run_all"));
         }
     }
 }
@@ -113,7 +123,7 @@ pub fn scoped_map<T: Sync, R: Send>(
             });
         }
     });
-    out.into_iter().map(|o| o.expect("scoped_map slot filled")).collect()
+    out.into_iter().map(|o| fail::expect_invariant(o, "scoped_map slot filled")).collect()
 }
 
 #[cfg(test)]

@@ -146,7 +146,7 @@ fn poisson_trace(
             id += 1;
         }
     }
-    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
     out
 }
 
@@ -184,7 +184,7 @@ fn bursty_trace(
             id += 1;
         }
     }
-    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
     out
 }
 

@@ -129,7 +129,7 @@ fn round_preserving_sum(w: &mut [f64], rema: &mut Vec<(usize, f64)>) {
         floor_sum += f;
     }
     let mut need = (target - floor_sum) as i64;
-    rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    rema.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     for &(i, _) in rema.iter() {
         if need <= 0 {
             break;

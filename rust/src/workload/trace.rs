@@ -59,7 +59,7 @@ pub fn azure_like_trace(
             id += 1;
         }
     }
-    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
     out
 }
 
@@ -116,7 +116,7 @@ pub fn interference_trace(
         id += 1;
         lt += long_every_s;
     }
-    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap().then(a.id.cmp(&b.id)));
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
     out
 }
 

@@ -43,7 +43,7 @@ fn perf_trajectory_beats_reference_and_records_bench_sim_json() {
     );
 
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim.json");
-    simperf::write_bench_json(&path, &[quick, saturated]);
+    simperf::write_bench_json(&path, &[quick, saturated]).unwrap();
     eprintln!(
         "perf_trajectory: saturated speedup {speedup:.2}x \
          (baseline {:.3}s -> current {:.3}s); recorded {}",

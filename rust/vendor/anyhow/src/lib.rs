@@ -3,8 +3,9 @@
 //! crates.io is unavailable in the build environment, so this vendored
 //! shim implements exactly the API surface the `moeless` crate uses:
 //! [`Error`], [`Result`], [`Error::msg`], the [`Context`] extension trait
-//! (on `Result`), and the [`bail!`] macro. Error chains are flattened into
-//! the message at wrap time; that is all the callers ever display.
+//! (on `Result` and `Option`), and the [`bail!`]/[`anyhow!`] macros. Error
+//! chains are flattened into the message at wrap time; that is all the
+//! callers ever display.
 
 use std::fmt;
 
@@ -65,6 +66,16 @@ pub trait Context<T> {
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
 impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
     fn context<C: fmt::Display>(self, context: C) -> Result<T> {
         self.map_err(|e| e.into().context(context))
@@ -80,6 +91,14 @@ impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
 macro_rules! bail {
     ($($arg:tt)*) => {
         return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Build a formatted [`Error`] value in place (the non-returning `bail!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
     };
 }
 

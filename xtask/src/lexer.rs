@@ -1,0 +1,396 @@
+//! A small comment/string-aware Rust tokenizer.
+//!
+//! The lint rules (see [`crate::rules`]) are token-shaped — named method
+//! calls, comparison operators, macro invocations — so a full `syn` parse
+//! is unnecessary (and unavailable: the build is offline, no crates.io).
+//! The lexer's one job is to never misread a comment, string literal, or
+//! char literal as code, and to distinguish float literals from integers
+//! and from tuple-field accesses (`x.0`).
+
+/// Token classes the rules discriminate on.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    Ident,
+    Int,
+    Float,
+    Punct,
+    Str,
+    Char,
+    Lifetime,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == text
+    }
+}
+
+/// One comment (line or block) with the 1-based line it starts on.
+/// Comments carry the lint directives (`pallas-lint: allow(...)` /
+/// `pallas-lint: treat-as(...)`), so they are collected, not discarded.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Tokenize `src`, returning (code tokens, comments).
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let text_of = |a: usize, b: usize| -> String { cs[a..b].iter().collect() };
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers `///` and `//!` doc comments).
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { line, text: text_of(start, i) });
+            continue;
+        }
+        // Block comment, nesting like Rust's.
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text: text_of(start, i) });
+            continue;
+        }
+        // Raw strings: r"...", r#"..."#, br"...", br#"..."#.
+        if c == 'r' || c == 'b' {
+            if let Some((body_start, hashes)) = raw_str_hashes(&cs, i) {
+                let start = i;
+                let start_line = line;
+                i = body_start; // first char after the opening quote
+                while i < n {
+                    if cs[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                        continue;
+                    }
+                    if cs[i] == '"' && closes_raw(&cs, i, hashes) {
+                        i += 1 + hashes;
+                        break;
+                    }
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: text_of(start, i.min(n)),
+                    line: start_line,
+                });
+                continue;
+            }
+        }
+        // Cooked strings: "..." and b"...".
+        if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+            let start = i;
+            let start_line = line;
+            i += if c == 'b' { 2 } else { 1 };
+            while i < n {
+                if cs[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                    continue;
+                }
+                if cs[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Str, text: text_of(start, i.min(n)), line: start_line });
+            continue;
+        }
+        // Byte char literal: b'x'.
+        if c == 'b' && i + 1 < n && cs[i + 1] == '\'' {
+            if let Some(end) = char_literal_end(&cs, i + 1) {
+                toks.push(Tok { kind: TokKind::Char, text: text_of(i, end), line });
+                i = end;
+                continue;
+            }
+        }
+        // Lifetime vs char literal.
+        if c == '\'' {
+            if let Some(end) = char_literal_end(&cs, i) {
+                toks.push(Tok { kind: TokKind::Char, text: text_of(i, end), line });
+                i = end;
+                continue;
+            }
+            // `'ident` lifetime (or loop label).
+            let mut j = i + 1;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            if j > i + 1 {
+                toks.push(Tok { kind: TokKind::Lifetime, text: text_of(i, j), line });
+                i = j;
+                continue;
+            }
+            toks.push(Tok { kind: TokKind::Punct, text: "'".into(), line });
+            i += 1;
+            continue;
+        }
+        // Numbers (never reached for `x.0`: the `.` lexes as punct first).
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut is_float = false;
+            if c == '0' && i + 1 < n && matches!(cs[i + 1], 'x' | 'X' | 'o' | 'b') {
+                i += 2;
+                while i < n && (cs[i].is_ascii_alphanumeric() || cs[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (cs[i].is_ascii_digit() || cs[i] == '_') {
+                    i += 1;
+                }
+                if i < n && cs[i] == '.' {
+                    if i + 1 < n && cs[i + 1].is_ascii_digit() {
+                        is_float = true;
+                        i += 1;
+                        while i < n && (cs[i].is_ascii_digit() || cs[i] == '_') {
+                            i += 1;
+                        }
+                    } else if i + 1 >= n
+                        || !(cs[i + 1] == '.' || cs[i + 1] == '_' || cs[i + 1].is_alphabetic())
+                    {
+                        // Trailing-dot float `1.` (but not the range `1..`
+                        // or a method call `1.max(..)`).
+                        is_float = true;
+                        i += 1;
+                    }
+                }
+                if i < n && (cs[i] == 'e' || cs[i] == 'E') {
+                    let mut j = i + 1;
+                    if j < n && (cs[j] == '+' || cs[j] == '-') {
+                        j += 1;
+                    }
+                    if j < n && cs[j].is_ascii_digit() {
+                        is_float = true;
+                        i = j;
+                        while i < n && (cs[i].is_ascii_digit() || cs[i] == '_') {
+                            i += 1;
+                        }
+                    }
+                }
+                if i < n && (cs[i].is_alphabetic() || cs[i] == '_') {
+                    let sstart = i;
+                    while i < n && (cs[i].is_ascii_alphanumeric() || cs[i] == '_') {
+                        i += 1;
+                    }
+                    let suffix = text_of(sstart, i);
+                    if suffix == "f32" || suffix == "f64" {
+                        is_float = true;
+                    }
+                }
+            }
+            let kind = if is_float { TokKind::Float } else { TokKind::Int };
+            toks.push(Tok { kind, text: text_of(start, i), line });
+            continue;
+        }
+        // Identifiers and keywords.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (cs[i].is_alphanumeric() || cs[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: text_of(start, i), line });
+            continue;
+        }
+        // Multi-char punctuation the rules care about.
+        let two: Option<&str> = if i + 1 < n {
+            match (c, cs[i + 1]) {
+                ('=', '=') => Some("=="),
+                ('!', '=') => Some("!="),
+                (':', ':') => Some("::"),
+                ('-', '>') => Some("->"),
+                ('=', '>') => Some("=>"),
+                ('.', '.') => Some(".."),
+                ('&', '&') => Some("&&"),
+                ('|', '|') => Some("||"),
+                ('<', '=') => Some("<="),
+                ('>', '=') => Some(">="),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        if let Some(p) = two {
+            toks.push(Tok { kind: TokKind::Punct, text: p.into(), line });
+            i += 2;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// If `i` starts a raw string (`r`/`br` + hashes + `"`), return
+/// (index just past the opening quote, hash count).
+fn raw_str_hashes(cs: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i + 1; // past 'r'
+    if cs[i] == 'b' {
+        if i + 1 >= cs.len() || cs[i + 1] != 'r' {
+            return None;
+        }
+        j = i + 2;
+    }
+    let mut hashes = 0usize;
+    while j < cs.len() && cs[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < cs.len() && cs[j] == '"' {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `i` close a raw string with `hashes` trailing hashes?
+fn closes_raw(cs: &[char], i: usize, hashes: usize) -> bool {
+    if i + hashes >= cs.len() {
+        return false;
+    }
+    (1..=hashes).all(|k| cs[i + k] == '#')
+}
+
+/// If `i` is the opening `'` of a char literal, return the index just past
+/// the closing quote. Distinguishes `'a'` (char) from `'a` (lifetime) by
+/// looking for the close within a short bound.
+fn char_literal_end(cs: &[char], i: usize) -> Option<usize> {
+    let n = cs.len();
+    if i + 1 >= n {
+        return None;
+    }
+    let mut j = i + 1;
+    if cs[j] == '\\' {
+        j += 2; // escape introducer + kind (covers \n, \', \\, and starts \u)
+        if j <= n && cs.get(j - 1) == Some(&'u') {
+            // \u{...}
+            while j < n && cs[j] != '}' {
+                j += 1;
+            }
+            j += 1;
+        }
+        if j < n && cs[j] == '\'' {
+            return Some(j + 1);
+        }
+        return None;
+    }
+    if cs[j] == '\'' {
+        return None; // '' is not a char literal
+    }
+    // Single (possibly multi-byte) char then a closing quote.
+    if j + 1 < n && cs[j + 1] == '\'' {
+        return Some(j + 2);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).0.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn floats_vs_ints_vs_tuple_fields() {
+        let ks = kinds("let a = x.0 + 1.5 - 2 + 3e4 + 5.;");
+        let floats: Vec<&str> = ks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Float)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(floats, vec!["1.5", "3e4", "5."]);
+        // `x.0` is ident, punct, int — not a float literal.
+        assert!(ks.contains(&(TokKind::Int, "0".into())));
+    }
+
+    #[test]
+    fn range_is_not_a_float() {
+        let ks = kinds("for i in 0..10 {}");
+        assert!(ks.contains(&(TokKind::Int, "0".into())));
+        assert!(ks.contains(&(TokKind::Punct, "..".into())));
+        assert!(!ks.iter().any(|(k, _)| *k == TokKind::Float));
+    }
+
+    #[test]
+    fn comments_and_strings_hide_code() {
+        let (toks, comments) = lex("// panic!(\"no\")\nlet s = \"unwrap()\"; /* x == 0.0 */");
+        assert_eq!(comments.len(), 2);
+        assert!(!toks.iter().any(|t| t.is_ident("panic")));
+        assert!(!toks.iter().any(|t| t.is_ident("unwrap")));
+        assert!(!toks.iter().any(|t| t.is("==")));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_and_lifetimes() {
+        let (toks, _) = lex(r####"let r = r#"unwrap() "quoted""#; let c = '='; let b = b'-';"####);
+        assert!(!toks.iter().any(|t| t.is_ident("unwrap")));
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Char).count(), 2);
+        let (toks2, _) = lex("fn f<'a>(x: &'a str) {}");
+        assert!(toks2.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "'a"));
+    }
+
+    #[test]
+    fn line_numbers_advance() {
+        let (toks, comments) = lex("a\n\nb // c\nd");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 3);
+        assert_eq!(comments[0].line, 3);
+        assert_eq!(toks[2].line, 4);
+    }
+}

@@ -1,0 +1,105 @@
+//! pallas-lint: the repo's determinism & robustness static-analysis pass.
+//!
+//! See `rules::RULES` for the catalog, or run `cargo xtask explain <rule>`.
+//! The library half exists so the fixture tests (and the `repo_is_clean`
+//! test that tier-1 runs) can drive the engine directly.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One diagnostic attributed to a file, ready to print.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub msg: String,
+}
+
+/// The outcome of linting a set of paths.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub files_checked: usize,
+    pub violations: Vec<Finding>,
+    pub allows_used: Vec<Finding>,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for deterministic
+/// output. A file path is returned as-is.
+fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(());
+    }
+    let entries =
+        fs::read_dir(root).map_err(|e| format!("cannot read directory {}: {e}", root.display()))?;
+    let mut children: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("cannot read entry under {}: {e}", root.display()))?;
+        children.push(entry.path());
+    }
+    children.sort();
+    for child in children {
+        if child.is_dir() {
+            collect_rs_files(&child, out)?;
+        } else if child.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(child);
+        }
+    }
+    Ok(())
+}
+
+/// Normalize a path for classification and display: forward slashes,
+/// stripped of any leading `./`.
+fn display_path(p: &Path) -> String {
+    let s = p.to_string_lossy().replace('\\', "/");
+    s.strip_prefix("./").unwrap_or(&s).to_string()
+}
+
+/// Lint every `.rs` file under the given paths (files or directories).
+pub fn lint_paths(paths: &[PathBuf]) -> Result<LintReport, String> {
+    let mut files = Vec::new();
+    for p in paths {
+        if !p.exists() {
+            return Err(format!("path does not exist: {}", p.display()));
+        }
+        collect_rs_files(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+
+    let mut report = LintReport::default();
+    for f in &files {
+        let src = fs::read_to_string(f).map_err(|e| format!("cannot read {}: {e}", f.display()))?;
+        let rel = display_path(f);
+        let (toks, comments) = lexer::lex(&src);
+        let file_report = rules::lint_file(&rel, &toks, &comments);
+        report.files_checked += 1;
+        for v in file_report.violations {
+            report.violations.push(Finding {
+                file: rel.clone(),
+                line: v.line,
+                rule: v.rule.to_string(),
+                msg: v.msg,
+            });
+        }
+        for a in file_report.allows_used {
+            report.allows_used.push(Finding {
+                file: rel.clone(),
+                line: a.line,
+                rule: a.rule,
+                msg: a.reason,
+            });
+        }
+    }
+    Ok(report)
+}

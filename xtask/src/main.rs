@@ -1,0 +1,128 @@
+//! `cargo xtask` — repo automation. Today: the pallas-lint pass.
+//!
+//! ```text
+//! cargo xtask lint [paths…]     lint rust/src (default) or the given paths
+//! cargo xtask explain <rule>    long-form rationale + fix for one rule
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::rules;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(&args[1..]),
+        Some("explain") | Some("--explain") => run_explain(&args[1..]),
+        Some(other) => {
+            eprintln!("xtask: unknown command {other:?}");
+            eprintln!("usage: cargo xtask lint [paths…] | cargo xtask explain <rule>");
+            ExitCode::from(2)
+        }
+        None => {
+            eprintln!("usage: cargo xtask lint [paths…] | cargo xtask explain <rule>");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_lint(args: &[String]) -> ExitCode {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--explain" {
+            let Some(rule) = it.next() else {
+                eprintln!("xtask: --explain needs a rule id (D1 D2 D3 R1 P1)");
+                return ExitCode::from(2);
+            };
+            return explain(rule);
+        }
+        paths.push(PathBuf::from(a));
+    }
+    if paths.is_empty() {
+        // Works from the workspace root (CI, `cargo xtask`) and from the
+        // xtask directory itself (`cargo test` cwd).
+        let default = PathBuf::from("rust/src");
+        let fallback = PathBuf::from("../rust/src");
+        paths.push(if default.exists() { default } else { fallback });
+    }
+
+    let report = match xtask::lint_paths(&paths) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for v in &report.violations {
+        println!(
+            "{}:{}: [{}] {} — hint: {}",
+            v.file,
+            v.line,
+            v.rule,
+            v.msg,
+            rules::short_hint(&v.rule)
+        );
+    }
+    if !report.allows_used.is_empty() {
+        println!("audited exemptions in use ({}):", report.allows_used.len());
+        for a in &report.allows_used {
+            println!("  {}:{}: allow({}) — {}", a.file, a.line, a.rule, a.msg);
+        }
+    }
+    if report.clean() {
+        println!(
+            "pallas-lint: {} files clean ({} audited exemptions)",
+            report.files_checked,
+            report.allows_used.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "pallas-lint: {} violation(s) across {} files — run `cargo xtask explain <rule>`",
+            report.violations.len(),
+            report.files_checked
+        );
+        ExitCode::FAILURE
+    }
+}
+
+fn run_explain(args: &[String]) -> ExitCode {
+    let Some(rule) = args.first() else {
+        eprintln!("xtask: explain needs a rule id; known rules:");
+        for r in rules::RULES {
+            eprintln!("  {}  {}", r.id, r.title);
+        }
+        return ExitCode::from(2);
+    };
+    explain(rule)
+}
+
+fn explain(rule: &str) -> ExitCode {
+    let id = rule.to_ascii_uppercase();
+    match rules::rule_info(&id) {
+        Some(r) => {
+            println!("{} — {}", r.id, r.title);
+            println!();
+            println!("scope:     {}", r.scope);
+            println!("rationale: {}", r.rationale);
+            println!("fix:       {}", r.fix);
+            println!();
+            println!(
+                "exemption: `// pallas-lint: allow({}) — <reason>` on the offending \
+                 line or the line above; every use is reported in the lint output.",
+                r.id
+            );
+            ExitCode::SUCCESS
+        }
+        None => {
+            eprintln!("xtask: unknown rule {rule:?}; known rules:");
+            for r in rules::RULES {
+                eprintln!("  {}  {}", r.id, r.title);
+            }
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,699 @@
+//! The pallas-lint rule catalog and engine.
+//!
+//! Five rules over `rust/src`, each protecting an invariant the repo's
+//! tests and benchmarks rest on (golden equivalence, multi-seed
+//! reproducibility, measured perf trajectories):
+//!
+//! - **D1** no ordering-dependent iteration over `HashMap`/`HashSet` in
+//!   the deterministic sim-core modules (keyed lookup is fine).
+//! - **D2** no wall-clock (`Instant::now`/`SystemTime`) or ambient RNG on
+//!   the sim path — time comes from the sim clock, randomness from
+//!   seeded generators.
+//! - **D3** no float `==`/`!=` outside tests — ledger and clock values
+//!   accumulate rounding; compare via `util::float`, integer token
+//!   counts, or `to_bits()` when bitwise identity is the point.
+//! - **R1** no `unwrap()`/`expect()`/`panic!` in library code — return
+//!   `anyhow::Result` with context, or route structural invariants
+//!   through the audited `util::fail` funnel.
+//! - **P1** no `Vec::remove`/`swap_remove`/`insert(0, _)` on the
+//!   de-quadraticized batcher/placer hot paths.
+//!
+//! `// pallas-lint: allow(RULE) — reason` on the offending line (or the
+//! line above) grants an audited exemption; every use is reported.
+
+use crate::lexer::{Comment, Tok, TokKind};
+
+/// Explainable metadata for one rule.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub scope: &'static str,
+    pub rationale: &'static str,
+    pub fix: &'static str,
+}
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "D1",
+        title: "no HashMap/HashSet iteration in deterministic sim-core modules",
+        scope: "rust/src/{router,sim,placer,scaler,engine,workload,metrics} \
+                (router/reference.rs included); keyed lookup/insert/remove is fine",
+        rationale: "std hash iteration order is randomized per process; any sim-path \
+                    decision derived from it breaks bit-for-bit golden equivalence and \
+                    multi-seed reproducibility silently.",
+        fix: "use BTreeMap/BTreeSet, or collect keys and sort before iterating (the \
+              token scan cannot prove a later sort, so a sorted drain needs an \
+              audited `// pallas-lint: allow(D1) — ...`).",
+    },
+    RuleInfo {
+        id: "D2",
+        title: "no wall-clock or ambient randomness on the sim path",
+        scope: "same sim-core modules as D1",
+        rationale: "Instant::now/SystemTime and entropy-seeded RNGs make two runs of \
+                    the same (config, seed) diverge; all sim time must derive from the \
+                    sim clock and all randomness from explicitly seeded generators.",
+        fix: "thread the sim clock value in as an argument; construct RNGs from the \
+              run seed (util::rng). Host-perf measurement that only feeds reporting \
+              belongs outside the sim path or behind an audited allow.",
+    },
+    RuleInfo {
+        id: "D3",
+        title: "no float ==/!= outside tests",
+        scope: "all of rust/src except #[cfg(test)] items and debug_assert! bodies",
+        rationale: "the clock and KV ledgers accumulate rounding; exact float equality \
+                    encodes a fragile assumption that breaks under any re-ordering of \
+                    arithmetic (exactly what the perf work keeps doing).",
+        fix: "compare with util::float::approx_eq / an explicit epsilon, count in \
+              integer tokens, or use to_bits() when bitwise identity is the contract \
+              (e.g. uniform-fleet detection).",
+    },
+    RuleInfo {
+        id: "R1",
+        title: "no unwrap()/expect()/panic! in library code",
+        scope: "all of rust/src except main.rs, #[cfg(test)] items and debug_assert! \
+                bodies (assert! with a message is permitted as a contract check)",
+        rationale: "library panics turn bad configs and malformed traces into aborts \
+                    with no context; the CLI surfaces structured errors instead.",
+        fix: "return anyhow::Result with .context(...), or route a structural \
+              invariant (\"cannot fail by construction\") through \
+              util::fail::{expect_invariant, unrecoverable} — the single audited \
+              panic funnel.",
+    },
+    RuleInfo {
+        id: "P1",
+        title: "no Vec::remove/swap_remove/insert(0, _) on batcher/placer hot paths",
+        scope: "rust/src/router/mod.rs and rust/src/placer/ (router/reference.rs is \
+                excluded by design: it is the frozen pre-PR4 core that golden \
+                equivalence measures against)",
+        rationale: "PR 4 de-quadraticized these paths with keyed BTreeMap indices; a \
+                    positional remove/insert reintroduces O(n) shifts (or an \
+                    order-perturbing swap) exactly where the saturated-drain \
+                    benchmark measures.",
+        fix: "use the keyed indices (BTreeMap remove by key), push/pop at the back, \
+              or keep an O(1)-and-order-insensitive swap_remove behind an audited \
+              allow stating why ordering cannot matter.",
+    },
+];
+
+pub fn rule_info(id: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// The one-line fix hint printed next to each violation; the long-form
+/// rationale lives in `cargo xtask explain <rule>`.
+pub fn short_hint(id: &str) -> &'static str {
+    match id {
+        "D1" => "use BTreeMap/BTreeSet or sort keys before iterating",
+        "D2" => "take the sim clock as an argument; seed RNGs from the run seed",
+        "D3" => "use util::float::{approx_eq,is_integer}, integer tokens, or to_bits()",
+        "R1" => "return anyhow::Result with context, or go through util::fail",
+        "P1" => "remove by key via the BTreeMap index, or push/pop at the back",
+        _ => "see `cargo xtask explain <rule>`",
+    }
+}
+
+/// Which rule families apply to a file.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FileClass {
+    /// D1/D2 apply: deterministic sim-core module.
+    pub sim_core: bool,
+    /// P1 applies: de-quadraticized batcher/placer hot path.
+    pub hot_path: bool,
+    /// R1 applies: library code (everything but the CLI binary).
+    pub library: bool,
+}
+
+const SIM_CORE_MODULES: &[&str] =
+    &["router", "sim", "placer", "scaler", "engine", "workload", "metrics"];
+
+/// Classify a file by its repo-relative path, then apply any
+/// `pallas-lint: treat-as(...)` directive (used by the test fixtures).
+pub fn classify(rel_path: &str, comments: &[Comment]) -> FileClass {
+    let rel = rel_path.replace('\\', "/");
+    let mut class = FileClass::default();
+    if let Some(idx) = rel.find("rust/src/") {
+        let tail = &rel[idx + "rust/src/".len()..];
+        let top = tail.split('/').next().unwrap_or("").trim_end_matches(".rs");
+        class.sim_core = SIM_CORE_MODULES.contains(&top);
+        class.hot_path = tail == "router/mod.rs" || tail.starts_with("placer/");
+        class.library = tail != "main.rs";
+        if tail == "router/reference.rs" {
+            // Frozen pre-PR4 core: held to the determinism rules (golden
+            // equivalence depends on it), but not to the hot-path rule it
+            // exists to be measured against.
+            class.hot_path = false;
+        }
+    } else {
+        class.library = true;
+    }
+    for c in comments {
+        if let Some(rest) = c.text.split("pallas-lint:").nth(1) {
+            if let Some(kinds) = parse_paren(rest, "treat-as") {
+                class = FileClass::default();
+                for kind in kinds.split(',') {
+                    match kind.trim() {
+                        "sim-core" => class.sim_core = true,
+                        "hot-path" => class.hot_path = true,
+                        "library" => class.library = true,
+                        _ => {}
+                    }
+                }
+                // sim-core and hot-path files are always library code too.
+                class.library |= class.sim_core || class.hot_path;
+                break;
+            }
+        }
+    }
+    class
+}
+
+/// `rest` starts just past "pallas-lint:"; if it continues
+/// `<key>(<inner>)`, return `inner`.
+fn parse_paren(rest: &str, key: &str) -> Option<String> {
+    let t = rest.trim_start();
+    let t = t.strip_prefix(key)?;
+    let t = t.trim_start().strip_prefix('(')?;
+    let close = t.find(')')?;
+    Some(t[..close].to_string())
+}
+
+/// One diagnostic.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// One `allow` comment that suppressed a violation (the audit trail).
+#[derive(Clone, Debug)]
+pub struct AllowUse {
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Everything the engine found in one file.
+#[derive(Clone, Debug, Default)]
+pub struct FileReport {
+    pub violations: Vec<Violation>,
+    pub allows_used: Vec<AllowUse>,
+}
+
+struct AllowComment {
+    line: u32,
+    rule: String,
+    reason: String,
+    used: bool,
+}
+
+/// Parse every `pallas-lint: allow(RULE) — reason` comment.
+fn collect_allows(comments: &[Comment]) -> (Vec<AllowComment>, Vec<Violation>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    for c in comments {
+        let Some(rest) = c.text.split("pallas-lint:").nth(1) else { continue };
+        let Some(rule) = parse_paren(rest, "allow") else { continue };
+        let rule = rule.trim().to_string();
+        // The reason is whatever follows the closing paren, minus
+        // separator dashes/spaces.
+        let after = rest
+            .split_once(')')
+            .map(|(_, r)| r)
+            .unwrap_or("")
+            .trim_matches(|ch: char| ch.is_whitespace() || ch == '-' || ch == '—' || ch == '–')
+            .to_string();
+        if rule_info(&rule).is_none() {
+            bad.push(Violation {
+                line: c.line,
+                rule: "allow",
+                msg: format!("allow names unknown rule {rule:?} (known: D1 D2 D3 R1 P1)"),
+            });
+            continue;
+        }
+        if after.len() < 5 {
+            bad.push(Violation {
+                line: c.line,
+                rule: "allow",
+                msg: format!("allow({rule}) must carry a written reason after the dash"),
+            });
+            continue;
+        }
+        allows.push(AllowComment { line: c.line, rule, reason: after, used: false });
+    }
+    (allows, bad)
+}
+
+/// Token-index spans exempt from all rules: `#[cfg(test)]` items and
+/// `debug_assert*!` argument lists.
+fn exempt_spans(toks: &[Tok]) -> Vec<bool> {
+    let mut skip = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        // #[cfg(test)] <attrs>* <item>
+        if toks[i].is("#") && i + 1 < toks.len() && toks[i + 1].is("[") {
+            let (inner, after_attr) = bracketed(toks, i + 1);
+            if inner_starts_cfg_test(&inner) {
+                let mut k = after_attr;
+                // Skip any further attributes on the same item.
+                while k + 1 < toks.len() && toks[k].is("#") && toks[k + 1].is("[") {
+                    let (_, nk) = bracketed(toks, k + 1);
+                    k = nk;
+                }
+                // Skip the item: to `;` at depth 0 before any brace, or to
+                // the end of its balanced `{ ... }` block.
+                let mut depth = 0i32;
+                while k < toks.len() {
+                    let t = &toks[k].text;
+                    if t == "{" {
+                        depth += 1;
+                    } else if t == "}" {
+                        depth -= 1;
+                        if depth == 0 {
+                            k += 1;
+                            break;
+                        }
+                    } else if t == ";" && depth == 0 {
+                        k += 1;
+                        break;
+                    }
+                    k += 1;
+                }
+                for s in skip.iter_mut().take(k).skip(i) {
+                    *s = true;
+                }
+                i = k;
+                continue;
+            }
+        }
+        // debug_assert! / debug_assert_eq! / debug_assert_ne!
+        if toks[i].kind == TokKind::Ident
+            && toks[i].text.starts_with("debug_assert")
+            && i + 1 < toks.len()
+            && toks[i + 1].is("!")
+        {
+            let mut k = i + 2;
+            if k < toks.len() && (toks[k].is("(") || toks[k].is("[") || toks[k].is("{")) {
+                let open = toks[k].text.clone();
+                let close = match open.as_str() {
+                    "(" => ")",
+                    "[" => "]",
+                    _ => "}",
+                };
+                let mut depth = 0i32;
+                while k < toks.len() {
+                    if toks[k].text == open {
+                        depth += 1;
+                    } else if toks[k].text == close {
+                        depth -= 1;
+                        if depth == 0 {
+                            k += 1;
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+            }
+            for s in skip.iter_mut().take(k).skip(i) {
+                *s = true;
+            }
+            i = k;
+            continue;
+        }
+        i += 1;
+    }
+    skip
+}
+
+/// Collect the tokens inside `[...]` starting at the `[` at `open_idx`;
+/// returns (inner token texts, index just past the closing `]`).
+fn bracketed(toks: &[Tok], open_idx: usize) -> (Vec<String>, usize) {
+    let mut inner = Vec::new();
+    let mut depth = 0i32;
+    let mut k = open_idx;
+    while k < toks.len() {
+        if toks[k].is("[") {
+            depth += 1;
+            if depth == 1 {
+                k += 1;
+                continue;
+            }
+        } else if toks[k].is("]") {
+            depth -= 1;
+            if depth == 0 {
+                return (inner, k + 1);
+            }
+        }
+        inner.push(toks[k].text.clone());
+        k += 1;
+    }
+    (inner, k)
+}
+
+fn inner_starts_cfg_test(inner: &[String]) -> bool {
+    inner.len() >= 4 && inner[0] == "cfg" && inner[1] == "(" && inner[2] == "test" && inner[3] == ")"
+}
+
+/// Names bound (let/field/param) to a type in `type_names`, plus names
+/// assigned `Type::new()` / `Type::with_capacity(..)` / `Type::from(..)`
+/// / `Type::default()`, plus (for `vec_macro`) `= vec![...]`.
+fn collect_typed_names(toks: &[Tok], type_names: &[&str], vec_macro: bool) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    let mut push = |n: &str| {
+        if !names.iter().any(|x| x == n) {
+            names.push(n.to_string());
+        }
+    };
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident && type_names.contains(&t.text.as_str()) {
+            // `name : [&][&][mut] [[]] Type` — refs, and slices/arrays of
+            // the type (`&mut [Vec<usize>]`), still bind containers whose
+            // elements the rules care about.
+            let mut k = i;
+            while k > 0
+                && (toks[k - 1].is("&")
+                    || toks[k - 1].is("&&")
+                    || toks[k - 1].is("[")
+                    || toks[k - 1].is_ident("mut"))
+            {
+                k -= 1;
+            }
+            if k >= 2 && toks[k - 1].is(":") && toks[k - 2].kind == TokKind::Ident {
+                push(&toks[k - 2].text);
+            }
+            // `let [mut] name = Type::new/with_capacity/from/default`
+            if i + 2 < toks.len()
+                && toks[i + 1].is("::")
+                && matches!(toks[i + 2].text.as_str(), "new" | "with_capacity" | "from" | "default")
+                && i >= 2
+                && toks[i - 1].is("=")
+                && toks[i - 2].kind == TokKind::Ident
+            {
+                push(&toks[i - 2].text);
+            }
+        }
+        if vec_macro
+            && t.is_ident("vec")
+            && i + 1 < toks.len()
+            && toks[i + 1].is("!")
+            && i >= 2
+            && toks[i - 1].is("=")
+            && toks[i - 2].kind == TokKind::Ident
+        {
+            push(&toks[i - 2].text);
+        }
+    }
+    names
+}
+
+/// Names annotated `: f32` / `: f64` anywhere in the file (fields, params,
+/// lets). Used by D3 to recognize float operands beyond literals.
+fn collect_float_names(toks: &[Tok]) -> Vec<String> {
+    collect_typed_names(toks, &["f32", "f64"], false)
+}
+
+/// The receiver identifier of a `.method(` call whose method ident is at
+/// `mi`: `name.m(...)`, `self.name.m(...)`, or `name[idx].m(...)`.
+fn receiver_name(toks: &[Tok], mi: usize) -> Option<String> {
+    if mi < 2 || !toks[mi - 1].is(".") {
+        return None;
+    }
+    let r = mi - 2;
+    if toks[r].kind == TokKind::Ident {
+        return Some(toks[r].text.clone());
+    }
+    if toks[r].is("]") {
+        // scan back to the matching `[`, then take the ident before it
+        let mut depth = 0i32;
+        let mut k = r;
+        loop {
+            if toks[k].is("]") {
+                depth += 1;
+            } else if toks[k].is("[") {
+                depth -= 1;
+                if depth == 0 {
+                    if k >= 1 && toks[k - 1].kind == TokKind::Ident {
+                        return Some(toks[k - 1].text.clone());
+                    }
+                    return None;
+                }
+            }
+            if k == 0 {
+                return None;
+            }
+            k -= 1;
+        }
+    }
+    None
+}
+
+const HASH_ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+/// Lint one lexed file. `rel_path` is used only for classification.
+pub fn lint_file(rel_path: &str, toks: &[Tok], comments: &[Comment]) -> FileReport {
+    let class = classify(rel_path, comments);
+    let skip = exempt_spans(toks);
+    let (mut allows, mut bad_allows) = collect_allows(comments);
+    let float_names = collect_float_names(toks);
+    let hash_names = collect_typed_names(toks, &["HashMap", "HashSet"], false);
+    let vec_names = collect_typed_names(toks, &["Vec", "VecDeque"], true);
+
+    let mut raw: Vec<Violation> = Vec::new();
+    let n = toks.len();
+    for i in 0..n {
+        if skip[i] {
+            continue;
+        }
+        let t = &toks[i];
+        let next_is = |k: usize, s: &str| i + k < n && toks[i + k].is(s);
+
+        // ---- D1: hash iteration in sim-core ------------------------------
+        if class.sim_core && t.kind == TokKind::Ident {
+            if HASH_ITER_METHODS.contains(&t.text.as_str()) && next_is(1, "(") {
+                if let Some(recv) = receiver_name(toks, i) {
+                    if hash_names.iter().any(|h| *h == recv) {
+                        raw.push(Violation {
+                            line: t.line,
+                            rule: "D1",
+                            msg: format!(
+                                "ordering-dependent `.{}()` on hash collection `{recv}`",
+                                t.text
+                            ),
+                        });
+                    }
+                }
+            }
+            if t.text == "for" {
+                // `for <pat> in <expr> {` — flag a hash-typed name in expr.
+                let mut j = i + 1;
+                let mut depth = 0i32;
+                while j < n && !(depth == 0 && toks[j].is_ident("in")) {
+                    match toks[j].text.as_str() {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        "{" => break,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if j < n && toks[j].is_ident("in") {
+                    let mut k = j + 1;
+                    let mut d = 0i32;
+                    while k < n && !(d == 0 && toks[k].is("{")) {
+                        match toks[k].text.as_str() {
+                            "(" | "[" => d += 1,
+                            ")" | "]" => d -= 1,
+                            _ => {}
+                        }
+                        if toks[k].kind == TokKind::Ident
+                            && hash_names.iter().any(|h| *h == toks[k].text)
+                        {
+                            raw.push(Violation {
+                                line: toks[k].line,
+                                rule: "D1",
+                                msg: format!(
+                                    "`for` loop over hash collection `{}`",
+                                    toks[k].text
+                                ),
+                            });
+                            break;
+                        }
+                        k += 1;
+                    }
+                }
+            }
+        }
+
+        // ---- D2: wall-clock / ambient RNG in sim-core --------------------
+        if class.sim_core && t.kind == TokKind::Ident {
+            if t.text == "Instant" && next_is(1, "::") && i + 2 < n && toks[i + 2].is_ident("now") {
+                raw.push(Violation {
+                    line: t.line,
+                    rule: "D2",
+                    msg: "`Instant::now()` on the sim path".into(),
+                });
+            } else if t.text == "SystemTime" {
+                raw.push(Violation {
+                    line: t.line,
+                    rule: "D2",
+                    msg: "`SystemTime` on the sim path".into(),
+                });
+            } else if t.text == "thread_rng" || t.text == "from_entropy" {
+                raw.push(Violation {
+                    line: t.line,
+                    rule: "D2",
+                    msg: format!("ambient RNG (`{}`) on the sim path", t.text),
+                });
+            }
+        }
+
+        // ---- D3: float ==/!= ---------------------------------------------
+        if t.kind == TokKind::Punct && (t.text == "==" || t.text == "!=") {
+            let lhs = i.checked_sub(1).map(|k| &toks[k]);
+            let lhs_float = lhs.map(|l| {
+                l.kind == TokKind::Float
+                    || (l.kind == TokKind::Ident && float_names.iter().any(|f| *f == l.text))
+            });
+            // rhs: skip unary minus and opening parens
+            let mut j = i + 1;
+            while j < n && (toks[j].is("-") || toks[j].is("(")) {
+                j += 1;
+            }
+            let rhs = toks.get(j);
+            let rhs_float = rhs.map(|r| {
+                r.kind == TokKind::Float
+                    || (r.kind == TokKind::Ident
+                        && float_names.iter().any(|f| *f == r.text)
+                        && !(j + 1 < n
+                            && (toks[j + 1].is(".") || toks[j + 1].is("::") || toks[j + 1].is("("))))
+            });
+            // A str/char/int literal on either side proves the comparison
+            // is not a float one (Rust would reject the mixed types) —
+            // except an Int right after `.`, which is a tuple index.
+            let non_float = |tok: Option<&Tok>, prev_dot: bool| {
+                tok.is_some_and(|x| {
+                    matches!(x.kind, TokKind::Str | TokKind::Char)
+                        || (x.kind == TokKind::Int && !prev_dot)
+                })
+            };
+            let lhs_nf = non_float(lhs, i >= 2 && toks[i - 2].is("."));
+            let rhs_nf = non_float(rhs, false);
+            if (lhs_float.unwrap_or(false) || rhs_float.unwrap_or(false)) && !lhs_nf && !rhs_nf {
+                raw.push(Violation {
+                    line: t.line,
+                    rule: "D3",
+                    msg: format!("float `{}` comparison", t.text),
+                });
+            }
+        }
+
+        // ---- R1: unwrap/expect/panic! in library code --------------------
+        if class.library && t.kind == TokKind::Ident {
+            if (t.text == "unwrap" || t.text == "expect")
+                && i >= 1
+                && toks[i - 1].is(".")
+                && next_is(1, "(")
+            {
+                raw.push(Violation {
+                    line: t.line,
+                    rule: "R1",
+                    msg: format!("`.{}()` in library code", t.text),
+                });
+            } else if t.text == "panic" && next_is(1, "!") {
+                raw.push(Violation {
+                    line: t.line,
+                    rule: "R1",
+                    msg: "`panic!` in library code".into(),
+                });
+            }
+        }
+
+        // ---- P1: positional Vec ops on hot paths -------------------------
+        if class.hot_path && t.kind == TokKind::Ident && next_is(1, "(") {
+            let vec_recv = receiver_name(toks, i)
+                .map(|r| vec_names.iter().any(|v| *v == r))
+                .unwrap_or(false);
+            if vec_recv {
+                if t.text == "swap_remove" {
+                    raw.push(Violation {
+                        line: t.line,
+                        rule: "P1",
+                        msg: "order-perturbing `swap_remove` on a hot-path Vec".into(),
+                    });
+                } else if t.text == "remove" {
+                    raw.push(Violation {
+                        line: t.line,
+                        rule: "P1",
+                        msg: "O(n) positional `remove` on a hot-path Vec".into(),
+                    });
+                } else if t.text == "insert"
+                    && i + 2 < n
+                    && toks[i + 2].kind == TokKind::Int
+                    && toks[i + 2].text == "0"
+                    && i + 3 < n
+                    && toks[i + 3].is(",")
+                {
+                    raw.push(Violation {
+                        line: t.line,
+                        rule: "P1",
+                        msg: "O(n) `insert(0, _)` on a hot-path Vec".into(),
+                    });
+                }
+            }
+        }
+    }
+
+    // Apply allows: an allow on the violation's own line or the line above
+    // suppresses exactly its named rule.
+    let mut report = FileReport::default();
+    for v in raw {
+        let hit = allows
+            .iter_mut()
+            .find(|a| a.rule == v.rule && (a.line == v.line || a.line + 1 == v.line));
+        match hit {
+            Some(a) => {
+                if !a.used {
+                    report.allows_used.push(AllowUse {
+                        line: a.line,
+                        rule: a.rule.clone(),
+                        reason: a.reason.clone(),
+                    });
+                }
+                a.used = true;
+            }
+            None => report.violations.push(v),
+        }
+    }
+    // An allow that suppressed nothing is itself a defect: it either
+    // drifted off its line or papers over nothing.
+    for a in &allows {
+        if !a.used {
+            bad_allows.push(Violation {
+                line: a.line,
+                rule: "allow",
+                msg: format!(
+                    "unused allow({}) — no {} violation on this or the next line",
+                    a.rule, a.rule
+                ),
+            });
+        }
+    }
+    report.violations.extend(bad_allows);
+    report.violations.sort_by_key(|v| v.line);
+    // One diagnostic per (line, rule): a `for x in map.iter()` trips both
+    // the method check and the loop check, which is the same defect.
+    report.violations.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+    report
+}

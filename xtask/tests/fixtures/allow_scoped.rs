@@ -1,0 +1,11 @@
+// pallas-lint: treat-as(library)
+//! Allow-scoping fixture: an inline allow suppresses exactly its named
+//! rule on its own line (or the line below), and nothing else.
+
+pub fn audited(opt: Option<u32>) -> u32 {
+    opt.unwrap() // pallas-lint: allow(R1) — fixture: audited exemption demo
+}
+
+pub fn wrong_rule(x: f64) -> bool {
+    x == 0.0 // pallas-lint: allow(R1) — fixture: wrong id must not hide D3
+}

@@ -1,0 +1,17 @@
+// pallas-lint: treat-as(sim-core)
+//! D1 negative fixture: keyed lookup/insert/remove on a hash collection is
+//! fine — only iteration order is nondeterministic.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub fn locate(loc: &HashMap<u64, usize>, key: u64) -> Option<usize> {
+    loc.get(&key).copied()
+}
+
+pub fn record(loc: &mut HashMap<u64, usize>, key: u64, gpu: usize) {
+    loc.insert(key, gpu);
+}
+
+pub fn ordered_sum(load: &BTreeMap<u64, u64>) -> u64 {
+    load.values().sum()
+}

@@ -1,0 +1,20 @@
+// pallas-lint: treat-as(sim-core)
+//! D1 positive fixture: ordering-dependent iteration over hash collections.
+
+use std::collections::HashMap;
+
+pub fn total(load: &HashMap<u64, f64>) -> f64 {
+    let mut sum = 0.0;
+    for (_gpu, l) in load.iter() {
+        sum += l;
+    }
+    sum
+}
+
+pub fn count_pending(pending: HashMap<u64, u32>) -> usize {
+    let mut n = 0;
+    for _entry in pending {
+        n += 1;
+    }
+    n
+}

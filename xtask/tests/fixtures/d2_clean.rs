@@ -1,0 +1,11 @@
+// pallas-lint: treat-as(sim-core)
+//! D2 negative fixture: time comes in as a sim-clock argument, randomness
+//! from a seed supplied by the caller.
+
+pub fn age_s(now_s: f64, arrival_s: f64) -> f64 {
+    now_s - arrival_s
+}
+
+pub fn mix(seed: u64) -> u64 {
+    seed.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}

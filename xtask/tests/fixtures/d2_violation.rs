@@ -1,0 +1,9 @@
+// pallas-lint: treat-as(sim-core)
+//! D2 positive fixture: wall-clock time observed on the sim path.
+
+use std::time::Instant;
+
+pub fn stamp_ms() -> u128 {
+    let t0 = Instant::now();
+    t0.elapsed().as_millis()
+}

@@ -1,0 +1,23 @@
+// pallas-lint: treat-as(library)
+//! D3 negative fixture: epsilon comparison, integer/str/char equality, and
+//! debug_assert! bodies are all fine.
+
+pub fn ledger_settled(balance: f64, eps: f64) -> bool {
+    balance.abs() < eps
+}
+
+pub fn mode_is_strict(mode: &str) -> bool {
+    mode == "strict"
+}
+
+pub fn all_done(done: usize, total: usize) -> bool {
+    done == total
+}
+
+pub fn is_dash(c: u8) -> bool {
+    c == b'-'
+}
+
+pub fn checked_start(balance: f64) {
+    debug_assert!(balance == 0.0, "ledger must start settled");
+}

@@ -1,0 +1,10 @@
+// pallas-lint: treat-as(library)
+//! D3 positive fixture: exact float equality on accumulating quantities.
+
+pub fn ledger_settled(balance: f64) -> bool {
+    balance == 0.0
+}
+
+pub fn clocks_differ(now_s: f64, deadline_s: f64) -> bool {
+    now_s != deadline_s
+}

@@ -1,0 +1,17 @@
+// pallas-lint: treat-as(hot-path)
+//! P1 negative fixture: keyed removal via a BTreeMap index and back-of-Vec
+//! push/pop — the shapes PR 4 moved the hot paths onto.
+
+use std::collections::BTreeMap;
+
+pub fn retire(active: &mut BTreeMap<u64, u32>, key: u64) -> Option<u32> {
+    active.remove(&key)
+}
+
+pub fn pop_back(queue: &mut Vec<u64>) -> Option<u64> {
+    queue.pop()
+}
+
+pub fn append(queue: &mut Vec<u64>, v: u64) {
+    queue.push(v);
+}

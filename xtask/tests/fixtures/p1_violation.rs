@@ -1,0 +1,14 @@
+// pallas-lint: treat-as(hot-path)
+//! P1 positive fixture: positional Vec surgery on a hot path.
+
+pub fn drop_first(queue: &mut Vec<u64>) -> u64 {
+    queue.remove(0)
+}
+
+pub fn drop_at(queue: &mut Vec<u64>, i: usize) -> u64 {
+    queue.swap_remove(i)
+}
+
+pub fn push_front(queue: &mut Vec<u64>, v: u64) {
+    queue.insert(0, v);
+}

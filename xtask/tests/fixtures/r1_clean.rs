@@ -1,0 +1,26 @@
+// pallas-lint: treat-as(library)
+//! R1 negative fixture: fallible signatures, defaulted options, and
+//! test-module unwraps are all fine.
+
+pub fn parse_port(s: &str) -> Result<u16, std::num::ParseIntError> {
+    s.parse()
+}
+
+pub fn or_default(opt: Option<u32>) -> u32 {
+    opt.unwrap_or(0)
+}
+
+pub fn or_computed(opt: Option<u32>) -> u32 {
+    opt.unwrap_or_else(|| 7)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+        let w: Option<u32> = Some(4);
+        assert_eq!(w.expect("present"), 4);
+    }
+}

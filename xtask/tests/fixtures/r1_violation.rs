@@ -1,0 +1,14 @@
+// pallas-lint: treat-as(library)
+//! R1 positive fixture: unwrap/expect/panic! in library code.
+
+pub fn parse_port(s: &str) -> u16 {
+    s.parse().unwrap()
+}
+
+pub fn must(opt: Option<u32>) -> u32 {
+    opt.expect("value missing")
+}
+
+pub fn die() -> ! {
+    panic!("boom")
+}

@@ -1,0 +1,136 @@
+//! Fixture tests for the pallas-lint engine: one positive and one negative
+//! case per rule, allow-comment scoping, and — because tier-1 runs this
+//! crate's tests — a check that `rust/src` itself is clean.
+
+use std::path::PathBuf;
+
+use xtask::LintReport;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn lint_fixture(name: &str) -> LintReport {
+    xtask::lint_paths(&[fixture(name)]).expect("fixture should lint")
+}
+
+fn rule_ids(report: &LintReport) -> Vec<&str> {
+    report.violations.iter().map(|v| v.rule.as_str()).collect()
+}
+
+#[test]
+fn d1_flags_hash_iteration() {
+    let report = lint_fixture("d1_violation.rs");
+    let ids = rule_ids(&report);
+    assert!(ids.len() >= 2, "expected both hash loops flagged: {:?}", report.violations);
+    assert!(ids.iter().all(|r| *r == "D1"), "only D1 expected: {:?}", report.violations);
+}
+
+#[test]
+fn d1_permits_keyed_lookup_and_btree_iteration() {
+    let report = lint_fixture("d1_clean.rs");
+    assert!(report.clean(), "unexpected: {:?}", report.violations);
+}
+
+#[test]
+fn d2_flags_wall_clock() {
+    let report = lint_fixture("d2_violation.rs");
+    assert_eq!(rule_ids(&report), vec!["D2"], "{:?}", report.violations);
+}
+
+#[test]
+fn d2_permits_sim_clock_arguments() {
+    let report = lint_fixture("d2_clean.rs");
+    assert!(report.clean(), "unexpected: {:?}", report.violations);
+}
+
+#[test]
+fn d3_flags_float_equality() {
+    let report = lint_fixture("d3_violation.rs");
+    assert_eq!(rule_ids(&report), vec!["D3", "D3"], "{:?}", report.violations);
+}
+
+#[test]
+fn d3_permits_epsilon_integer_and_debug_assert() {
+    let report = lint_fixture("d3_clean.rs");
+    assert!(report.clean(), "unexpected: {:?}", report.violations);
+}
+
+#[test]
+fn r1_flags_unwrap_expect_panic() {
+    let report = lint_fixture("r1_violation.rs");
+    assert_eq!(rule_ids(&report), vec!["R1", "R1", "R1"], "{:?}", report.violations);
+}
+
+#[test]
+fn r1_permits_fallible_apis_and_test_modules() {
+    let report = lint_fixture("r1_clean.rs");
+    assert!(report.clean(), "unexpected: {:?}", report.violations);
+}
+
+#[test]
+fn p1_flags_positional_vec_surgery() {
+    let report = lint_fixture("p1_violation.rs");
+    assert_eq!(rule_ids(&report), vec!["P1", "P1", "P1"], "{:?}", report.violations);
+}
+
+#[test]
+fn p1_permits_keyed_indices_and_back_ops() {
+    let report = lint_fixture("p1_clean.rs");
+    assert!(report.clean(), "unexpected: {:?}", report.violations);
+}
+
+#[test]
+fn allow_suppresses_exactly_its_named_rule() {
+    let report = lint_fixture("allow_scoped.rs");
+    // The R1 allow on the unwrap line suppresses it and shows up in the
+    // audit trail.
+    assert_eq!(report.allows_used.len(), 1, "{:?}", report.allows_used);
+    assert_eq!(report.allows_used[0].rule, "R1");
+    // The allow(R1) on the float-equality line hides nothing: the D3
+    // violation survives and the allow itself is reported as unused.
+    let ids = rule_ids(&report);
+    assert!(ids.contains(&"D3"), "D3 must survive a mismatched allow: {:?}", report.violations);
+    assert!(
+        report
+            .violations
+            .iter()
+            .any(|v| v.rule == "allow" && v.msg.contains("unused allow(R1)")),
+        "mismatched allow must be flagged unused: {:?}",
+        report.violations
+    );
+    assert!(!ids.contains(&"R1"), "the audited unwrap must stay suppressed");
+}
+
+#[test]
+fn lint_exits_with_findings_on_the_whole_fixture_dir() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let report = xtask::lint_paths(&[dir]).expect("fixture dir should lint");
+    assert!(!report.clean(), "fixture dir must contain violations");
+    // Findings carry file:line attribution for every violation.
+    for v in &report.violations {
+        assert!(v.file.ends_with(".rs") && v.line > 0, "bad attribution: {v:?}");
+    }
+}
+
+/// The enforcement test: tier-1 (`cargo test -q`) fails if anyone
+/// reintroduces a violation into rust/src, toolchain-only — no CI needed.
+#[test]
+fn repo_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../rust/src");
+    let report = xtask::lint_paths(&[root]).expect("rust/src should lint");
+    assert!(
+        report.violations.is_empty(),
+        "pallas-lint violations in rust/src:\n{:#?}",
+        report.violations
+    );
+    assert!(
+        report.allows_used.len() <= 5,
+        "allow budget exceeded ({} > 5):\n{:#?}",
+        report.allows_used.len(),
+        report.allows_used
+    );
+    for a in &report.allows_used {
+        assert!(a.msg.len() >= 5, "allow without a written reason: {a:?}");
+    }
+}
