@@ -1,0 +1,139 @@
+//! Async expert dispatch: Megatron's static placement without the
+//! per-layer barrier ("Toward Cost-Efficient Serving of MoE with
+//! Asynchrony", PAPERS.md).
+//!
+//! Same expert→GPU map as [`MegatronPolicy`](super::MegatronPolicy) —
+//! expert `e` of layer `l` lives on GPU `(l + e) mod G`, one replica,
+//! never moves — but expert execution is de-synchronized: a token
+//! advances to the next layer as soon as *its* expert finishes, instead
+//! of the whole batch waiting on the layer's straggler. The per-layer
+//! expert term is therefore the **token-weighted mean** of per-expert
+//! completion times, `Σ_e w_e·(w_e / speed(g_e)) / Σ_e w_e`, not the
+//! barrier max: equal to Megatron's under uniform expert loads (every
+//! completion time is the max) and strictly smaller under skew — the
+//! straggler still runs as long, but only its own tokens wait for it.
+//! The all-to-all term stays synchronized (the dispatch/combine
+//! collectives are the part asynchrony does not remove), and so does
+//! the serverful whole-model residency bill — asynchrony attacks the
+//! straggler *latency*, not the memory cost MoEless attacks.
+
+use crate::cluster::{Cluster, CostModel};
+use crate::config::{ClusterSpec, ModelSpec};
+use crate::engine::{LayerOutcome, Policy};
+
+pub struct AsyncEpPolicy {
+    n_experts: usize,
+    n_gpus: usize,
+}
+
+impl AsyncEpPolicy {
+    pub fn new(model: &ModelSpec, cluster: &ClusterSpec) -> AsyncEpPolicy {
+        AsyncEpPolicy { n_experts: model.n_experts, n_gpus: cluster.n_gpus() }
+    }
+
+    /// The static expert→GPU map (layer-rotated round-robin, identical to
+    /// Megatron's so the two policies differ only in synchronization).
+    pub fn gpu_of(&self, layer: usize, expert: usize) -> usize {
+        (layer + expert) % self.n_gpus
+    }
+}
+
+impl Policy for AsyncEpPolicy {
+    fn name(&self) -> &'static str {
+        "async-ep"
+    }
+
+    fn run_layer(
+        &mut self,
+        layer: usize,
+        actual: &[f64],
+        cluster: &mut Cluster,
+        cost: &CostModel,
+        _now_s: f64,
+    ) -> LayerOutcome {
+        let n_gpus = cluster.n_gpus();
+        let mut gpu_loads = vec![0.0f64; n_gpus];
+        let mut sum_w = 0.0f64;
+        let mut sum_wt = 0.0f64;
+        for (e, &w) in actual.iter().enumerate() {
+            let g = self.gpu_of(layer, e);
+            gpu_loads[g] += w;
+            sum_w += w;
+            // Expert e's completion time (in α-load units) weighted by the
+            // tokens that actually wait on it.
+            sum_wt += w * (w / cost.speed(g));
+        }
+        let mean_completion = if sum_w > 0.0 { sum_wt / sum_w } else { 0.0 };
+        let mut max_gpu = 0.0f64;
+        for (g, &t) in gpu_loads.iter().enumerate() {
+            max_gpu = max_gpu.max(t / cost.comm_speed(g));
+            if t > 0.0 {
+                cluster.note_served(g, t, cost.alpha_ms * (t / cost.speed(g)));
+            }
+        }
+        LayerOutcome {
+            cost: cost.layer(mean_completion, max_gpu, actual.len(), 0.0),
+            replicas: actual.len(),
+            pred_accuracy: 1.0,
+            cold_starts: 0,
+            warm_starts: 0,
+        }
+    }
+
+    fn resident_model_mem_gb(&self, cost: &CostModel) -> Option<f64> {
+        // Static EP: every expert of every layer resident for the run.
+        Some(cost.n_layers as f64 * self.n_experts as f64 * cost.expert_mem_gb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::MegatronPolicy;
+    use crate::config::ClusterSpec;
+
+    #[test]
+    fn matches_megatron_on_uniform_loads() {
+        // Every expert takes the same time, so waiting on "your" expert
+        // and waiting on the slowest are the same wait. Integer loads keep
+        // the weighted-mean arithmetic exact.
+        let model = ModelSpec::mixtral_8x7b();
+        let spec = ClusterSpec::a6000_x8();
+        let cm = CostModel::new(&model, &spec);
+        let loads = [32.0; 8];
+        let mut a = AsyncEpPolicy::new(&model, &spec);
+        let mut m = MegatronPolicy::new(&model, &spec);
+        let mut ca = Cluster::new(spec.clone());
+        let mut cb = Cluster::new(spec);
+        let oa = a.run_layer(0, &loads, &mut ca, &cm, 0.0);
+        let om = m.run_layer(0, &loads, &mut cb, &cm, 0.0);
+        assert_eq!(oa.cost.expert_ms.to_bits(), om.cost.expert_ms.to_bits());
+        assert_eq!(oa.cost.comm_ms.to_bits(), om.cost.comm_ms.to_bits());
+        assert_eq!(oa.replicas, om.replicas);
+        assert!(!a.is_serverless());
+    }
+
+    #[test]
+    fn beats_the_barrier_under_skew() {
+        // One hot expert: Megatron's layer costs the straggler verbatim;
+        // async only charges the straggler's wait to its own tokens.
+        let model = ModelSpec::mixtral_8x7b();
+        let spec = ClusterSpec::a6000_x8();
+        let cm = CostModel::new(&model, &spec);
+        let loads = [900.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0];
+        let mut a = AsyncEpPolicy::new(&model, &spec);
+        let mut m = MegatronPolicy::new(&model, &spec);
+        let mut ca = Cluster::new(spec.clone());
+        let mut cb = Cluster::new(spec);
+        let oa = a.run_layer(0, &loads, &mut ca, &cm, 0.0);
+        let om = m.run_layer(0, &loads, &mut cb, &cm, 0.0);
+        // Weighted mean: (900² + 7·10²)/970 ≈ 835.8 < 900.
+        assert!((om.cost.expert_ms - cm.alpha_ms * 900.0).abs() < 1e-9);
+        assert!(oa.cost.expert_ms < om.cost.expert_ms);
+        assert!(oa.cost.expert_ms > cm.alpha_ms * (970.0 / 8.0));
+        // Comm is the synchronized collective in both: identical.
+        assert_eq!(oa.cost.comm_ms.to_bits(), om.cost.comm_ms.to_bits());
+        // Both serve the same per-GPU token totals.
+        assert_eq!(ca.served_tokens, cb.served_tokens);
+    }
+}

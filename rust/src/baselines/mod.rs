@@ -1,11 +1,15 @@
 //! Serverful baselines (substrate S19): Megatron-LM static EP, DeepSeek's
 //! EPLB, and the lossy Oracle — the paper's §6.1 comparison set, all
-//! evaluated under the same §3.3 cost model as MoEless.
+//! evaluated under the same §3.3 cost model as MoEless — plus async
+//! expert dispatch (de-synchronized execution, PAPERS.md) as a
+//! comparable fifth approach.
 
+pub mod async_ep;
 pub mod eplb;
 pub mod megatron;
 pub mod oracle;
 
+pub use async_ep::AsyncEpPolicy;
 pub use eplb::EplbPolicy;
 pub use megatron::MegatronPolicy;
 pub use oracle::OraclePolicy;
@@ -22,6 +26,10 @@ pub enum PolicyKind {
     Moeless,
     /// Fig. 17: MoEless w/o pred + scale + place.
     MoelessAblated,
+    /// Megatron's placement without the layer barrier: per-expert
+    /// completion times feed the forward (token-weighted mean) instead
+    /// of the straggler max.
+    AsyncEp,
 }
 
 impl PolicyKind {
@@ -32,6 +40,7 @@ impl PolicyKind {
             PolicyKind::Oracle => "oracle",
             PolicyKind::Moeless => "moeless",
             PolicyKind::MoelessAblated => "moeless-ablated",
+            PolicyKind::AsyncEp => "async-ep",
         }
     }
 
@@ -42,6 +51,7 @@ impl PolicyKind {
             "oracle" => Some(PolicyKind::Oracle),
             "moeless" => Some(PolicyKind::Moeless),
             "moeless-ablated" | "ablated" => Some(PolicyKind::MoelessAblated),
+            "async-ep" | "async" => Some(PolicyKind::AsyncEp),
             _ => None,
         }
     }
@@ -85,6 +95,7 @@ impl PolicyKind {
                 p.ablate_placement = true;
                 Box::new(p)
             }
+            PolicyKind::AsyncEp => Box::new(AsyncEpPolicy::new(model, cluster)),
         }
     }
 }
@@ -101,9 +112,11 @@ mod tests {
             PolicyKind::Oracle,
             PolicyKind::Moeless,
             PolicyKind::MoelessAblated,
+            PolicyKind::AsyncEp,
         ] {
             assert_eq!(PolicyKind::by_name(k.name()), Some(k));
         }
+        assert_eq!(PolicyKind::by_name("async"), Some(PolicyKind::AsyncEp));
         assert!(PolicyKind::by_name("vllm").is_none());
     }
 
@@ -118,5 +131,8 @@ mod tests {
         }
         let ab = PolicyKind::MoelessAblated.build(&m, &c, &p, 1);
         assert!(ab.is_serverless());
+        let ae = PolicyKind::AsyncEp.build(&m, &c, &p, 1);
+        assert_eq!(ae.name(), "async-ep");
+        assert!(!ae.is_serverless());
     }
 }

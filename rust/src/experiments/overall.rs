@@ -81,16 +81,20 @@ pub fn fig10_cost(scale: Scale) {
 }
 
 /// Request-level SLO comparison: per-request TTFT/TPOT percentiles and
-/// goodput for the four policies under the three arrival scenarios,
+/// goodput for the paper set plus async-EP under the three arrival scenarios,
 /// multi-seed, sharded across the thread pool. (The request-level
 /// counterpart of Figs. 8-10 — what ServerlessLLM-style evaluations
 /// report.)
 pub fn request_slo(scale: Scale) {
     fig_header(
         "SLO",
-        "request-level TTFT/TPOT/goodput — 4 policies x 3 arrival scenarios, multi-seed",
+        "request-level TTFT/TPOT/goodput — 5 policies x 3 arrival scenarios, multi-seed",
     );
     let mut spec = SweepSpec::new(ModelSpec::mixtral_8x7b(), DatasetSpec::lmsys());
+    // The paper set plus async expert dispatch — the de-synchronization
+    // alternative to rebalancing (PAPERS.md), compared under the same
+    // arrivals and SLOs.
+    spec.policies.push(PolicyKind::AsyncEp);
     spec.duration_s = scale.duration_s;
     spec.base_rps = scale.base_rps;
     spec.seeds = vec![scale.seed, scale.seed + 1];

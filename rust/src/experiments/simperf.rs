@@ -25,13 +25,36 @@
 //!   the ≥3x acceptance configuration (also wired into
 //!   `benches/perf_request_path.rs`).
 //!
+//! On top of the core duel, the **driver duel** (v2) measures what PR 7's
+//! event scheduling buys: the same drain run once by a fixed-cadence
+//! lockstep stepper (poll the batcher every `iter_s`, idle or not — the
+//! discipline the pre-PR-4 loop was built on) and once by an event/jump
+//! driver that only touches the instants where work exists. The duel
+//! traces are *sparse*: widely separated request bursts, the duty cycle of
+//! serverless traffic, where the stepper burns millions of empty polls
+//! between bursts and the event driver skips straight across. Outcomes
+//! are asserted identical before any number is reported (the None-polls
+//! the event driver skips are mutation-free by construction).
+//! * **driver-quick** — 50 bursts × 40 requests over ~50 min of virtual
+//!   time (CI smoke).
+//! * **driver-mega** — 1 000 bursts × 1 000 requests = 10⁶ requests over
+//!   ~35 virtual days under a tight KV budget (continuous
+//!   preemption/resume churn inside each burst): the ROADMAP's
+//!   ≥10⁶-requests-per-run target, and `tests/perf_trajectory.rs`'s ≥2×
+//!   acceptance gate.
+//!
 //! Schema of `BENCH_sim.json` (documented in the README):
-//! `{schema, build, machine: {host, cpus, os, arch}, unix_time_s,
-//! scales: {<scale>: {drain: {requests,
+//! `{schema: "moeless.simperf/v2", build, machine: {host, cpus, os, arch},
+//! unix_time_s, scales: {<scale>: {drain: {requests,
 //! iterations, preemptions, baseline: {wall_s, requests_per_s,
 //! iterations_per_s}, current: {...}, speedup}, sim?: {completed_requests,
 //! iterations, wall_s, sim_requests_per_s, iterations_per_s,
-//! peak_report_bytes, legacy_report_bytes, truncated}}}}`.
+//! peak_report_bytes, legacy_report_bytes, truncated}}},
+//! drivers: {<scale>: {requests, iterations, preemptions,
+//! lockstep: {wall_s, requests_per_s, iterations_per_s}, event: {...},
+//! speedup}}}`. The `scales` section carries the v1 fields unchanged, so
+//! v1 files stay comparable scale-for-scale; `drivers` (and the schema
+//! tag) are what v2 adds.
 
 use std::time::Instant;
 
@@ -259,6 +282,156 @@ pub fn measure_scale(scale: &'static str) -> ScaleReport {
     ScaleReport { scale, drain_baseline: baseline, drain_current: current, sim }
 }
 
+/// Wall-clock comparison of the two clock drivers on one sparse drain.
+pub struct DriverReport {
+    pub scale: &'static str,
+    pub lockstep: DrainOutcome,
+    pub event: DrainOutcome,
+}
+
+impl DriverReport {
+    /// Wall-clock speedup of the event/jump driver over the fixed-cadence
+    /// stepper on the identical drain.
+    pub fn speedup(&self) -> f64 {
+        self.lockstep.wall_s / self.event.wall_s.max(1e-9)
+    }
+}
+
+/// The driver-duel scale names, cheapest first.
+pub fn driver_scale_names() -> [&'static str; 2] {
+    ["driver-quick", "driver-mega"]
+}
+
+/// Serverless duty cycle: `bursts` synchronized stampedes of `per_burst`
+/// tiny requests, `gap_s` of dead air between them. Every request is
+/// prompt 2 / output 2, so each burst's drain is short and the trace's
+/// virtual time is overwhelmingly idle — the regime where a fixed-cadence
+/// stepper's cost is all empty polls.
+pub fn sparse_trace(bursts: usize, per_burst: usize, gap_s: f64) -> Vec<TraceRequest> {
+    let mut out = Vec::with_capacity(bursts * per_burst);
+    for b in 0..bursts {
+        let at_s = b as f64 * gap_s;
+        for k in 0..per_burst {
+            out.push(TraceRequest {
+                id: (b * per_burst + k) as u64,
+                arrival_s: at_s,
+                prompt_tokens: 2,
+                output_tokens: 2,
+            });
+        }
+    }
+    out
+}
+
+/// The driver-duel drain configuration of a scale. The KV budget is tight
+/// against each burst's aggregate demand (per_burst × 4 tokens at 1 B per
+/// token), so every burst also exercises the delay/preempt/resume
+/// machinery — the duel is not an empty-queue microbenchmark.
+pub fn driver_drain_config(scale: &'static str) -> DrainConfig {
+    let limits = BatchLimits {
+        max_batch_tokens: 0,
+        kv_budget_bytes: 800.0,
+        kv_bytes_per_token: 1.0,
+        prefill_chunk_tokens: 0,
+    };
+    match scale {
+        "driver-quick" => {
+            DrainConfig { scale, trace: sparse_trace(50, 40, 60.0), limits, iter_s: 0.05 }
+        }
+        // 10⁶ requests across ~35 virtual days: ~6×10⁷ grid points for the
+        // stepper, a few ×10⁴ busy iterations for the event driver.
+        "driver-mega" => {
+            DrainConfig { scale, trace: sparse_trace(1000, 1000, 3000.0), limits, iter_s: 0.05 }
+        }
+        other => crate::util::fail::unrecoverable(&format!("unknown simperf driver scale {other:?}")),
+    }
+}
+
+/// Drain `cfg` through the fixed-cadence lockstep stepper: poll the
+/// batcher at every `iter_s` grid point from 0 until drained, idle or
+/// not. This is the discipline the pre-event drivers were built on (the
+/// production `sim` lockstep had already grown an idle jump; this stepper
+/// is the pure form, kept as the duel baseline).
+pub fn drain_lockstep(cfg: &DrainConfig) -> DrainOutcome {
+    let mut b = Batcher::with_limits(cfg.limits);
+    b.enqueue(&cfg.trace);
+    let t0 = Instant::now();
+    let mut clock = 0.0f64;
+    let mut iterations = 0u64;
+    let mut guard = 0u64;
+    while !b.idle() {
+        if b.next_iteration(clock).is_some() {
+            iterations += 1;
+            b.complete_iteration(clock + cfg.iter_s);
+        }
+        clock += cfg.iter_s;
+        guard += 1;
+        assert!(guard < 200_000_000, "lockstep drain stopped making progress");
+    }
+    DrainOutcome {
+        completed: b.completed,
+        preemptions: b.preemptions,
+        iterations,
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Drain `cfg` through the event/jump driver: busy instants run
+/// back-to-back on the same `iter_s` cadence as the stepper; idle gaps
+/// are crossed in one jump to the next arrival. Outcome equality with
+/// [`drain_lockstep`] holds because the polls the jump skips are
+/// mutation-free (nothing in flight, every pending arrival in the
+/// future) and bursts never overlap a predecessor's drain — each burst's
+/// admit/iterate/preempt sequence is invariant to the absolute clock it
+/// starts at. [`measure_driver_scale`] asserts it on every run.
+pub fn drain_event(cfg: &DrainConfig) -> DrainOutcome {
+    let mut b = Batcher::with_limits(cfg.limits);
+    b.enqueue(&cfg.trace);
+    let t0 = Instant::now();
+    let mut clock = 0.0f64;
+    let mut iterations = 0u64;
+    let mut guard = 0u64;
+    while !b.idle() {
+        match b.next_iteration(clock) {
+            Some(_) => {
+                iterations += 1;
+                b.complete_iteration(clock + cfg.iter_s);
+                clock += cfg.iter_s;
+            }
+            None => {
+                // A future arrival is an exact jump target; a blocked
+                // past arrival (KV headroom) steps one cadence like the
+                // stepper, since the in-flight decode must retire first.
+                let next = b.next_arrival().unwrap_or(clock);
+                clock = if next > clock { next } else { clock + cfg.iter_s };
+            }
+        }
+        guard += 1;
+        assert!(guard < 200_000_000, "event drain stopped making progress");
+    }
+    DrainOutcome {
+        completed: b.completed,
+        preemptions: b.preemptions,
+        iterations,
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Measure one driver-duel scale: event warm-up (untimed, cheap), then the
+/// stepper, then the event driver, outcomes asserted identical.
+pub fn measure_driver_scale(scale: &'static str) -> DriverReport {
+    let cfg = driver_drain_config(scale);
+    let _ = drain_event(&cfg);
+    let lockstep = drain_lockstep(&cfg);
+    let event = drain_event(&cfg);
+    assert_eq!(
+        (lockstep.completed, lockstep.preemptions, lockstep.iterations),
+        (event.completed, event.preemptions, event.iterations),
+        "simperf {scale}: event driver diverged from the lockstep stepper"
+    );
+    DriverReport { scale, lockstep, event }
+}
+
 /// The machine tag: host, logical CPU count, OS and arch — so a committed
 /// `BENCH_sim.json` baseline says which hardware produced it and absolute
 /// numbers are never compared across different machines by accident.
@@ -290,8 +463,9 @@ fn outcome_json(o: &DrainOutcome) -> Json {
     j
 }
 
-/// Serialize the scale reports into the `BENCH_sim.json` document.
-pub fn to_json(reports: &[ScaleReport]) -> Json {
+/// Serialize the scale and driver-duel reports into the `BENCH_sim.json`
+/// document.
+pub fn to_json(reports: &[ScaleReport], drivers: &[DriverReport]) -> Json {
     let mut scales = Json::obj();
     for r in reports {
         let mut drain = Json::obj();
@@ -318,8 +492,19 @@ pub fn to_json(reports: &[ScaleReport]) -> Json {
         }
         scales.set(r.scale, scale);
     }
+    let mut driver_scales = Json::obj();
+    for d in drivers {
+        let mut duel = Json::obj();
+        duel.set("requests", Json::Num(d.event.completed as f64))
+            .set("iterations", Json::Num(d.event.iterations as f64))
+            .set("preemptions", Json::Num(d.event.preemptions as f64))
+            .set("lockstep", outcome_json(&d.lockstep))
+            .set("event", outcome_json(&d.event))
+            .set("speedup", Json::Num(d.speedup()));
+        driver_scales.set(d.scale, duel);
+    }
     let mut doc = Json::obj();
-    doc.set("schema", Json::Str("moeless.simperf/v1".into()))
+    doc.set("schema", Json::Str("moeless.simperf/v2".into()))
         .set(
             "build",
             Json::Str(if cfg!(debug_assertions) { "debug".into() } else { "release".into() }),
@@ -334,14 +519,19 @@ pub fn to_json(reports: &[ScaleReport]) -> Json {
                     .unwrap_or(0.0),
             ),
         )
-        .set("scales", scales);
+        .set("scales", scales)
+        .set("drivers", driver_scales);
     doc
 }
 
 /// Write the document to `path` (creating or overwriting).
-pub fn write_bench_json(path: &std::path::Path, reports: &[ScaleReport]) -> anyhow::Result<()> {
+pub fn write_bench_json(
+    path: &std::path::Path,
+    reports: &[ScaleReport],
+    drivers: &[DriverReport],
+) -> anyhow::Result<()> {
     use anyhow::Context;
-    let doc = to_json(reports);
+    let doc = to_json(reports, drivers);
     std::fs::write(path, doc.to_string()).with_context(|| format!("write {}", path.display()))
 }
 
@@ -377,6 +567,23 @@ pub fn report_lines(r: &ScaleReport) -> Vec<String> {
     out
 }
 
+/// One greppable line per driver-duel scale.
+pub fn driver_report_line(d: &DriverReport) -> String {
+    format!(
+        "simperf {:<12} duel:  reqs={} iters={} preempt={} | lockstep {:.3}s ({:.0} req/s) \
+         -> event {:.3}s ({:.0} req/s) | speedup {:.2}x",
+        d.scale,
+        d.event.completed,
+        d.event.iterations,
+        d.event.preemptions,
+        d.lockstep.wall_s,
+        d.lockstep.requests_per_s(),
+        d.event.wall_s,
+        d.event.requests_per_s(),
+        d.speedup(),
+    )
+}
+
 /// CLI entry: `moeless bench --exp simperf [--quick] [--floor-rps F]
 /// [--out PATH]`. `--quick` runs only the quick scale (the CI smoke);
 /// `--floor-rps` fails the process when the quick end-to-end
@@ -396,13 +603,23 @@ pub fn run_from_args(args: &Args) -> anyhow::Result<()> {
         }
         reports.push(r);
     }
+    // Driver duel (v2): the CI smoke runs the quick duel; the full bench
+    // adds the 10⁶-request mega duel the perf-trajectory test gates on.
+    let driver_names: Vec<&'static str> =
+        if args.flag("quick") { vec!["driver-quick"] } else { driver_scale_names().to_vec() };
+    let mut drivers = Vec::new();
+    for name in driver_names {
+        let d = measure_driver_scale(name);
+        println!("{}", driver_report_line(&d));
+        drivers.push(d);
+    }
     // Precedence: an explicit --out beats the MOELESS_BENCH_PATH env var,
     // which beats the default.
     let path = std::path::PathBuf::from(match args.opt_str("out") {
         Some(p) => p.to_string(),
         None => std::env::var("MOELESS_BENCH_PATH").unwrap_or_else(|_| "BENCH_sim.json".into()),
     });
-    write_bench_json(&path, &reports)?;
+    write_bench_json(&path, &reports, &drivers)?;
     println!("simperf wrote {}", path.display());
 
     let floor = args.f64("floor-rps", 0.0);
@@ -434,8 +651,10 @@ mod tests {
         // (measure_scale already asserted baseline/current outcome
         // equality — the standing equivalence smoke.)
         assert!(r.drain_current.completed > 100, "{}", r.drain_current.completed);
-        let doc = to_json(&[r]);
-        assert_eq!(doc.get("schema").as_str(), "moeless.simperf/v1");
+        let d = measure_driver_scale("driver-quick");
+        assert_eq!(d.event.completed, 50 * 40, "every sparse-trace request drains");
+        let doc = to_json(&[r], &[d]);
+        assert_eq!(doc.get("schema").as_str(), "moeless.simperf/v2");
         // Machine-tagged: host/cpus/os/arch identify the producing box.
         let machine = doc.get("machine");
         assert!(!machine.get("host").as_str().is_empty());
@@ -443,8 +662,12 @@ mod tests {
         let drain = doc.get("scales").get("quick").get("drain");
         assert!(drain.get("speedup").as_f64() > 0.0);
         assert!(drain.get("baseline").get("wall_s").as_f64() > 0.0);
+        let duel = doc.get("drivers").get("driver-quick");
+        assert!(duel.get("speedup").as_f64() > 0.0);
+        assert!(duel.get("lockstep").get("wall_s").as_f64() > 0.0);
+        assert!(duel.get("event").get("wall_s").as_f64() > 0.0);
         // Round-trips through the parser.
         let parsed = Json::parse(&doc.to_string()).unwrap();
-        assert_eq!(parsed.get("schema").as_str(), "moeless.simperf/v1");
+        assert_eq!(parsed.get("schema").as_str(), "moeless.simperf/v2");
     }
 }

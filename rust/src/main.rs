@@ -56,13 +56,17 @@ fn main() {
                           on a per-GPU fleet — presets a6000x8 | h100x8 |\n\
                           hetero-h100-a6000 | hetero-mem-skewed, or a JSON spec\n\
                           (uniform shorthand or per-GPU array, see README);\n\
-                          --token-balanced ablates capacity-aware decisions)\n\
+                          --token-balanced ablates capacity-aware decisions;\n\
+                          --driver event|lockstep picks the clock driver —\n\
+                          the event heap is the default, the frozen lockstep\n\
+                          loop is the equivalence baseline)\n\
                  bench   run one paper experiment (--exp fig1|fig3|...|table2,\n\
                          --exp hetero for the mixed-fleet section)\n\
                          or the perf-trajectory harness (--exp simperf\n\
                          [--quick] [--floor-rps F] [--out PATH] — measures\n\
-                         the pre-PR4 reference core vs the optimized core\n\
-                         and writes BENCH_sim.json)\n\
+                         the pre-PR4 reference core vs the optimized core,\n\
+                         plus the event-heap vs fixed-cadence drivers, and\n\
+                         writes BENCH_sim.json, schema moeless.simperf/v2)\n\
                  report  print model/cluster inventory (Table 1)"
             );
             std::process::exit(2);

@@ -89,6 +89,12 @@ pub struct RunReport {
     pub policy: String,
     pub model: String,
     pub dataset: String,
+    /// Clock driver that produced this report (`"event"` or
+    /// `"lockstep"`; empty for reports not built by `sim::run_with_trace`,
+    /// e.g. the frozen `router::reference` harness). Metadata only —
+    /// the equivalence suite pins that the drivers' numbers are
+    /// bit-identical.
+    pub driver: &'static str,
     /// MoE layer forward latencies (ms) across all layers/iterations —
     /// the Figs. 8/9/17 CDF population, held as a fixed-size streaming
     /// sketch (exact mean/min/max, ~1%-resolution percentiles) instead of

@@ -396,6 +396,16 @@ impl Batcher {
         self.transferring.iter().map(|a| a.ready_s).reduce(f64::min)
     }
 
+    /// Event-driver hook: does the wake-up instant `t` coincide with the
+    /// earliest in-flight KV-handoff completion? Classifies an idle
+    /// wake-up as transfer-complete vs request-arrival for the event
+    /// heap's taxonomy. Bitwise comparison on purpose: the driver passes
+    /// back the exact `f64` [`idle_wakeup`](crate::sim) selected, so
+    /// identity — not tolerance — is the contract.
+    pub fn is_transfer_instant(&self, t: f64) -> bool {
+        self.next_transfer_ready().map(|r| r.to_bits() == t.to_bits()).unwrap_or(false)
+    }
+
     pub fn in_flight(&self) -> usize {
         self.active.len() + self.fresh.len() + self.transferring.len()
     }

@@ -7,7 +7,7 @@ use anyhow::{bail, Context};
 use crate::baselines::PolicyKind;
 use crate::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec};
 use crate::metrics::SloSpec;
-use crate::sim::{run, SimConfig};
+use crate::sim::{run, DriverKind, SimConfig};
 use crate::util::cli::Args;
 use crate::workload::{azure_like_trace, Scenario};
 
@@ -20,9 +20,13 @@ pub fn replay(args: &Args) -> anyhow::Result<()> {
     let dataset = DatasetSpec::by_name(&args.str("dataset", "lmsys"))
         .context("--dataset: lmsys | sharegpt")?;
     let policy = PolicyKind::by_name(&args.str("policy", "moeless"))
-        .context("--policy: megatron-lm | eplb | oracle | moeless | moeless-ablated")?;
+        .context("--policy: megatron-lm | eplb | oracle | moeless | moeless-ablated | async-ep")?;
 
     let mut cfg = SimConfig::new(model, dataset, policy);
+    // Clock driver: the event-heap scheduler is the default; the frozen
+    // lockstep loop stays selectable as the golden-equivalence baseline.
+    cfg.driver = DriverKind::by_name(&args.str("driver", "event"))
+        .context("--driver: event | lockstep")?;
     cfg.duration_s = args.f64("seconds", 120.0);
     cfg.base_rps = args.f64("rps", 3.0);
     cfg.seed = args.u64("seed", 42);

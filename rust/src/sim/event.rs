@@ -1,0 +1,185 @@
+//! Event-driven simulation driver: one time-ordered binary event heap.
+//!
+//! The frozen lockstep loop ([`super::run_lockstep`]) interleaves three
+//! concerns in one `while` body: polling the batcher, running the engine,
+//! and advancing the clock by the slower pool's latency. This driver
+//! separates them into heap events — request-arrival wake-ups,
+//! KV-handoff completions, and one iteration-complete event *per pool* —
+//! popped in strict time order, so the disaggregated prefill and decode
+//! pools retire their forwards at their own instants instead of both
+//! waiting on the lockstep barrier.
+//!
+//! Equivalence is by construction, and `tests/event_equivalence.rs` pins
+//! it bit-for-bit: both drivers call the same [`super::SimState`] methods
+//! at the same instants. The iteration still *commits* (batch completion,
+//! policy hooks, gauges) when its last pool finishes — the pop time of
+//! the later `PoolDone` event, which is bit-identical to the lockstep
+//! advance `clock + pre_ms.max(dec_ms) / 1e3` because `f64::max` returns
+//! one of its operands exactly. What the heap buys is structural: pool
+//! completions, arrivals, and handoffs are now *schedulable points* that
+//! future work (per-pool pipelining, multi-model colocation, region
+//! links) can interleave without another driver rewrite, and the driver
+//! never polls — between events, simulated time is free.
+//!
+//! Heap discipline (P1-linted like the batcher/placer hot paths): the
+//! only container is a [`BinaryHeap`] with `O(log n)` push/pop; no
+//! positional `Vec` surgery anywhere on the event path.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::{idle_wakeup, SimState, Wake};
+use crate::metrics::RunReport;
+use crate::router::IterationBatch;
+
+/// One heap entry. Ordered by `(t_bits, seq, kind)`: simulated instants
+/// are non-negative finite `f64`s, whose IEEE-754 bit patterns order
+/// identically to their values, so `to_bits()` gives a total order with
+/// no float comparison and no `Ord`-on-`f64` workaround. `seq` is a
+/// monotone tie-breaker: simultaneous events pop in schedule order,
+/// keeping the driver deterministic when two pools finish at the same
+/// instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Event {
+    t_bits: u64,
+    seq: u64,
+    kind: EventKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    /// Bootstrap: poll the batcher for the first time at t = 0.
+    Dispatch,
+    /// Idle wake-up at the next request arrival.
+    ArrivalWake,
+    /// Idle wake-up at the next KV-handoff completion (disaggregated
+    /// mode; distinguished from arrivals via
+    /// [`Batcher::is_transfer_instant`](crate::router::Batcher::is_transfer_instant)).
+    TransferWake,
+    /// One pool of the in-flight iteration finished its forward
+    /// (0 = prefill/colocated, 1 = decode).
+    PoolDone(u8),
+}
+
+/// The iteration currently executing on the pools. `pending` counts the
+/// `PoolDone` events still in the heap (1 colocated, 2 disaggregated);
+/// the iteration commits when the last one pops.
+struct InFlight {
+    iter: IterationBatch,
+    pending: u8,
+}
+
+fn push(heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: f64, kind: EventKind) {
+    heap.push(Reverse(Event { t_bits: t.to_bits(), seq: *seq, kind }));
+    *seq += 1;
+}
+
+/// Poll the batcher at the current clock. A ready batch starts executing
+/// (its `PoolDone` events enter the heap); an idle batcher schedules the
+/// exact next wake-up, or nothing at all when the run is drained.
+fn dispatch(
+    s: &mut SimState,
+    heap: &mut BinaryHeap<Reverse<Event>>,
+    seq: &mut u64,
+    inflight: &mut Option<InFlight>,
+) {
+    debug_assert!(inflight.is_none(), "dispatch while an iteration is in flight");
+    let Some(iter) = s.batcher.next_iteration(s.clock) else {
+        // Idle: schedule the exact next wake-up (or none — drained). Same
+        // jump, same invariants as the lockstep loop; see `run_lockstep`
+        // for why the jump must strictly advance the clock.
+        match idle_wakeup(
+            s.clock,
+            s.cfg.duration_s,
+            s.batcher.next_arrival(),
+            s.batcher.next_transfer_ready(),
+        ) {
+            Wake::At(t) => {
+                let kind = if s.batcher.is_transfer_instant(t) {
+                    EventKind::TransferWake
+                } else {
+                    EventKind::ArrivalWake
+                };
+                push(heap, seq, t, kind);
+            }
+            Wake::Drained => {}
+            Wake::Stalled => {
+                // Unreachable by the batcher's scheduling invariants (see
+                // `idle_wakeup`): surface loudly in debug builds, end the
+                // run cleanly (schedule nothing) in release.
+                if cfg!(debug_assertions) {
+                    unreachable!("idle with no future wake-up: scheduler stalled");
+                }
+            }
+        }
+        return;
+    };
+    let (pre_ms, dec_ms, _iter_ms) = s.run_iteration_engine(&iter);
+    // Each pool retires at its own instant. The later of the two pop
+    // times is bit-identical to the lockstep commit instant: `f64::max`
+    // returns one operand exactly, and `clock + x / 1e3` is monotone in
+    // `x`, so ordering and value both carry over.
+    push(heap, seq, s.clock + pre_ms / 1e3, EventKind::PoolDone(0));
+    let pending = if s.decode_pool.is_some() {
+        push(heap, seq, s.clock + dec_ms / 1e3, EventKind::PoolDone(1));
+        2
+    } else {
+        1
+    };
+    *inflight = Some(InFlight { iter, pending });
+}
+
+/// Drive one run off the event heap until drained, past the horizon, or
+/// capped by `max_iterations`.
+pub(super) fn run_event(mut s: SimState) -> RunReport {
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+    let mut inflight: Option<InFlight> = None;
+    if s.clock < s.cfg.duration_s {
+        push(&mut heap, &mut seq, s.clock, EventKind::Dispatch);
+    }
+    while let Some(Reverse(ev)) = heap.pop() {
+        let t = f64::from_bits(ev.t_bits);
+        match ev.kind {
+            EventKind::Dispatch | EventKind::ArrivalWake | EventKind::TransferWake => {
+                // Mirror the lockstep order exactly: land the clock on the
+                // wake instant first, then test the horizon — a transfer
+                // completing past `duration_s` still moves the clock (and
+                // the report's `sim_duration_s`) there before the run ends.
+                s.clock = t;
+                if t >= s.cfg.duration_s {
+                    break;
+                }
+                dispatch(&mut s, &mut heap, &mut seq, &mut inflight);
+            }
+            EventKind::PoolDone(_) => {
+                let still_running = {
+                    let fl = crate::util::fail::expect_invariant(
+                        inflight.as_mut(),
+                        "PoolDone event with no iteration in flight",
+                    );
+                    fl.pending -= 1;
+                    fl.pending > 0
+                };
+                if still_running {
+                    // An earlier pool finished; the iteration commits when
+                    // its last pool does.
+                    continue;
+                }
+                let fl = crate::util::fail::expect_invariant(
+                    inflight.take(),
+                    "committing an iteration with nothing in flight",
+                );
+                if !s.complete_at(&fl.iter, t) {
+                    // `max_iterations` cap.
+                    break;
+                }
+                if s.clock >= s.cfg.duration_s {
+                    break;
+                }
+                dispatch(&mut s, &mut heap, &mut seq, &mut inflight);
+            }
+        }
+    }
+    s.into_report()
+}

@@ -9,8 +9,18 @@
 //! Every completed request leaves a `RequestRecord` (TTFT / TPOT / e2e);
 //! [`sweep`] shards multi-seed × multi-scenario runs across the thread
 //! pool. All paper figures regenerate from `run()` reports.
+//!
+//! Two clock drivers advance a run ([`DriverKind`]): the event-heap
+//! scheduler in [`event`] (default — a single time-ordered binary event
+//! heap over arrivals, per-pool iteration completions, KV-handoff
+//! completions and idle wake-ups) and the frozen PR-4 lockstep loop
+//! (kept as the equivalence baseline, the sim-core analogue of
+//! `router::reference`). Both drive the same [`SimState`] iteration
+//! methods, and `tests/event_equivalence.rs` pins them bit-for-bit
+//! identical.
 
 pub mod cli;
+pub mod event;
 pub mod sweep;
 
 use std::time::Instant;
@@ -20,8 +30,41 @@ use crate::cluster::{Cluster, CostModel};
 use crate::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec, MoelessParams};
 use crate::engine::Policy;
 use crate::metrics::RunReport;
-use crate::router::{BatchLimits, Batcher};
+use crate::router::{BatchLimits, Batcher, IterationBatch};
 use crate::workload::{RoutingModel, Scenario, TraceRequest};
+
+/// Which clock driver advances a run. Both produce bit-for-bit identical
+/// reports (pinned by `tests/event_equivalence.rs`); they differ only in
+/// how the next instant is found.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DriverKind {
+    /// The event-heap scheduler ([`event`]): pops the next instant off a
+    /// single time-ordered binary heap instead of re-entering a polling
+    /// loop — the default, and the core that scales to sparse multi-hour
+    /// traces (see `experiments::simperf`'s driver comparison).
+    #[default]
+    Event,
+    /// The PR-4 `while clock < duration_s` polling loop, kept frozen as
+    /// the golden-equivalence baseline.
+    Lockstep,
+}
+
+impl DriverKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriverKind::Event => "event",
+            DriverKind::Lockstep => "lockstep",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DriverKind> {
+        match name {
+            "event" => Some(DriverKind::Event),
+            "lockstep" => Some(DriverKind::Lockstep),
+            _ => None,
+        }
+    }
+}
 
 /// Everything one simulation run needs.
 #[derive(Clone, Debug)]
@@ -62,6 +105,9 @@ pub struct SimConfig {
     /// pools with an explicit KV-transfer link between the phases.
     /// `None` = colocated (single pool).
     pub disagg: Option<DisaggSpec>,
+    /// Clock driver ([`DriverKind::Event`] unless a test or the CLI's
+    /// `--driver lockstep` pins the frozen baseline).
+    pub driver: DriverKind,
 }
 
 impl SimConfig {
@@ -85,6 +131,7 @@ impl SimConfig {
             kv_budget_override_gb: None,
             prefill_chunk_tokens: 0,
             disagg: None,
+            driver: DriverKind::Event,
         }
     }
 
@@ -180,15 +227,38 @@ impl Pool {
 /// residency (GB·s) as a fraction of that device's memory, priced at the
 /// device's own `cost_per_hour` — pay-as-you-go on the hardware actually
 /// occupied.
+///
+/// The residency vector must cover the pool's fleet one-to-one. A
+/// mismatch used to be monetized as free (entries past `spec.gpus.len()`
+/// silently dropped as $0 — under-billing with no signal); it is a policy
+/// accounting bug, so it now fails the run's invariant check instead.
 fn bill_serverless_dollars(policy: &dyn Policy, spec: &crate::config::ClusterSpec) -> f64 {
     let Some(res) = policy.residency_gb_s_by_gpu() else { return 0.0 };
+    if res.len() != spec.gpus.len() {
+        crate::util::fail::expect_invariant::<()>(
+            None,
+            &format!(
+                "serverless residency vector covers {} devices but the billed fleet has {}",
+                res.len(),
+                spec.gpus.len()
+            ),
+        );
+    }
     res.iter()
-        .enumerate()
-        .map(|(g, &gb_s)| {
-            let Some(gpu) = spec.gpus.get(g) else { return 0.0 };
+        .zip(&spec.gpus)
+        .map(|(&gb_s, gpu)| {
             if gpu.mem_gb > 0.0 {
                 gb_s / gpu.mem_gb / 3600.0 * gpu.cost_per_hour
             } else {
+                // A zero-memory device cannot host residency: nonzero GB·s
+                // against it means the policy billed hardware that does not
+                // exist — refuse rather than price it at $0.
+                if gb_s > 0.0 {
+                    crate::util::fail::expect_invariant::<()>(
+                        None,
+                        "serverless residency accrued on a zero-memory device",
+                    );
+                }
                 0.0
             }
         })
@@ -244,7 +314,271 @@ pub fn run(cfg: &SimConfig) -> RunReport {
     run_with_trace(cfg, &trace)
 }
 
-/// Run one simulation over a pre-generated arrival trace.
+/// All mutable state one run threads through its clock driver: pools,
+/// batcher, routing drift, report, and the virtual clock itself.
+///
+/// Both drivers — the event-heap scheduler ([`event`]) and the frozen
+/// lockstep loop ([`run_lockstep`]) — share these iteration methods
+/// verbatim, so their reports can only diverge if the *instants* at which
+/// batcher/engine calls happen diverge; `tests/event_equivalence.rs` pins
+/// that they never do.
+struct SimState<'a> {
+    cfg: &'a SimConfig,
+    wall_start: Instant,
+    routing: RoutingModel,
+    main_pool: Pool,
+    decode_pool: Option<Pool>,
+    batcher: Batcher,
+    report: RunReport,
+    kv_budget_gb: f64,
+    clock: f64,
+    last_clock: f64,
+    /// Disaggregated-mode per-layer forward buffers, hoisted out of the
+    /// iteration path (cleared per iteration, never reallocated).
+    pre_layers: Vec<f64>,
+    dec_layers: Vec<f64>,
+}
+
+impl<'a> SimState<'a> {
+    fn new(cfg: &'a SimConfig, trace: &[TraceRequest]) -> SimState<'a> {
+        // pallas-lint: allow(D2) — wall-clock here only stamps the report's host wall_s field; every simulated decision runs off the deterministic sim clock
+        let wall_start = Instant::now();
+        let routing = RoutingModel::new(&cfg.model, cfg.seed ^ 0x9e37);
+        // Colocated: one pool over the whole cluster. Disaggregated: a
+        // prefill pool and a decode pool partition the *device list* (each
+        // pool spec carries its devices' actual capabilities — with
+        // `fastest_prefill` the fastest devices serve prefill), each with
+        // its own policy state.
+        let pool_specs = cfg.disagg.map(|d| d.pools(&cfg.cluster));
+        let main_pool = Pool::new(
+            cfg,
+            pool_specs.as_ref().map(|(pre, _)| pre).unwrap_or(&cfg.cluster),
+            cfg.seed ^ 0x51ce,
+        );
+        let decode_pool =
+            pool_specs.as_ref().map(|(_, dec)| Pool::new(cfg, dec, cfg.seed ^ 0xdeca));
+        let kv_budget_gb = cfg.kv_budget_gb();
+        let mut batcher = Batcher::with_limits(BatchLimits {
+            max_batch_tokens: cfg.max_batch_tokens,
+            kv_budget_bytes: kv_budget_gb * 1e9,
+            kv_bytes_per_token: cfg.model.kv_bytes_per_token(),
+            prefill_chunk_tokens: cfg.prefill_chunk_tokens,
+        });
+        if let Some(d) = cfg.disagg {
+            batcher = batcher.with_transfer_link(d.link_gbps);
+        }
+        batcher.enqueue(trace);
+
+        let report = RunReport {
+            policy: main_pool.policy.name().to_string(),
+            model: cfg.model.name.clone(),
+            dataset: cfg.dataset.name.clone(),
+            driver: cfg.driver.name(),
+            kv_budget_gb,
+            prefill_chunk_tokens: cfg.prefill_chunk_tokens,
+            disagg: cfg.disagg.is_some(),
+            ..Default::default()
+        };
+
+        SimState {
+            cfg,
+            wall_start,
+            routing,
+            main_pool,
+            decode_pool,
+            batcher,
+            report,
+            kv_budget_gb,
+            clock: 0.0,
+            last_clock: 0.0,
+            pre_layers: Vec::with_capacity(cfg.model.n_layers),
+            dec_layers: Vec::with_capacity(cfg.model.n_layers),
+        }
+    }
+
+    /// Run the engine for one iteration starting at `self.clock`; returns
+    /// the per-pool forward times `(pre_ms, dec_ms, iter_ms)` where
+    /// `iter_ms = pre_ms.max(dec_ms)` is the iteration's latency
+    /// (colocated runs carry everything in `pre_ms`). The clock does NOT
+    /// advance here — the driver owns when completion commits
+    /// ([`Self::complete_at`]).
+    fn run_iteration_engine(&mut self, iter: &IterationBatch) -> (f64, f64, f64) {
+        let cfg = self.cfg;
+        // Popularity drifts with virtual time.
+        self.routing.step(self.clock - self.last_clock);
+        self.last_clock = self.clock;
+
+        if let Some(dec) = self.decode_pool.as_mut() {
+            // Disaggregated: the prefill pool chews the prompt chunks while
+            // the decode pool generates — concurrently, so the iteration
+            // costs the slower pool's time. A pool with no tokens this
+            // iteration idles (no forward, no expert cost).
+            let mut pre_ms = 0.0f64;
+            let mut dec_ms = 0.0f64;
+            // Buffered per-layer forwards: the gauge records the pool that
+            // ends up determining the iteration (max of per-pool sums), so
+            // the layer-forward sketch stays consistent with the clock
+            // advance.
+            self.pre_layers.clear();
+            self.dec_layers.clear();
+            for layer in 0..cfg.model.n_layers {
+                let pre = if iter.prefill_tokens > 0 {
+                    Some(self.main_pool.run_layer(
+                        &mut self.routing,
+                        layer,
+                        iter.prefill_tokens as f64,
+                        self.clock,
+                        &mut self.report,
+                    ))
+                } else {
+                    None
+                };
+                let dco = if iter.decode_seqs > 0 {
+                    Some(dec.run_layer(
+                        &mut self.routing,
+                        layer,
+                        iter.decode_seqs as f64,
+                        self.clock,
+                        &mut self.report,
+                    ))
+                } else {
+                    None
+                };
+                let (pf, pr, pa) = pre.unwrap_or((0.0, 0.0, 0.0));
+                let (df, dr, da) = dco.unwrap_or((0.0, 0.0, 0.0));
+                pre_ms += pf;
+                dec_ms += df;
+                self.pre_layers.push(pf);
+                self.dec_layers.push(df);
+                // The cluster-wide replica count is the pools' sum;
+                // accuracy averages only the pools that actually ran (an
+                // idle pool must not fabricate a perfect sample).
+                self.report.replicas_per_layer.add(pr + dr);
+                let pools_ran = usize::from(pre.is_some()) + usize::from(dco.is_some());
+                self.report.pred_accuracy.add((pa + da) / pools_ran.max(1) as f64);
+            }
+            for &fwd in if pre_ms >= dec_ms { &self.pre_layers } else { &self.dec_layers } {
+                self.report.layer_forward.add(fwd);
+            }
+            let iter_ms = pre_ms.max(dec_ms);
+            self.main_pool.busy_s += pre_ms / 1e3;
+            dec.busy_s += dec_ms / 1e3;
+            self.main_pool.bill_resident(iter_ms, &mut self.report);
+            dec.bill_resident(iter_ms, &mut self.report);
+            (pre_ms, dec_ms, iter_ms)
+        } else {
+            let mut iter_ms = 0.0f64;
+            for layer in 0..cfg.model.n_layers {
+                let (fwd, replicas, acc) = self.main_pool.run_layer(
+                    &mut self.routing,
+                    layer,
+                    iter.total_tokens() as f64,
+                    self.clock,
+                    &mut self.report,
+                );
+                iter_ms += fwd;
+                self.report.layer_forward.add(fwd);
+                self.report.replicas_per_layer.add(replicas);
+                self.report.pred_accuracy.add(acc);
+            }
+            // Serverful: the whole model's experts are resident for the
+            // entire busy window regardless of activity (static EP
+            // allocation); non-expert memory is resident for every policy.
+            self.main_pool.busy_s += iter_ms / 1e3;
+            self.main_pool.bill_resident(iter_ms, &mut self.report);
+            (iter_ms, 0.0, iter_ms)
+        }
+    }
+
+    /// Commit one finished iteration at instant `now`: advance the clock,
+    /// complete the batch, notify policies, bump counters, sample gauges.
+    /// Returns `false` when the `max_iterations` cap stops the run.
+    fn complete_at(&mut self, iter: &IterationBatch, now: f64) -> bool {
+        self.clock = now;
+        self.batcher.complete_iteration(now);
+        self.main_pool.policy.end_iteration(&mut self.main_pool.cluster, now);
+        if let Some(dec) = self.decode_pool.as_mut() {
+            dec.policy.end_iteration(&mut dec.cluster, now);
+        }
+        self.report.iterations += 1;
+        self.report.tokens_processed += iter.total_tokens() as u64;
+        // Memory-pressure gauges, sampled once per iteration (O(1): the
+        // batcher's KV ledger is a running counter, and the gauges are
+        // streaming accumulators).
+        self.report.queue_depth.add(self.batcher.queue_depth() as f64);
+        self.report.kv_util.add(if self.kv_budget_gb.is_finite() && self.kv_budget_gb > 0.0 {
+            self.batcher.kv_bytes_in_use() / (self.kv_budget_gb * 1e9)
+        } else {
+            0.0
+        });
+        !(self.cfg.max_iterations > 0 && self.report.iterations >= self.cfg.max_iterations)
+    }
+
+    /// Final accounting after the driver stops: policy finish hooks,
+    /// residency/dollar bills, per-GPU signals, counter harvest.
+    fn into_report(mut self) -> RunReport {
+        let cfg = self.cfg;
+        let clock = self.clock;
+        self.main_pool.policy.finish(&mut self.main_pool.cluster, clock);
+        self.report.residency_gb_s = self.main_pool.policy.residency_gb_s();
+        self.report.warm_fraction = self.main_pool.policy.warm_fraction();
+        self.report.dollar_cost +=
+            bill_serverless_dollars(self.main_pool.policy.as_ref(), &self.main_pool.cluster.spec);
+        if let Some(dec) = self.decode_pool.as_mut() {
+            dec.policy.finish(&mut dec.cluster, clock);
+            self.report.residency_gb_s += dec.policy.residency_gb_s();
+            self.report.warm_fraction =
+                0.5 * (self.report.warm_fraction + dec.policy.warm_fraction());
+            self.report.dollar_cost +=
+                bill_serverless_dollars(dec.policy.as_ref(), &dec.cluster.spec);
+            if clock > 0.0 {
+                self.report.prefill_pool_util = self.main_pool.busy_s / clock;
+                self.report.decode_pool_util = dec.busy_s / clock;
+            }
+        }
+        // Per-GPU served-work signals, mapped back to the global device
+        // indices (disaggregated pools report through their split's index
+        // lists; a degenerate oversubscribed split accumulates).
+        self.report.gpu_tokens = vec![0.0; cfg.cluster.n_gpus()];
+        self.report.gpu_busy_ms = vec![0.0; cfg.cluster.n_gpus()];
+        match cfg.disagg {
+            None => {
+                self.report.gpu_tokens.copy_from_slice(&self.main_pool.cluster.served_tokens);
+                self.report.gpu_busy_ms.copy_from_slice(&self.main_pool.cluster.served_ms);
+            }
+            Some(d) => {
+                let (pre_idx, dec_idx) = d.split_indices(&cfg.cluster);
+                for (local, &global) in pre_idx.iter().enumerate() {
+                    self.report.gpu_tokens[global] += self.main_pool.cluster.served_tokens[local];
+                    self.report.gpu_busy_ms[global] += self.main_pool.cluster.served_ms[local];
+                }
+                if let Some(dec) = self.decode_pool.as_ref() {
+                    for (local, &global) in dec_idx.iter().enumerate() {
+                        self.report.gpu_tokens[global] += dec.cluster.served_tokens[local];
+                        self.report.gpu_busy_ms[global] += dec.cluster.served_ms[local];
+                    }
+                }
+            }
+        }
+        self.report.kv_transfer_gb = self.batcher.kv_transfer_bytes / 1e9;
+        self.report.prefill_chunks = self.batcher.chunks_landed;
+        self.report.completed_requests = self.batcher.completed;
+        self.report.preemptions = self.batcher.preemptions;
+        self.report.resumes = self.batcher.resumes;
+        self.report.rejected_requests = self.batcher.rejected;
+        self.report.delayed_admissions = self.batcher.delayed_admissions;
+        self.report.tokens_recomputed = self.batcher.tokens_recomputed;
+        self.report.ttft_ms = std::mem::take(&mut self.batcher.ttft_ms);
+        self.report.e2e_ms = std::mem::take(&mut self.batcher.e2e_ms);
+        self.report.requests = std::mem::take(&mut self.batcher.finished);
+        self.report.sim_duration_s = clock;
+        self.report.wall_s = self.wall_start.elapsed().as_secs_f64();
+        self.report
+    }
+}
+
+/// Run one simulation over a pre-generated arrival trace, under the
+/// configured [`DriverKind`].
 ///
 /// Trace generation is policy-independent, so multi-policy sweeps
 /// ([`sweep::run_sweep`]) generate each `(scenario, seed)` trace once and
@@ -253,51 +587,20 @@ pub fn run(cfg: &SimConfig) -> RunReport {
 /// the scenario; [`run`] is the convenience wrapper that derives it from
 /// `cfg.scenario`.
 pub fn run_with_trace(cfg: &SimConfig, trace: &[TraceRequest]) -> RunReport {
-    // pallas-lint: allow(D2) — wall-clock here only stamps the report's host wall_s field; every simulated decision runs off the deterministic sim clock
-    let wall_start = Instant::now();
-    let mut routing = RoutingModel::new(&cfg.model, cfg.seed ^ 0x9e37);
-    // Colocated: one pool over the whole cluster. Disaggregated: a prefill
-    // pool and a decode pool partition the *device list* (each pool spec
-    // carries its devices' actual capabilities — with `fastest_prefill`
-    // the fastest devices serve prefill), each with its own policy state.
-    let pool_specs = cfg.disagg.map(|d| d.pools(&cfg.cluster));
-    let mut main_pool = Pool::new(
-        cfg,
-        pool_specs.as_ref().map(|(pre, _)| pre).unwrap_or(&cfg.cluster),
-        cfg.seed ^ 0x51ce,
-    );
-    let mut decode_pool =
-        pool_specs.as_ref().map(|(_, dec)| Pool::new(cfg, dec, cfg.seed ^ 0xdeca));
-    let kv_budget_gb = cfg.kv_budget_gb();
-    let mut batcher = Batcher::with_limits(BatchLimits {
-        max_batch_tokens: cfg.max_batch_tokens,
-        kv_budget_bytes: kv_budget_gb * 1e9,
-        kv_bytes_per_token: cfg.model.kv_bytes_per_token(),
-        prefill_chunk_tokens: cfg.prefill_chunk_tokens,
-    });
-    if let Some(d) = cfg.disagg {
-        batcher = batcher.with_transfer_link(d.link_gbps);
+    let state = SimState::new(cfg, trace);
+    match cfg.driver {
+        DriverKind::Event => event::run_event(state),
+        DriverKind::Lockstep => run_lockstep(state),
     }
-    batcher.enqueue(trace);
+}
 
-    let mut report = RunReport {
-        policy: main_pool.policy.name().to_string(),
-        model: cfg.model.name.clone(),
-        dataset: cfg.dataset.name.clone(),
-        kv_budget_gb,
-        prefill_chunk_tokens: cfg.prefill_chunk_tokens,
-        disagg: cfg.disagg.is_some(),
-        ..Default::default()
-    };
-
-    let mut clock = 0.0f64;
-    let mut last_clock = 0.0f64;
-    // Disaggregated-mode per-layer forward buffers, hoisted out of the
-    // loop (cleared per iteration, never reallocated).
-    let mut pre_layers: Vec<f64> = Vec::with_capacity(cfg.model.n_layers);
-    let mut dec_layers: Vec<f64> = Vec::with_capacity(cfg.model.n_layers);
-    while clock < cfg.duration_s {
-        let Some(iter) = batcher.next_iteration(clock) else {
+/// The frozen PR-4 lockstep loop, kept verbatim as the golden-equivalence
+/// baseline for the event-heap driver (the sim-core analogue of
+/// `router::reference`): poll the batcher, run the engine, advance the
+/// clock by the iteration's latency, repeat.
+fn run_lockstep(mut s: SimState) -> RunReport {
+    while s.clock < s.cfg.duration_s {
+        let Some(iter) = s.batcher.next_iteration(s.clock) else {
             // Idle: jump to the exact next wake-up (or finish). The jump
             // must strictly advance the virtual clock — a requeued
             // (preempted) sequence reports a past arrival, and re-entering
@@ -308,13 +611,13 @@ pub fn run_with_trace(cfg: &SimConfig, trace: &[TraceRequest]) -> RunReport {
             // straight to its completion instead of the old defensive
             // 1 ms creep.
             match idle_wakeup(
-                clock,
-                cfg.duration_s,
-                batcher.next_arrival(),
-                batcher.next_transfer_ready(),
+                s.clock,
+                s.cfg.duration_s,
+                s.batcher.next_arrival(),
+                s.batcher.next_transfer_ready(),
             ) {
                 Wake::At(t) => {
-                    clock = t;
+                    s.clock = t;
                     continue;
                 }
                 Wake::Drained => break,
@@ -329,164 +632,12 @@ pub fn run_with_trace(cfg: &SimConfig, trace: &[TraceRequest]) -> RunReport {
                 }
             }
         };
-        // Popularity drifts with virtual time.
-        routing.step(clock - last_clock);
-        last_clock = clock;
-
-        let iter_ms = if let Some(dec) = decode_pool.as_mut() {
-            // Disaggregated: the prefill pool chews the prompt chunks while
-            // the decode pool generates — concurrently, so the iteration
-            // costs the slower pool's time. A pool with no tokens this
-            // iteration idles (no forward, no expert cost).
-            let mut pre_ms = 0.0f64;
-            let mut dec_ms = 0.0f64;
-            // Buffered per-layer forwards: the gauge records the pool that
-            // ends up determining the iteration (max of per-pool sums), so
-            // the layer-forward sketch stays consistent with the clock
-            // advance.
-            pre_layers.clear();
-            dec_layers.clear();
-            for layer in 0..cfg.model.n_layers {
-                let pre = if iter.prefill_tokens > 0 {
-                    Some(main_pool.run_layer(
-                        &mut routing,
-                        layer,
-                        iter.prefill_tokens as f64,
-                        clock,
-                        &mut report,
-                    ))
-                } else {
-                    None
-                };
-                let dco = if iter.decode_seqs > 0 {
-                    Some(dec.run_layer(
-                        &mut routing,
-                        layer,
-                        iter.decode_seqs as f64,
-                        clock,
-                        &mut report,
-                    ))
-                } else {
-                    None
-                };
-                let (pf, pr, pa) = pre.unwrap_or((0.0, 0.0, 0.0));
-                let (df, dr, da) = dco.unwrap_or((0.0, 0.0, 0.0));
-                pre_ms += pf;
-                dec_ms += df;
-                pre_layers.push(pf);
-                dec_layers.push(df);
-                // The cluster-wide replica count is the pools' sum;
-                // accuracy averages only the pools that actually ran (an
-                // idle pool must not fabricate a perfect sample).
-                report.replicas_per_layer.add(pr + dr);
-                let pools_ran = usize::from(pre.is_some()) + usize::from(dco.is_some());
-                report.pred_accuracy.add((pa + da) / pools_ran.max(1) as f64);
-            }
-            for &fwd in if pre_ms >= dec_ms { &pre_layers } else { &dec_layers } {
-                report.layer_forward.add(fwd);
-            }
-            let iter_ms = pre_ms.max(dec_ms);
-            main_pool.busy_s += pre_ms / 1e3;
-            dec.busy_s += dec_ms / 1e3;
-            main_pool.bill_resident(iter_ms, &mut report);
-            dec.bill_resident(iter_ms, &mut report);
-            iter_ms
-        } else {
-            let mut iter_ms = 0.0f64;
-            for layer in 0..cfg.model.n_layers {
-                let (fwd, replicas, acc) = main_pool.run_layer(
-                    &mut routing,
-                    layer,
-                    iter.total_tokens() as f64,
-                    clock,
-                    &mut report,
-                );
-                iter_ms += fwd;
-                report.layer_forward.add(fwd);
-                report.replicas_per_layer.add(replicas);
-                report.pred_accuracy.add(acc);
-            }
-            // Serverful: the whole model's experts are resident for the
-            // entire busy window regardless of activity (static EP
-            // allocation); non-expert memory is resident for every policy.
-            main_pool.busy_s += iter_ms / 1e3;
-            main_pool.bill_resident(iter_ms, &mut report);
-            iter_ms
-        };
-        clock += iter_ms / 1e3;
-        batcher.complete_iteration(clock);
-        main_pool.policy.end_iteration(&mut main_pool.cluster, clock);
-        if let Some(dec) = decode_pool.as_mut() {
-            dec.policy.end_iteration(&mut dec.cluster, clock);
-        }
-        report.iterations += 1;
-        report.tokens_processed += iter.total_tokens() as u64;
-        // Memory-pressure gauges, sampled once per iteration (O(1): the
-        // batcher's KV ledger is a running counter, and the gauges are
-        // streaming accumulators).
-        report.queue_depth.add(batcher.queue_depth() as f64);
-        report.kv_util.add(if kv_budget_gb.is_finite() && kv_budget_gb > 0.0 {
-            batcher.kv_bytes_in_use() / (kv_budget_gb * 1e9)
-        } else {
-            0.0
-        });
-
-        if cfg.max_iterations > 0 && report.iterations >= cfg.max_iterations {
+        let (_pre_ms, _dec_ms, iter_ms) = s.run_iteration_engine(&iter);
+        if !s.complete_at(&iter, s.clock + iter_ms / 1e3) {
             break;
         }
     }
-    main_pool.policy.finish(&mut main_pool.cluster, clock);
-    report.residency_gb_s = main_pool.policy.residency_gb_s();
-    report.warm_fraction = main_pool.policy.warm_fraction();
-    report.dollar_cost += bill_serverless_dollars(main_pool.policy.as_ref(), &main_pool.cluster.spec);
-    if let Some(dec) = decode_pool.as_mut() {
-        dec.policy.finish(&mut dec.cluster, clock);
-        report.residency_gb_s += dec.policy.residency_gb_s();
-        report.warm_fraction = 0.5 * (report.warm_fraction + dec.policy.warm_fraction());
-        report.dollar_cost += bill_serverless_dollars(dec.policy.as_ref(), &dec.cluster.spec);
-        if clock > 0.0 {
-            report.prefill_pool_util = main_pool.busy_s / clock;
-            report.decode_pool_util = dec.busy_s / clock;
-        }
-    }
-    // Per-GPU served-work signals, mapped back to the global device
-    // indices (disaggregated pools report through their split's index
-    // lists; a degenerate oversubscribed split accumulates).
-    report.gpu_tokens = vec![0.0; cfg.cluster.n_gpus()];
-    report.gpu_busy_ms = vec![0.0; cfg.cluster.n_gpus()];
-    match cfg.disagg {
-        None => {
-            report.gpu_tokens.copy_from_slice(&main_pool.cluster.served_tokens);
-            report.gpu_busy_ms.copy_from_slice(&main_pool.cluster.served_ms);
-        }
-        Some(d) => {
-            let (pre_idx, dec_idx) = d.split_indices(&cfg.cluster);
-            for (local, &global) in pre_idx.iter().enumerate() {
-                report.gpu_tokens[global] += main_pool.cluster.served_tokens[local];
-                report.gpu_busy_ms[global] += main_pool.cluster.served_ms[local];
-            }
-            if let Some(dec) = decode_pool.as_ref() {
-                for (local, &global) in dec_idx.iter().enumerate() {
-                    report.gpu_tokens[global] += dec.cluster.served_tokens[local];
-                    report.gpu_busy_ms[global] += dec.cluster.served_ms[local];
-                }
-            }
-        }
-    }
-    report.kv_transfer_gb = batcher.kv_transfer_bytes / 1e9;
-    report.prefill_chunks = batcher.chunks_landed;
-    report.completed_requests = batcher.completed;
-    report.preemptions = batcher.preemptions;
-    report.resumes = batcher.resumes;
-    report.rejected_requests = batcher.rejected;
-    report.delayed_admissions = batcher.delayed_admissions;
-    report.tokens_recomputed = batcher.tokens_recomputed;
-    report.ttft_ms = std::mem::take(&mut batcher.ttft_ms);
-    report.e2e_ms = std::mem::take(&mut batcher.e2e_ms);
-    report.requests = std::mem::take(&mut batcher.finished);
-    report.sim_duration_s = clock;
-    report.wall_s = wall_start.elapsed().as_secs_f64();
-    report
+    s.into_report()
 }
 
 /// Run the paper's four policies on the same (model, dataset, trace).
@@ -516,6 +667,110 @@ mod tests {
         cfg.base_rps = 3.0;
         cfg.seed = 11;
         run(&cfg)
+    }
+
+    /// Test double: a "serverless" policy whose per-GPU residency vector
+    /// is shorter than the billed fleet — the silent-under-billing shape
+    /// `bill_serverless_dollars` must refuse to monetize as free.
+    struct ShortResidency(Vec<f64>);
+
+    impl crate::engine::Policy for ShortResidency {
+        fn name(&self) -> &'static str {
+            "short-residency"
+        }
+
+        fn run_layer(
+            &mut self,
+            _layer: usize,
+            _actual: &[f64],
+            _cluster: &mut crate::cluster::Cluster,
+            _cost: &crate::cluster::CostModel,
+            _now_s: f64,
+        ) -> crate::engine::LayerOutcome {
+            crate::engine::LayerOutcome::default()
+        }
+
+        fn residency_gb_s_by_gpu(&self) -> Option<&[f64]> {
+            Some(&self.0)
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "internal invariant violated: serverless residency vector")]
+    fn short_residency_vector_is_caught_not_billed_as_free() {
+        // 3 residency entries against an 8-GPU fleet: before the fix the
+        // zip dropped the mismatch and billed the missing devices $0.
+        let policy = ShortResidency(vec![1.0, 2.0, 3.0]);
+        bill_serverless_dollars(&policy, &ClusterSpec::a6000_x8());
+    }
+
+    #[test]
+    fn matching_residency_vector_still_bills_per_device() {
+        let spec = ClusterSpec::a6000_x8();
+        let policy = ShortResidency(vec![3600.0; 8]);
+        // 3600 GB·s on every device = one full device-hour of memory,
+        // scaled by each GPU's per-GB share of its cost_per_hour.
+        let dollars = bill_serverless_dollars(&policy, &spec);
+        let expected: f64 =
+            spec.gpus.iter().map(|g| 3600.0 / g.mem_gb / 3600.0 * g.cost_per_hour).sum();
+        assert!((dollars - expected).abs() < 1e-12, "{dollars} vs {expected}");
+        assert!(dollars > 0.0);
+    }
+
+    #[test]
+    fn idle_wakeup_horizon_boundary() {
+        use super::{idle_wakeup, Wake};
+        // An arrival at exactly t == duration_s sits outside the half-open
+        // horizon the drivers run over (`clock < duration_s`): Drained.
+        assert_eq!(idle_wakeup(0.0, 10.0, Some(10.0), None), Wake::Drained);
+        // One ulp inside the horizon is still an exact jump.
+        let just_inside = f64::from_bits(10.0f64.to_bits() - 1);
+        assert_eq!(idle_wakeup(0.0, 10.0, Some(just_inside), None), Wake::At(just_inside));
+        // A KV-handoff completion may legally land past the horizon: it is
+        // an At (the driver moves the clock there, then stops), never a
+        // silent Drained — `sim_duration_s` must record the overshoot.
+        assert_eq!(idle_wakeup(2.0, 10.0, Some(0.5), Some(11.0)), Wake::At(11.0));
+        // (The third verdict, Stalled, is pinned unreachable from legal
+        // batcher states by `idle_wakeup_is_exact`.)
+    }
+
+    #[test]
+    fn event_driver_preserves_wake_verdicts() {
+        use crate::config::DisaggSpec;
+        // Drained: arrivals stop inside the horizon; both drivers end by
+        // draining, with identical ledgers and the same final clock.
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.duration_s = 20.0;
+        cfg.base_rps = 3.0;
+        cfg.seed = 11;
+        cfg.driver = DriverKind::Lockstep;
+        let lock = run(&cfg);
+        cfg.driver = DriverKind::Event;
+        let ev = run(&cfg);
+        assert_eq!(lock.driver, "lockstep");
+        assert_eq!(ev.driver, "event");
+        assert_eq!(lock.requests, ev.requests);
+        assert_eq!(lock.iterations, ev.iterations);
+        assert_eq!(lock.sim_duration_s.to_bits(), ev.sim_duration_s.to_bits());
+
+        // At (including the past-horizon transfer wake): disaggregated
+        // with a slow link so KV handoffs are live wake-up targets; the
+        // drivers must take the same jumps.
+        cfg.prefill_chunk_tokens = 128;
+        cfg.kv_budget_override_gb = Some(1.5);
+        cfg.disagg =
+            Some(DisaggSpec { link_gbps: 0.05, ..DisaggSpec::even_split(&cfg.cluster) });
+        cfg.driver = DriverKind::Lockstep;
+        let lock = run(&cfg);
+        cfg.driver = DriverKind::Event;
+        let ev = run(&cfg);
+        assert!(ev.kv_transfer_gb > 0.0);
+        assert_eq!(lock.requests, ev.requests);
+        assert_eq!(lock.sim_duration_s.to_bits(), ev.sim_duration_s.to_bits());
     }
 
     #[test]

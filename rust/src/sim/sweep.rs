@@ -393,6 +393,27 @@ mod tests {
     }
 
     #[test]
+    fn async_ep_sweeps_alongside_the_paper_set() {
+        // The de-synchronization policy is a first-class sweep citizen:
+        // same shared trace, same summary rows as the paper set.
+        let mut spec = small_spec();
+        spec.threads = 2;
+        spec.policies = vec![PolicyKind::Megatron, PolicyKind::AsyncEp];
+        spec.scenarios = vec![Scenario::bursty()];
+        spec.seeds = vec![1];
+        let cells = run_sweep(&spec);
+        assert_eq!(cells.len(), 2);
+        let rows = summarize(&cells, &SloSpec::default());
+        let ae = rows.iter().find(|r| r.policy == "async-ep").expect("async-ep row");
+        assert!(ae.completed > 0);
+        assert!(ae.ttft_p50_ms > 0.0);
+        // Both serve the whole static expert set every iteration (the
+        // per-layer comparison itself is pinned in baselines::async_ep).
+        let ae_cell = cells.iter().find(|c| c.policy == PolicyKind::AsyncEp).expect("ae cell");
+        assert!(ae_cell.report.mean_replicas() >= spec.model.n_experts as f64 - 1e-9);
+    }
+
+    #[test]
     fn two_identical_sweeps_produce_identical_summaries() {
         // Pins the ordered trace cache: two full sweep+summarize passes of
         // the same spec must agree field-for-field (every f64 bit-equal),

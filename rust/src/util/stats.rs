@@ -46,13 +46,16 @@ pub fn cv(xs: &[f64]) -> f64 {
 
 /// Percentile by linear interpolation on the sorted sample; q in [0,100].
 ///
-/// Contract: `sorted` must be nondecreasing — the result is meaningless
-/// otherwise. Enforced in debug builds; release callers are audited
-/// ([`Cdf::of`] and `benchkit::Bencher::run` sort before calling).
+/// Contract: `sorted` must be nondecreasing in [`f64::total_cmp`] order
+/// (NaN sorts after every number, -0.0 before +0.0) — the same total
+/// order [`percentile_unsorted`] selects by, so the two agree on any
+/// multiset, NaN-bearing ones included. Enforced in debug builds; release
+/// callers are audited ([`Cdf::of`] total_cmp-sorts before calling;
+/// `benchkit` queries through [`percentile_unsorted`]).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     debug_assert!(
-        sorted.windows(2).all(|w| w[0] <= w[1]),
-        "percentile requires sorted input"
+        sorted.windows(2).all(|w| w[0].total_cmp(&w[1]).is_le()),
+        "percentile requires input sorted in total_cmp order"
     );
     if sorted.is_empty() {
         return 0.0;
@@ -249,6 +252,21 @@ impl QuantileSketch {
     }
 
     pub fn add(&mut self, x: f64) {
+        if x.is_nan() {
+            // A NaN sample would poison `sum`/`mean()` forever while the
+            // exact `lo`/`hi` silently skipped it (`x < self.lo` is false
+            // for NaN) — a clean min/max wrapped around a NaN mean. The
+            // sample is a caller bug: refuse it loudly in debug builds,
+            // skip it consistently (count, sum, extremes, buckets all
+            // untouched) in release.
+            if cfg!(debug_assertions) {
+                crate::util::fail::expect_invariant::<()>(
+                    None,
+                    "QuantileSketch::add fed a NaN sample",
+                );
+            }
+            return;
+        }
         if self.buckets.is_empty() {
             self.buckets = vec![0u64; SKETCH_BUCKETS];
         }
@@ -520,18 +538,35 @@ mod tests {
     #[test]
     fn percentile_unsorted_matches_sorted_percentile() {
         // Selection must reproduce the sort-based definition exactly,
-        // including the interpolation arithmetic.
-        let base = [7.0, 1.0, 9.0, 3.0, 5.0, 2.0, 8.0, 6.0, 4.0, 0.0];
-        let mut sorted = base.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        for q in [0.0, 1.0, 25.0, 37.5, 50.0, 75.0, 99.0, 100.0] {
-            let mut scratch = base.to_vec();
-            assert_eq!(
-                percentile_unsorted(&mut scratch, q),
-                percentile(&sorted, q),
-                "q={q}"
-            );
+        // including the interpolation arithmetic — on clean samples and on
+        // the total_cmp edge cases both variants now share: NaN (sorts
+        // after every number) and ±0.0 (-0.0 sorts before +0.0).
+        let clean = [7.0, 1.0, 9.0, 3.0, 5.0, 2.0, 8.0, 6.0, 4.0, 0.0];
+        let edgy = [3.0, f64::NAN, -0.0, 0.0, -2.0, f64::NAN, 1.0, -0.0];
+        for base in [&clean[..], &edgy[..]] {
+            let mut sorted = base.to_vec();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            for q in [0.0, 1.0, 25.0, 37.5, 50.0, 75.0, 99.0, 100.0] {
+                let mut scratch = base.to_vec();
+                let by_selection = percentile_unsorted(&mut scratch, q);
+                let by_sort = percentile(&sorted, q);
+                // Bitwise agreement, with any-NaN == any-NaN (interpolating
+                // against a NaN order statistic yields NaN in both).
+                assert!(
+                    by_selection.to_bits() == by_sort.to_bits()
+                        || (by_selection.is_nan() && by_sort.is_nan()),
+                    "q={q}: selection {by_selection} vs sort {by_sort}"
+                );
+            }
         }
+        // A NaN-bearing slice interpolates NaN only where the rank actually
+        // touches the NaN tail; lower ranks stay numeric.
+        let mut nan_tail = [2.0, 1.0, f64::NAN, 3.0];
+        assert_eq!(percentile_unsorted(&mut nan_tail, 0.0), 1.0);
+        let mut nan_tail = [2.0, 1.0, f64::NAN, 3.0];
+        assert!(percentile_unsorted(&mut nan_tail, 100.0).is_nan());
+        // Signed zeros order without tripping the sorted-input contract.
+        assert_eq!(percentile(&[-0.0, 0.0], 50.0), 0.0);
         assert_eq!(percentile_unsorted(&mut [], 50.0), 0.0);
         assert_eq!(percentile_unsorted(&mut [4.0], 99.0), 4.0);
     }
@@ -588,6 +623,32 @@ mod tests {
         assert_eq!(tiny.max(), 1e12);
         assert!(tiny.p(40.0) >= 0.0 && tiny.p(40.0) <= 1e12);
         assert_eq!(tiny.rows(&[100.0])[0].0, 1e12);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "internal invariant violated: QuantileSketch::add fed a NaN sample")]
+    fn sketch_rejects_nan_in_debug() {
+        let mut s = QuantileSketch::default();
+        s.add(1.0);
+        s.add(f64::NAN);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn sketch_skips_nan_consistently_in_release() {
+        // Release semantics: a NaN sample is dropped whole — no count, no
+        // sum poisoning, no bucket — so the sketch equals the NaN-free
+        // stream's sketch bit for bit.
+        let mut with_nan = QuantileSketch::default();
+        for x in [2.0, f64::NAN, 4.0, f64::NAN] {
+            with_nan.add(x);
+        }
+        let clean = QuantileSketch::of(&[2.0, 4.0]);
+        assert_eq!(with_nan, clean);
+        assert_eq!(with_nan.len(), 2);
+        assert!((with_nan.mean() - 3.0).abs() < 1e-12);
+        assert_eq!((with_nan.min(), with_nan.max()), (2.0, 4.0));
     }
 
     #[test]

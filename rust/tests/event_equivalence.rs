@@ -1,0 +1,191 @@
+//! Golden-equivalence suite for the event-heap clock driver (PR 7).
+//!
+//! The event driver must be *behavior-preserving* against the frozen
+//! PR-4 lockstep loop: both drive the same `SimState` iteration methods,
+//! so every admission, preemption victim, iteration composition, layer
+//! forward time and billing entry must come out bit-for-bit identical —
+//! the only thing the drivers are allowed to differ on is how they find
+//! the next instant. This suite runs identical configurations under both
+//! `DriverKind`s for the colocated, KV-pressure, chunked and
+//! disaggregated shapes (plus the `max_iterations` cap and a randomized
+//! differential sweep) and asserts full-report equality.
+//!
+//! Why bit-for-bit is achievable and not merely approximate: the event
+//! driver commits an iteration at `clock + pre_ms.max(dec_ms) / 1e3` by
+//! popping the later of two per-pool completion events pushed at
+//! `clock + pre_ms / 1e3` and `clock + dec_ms / 1e3`. `f64::max` returns
+//! one of its operands exactly and `x -> clock + x / 1e3` is monotone,
+//! so the later pop instant is the same f64 the lockstep loop computes.
+//! Idle jumps reuse the shared `idle_wakeup` decision function verbatim.
+
+use moeless::baselines::PolicyKind;
+use moeless::config::{DatasetSpec, DisaggSpec, ModelSpec};
+use moeless::metrics::RunReport;
+use moeless::sim::{run, DriverKind, SimConfig};
+use moeless::util::quickcheck::property;
+
+fn base_cfg(policy: PolicyKind) -> SimConfig {
+    let mut cfg = SimConfig::new(ModelSpec::mixtral_8x7b(), DatasetSpec::lmsys(), policy);
+    cfg.duration_s = 20.0;
+    cfg.base_rps = 4.0;
+    cfg.seed = 7;
+    cfg
+}
+
+/// Run one configuration under both drivers.
+fn run_both(cfg: &SimConfig) -> (RunReport, RunReport) {
+    let mut ev_cfg = cfg.clone();
+    ev_cfg.driver = DriverKind::Event;
+    let mut lock_cfg = cfg.clone();
+    lock_cfg.driver = DriverKind::Lockstep;
+    (run(&ev_cfg), run(&lock_cfg))
+}
+
+/// Full-report equality, floats by bit pattern. `wall_s` is the one
+/// field legitimately allowed to differ (host time, not sim state).
+fn assert_bit_identical(label: &str, ev: &RunReport, lock: &RunReport) {
+    assert_eq!(ev.driver, "event", "{label}");
+    assert_eq!(lock.driver, "lockstep", "{label}");
+    // Per-request records carry every TTFT/TPOT/e2e timestamp: this is
+    // the strongest single assertion.
+    assert_eq!(ev.requests, lock.requests, "{label}: per-request records diverged");
+    assert_eq!(ev.layer_forward, lock.layer_forward, "{label}: layer forwards diverged");
+    assert_eq!(ev.ttft_ms, lock.ttft_ms, "{label}: ttft stream diverged");
+    // Scheduler ledger.
+    assert_eq!(ev.iterations, lock.iterations, "{label}: iterations");
+    assert_eq!(ev.completed_requests, lock.completed_requests, "{label}: completed");
+    assert_eq!(ev.preemptions, lock.preemptions, "{label}: preemptions");
+    assert_eq!(ev.resumes, lock.resumes, "{label}: resumes");
+    assert_eq!(ev.rejected_requests, lock.rejected_requests, "{label}: rejected");
+    assert_eq!(ev.delayed_admissions, lock.delayed_admissions, "{label}: delayed");
+    assert_eq!(ev.tokens_processed, lock.tokens_processed, "{label}: tokens");
+    assert_eq!(ev.tokens_recomputed, lock.tokens_recomputed, "{label}: recompute");
+    assert_eq!(ev.prefill_chunks, lock.prefill_chunks, "{label}: chunks");
+    assert_eq!(ev.cold_starts, lock.cold_starts, "{label}: cold starts");
+    // Billing and accounting, bitwise.
+    assert_eq!(
+        ev.cost_gb_s.to_bits(),
+        lock.cost_gb_s.to_bits(),
+        "{label}: cost_gb_s {} vs {}",
+        ev.cost_gb_s,
+        lock.cost_gb_s
+    );
+    assert_eq!(
+        ev.dollar_cost.to_bits(),
+        lock.dollar_cost.to_bits(),
+        "{label}: dollar_cost {} vs {}",
+        ev.dollar_cost,
+        lock.dollar_cost
+    );
+    assert_eq!(
+        ev.residency_gb_s.to_bits(),
+        lock.residency_gb_s.to_bits(),
+        "{label}: residency_gb_s"
+    );
+    assert_eq!(
+        ev.kv_transfer_gb.to_bits(),
+        lock.kv_transfer_gb.to_bits(),
+        "{label}: kv_transfer_gb"
+    );
+    assert_eq!(
+        ev.sim_duration_s.to_bits(),
+        lock.sim_duration_s.to_bits(),
+        "{label}: sim_duration_s {} vs {}",
+        ev.sim_duration_s,
+        lock.sim_duration_s
+    );
+    // Per-GPU attribution (exact f64 streams, so Vec equality is exact).
+    assert_eq!(ev.gpu_tokens, lock.gpu_tokens, "{label}: gpu_tokens diverged");
+    assert_eq!(ev.gpu_busy_ms, lock.gpu_busy_ms, "{label}: gpu_busy_ms diverged");
+}
+
+#[test]
+fn colocated_event_matches_lockstep() {
+    let (ev, lock) = run_both(&base_cfg(PolicyKind::Moeless));
+    assert!(ev.completed_requests > 0, "colocated: run must do work");
+    assert_bit_identical("colocated", &ev, &lock);
+}
+
+#[test]
+fn kv_pressure_event_matches_lockstep() {
+    // A tight KV carve-out: preemption/resume churn and delayed
+    // admissions exercise the requeue paths under both drivers.
+    let mut cfg = base_cfg(PolicyKind::Moeless);
+    cfg.base_rps = 6.0;
+    cfg.kv_budget_override_gb = Some(2.0);
+    let (ev, lock) = run_both(&cfg);
+    assert!(
+        ev.preemptions > 0 || ev.delayed_admissions > 0,
+        "kv-pressure: config must create pressure"
+    );
+    assert_bit_identical("kv-pressure", &ev, &lock);
+}
+
+#[test]
+fn chunked_event_matches_lockstep() {
+    let mut cfg = base_cfg(PolicyKind::Moeless);
+    cfg.prefill_chunk_tokens = 256;
+    let (ev, lock) = run_both(&cfg);
+    assert!(ev.prefill_chunks > 0, "chunked: chunks must land");
+    assert_bit_identical("chunked", &ev, &lock);
+}
+
+#[test]
+fn disaggregated_event_matches_lockstep() {
+    // Two pools advancing off per-pool completion events, plus KV
+    // handoffs over a slow link whose completion wake-ups can land past
+    // the horizon — the corner the event heap must not reorder.
+    let mut cfg = base_cfg(PolicyKind::Moeless);
+    cfg.prefill_chunk_tokens = 128;
+    cfg.kv_budget_override_gb = Some(1.5);
+    cfg.disagg = Some(DisaggSpec { link_gbps: 0.05, ..DisaggSpec::even_split(&cfg.cluster) });
+    let (ev, lock) = run_both(&cfg);
+    assert!(ev.kv_transfer_gb > 0.0, "disagg: handoffs must move KV");
+    assert_bit_identical("disagg", &ev, &lock);
+}
+
+#[test]
+fn max_iterations_cap_event_matches_lockstep() {
+    // The cap stops the run mid-stream: both drivers must stop after the
+    // same iteration, with the same partial ledger.
+    let mut cfg = base_cfg(PolicyKind::Megatron);
+    cfg.max_iterations = 40;
+    let (ev, lock) = run_both(&cfg);
+    assert_eq!(ev.iterations, 40, "cap must bind at this load");
+    assert_bit_identical("max-iterations", &ev, &lock);
+}
+
+#[test]
+fn serverless_policy_event_matches_lockstep() {
+    // MoEless-style serverless billing flows through the same pinned
+    // instants; async-EP covers the serverful no-barrier path.
+    let (ev, lock) = run_both(&base_cfg(PolicyKind::AsyncEp));
+    assert_bit_identical("async-ep", &ev, &lock);
+}
+
+#[test]
+fn randomized_differential_event_matches_lockstep() {
+    // Fixed-seed randomized sweep over policy × load × chunking × KV
+    // budget × disaggregation: any divergence fails with the generating
+    // seed printed by the property harness.
+    property(30, |g| {
+        let policy =
+            *g.pick(&[PolicyKind::Moeless, PolicyKind::Megatron, PolicyKind::AsyncEp]);
+        let mut cfg = base_cfg(policy);
+        cfg.duration_s = g.f64_in(4.0, 12.0);
+        cfg.base_rps = g.f64_in(1.0, 6.0);
+        cfg.seed = g.usize_in(0, 1000) as u64;
+        cfg.prefill_chunk_tokens = *g.pick(&[0usize, 128, 256]);
+        if g.bool() {
+            cfg.kv_budget_override_gb = Some(g.f64_in(1.0, 4.0));
+        }
+        if g.bool() {
+            cfg.disagg = Some(DisaggSpec {
+                link_gbps: g.f64_in(0.02, 1.0),
+                ..DisaggSpec::even_split(&cfg.cluster)
+            });
+        }
+        let (ev, lock) = run_both(&cfg);
+        assert_bit_identical("randomized", &ev, &lock);
+    });
+}

@@ -2,9 +2,12 @@
 //!
 //! Measures the frozen pre-PR-4 reference core against the optimized
 //! core (same machine, same process) at the quick and saturated scales,
-//! asserts the optimized core wins on the saturated drain, and records
-//! the numbers to `BENCH_sim.json` at the repository root — so every
-//! tier-1 run leaves a fresh before/after perf record behind.
+//! asserts the optimized core wins on the saturated drain, runs the
+//! driver duel (fixed-cadence lockstep stepper vs event/jump driver) on
+//! the 10⁶-request sparse mega drain and asserts the event driver wins
+//! ≥2×, and records the numbers to `BENCH_sim.json`
+//! (`moeless.simperf/v2`) at the repository root — so every tier-1 run
+//! leaves a fresh before/after perf record behind.
 //! `cargo run --release -- bench --exp simperf` produces the release
 //! version of the same file (CI uploads it as an artifact); this test's
 //! record is tagged `"build": "debug"` under `cargo test`.
@@ -42,13 +45,36 @@ fn perf_trajectory_beats_reference_and_records_bench_sim_json() {
         saturated.drain_current.wall_s,
     );
 
+    // Driver duel at the ROADMAP's million-request scale: 10⁶ sparse
+    // requests, outcomes asserted identical inside measure_driver_scale.
+    // The duel traces are overwhelmingly idle virtual time, so the
+    // fixed-cadence stepper pays ~6×10⁷ empty polls the event driver
+    // skips — the floor is conservative against the measured gap.
+    let mega = simperf::measure_driver_scale("driver-mega");
+    assert_eq!(mega.event.completed, 1_000_000, "every mega-drain request drains");
+    assert!(
+        mega.event.preemptions > 0,
+        "mega config must churn inside each burst (KV budget below burst demand)"
+    );
+    let duel_speedup = mega.speedup();
+    assert!(
+        duel_speedup >= 2.0,
+        "event driver must beat the fixed-cadence stepper on the sparse mega drain \
+         (lockstep {:.3}s vs event {:.3}s = {duel_speedup:.2}x)",
+        mega.lockstep.wall_s,
+        mega.event.wall_s,
+    );
+
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim.json");
-    simperf::write_bench_json(&path, &[quick, saturated]).unwrap();
+    simperf::write_bench_json(&path, &[quick, saturated], &[mega]).unwrap();
     eprintln!(
         "perf_trajectory: saturated speedup {speedup:.2}x \
-         (baseline {:.3}s -> current {:.3}s); recorded {}",
+         (baseline {:.3}s -> current {:.3}s); driver duel {duel_speedup:.2}x \
+         (lockstep {:.3}s -> event {:.3}s); recorded {}",
         saturated.drain_baseline.wall_s,
         saturated.drain_current.wall_s,
+        mega.lockstep.wall_s,
+        mega.event.wall_s,
         path.display()
     );
 }

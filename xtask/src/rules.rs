@@ -82,9 +82,10 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "P1",
         title: "no Vec::remove/swap_remove/insert(0, _) on batcher/placer hot paths",
-        scope: "rust/src/router/mod.rs and rust/src/placer/ (router/reference.rs is \
-                excluded by design: it is the frozen pre-PR4 core that golden \
-                equivalence measures against)",
+        scope: "rust/src/router/mod.rs, rust/src/placer/, and rust/src/sim/event.rs \
+                (router/reference.rs is excluded by design: it is the frozen pre-PR4 \
+                core that golden equivalence measures against; the frozen lockstep \
+                driver in sim/mod.rs is excluded for the same reason)",
         rationale: "PR 4 de-quadraticized these paths with keyed BTreeMap indices; a \
                     positional remove/insert reintroduces O(n) shifts (or an \
                     order-perturbing swap) exactly where the saturated-drain \
@@ -135,7 +136,8 @@ pub fn classify(rel_path: &str, comments: &[Comment]) -> FileClass {
         let tail = &rel[idx + "rust/src/".len()..];
         let top = tail.split('/').next().unwrap_or("").trim_end_matches(".rs");
         class.sim_core = SIM_CORE_MODULES.contains(&top);
-        class.hot_path = tail == "router/mod.rs" || tail.starts_with("placer/");
+        class.hot_path =
+            tail == "router/mod.rs" || tail.starts_with("placer/") || tail == "sim/event.rs";
         class.library = tail != "main.rs";
         if tail == "router/reference.rs" {
             // Frozen pre-PR4 core: held to the determinism rules (golden

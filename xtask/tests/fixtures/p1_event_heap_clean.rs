@@ -1,0 +1,21 @@
+// pallas-lint: treat-as(hot-path)
+//! P1 negative fixture: the event-scheduling shape `sim/event.rs` uses —
+//! a min-heap (`BinaryHeap<Reverse<_>>`) keyed on `(t_bits, seq)`, with
+//! O(log n) push/pop and no positional surgery.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+pub struct Event {
+    pub t_bits: u64,
+    pub seq: u64,
+}
+
+pub fn pop_next(heap: &mut BinaryHeap<Reverse<Event>>) -> Option<Event> {
+    heap.pop().map(|Reverse(e)| e)
+}
+
+pub fn schedule(heap: &mut BinaryHeap<Reverse<Event>>, e: Event) {
+    heap.push(Reverse(e));
+}

@@ -1,0 +1,17 @@
+// pallas-lint: treat-as(hot-path)
+//! P1 positive fixture: an "event queue" kept time-ordered by positional
+//! Vec surgery — O(n) per schedule/pop, the shape the event driver's
+//! binary heap exists to avoid.
+
+pub struct Event {
+    pub t_bits: u64,
+    pub seq: u64,
+}
+
+pub fn pop_next(events: &mut Vec<Event>) -> Event {
+    events.remove(0)
+}
+
+pub fn schedule_front(events: &mut Vec<Event>, e: Event) {
+    events.insert(0, e);
+}

@@ -81,6 +81,35 @@ fn p1_permits_keyed_indices_and_back_ops() {
 }
 
 #[test]
+fn p1_flags_positional_event_queue_surgery() {
+    let report = lint_fixture("p1_event_heap_violation.rs");
+    assert_eq!(rule_ids(&report), vec!["P1", "P1"], "{:?}", report.violations);
+}
+
+#[test]
+fn p1_permits_binary_heap_event_scheduling() {
+    let report = lint_fixture("p1_event_heap_clean.rs");
+    assert!(report.clean(), "unexpected: {:?}", report.violations);
+}
+
+#[test]
+fn p1_scope_covers_the_event_driver_module() {
+    // The event driver is hot-path-classified by path (no directive in
+    // the real file), and the frozen lockstep baseline in sim/mod.rs is
+    // deliberately not.
+    let event = xtask::rules::classify("rust/src/sim/event.rs", &[]);
+    assert!(event.hot_path, "sim/event.rs must be under P1");
+    assert!(event.sim_core, "sim/event.rs must be under D1/D2");
+    let lockstep = xtask::rules::classify("rust/src/sim/mod.rs", &[]);
+    assert!(!lockstep.hot_path, "the frozen lockstep driver is the baseline, not a hot path");
+    // Linting the real file directly must come back clean — the heap
+    // discipline is enforced, not aspirational.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../rust/src/sim/event.rs");
+    let report = xtask::lint_paths(&[path]).expect("event driver should lint");
+    assert!(report.clean(), "sim/event.rs must stay lint-clean: {:?}", report.violations);
+}
+
+#[test]
 fn allow_suppresses_exactly_its_named_rule() {
     let report = lint_fixture("allow_scoped.rs");
     // The R1 allow on the unwrap line suppresses it and shows up in the
