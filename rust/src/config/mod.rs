@@ -11,7 +11,7 @@ use std::path::Path;
 use crate::util::json::Json;
 
 /// One MoE model's serving-relevant characteristics (paper Table 1).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ModelSpec {
     pub name: String,
     /// Total / active parameter counts (billions) — Table 1.
@@ -154,6 +154,14 @@ impl ModelSpec {
     pub fn full_expert_set_gb(&self) -> f64 {
         self.n_layers as f64 * self.n_experts as f64 * self.expert_mem_gb
     }
+
+    /// Total checkpoint footprint (GB): the full expert set plus the
+    /// resident non-expert weights — what the loading model must move
+    /// through the NVMe/DRAM/HBM tiers to cold-start an instance of this
+    /// model on a device (`serverless::loading`).
+    pub fn total_model_gb(&self) -> f64 {
+        self.full_expert_set_gb() + self.misc_mem_gb
+    }
 }
 
 /// Early layers less predictable, ramping to stable late layers (Fig. 6).
@@ -192,6 +200,13 @@ pub struct GpuSpec {
     pub hbm_gbps: f64,
     /// Residency price ($ per device-hour) for the dollar-cost bill.
     pub cost_per_hour: f64,
+    /// NVMe → host staging bandwidth (GB/s) the checkpoint-loading model
+    /// reads model weights at when they are cold on disk (ServerlessLLM's
+    /// first loading tier).
+    pub nvme_gbps: f64,
+    /// Host-DRAM → device bandwidth (GB/s) weights stage in at when warm
+    /// in the host cache (effective PCIe-limited copy rate).
+    pub dram_gbps: f64,
 }
 
 impl GpuSpec {
@@ -204,6 +219,8 @@ impl GpuSpec {
             tflops: REF_TFLOPS,
             hbm_gbps: REF_HBM_GBPS,
             cost_per_hour: 0.80,
+            nvme_gbps: 5.0,
+            dram_gbps: 25.0,
         }
     }
 
@@ -215,6 +232,8 @@ impl GpuSpec {
             tflops: 989.0,
             hbm_gbps: 3350.0,
             cost_per_hour: 3.90,
+            nvme_gbps: 7.0,
+            dram_gbps: 50.0,
         }
     }
 
@@ -226,6 +245,8 @@ impl GpuSpec {
             tflops: 312.0,
             hbm_gbps: 2039.0,
             cost_per_hour: 1.90,
+            nvme_gbps: 6.0,
+            dram_gbps: 40.0,
         }
     }
 
@@ -237,6 +258,8 @@ impl GpuSpec {
             tflops: 121.0,
             hbm_gbps: 300.0,
             cost_per_hour: 0.40,
+            nvme_gbps: 3.0,
+            dram_gbps: 12.0,
         }
     }
 
@@ -261,8 +284,11 @@ impl GpuSpec {
             other => anyhow::bail!("gpu entry must be an object, got {other:?}"),
         };
         for key in obj.keys() {
-            if !matches!(key.as_str(), "name" | "mem_gb" | "tflops" | "hbm_gbps" | "cost_per_hour")
-            {
+            if !matches!(
+                key.as_str(),
+                "name" | "mem_gb" | "tflops" | "hbm_gbps" | "cost_per_hour" | "nvme_gbps"
+                    | "dram_gbps"
+            ) {
                 anyhow::bail!("gpu entry: unknown field {key:?}");
             }
         }
@@ -280,12 +306,14 @@ impl GpuSpec {
             .ok_or_else(|| anyhow::Error::msg("gpu entry: missing required field \"tflops\""))?;
         let hbm_gbps = num("hbm_gbps")?.unwrap_or(base.hbm_gbps);
         let cost_per_hour = num("cost_per_hour")?.unwrap_or(base.cost_per_hour);
+        let nvme_gbps = num("nvme_gbps")?.unwrap_or(base.nvme_gbps);
+        let dram_gbps = num("dram_gbps")?.unwrap_or(base.dram_gbps);
         let name = match obj.get("name") {
             None => "custom".to_string(),
             Some(Json::Str(s)) => s.clone(),
             Some(other) => anyhow::bail!("gpu entry: name must be a string, got {other:?}"),
         };
-        let spec = GpuSpec { name, mem_gb, tflops, hbm_gbps, cost_per_hour };
+        let spec = GpuSpec { name, mem_gb, tflops, hbm_gbps, cost_per_hour, nvme_gbps, dram_gbps };
         spec.validate()?;
         Ok(spec)
     }
@@ -305,6 +333,20 @@ impl GpuSpec {
                 "gpu {:?}: cost_per_hour must be >= 0, got {}",
                 self.name,
                 self.cost_per_hour
+            );
+        }
+        if !(self.nvme_gbps > 0.0 && self.nvme_gbps.is_finite()) {
+            anyhow::bail!(
+                "gpu {:?}: nvme_gbps must be positive, got {}",
+                self.name,
+                self.nvme_gbps
+            );
+        }
+        if !(self.dram_gbps > 0.0 && self.dram_gbps.is_finite()) {
+            anyhow::bail!(
+                "gpu {:?}: dram_gbps must be positive, got {}",
+                self.name,
+                self.dram_gbps
             );
         }
         Ok(())
@@ -334,6 +376,11 @@ pub struct ClusterSpec {
     pub cold_start_ms: f64,
     /// GB/s of the host<->GPU link (PCIe 5.0 x16 per §6.1).
     pub pcie_gbps: f64,
+    /// Host-DRAM checkpoint cache shared by the whole node (GB): models
+    /// whose weights are resident here load at `dram_gbps` instead of
+    /// paying the NVMe read — the middle tier of the multi-model loading
+    /// model (`serverless::loading`).
+    pub dram_cache_gb: f64,
     /// When false, placement/scaling *decisions* ignore device speeds
     /// (token balancing) while the cost model still evaluates on the real
     /// hardware — the ablation baseline capacity-aware placement is
@@ -352,6 +399,7 @@ impl ClusterSpec {
             t_misc_ms: 0.9,
             cold_start_ms: 45.0,
             pcie_gbps: 64.0,
+            dram_cache_gb: 256.0,
             capacity_aware: true,
         }
     }
@@ -506,12 +554,13 @@ impl ClusterSpec {
         };
         const UNIFORM_KEYS: [&str; 5] =
             ["n_gpus", "mem_per_gpu_gb", "tflops", "hbm_gbps", "cost_per_hour"];
-        const SHARED_KEYS: [&str; 6] = [
+        const SHARED_KEYS: [&str; 7] = [
             "alpha_ms_per_token",
             "beta_ms_per_token",
             "t_misc_ms",
             "cold_start_ms",
             "pcie_gbps",
+            "dram_cache_gb",
             "capacity_aware",
         ];
         for key in obj.keys() {
@@ -577,6 +626,8 @@ impl ClusterSpec {
                 tflops: num("tflops")?.unwrap_or(REF_TFLOPS),
                 hbm_gbps: num("hbm_gbps")?.unwrap_or(REF_HBM_GBPS),
                 cost_per_hour: num("cost_per_hour")?.unwrap_or(0.80),
+                nvme_gbps: 5.0,
+                dram_gbps: 25.0,
             };
             proto.validate()?;
             vec![proto; n]
@@ -589,6 +640,7 @@ impl ClusterSpec {
             t_misc_ms: num("t_misc_ms")?.unwrap_or(base.t_misc_ms),
             cold_start_ms: num("cold_start_ms")?.unwrap_or(base.cold_start_ms),
             pcie_gbps: num("pcie_gbps")?.unwrap_or(base.pcie_gbps),
+            dram_cache_gb: num("dram_cache_gb")?.unwrap_or(base.dram_cache_gb),
             capacity_aware: match obj.get("capacity_aware") {
                 None => true,
                 Some(Json::Bool(b)) => *b,
@@ -614,6 +666,12 @@ impl ClusterSpec {
         }
         if !(spec.pcie_gbps > 0.0 && spec.pcie_gbps.is_finite()) {
             anyhow::bail!("cluster spec: pcie_gbps must be positive, got {}", spec.pcie_gbps);
+        }
+        if !(spec.dram_cache_gb >= 0.0 && spec.dram_cache_gb.is_finite()) {
+            anyhow::bail!(
+                "cluster spec: dram_cache_gb must be >= 0, got {}",
+                spec.dram_cache_gb
+            );
         }
         Ok(spec)
     }
@@ -1044,6 +1102,41 @@ mod tests {
         let (pu, du) = DisaggSpec::fastest_split(&u).split_indices(&u);
         assert_eq!(pu, vec![0, 1, 2, 3]);
         assert_eq!(du, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn loading_tier_fields_parse_and_validate() {
+        // Per-GPU entries accept the loading-tier bandwidths; omitted
+        // fields keep the A6000 defaults.
+        let j = Json::parse(
+            r#"{"gpus": [
+                {"mem_gb": 80, "tflops": 989, "nvme_gbps": 7, "dram_gbps": 50},
+                {"mem_gb": 48, "tflops": 155}
+            ], "dram_cache_gb": 128}"#,
+        )
+        .unwrap();
+        let c = ClusterSpec::from_json(&j).unwrap();
+        assert!((c.gpus[0].nvme_gbps - 7.0).abs() < 1e-12);
+        assert!((c.gpus[0].dram_gbps - 50.0).abs() < 1e-12);
+        assert!((c.gpus[1].nvme_gbps - GpuSpec::a6000().nvme_gbps).abs() < 1e-12);
+        assert!((c.dram_cache_gb - 128.0).abs() < 1e-12);
+        // Defaults hold when the spec never mentions the tier fields.
+        let d = ClusterSpec::from_json(&Json::parse(r#"{"n_gpus": 2}"#).unwrap()).unwrap();
+        assert!((d.dram_cache_gb - 256.0).abs() < 1e-12);
+        assert!(d.gpus[0].nvme_gbps > 0.0 && d.gpus[0].dram_gbps > 0.0);
+        // Non-positive tier bandwidths and a negative cache are errors.
+        for (src, needle) in [
+            (r#"{"gpus": [{"mem_gb": 48, "tflops": 155, "nvme_gbps": 0}]}"#, "nvme_gbps"),
+            (r#"{"gpus": [{"mem_gb": 48, "tflops": 155, "dram_gbps": -1}]}"#, "dram_gbps"),
+            (r#"{"n_gpus": 2, "dram_cache_gb": -5}"#, "dram_cache_gb"),
+        ] {
+            let err =
+                ClusterSpec::from_json(&Json::parse(src).unwrap()).expect_err(src).to_string();
+            assert!(err.contains(needle), "{src}: {err}");
+        }
+        // The checkpoint footprint the loading model moves.
+        let m = ModelSpec::mixtral_8x7b();
+        assert!((m.total_model_gb() - (m.full_expert_set_gb() + m.misc_mem_gb)).abs() < 1e-12);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 pub mod ablation;
 pub mod hetero;
 pub mod motivation;
+pub mod multimodel;
 pub mod overall;
 pub mod prediction;
 pub mod sensitivity;
@@ -89,13 +90,14 @@ pub fn run_experiment(exp: &str, scale: Scale) {
         "fig17" => ablation::fig17_ablation(scale),
         "slo" => overall::request_slo(scale),
         "hetero" => hetero::hetero(scale),
+        "multimodel" => multimodel::multimodel(scale),
         "table1" => tables::print_table1(),
         "table2" => tables::print_table2(),
         "all" => {
             for e in [
                 "table1", "table2", "fig1", "fig3", "fig4", "fig6", "fig7", "fig8",
                 "fig9", "fig10", "fig11", "fig12", "fig13", "fig15", "fig17", "slo",
-                "hetero",
+                "hetero", "multimodel",
             ] {
                 run_experiment(e, scale);
             }

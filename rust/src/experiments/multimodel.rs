@@ -1,0 +1,88 @@
+//! `moeless bench --exp multimodel` — the serverless colocation A/B:
+//! Zipf-skewed model catalogs (10/20/40 models) sharing one fleet under
+//! start-time-optimized (locality-aware) placement vs the
+//! locality-oblivious baseline, same seed and trace.
+//!
+//! Three sub-sections, all in the uniform greppable format:
+//! 1. catalog inventory — sizes and skew of each swept catalog;
+//! 2. locality vs oblivious per catalog size: goodput, cold starts,
+//!    cold-start p99, rejections, dollars;
+//! 3. per-model lanes of the 20-model run under both policies — where the
+//!    Zipf tail's cold-start pain (and the locality win) is visible.
+
+use crate::config::DatasetSpec;
+use crate::experiments::Scale;
+use crate::metrics::RunReport;
+use crate::sim::multimodel::{run_multimodel, MmConfig};
+use crate::util::benchkit::fig_header;
+use crate::workload::{ModelCatalog, Scenario};
+
+/// Zipf skew of every swept catalog (the regression suite's setting).
+const SKEW: f64 = 1.2;
+
+fn cfg_for(n_models: usize, locality: bool, scale: Scale) -> MmConfig {
+    let mut cfg =
+        MmConfig::new(ModelCatalog::zipf(n_models, SKEW, scale.seed), DatasetSpec::lmsys());
+    cfg.scenario = Scenario::poisson();
+    // Bounded like the hetero section: a comparison, not an endurance run.
+    cfg.duration_s = scale.duration_s.min(60.0);
+    cfg.base_rps = scale.base_rps;
+    cfg.seed = scale.seed;
+    cfg.locality = locality;
+    cfg
+}
+
+fn summary_line(label: &str, r: &RunReport) {
+    println!(
+        "multimodel {label:<16} models={:<3} goodput={:.2}req/s cold_starts={:<5} \
+         cold_p99={:.0}ms warm_frac={:.2} rejected={} dollar=${:.4}",
+        r.per_model.len(),
+        r.lanes_goodput_rps(),
+        r.cold_starts,
+        r.cold_p99_ms(),
+        r.warm_fraction,
+        r.rejected_requests,
+        r.dollar_cost,
+    );
+}
+
+/// The `--exp multimodel` driver.
+pub fn multimodel(scale: Scale) {
+    fig_header(
+        "MULTIMODEL",
+        "serverless colocation: Zipf model catalogs, checkpoint loading, locality placement",
+    );
+
+    // 1. Catalog inventory.
+    for n in [10usize, 20, 40] {
+        let catalog = ModelCatalog::zipf(n, SKEW, scale.seed);
+        let total_gb: f64 = catalog.entries.iter().map(|e| e.model.total_model_gb()).sum();
+        let w = catalog.weights();
+        println!(
+            "multimodel catalog n={n:<3} skew={SKEW} total_gb={total_gb:.0} \
+             top_weight={:.3} tail_weight={:.4}",
+            w[0],
+            w[n - 1],
+        );
+    }
+
+    // 2. Locality vs oblivious per catalog size.
+    let mut lanes_20: Vec<(bool, RunReport)> = Vec::new();
+    for n in [10usize, 20, 40] {
+        for locality in [true, false] {
+            let r = run_multimodel(&cfg_for(n, locality, scale));
+            summary_line(if locality { "locality" } else { "oblivious" }, &r);
+            if n == 20 {
+                lanes_20.push((locality, r));
+            }
+        }
+    }
+
+    // 3. Per-model lanes of the 20-model run.
+    for (locality, r) in &lanes_20 {
+        let label = if *locality { "locality" } else { "oblivious" };
+        for lane in &r.per_model {
+            println!("multimodel {label:<9} {}", lane.line(r.sim_duration_s));
+        }
+    }
+}

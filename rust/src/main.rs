@@ -59,9 +59,15 @@ fn main() {
                           --token-balanced ablates capacity-aware decisions;\n\
                           --driver event|lockstep picks the clock driver —\n\
                           the event heap is the default, the frozen lockstep\n\
-                          loop is the equivalence baseline)\n\
+                          loop is the equivalence baseline;\n\
+                          --models N [--model-skew S] [--oblivious] colocates a\n\
+                          Zipf-skewed N-model serverless catalog on the fleet\n\
+                          and prints per-model lanes — --catalog spec.json\n\
+                          loads an explicit catalog, --oblivious ablates the\n\
+                          locality-aware placement)\n\
                  bench   run one paper experiment (--exp fig1|fig3|...|table2,\n\
-                         --exp hetero for the mixed-fleet section)\n\
+                         --exp hetero for the mixed-fleet section,\n\
+                         --exp multimodel for the serverless colocation A/B)\n\
                          or the perf-trajectory harness (--exp simperf\n\
                          [--quick] [--floor-rps F] [--out PATH] — measures\n\
                          the pre-PR4 reference core vs the optimized core,\n\

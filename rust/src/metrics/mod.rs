@@ -77,6 +77,69 @@ impl SloSpec {
     }
 }
 
+/// Per-model accounting lane of a multi-model colocation run
+/// (`sim::multimodel`): one per catalog entry, in catalog order. Empty
+/// (`RunReport::per_model` is `[]`) for single-model runs — additive, so
+/// existing reports are untouched bit-for-bit.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModelLane {
+    pub model: String,
+    /// Normalized catalog popularity weight.
+    pub weight: f64,
+    /// Checkpoint footprint the loading model moves on a cold start (GB).
+    pub weights_gb: f64,
+    pub arrivals: u64,
+    pub completed: u64,
+    /// Completed requests meeting the run's `SloSpec` (goodput numerator).
+    pub slo_good: u64,
+    /// Arrivals refused at admission (no device could hold the weights).
+    pub rejected: u64,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    /// Cold-start wait per arrival served (ms; 0 for warm starts), the
+    /// cold-start p99 population — warm zeros included, so the percentile
+    /// reflects what a *request* of this model actually waited.
+    pub cold_wait_ms: Vec<f64>,
+    /// Device-seconds this lane occupied, billed at per-device rates ($).
+    pub dollar_cost: f64,
+}
+
+impl ModelLane {
+    /// p99 of the cold-start wait over all served arrivals of this model.
+    pub fn cold_p99_ms(&self) -> f64 {
+        let mut xs = self.cold_wait_ms.clone();
+        percentile_unsorted(&mut xs, 99.0)
+    }
+
+    /// SLO-good requests per simulated second for this lane.
+    pub fn goodput_rps(&self, duration_s: f64) -> f64 {
+        if duration_s <= 0.0 {
+            0.0
+        } else {
+            self.slo_good as f64 / duration_s
+        }
+    }
+
+    /// One-line per-model summary in the bench-output format.
+    pub fn line(&self, duration_s: f64) -> String {
+        format!(
+            "lane model={:<18} w={:.3} gb={:5.1} arrivals={:<5} completed={:<5} \
+             goodput={:.2}req/s cold={} warm={} cold_p99={:.0}ms rejected={} cost=${:.4}",
+            self.model,
+            self.weight,
+            self.weights_gb,
+            self.arrivals,
+            self.completed,
+            self.goodput_rps(duration_s),
+            self.cold_starts,
+            self.warm_starts,
+            self.cold_p99_ms(),
+            self.rejected,
+            self.dollar_cost,
+        )
+    }
+}
+
 /// Accumulated measurements of one serving run (one policy × model ×
 /// dataset × trace).
 ///
@@ -177,6 +240,9 @@ pub struct RunReport {
     pub sim_duration_s: f64,
     /// Wall-clock seconds the simulation itself took (perf metric).
     pub wall_s: f64,
+    /// Per-model accounting lanes of a multi-model colocation run, in
+    /// catalog order (empty for single-model runs).
+    pub per_model: Vec<ModelLane>,
 }
 
 impl RunReport {
@@ -233,6 +299,24 @@ impl RunReport {
             self.requests.iter().map(|r| r.chunks as f64).sum::<f64>()
                 / self.requests.len() as f64
         }
+    }
+
+    /// Multi-model runs: p99 cold-start wait (ms) over every served
+    /// arrival across all lanes (warm zeros included). 0 when the run
+    /// had no lanes (single-model) or no arrivals.
+    pub fn cold_p99_ms(&self) -> f64 {
+        let mut xs: Vec<f64> =
+            self.per_model.iter().flat_map(|l| l.cold_wait_ms.iter().copied()).collect();
+        percentile_unsorted(&mut xs, 99.0)
+    }
+
+    /// Multi-model runs: SLO-good requests per simulated second summed
+    /// over all lanes.
+    pub fn lanes_goodput_rps(&self) -> f64 {
+        if self.sim_duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.per_model.iter().map(|l| l.slo_good).sum::<u64>() as f64 / self.sim_duration_s
     }
 
     /// Requests per simulated second that completed within the SLO.
@@ -514,6 +598,42 @@ mod tests {
         assert_eq!(empty.peak_kv_util(), 0.0);
         assert_eq!(empty.mean_queue_depth(), 0.0);
         assert!(empty.summary_line().contains("preempt=0"));
+    }
+
+    #[test]
+    fn model_lane_aggregates() {
+        let lane = ModelLane {
+            model: "chat-a".into(),
+            weight: 0.4,
+            weights_gb: 9.0,
+            arrivals: 5,
+            completed: 4,
+            slo_good: 3,
+            cold_starts: 1,
+            warm_starts: 4,
+            cold_wait_ms: vec![0.0, 0.0, 0.0, 0.0, 1200.0],
+            dollar_cost: 0.25,
+            ..Default::default()
+        };
+        assert!((lane.goodput_rps(10.0) - 0.3).abs() < 1e-12);
+        assert_eq!(lane.goodput_rps(0.0), 0.0);
+        // p99 of [0,0,0,0,1200] interpolates into the top sample.
+        assert!(lane.cold_p99_ms() > 1000.0);
+        let line = lane.line(10.0);
+        assert!(line.contains("model=chat-a") && line.contains("cold=1"), "{line}");
+        // Report-level aggregation over lanes.
+        let cold_lane = ModelLane { cold_wait_ms: vec![500.0; 10], slo_good: 7, ..lane.clone() };
+        let r = RunReport {
+            sim_duration_s: 10.0,
+            per_model: vec![lane, cold_lane],
+            ..Default::default()
+        };
+        assert!(r.cold_p99_ms() > 0.0);
+        assert!((r.lanes_goodput_rps() - 1.0).abs() < 1e-12);
+        // Single-model reports have no lanes and degrade to zero.
+        let empty = RunReport::default();
+        assert_eq!(empty.cold_p99_ms(), 0.0);
+        assert_eq!(empty.lanes_goodput_rps(), 0.0);
     }
 
     #[test]

@@ -186,6 +186,38 @@ impl Placer {
 
         PlacePlan { placements: work, evictions_owed }
     }
+
+    /// Whole-model instance placement for the multi-model colocation sim
+    /// (`sim::multimodel`): pick the GPU a request of one catalog model
+    /// should serve on, given each device's estimated queueing wait
+    /// (`wait_s`) and the checkpoint-loading cost the request would pay
+    /// there (`load_s`, from the [`WarmStore`](crate::serverless::loading::WarmStore)
+    /// tier: 0 on HBM-warm devices).
+    ///
+    /// Locality-aware (ServerlessLLM's start-time-optimized rule):
+    /// minimize `wait + load` — warm devices win whenever their queue
+    /// delay is under the reload cost, and a saturated warm set
+    /// gracefully spills to a cold device once queueing exceeds one
+    /// load. Oblivious (the ablation baseline the cold-start regressions
+    /// measure against): minimize `wait` alone, ignoring where the
+    /// weights are. Ties break to the lowest device id; `None` only on
+    /// an empty fleet.
+    pub fn place_model_instance(
+        &self,
+        wait_s: &[f64],
+        load_s: &[f64],
+        locality: bool,
+    ) -> Option<usize> {
+        debug_assert_eq!(wait_s.len(), load_s.len());
+        (0..wait_s.len()).min_by(|&a, &b| {
+            let (sa, sb) = if locality {
+                (wait_s[a] + load_s[a], wait_s[b] + load_s[b])
+            } else {
+                (wait_s[a], wait_s[b])
+            };
+            sa.total_cmp(&sb).then(a.cmp(&b))
+        })
+    }
 }
 
 /// Among warm candidate GPUs, prefer the least-loaded one (locality first,
@@ -426,5 +458,24 @@ mod tests {
         assert_eq!(plan.placements[0].gpu, 1);
         let again = Placer.place(&[1], &[40.0], &mut no_prev(1), &c, 0.33);
         assert_eq!(plan.placements, again.placements);
+    }
+
+    #[test]
+    fn model_instance_placement_minimizes_start_time() {
+        let wait = [5.0, 1.0, 3.0, 1.0];
+        // GPU 2 is warm (zero load); GPUs 1/3 would pay a 4 s reload.
+        let load = [4.0, 4.0, 0.0, 4.0];
+        // Locality: the warm device's 3 s queue beats 1 + 4 elsewhere.
+        assert_eq!(Placer.place_model_instance(&wait, &load, true), Some(2));
+        // Oblivious ignores the load cost: earliest wait, lowest id tie.
+        assert_eq!(Placer.place_model_instance(&wait, &load, false), Some(1));
+        // A saturated warm device spills: 9 s of queue loses to 1 + 4.
+        let busy_warm = [5.0, 1.0, 9.0, 1.0];
+        assert_eq!(Placer.place_model_instance(&busy_warm, &load, true), Some(1));
+        // Nothing warm anywhere: both policies agree on earliest-free.
+        let all_cold = [4.0; 4];
+        assert_eq!(Placer.place_model_instance(&wait, &all_cold, true), Some(1));
+        // Empty fleet is the only None.
+        assert_eq!(Placer.place_model_instance(&[], &[], true), None);
     }
 }

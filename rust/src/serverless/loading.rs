@@ -1,0 +1,333 @@
+//! Checkpoint-loading model + warm-weights ledger (multi-model colocation).
+//!
+//! ServerlessLLM's observation: when many models share few GPUs, the
+//! first-class cost is *loading time* — a cold start moves the whole
+//! checkpoint through the storage hierarchy, and the tier it starts from
+//! (device HBM / host DRAM cache / NVMe) swings start latency by 5–10×.
+//! This module is that cost model plus the state it depends on:
+//!
+//! * [`cold_start_s`] — the closed-form tier cost: zero for HBM-resident
+//!   weights, `GB / dram_gbps` from the host cache, and the staged
+//!   NVMe→DRAM→HBM sum when cold on disk. By construction it is monotone
+//!   nondecreasing in model GB, nonincreasing in each tier bandwidth, and
+//!   exactly zero for warm models (pinned by `tests/proptests.rs`).
+//! * [`WarmStore`] — the warm-bytes ledger: per-device HBM caches plus
+//!   one node-wide DRAM checkpoint cache, each LRU-by-bytes with pinning
+//!   (a model actively serving on a device is never its own victim).
+//!   Admission refuses — state untouched — when the unpinned bytes can't
+//!   make room, so `used_gb ≤ capacity_gb` holds after every operation
+//!   (the proptest invariant).
+//!
+//! Hot-path discipline (P1-linted like the batcher/placer/event-heap):
+//! recency is a `BTreeMap` keyed by `(stamp, model)` — LRU victim = first
+//! unpinned key, touch = remove+insert at a fresh stamp, both `O(log n)`;
+//! no positional `Vec` surgery, no hash iteration, no wall clock.
+
+use std::collections::BTreeMap;
+
+use crate::config::{ClusterSpec, GpuSpec};
+
+/// Where a model's weights currently are, from the loader's viewpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Resident in the serving device's HBM: a warm start.
+    Hbm,
+    /// In the node's host-DRAM checkpoint cache: one PCIe-bound copy.
+    Dram,
+    /// Only on NVMe: stage disk→DRAM, then DRAM→HBM.
+    Nvme,
+}
+
+/// Cold-start latency (seconds) of bringing `model_gb` of weights to the
+/// device from `tier`. The NVMe path is the *sum* of both stage times —
+/// the conservative non-overlapped pipeline, which keeps the latency
+/// strictly monotone in the checkpoint size and in each tier bandwidth.
+pub fn cold_start_s(model_gb: f64, tier: Tier, gpu: &GpuSpec) -> f64 {
+    match tier {
+        Tier::Hbm => 0.0,
+        Tier::Dram => model_gb / gpu.dram_gbps,
+        Tier::Nvme => model_gb / gpu.nvme_gbps + model_gb / gpu.dram_gbps,
+    }
+}
+
+/// One LRU-by-bytes cache of model checkpoints (a device's HBM, or the
+/// node's DRAM tier). Recency lives in `by_stamp`: the first key whose
+/// model is unpinned is the LRU victim.
+#[derive(Clone, Debug, Default)]
+struct DeviceCache {
+    capacity_gb: f64,
+    used_gb: f64,
+    /// `(last-use stamp, model) → resident GB`, ascending stamp = LRU→MRU.
+    by_stamp: BTreeMap<(u64, u32), f64>,
+    /// Current stamp per resident model (the `by_stamp` back-pointer).
+    stamp_of: BTreeMap<u32, u64>,
+    /// Pin counts: a pinned model is never evicted (it is serving).
+    pins: BTreeMap<u32, u32>,
+}
+
+impl DeviceCache {
+    fn new(capacity_gb: f64) -> DeviceCache {
+        DeviceCache { capacity_gb, ..DeviceCache::default() }
+    }
+
+    fn contains(&self, model: u32) -> bool {
+        self.stamp_of.contains_key(&model)
+    }
+
+    fn pinned(&self, model: u32) -> bool {
+        self.pins.get(&model).copied().unwrap_or(0) > 0
+    }
+
+    /// Move a resident model to the MRU position. No-op if absent.
+    fn touch(&mut self, model: u32, stamp: u64) {
+        let Some(&old) = self.stamp_of.get(&model) else { return };
+        if let Some(gb) = self.by_stamp.remove(&(old, model)) {
+            self.by_stamp.insert((stamp, model), gb);
+            self.stamp_of.insert(model, stamp);
+        }
+    }
+
+    /// Admit `model` at `gb` bytes, evicting LRU unpinned residents as
+    /// needed. Returns false — state untouched — when even evicting every
+    /// unpinned resident can't make room.
+    fn admit(&mut self, model: u32, gb: f64, stamp: u64) -> bool {
+        if self.contains(model) {
+            self.touch(model, stamp);
+            return true;
+        }
+        let evictable: f64 = self
+            .by_stamp
+            .iter()
+            .filter(|((_, m), _)| !self.pinned(*m))
+            .map(|(_, &g)| g)
+            .sum();
+        if self.used_gb - evictable + gb > self.capacity_gb + 1e-9 {
+            return false;
+        }
+        while self.used_gb + gb > self.capacity_gb + 1e-9 {
+            let victim = self
+                .by_stamp
+                .keys()
+                .find(|(_, m)| !self.pinned(*m))
+                .copied();
+            match victim {
+                Some(key) => self.remove_entry(key),
+                // Unreachable given the evictable check above; refuse
+                // rather than overflow if float drift ever disagrees.
+                None => return false,
+            }
+        }
+        self.by_stamp.insert((stamp, model), gb);
+        self.stamp_of.insert(model, stamp);
+        self.used_gb += gb;
+        true
+    }
+
+    fn remove_entry(&mut self, key: (u64, u32)) {
+        if let Some(gb) = self.by_stamp.remove(&key) {
+            self.stamp_of.remove(&key.1);
+            self.used_gb = (self.used_gb - gb).max(0.0);
+        }
+    }
+
+    fn evict(&mut self, model: u32) {
+        if let Some(&stamp) = self.stamp_of.get(&model) {
+            self.remove_entry((stamp, model));
+        }
+    }
+
+    fn pin(&mut self, model: u32) {
+        *self.pins.entry(model).or_insert(0) += 1;
+    }
+
+    fn unpin(&mut self, model: u32) {
+        if let Some(c) = self.pins.get_mut(&model) {
+            *c = c.saturating_sub(1);
+            if *c == 0 {
+                self.pins.remove(&model);
+            }
+        }
+    }
+}
+
+/// The node's warm-weights state: one HBM cache per device plus the
+/// shared DRAM checkpoint cache. Every mutation advances one global
+/// recency stamp, so LRU order is total and deterministic.
+#[derive(Clone, Debug)]
+pub struct WarmStore {
+    devices: Vec<DeviceCache>,
+    dram: DeviceCache,
+    stamp: u64,
+}
+
+impl WarmStore {
+    /// Capacities from the cluster: each device's full `mem_gb` (the
+    /// colocation sim serves whole-model instances, so weights are the
+    /// device's dominant resident), DRAM tier from `dram_cache_gb`.
+    pub fn new(spec: &ClusterSpec) -> WarmStore {
+        WarmStore {
+            devices: spec.gpus.iter().map(|g| DeviceCache::new(g.mem_gb)).collect(),
+            dram: DeviceCache::new(spec.dram_cache_gb),
+            stamp: 0,
+        }
+    }
+
+    fn next_stamp(&mut self) -> u64 {
+        self.stamp += 1;
+        self.stamp
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_warm(&self, gpu: usize, model: u32) -> bool {
+        self.devices.get(gpu).map(|d| d.contains(model)).unwrap_or(false)
+    }
+
+    /// Fill `out` with the (ascending) device ids holding `model` warm.
+    pub fn warm_gpus_into(&self, model: u32, out: &mut Vec<usize>) {
+        out.clear();
+        for (g, d) in self.devices.iter().enumerate() {
+            if d.contains(model) {
+                out.push(g);
+            }
+        }
+    }
+
+    /// The tier a load of `model` onto `gpu` would start from right now.
+    pub fn tier_for(&self, gpu: usize, model: u32) -> Tier {
+        if self.is_warm(gpu, model) {
+            Tier::Hbm
+        } else if self.dram.contains(model) {
+            Tier::Dram
+        } else {
+            Tier::Nvme
+        }
+    }
+
+    /// Admit `model` into `gpu`'s HBM (LRU eviction of unpinned residents
+    /// as needed); false = refused, state untouched.
+    pub fn admit(&mut self, gpu: usize, model: u32, gb: f64) -> bool {
+        let stamp = self.next_stamp();
+        match self.devices.get_mut(gpu) {
+            Some(d) => d.admit(model, gb, stamp),
+            None => false,
+        }
+    }
+
+    /// Stage `model` into the node DRAM cache (done as a side effect of
+    /// any NVMe read, and refreshed on DRAM-tier loads).
+    pub fn stage_dram(&mut self, model: u32, gb: f64) -> bool {
+        let stamp = self.next_stamp();
+        self.dram.admit(model, gb, stamp)
+    }
+
+    /// Mark `model` recently used on `gpu` (moves it to MRU).
+    pub fn touch(&mut self, gpu: usize, model: u32) {
+        let stamp = self.next_stamp();
+        if let Some(d) = self.devices.get_mut(gpu) {
+            d.touch(model, stamp);
+        }
+    }
+
+    pub fn evict(&mut self, gpu: usize, model: u32) {
+        if let Some(d) = self.devices.get_mut(gpu) {
+            d.evict(model);
+        }
+    }
+
+    /// Pin `model` on `gpu` for the duration of a request: a serving
+    /// model must not evict itself to admit another. Counted — nested
+    /// requests pin/unpin symmetrically.
+    pub fn pin(&mut self, gpu: usize, model: u32) {
+        if let Some(d) = self.devices.get_mut(gpu) {
+            d.pin(model);
+        }
+    }
+
+    pub fn unpin(&mut self, gpu: usize, model: u32) {
+        if let Some(d) = self.devices.get_mut(gpu) {
+            d.unpin(model);
+        }
+    }
+
+    pub fn used_gb(&self, gpu: usize) -> f64 {
+        self.devices.get(gpu).map(|d| d.used_gb).unwrap_or(0.0)
+    }
+
+    pub fn capacity_gb(&self, gpu: usize) -> f64 {
+        self.devices.get(gpu).map(|d| d.capacity_gb).unwrap_or(0.0)
+    }
+
+    pub fn dram_used_gb(&self) -> f64 {
+        self.dram.used_gb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::a6000() // nvme 5 GB/s, dram 25 GB/s
+    }
+
+    #[test]
+    fn tier_costs_are_the_staged_sums() {
+        let g = gpu();
+        assert_eq!(cold_start_s(10.0, Tier::Hbm, &g), 0.0);
+        assert!((cold_start_s(10.0, Tier::Dram, &g) - 0.4).abs() < 1e-12);
+        assert!((cold_start_s(10.0, Tier::Nvme, &g) - 2.4).abs() < 1e-12);
+    }
+
+    fn store(mem_gb: f64, dram_gb: f64) -> WarmStore {
+        let mut spec = ClusterSpec::uniform(2, gpu()).with_mem_per_gpu(mem_gb);
+        spec.dram_cache_gb = dram_gb;
+        WarmStore::new(&spec)
+    }
+
+    #[test]
+    fn lru_by_bytes_evicts_the_oldest_unpinned() {
+        let mut s = store(10.0, 100.0);
+        assert!(s.admit(0, 1, 4.0));
+        assert!(s.admit(0, 2, 4.0));
+        s.touch(0, 1); // model 2 is now LRU
+        assert!(s.admit(0, 3, 4.0)); // evicts model 2
+        assert!(s.is_warm(0, 1) && !s.is_warm(0, 2) && s.is_warm(0, 3));
+        assert!(s.used_gb(0) <= s.capacity_gb(0) + 1e-9);
+        // Pinned models are skipped: model 1 is LRU but serving.
+        s.pin(0, 1);
+        assert!(s.admit(0, 4, 4.0)); // evicts 3, not the pinned 1
+        assert!(s.is_warm(0, 1) && !s.is_warm(0, 3) && s.is_warm(0, 4));
+        // Everything pinned and no room: refuse, state untouched.
+        s.pin(0, 4);
+        let used = s.used_gb(0);
+        assert!(!s.admit(0, 5, 4.0));
+        assert_eq!(s.used_gb(0), used);
+        // Unpinned again, the admit goes through.
+        s.unpin(0, 1);
+        assert!(s.admit(0, 5, 4.0));
+        assert!(!s.is_warm(0, 1));
+    }
+
+    #[test]
+    fn oversized_models_are_refused_and_devices_are_independent() {
+        let mut s = store(10.0, 8.0);
+        assert!(!s.admit(0, 1, 11.0), "bigger than the device can ever hold");
+        assert!(s.admit(1, 1, 9.0));
+        assert!(!s.is_warm(0, 1) && s.is_warm(1, 1));
+        assert_eq!(s.tier_for(0, 1), Tier::Nvme);
+        assert_eq!(s.tier_for(1, 1), Tier::Hbm);
+        // DRAM staging flips gpu 0's tier to Dram; it too refuses
+        // checkpoints over its capacity.
+        assert!(!s.stage_dram(1, 9.0));
+        assert!(s.stage_dram(2, 5.0));
+        assert_eq!(s.tier_for(0, 2), Tier::Dram);
+        assert!(s.dram_used_gb() <= 8.0 + 1e-9);
+        // Re-admitting a resident is a touch, not a second reservation.
+        let used = s.used_gb(1);
+        assert!(s.admit(1, 1, 9.0));
+        assert_eq!(s.used_gb(1), used);
+    }
+}

@@ -17,6 +17,8 @@
 //! `[layer × expert]` table, not a map — `apply_layer`/`live_on` are on
 //! the per-layer critical path and run O(replicas), allocation-free.
 
+pub mod loading;
+
 use crate::cluster::Cluster;
 
 /// A live expert function instance on a GPU.

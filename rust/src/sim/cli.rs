@@ -70,6 +70,51 @@ pub fn replay(args: &Args) -> anyhow::Result<()> {
     if args.flag("token-balanced") {
         cfg.cluster.capacity_aware = false;
     }
+    // Multi-model serverless colocation: `--models N` layers N Zipf-skewed
+    // arrival streams (or `--catalog spec.json` an explicit catalog) onto
+    // the shared fleet and reports per-model lanes. `--models 1` is the
+    // single-model path above, bit-for-bit, plus its one accounting lane.
+    if args.opts.contains_key("models") || args.opts.contains_key("catalog") {
+        let catalog = match args.opt_str("catalog") {
+            Some(path) => crate::workload::ModelCatalog::load(std::path::Path::new(path))
+                .with_context(|| format!("--catalog {path:?}"))?,
+            None => {
+                let n = args.usize("models", 20);
+                if n == 0 {
+                    bail!("--models expects a catalog of at least one model");
+                }
+                if n == 1 {
+                    crate::workload::ModelCatalog::single(cfg.model.clone())
+                } else {
+                    crate::workload::ModelCatalog::zipf(n, args.f64("model-skew", 1.2), cfg.seed)
+                }
+            }
+        };
+        let mut mm = crate::sim::multimodel::MmConfig::new(catalog, cfg.dataset.clone());
+        mm.cluster = cfg.cluster.clone();
+        mm.scenario = cfg.scenario.clone();
+        mm.duration_s = cfg.duration_s;
+        mm.base_rps = cfg.base_rps;
+        mm.seed = cfg.seed;
+        mm.driver = cfg.driver;
+        mm.locality = !args.flag("oblivious");
+        let report = crate::sim::multimodel::run_multimodel(&mm);
+        println!("{}", report.summary_line());
+        println!("{}", report.request_slo_line(&mm.slo));
+        println!(
+            "mm models={} goodput={:.2}req/s cold_starts={} cold_p99={:.0}ms rejected={} cost=${:.4}",
+            report.per_model.len(),
+            report.lanes_goodput_rps(),
+            report.cold_starts,
+            report.cold_p99_ms(),
+            report.rejected_requests,
+            report.dollar_cost,
+        );
+        for lane in &report.per_model {
+            println!("{}", lane.line(report.sim_duration_s));
+        }
+        return Ok(());
+    }
     // Chunked prefill: `--chunk-tokens 512` packs decode first and fills
     // the remainder of each iteration with prefill chunks (stall-free
     // batching). Disaggregation: `--disagg` splits the cluster into

@@ -21,6 +21,11 @@
 //! links) can interleave without another driver rewrite, and the driver
 //! never polls — between events, simulated time is free.
 //!
+//! The heap itself is the generic [`EventQueue`]: `(t_bits, seq, kind)`
+//! tuples in a `BinaryHeap<Reverse<_>>`, shared with the multi-model
+//! colocation driver (`sim::multimodel`), whose lockstep oracle replays
+//! the same `(t_bits, seq)` order by linear scan to pin the heap.
+//!
 //! Heap discipline (P1-linted like the batcher/placer hot paths): the
 //! only container is a [`BinaryHeap`] with `O(log n)` push/pop; no
 //! positional `Vec` surgery anywhere on the event path.
@@ -32,18 +37,58 @@ use super::{idle_wakeup, SimState, Wake};
 use crate::metrics::RunReport;
 use crate::router::IterationBatch;
 
-/// One heap entry. Ordered by `(t_bits, seq, kind)`: simulated instants
-/// are non-negative finite `f64`s, whose IEEE-754 bit patterns order
+/// A deterministic time-ordered event queue over any `Ord + Copy` event
+/// kind. Entries order by `(t_bits, seq, kind)`: simulated instants are
+/// non-negative finite `f64`s, whose IEEE-754 bit patterns order
 /// identically to their values, so `to_bits()` gives a total order with
 /// no float comparison and no `Ord`-on-`f64` workaround. `seq` is a
-/// monotone tie-breaker: simultaneous events pop in schedule order,
-/// keeping the driver deterministic when two pools finish at the same
-/// instant.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-struct Event {
-    t_bits: u64,
+/// monotone tie-breaker assigned at push: simultaneous events pop in
+/// schedule order (`kind` is ordering dead weight — `seq` is unique — but
+/// keeps the tuple totally ordered for the heap). Both sim drivers key
+/// their determinism to exactly this order.
+#[derive(Clone, Debug)]
+pub struct EventQueue<K: Ord + Copy> {
+    heap: BinaryHeap<Reverse<(u64, u64, K)>>,
     seq: u64,
-    kind: EventKind,
+}
+
+impl<K: Ord + Copy> EventQueue<K> {
+    pub fn new() -> EventQueue<K> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `kind` at instant `t` (seconds; must be non-negative and
+    /// finite for the bit-order trick to hold — all sim instants are).
+    pub fn push(&mut self, t: f64, kind: K) {
+        self.heap.push(Reverse((t.to_bits(), self.seq, kind)));
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event: smallest `(t, seq)`.
+    pub fn pop(&mut self) -> Option<(f64, K)> {
+        self.heap.pop().map(|Reverse((t_bits, _, kind))| (f64::from_bits(t_bits), kind))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Monotone push counter: how many events have ever been scheduled.
+    /// The multi-model lockstep oracle mirrors this assignment to replay
+    /// heap order exactly.
+    pub fn pushes(&self) -> u64 {
+        self.seq
+    }
+}
+
+impl<K: Ord + Copy> Default for EventQueue<K> {
+    fn default() -> EventQueue<K> {
+        EventQueue::new()
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -69,20 +114,10 @@ struct InFlight {
     pending: u8,
 }
 
-fn push(heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: f64, kind: EventKind) {
-    heap.push(Reverse(Event { t_bits: t.to_bits(), seq: *seq, kind }));
-    *seq += 1;
-}
-
 /// Poll the batcher at the current clock. A ready batch starts executing
 /// (its `PoolDone` events enter the heap); an idle batcher schedules the
 /// exact next wake-up, or nothing at all when the run is drained.
-fn dispatch(
-    s: &mut SimState,
-    heap: &mut BinaryHeap<Reverse<Event>>,
-    seq: &mut u64,
-    inflight: &mut Option<InFlight>,
-) {
+fn dispatch(s: &mut SimState, q: &mut EventQueue<EventKind>, inflight: &mut Option<InFlight>) {
     debug_assert!(inflight.is_none(), "dispatch while an iteration is in flight");
     let Some(iter) = s.batcher.next_iteration(s.clock) else {
         // Idle: schedule the exact next wake-up (or none — drained). Same
@@ -100,7 +135,7 @@ fn dispatch(
                 } else {
                     EventKind::ArrivalWake
                 };
-                push(heap, seq, t, kind);
+                q.push(t, kind);
             }
             Wake::Drained => {}
             Wake::Stalled => {
@@ -119,9 +154,9 @@ fn dispatch(
     // times is bit-identical to the lockstep commit instant: `f64::max`
     // returns one operand exactly, and `clock + x / 1e3` is monotone in
     // `x`, so ordering and value both carry over.
-    push(heap, seq, s.clock + pre_ms / 1e3, EventKind::PoolDone(0));
+    q.push(s.clock + pre_ms / 1e3, EventKind::PoolDone(0));
     let pending = if s.decode_pool.is_some() {
-        push(heap, seq, s.clock + dec_ms / 1e3, EventKind::PoolDone(1));
+        q.push(s.clock + dec_ms / 1e3, EventKind::PoolDone(1));
         2
     } else {
         1
@@ -132,15 +167,13 @@ fn dispatch(
 /// Drive one run off the event heap until drained, past the horizon, or
 /// capped by `max_iterations`.
 pub(super) fn run_event(mut s: SimState) -> RunReport {
-    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
-    let mut seq: u64 = 0;
+    let mut q: EventQueue<EventKind> = EventQueue::new();
     let mut inflight: Option<InFlight> = None;
     if s.clock < s.cfg.duration_s {
-        push(&mut heap, &mut seq, s.clock, EventKind::Dispatch);
+        q.push(s.clock, EventKind::Dispatch);
     }
-    while let Some(Reverse(ev)) = heap.pop() {
-        let t = f64::from_bits(ev.t_bits);
-        match ev.kind {
+    while let Some((t, kind)) = q.pop() {
+        match kind {
             EventKind::Dispatch | EventKind::ArrivalWake | EventKind::TransferWake => {
                 // Mirror the lockstep order exactly: land the clock on the
                 // wake instant first, then test the horizon — a transfer
@@ -150,7 +183,7 @@ pub(super) fn run_event(mut s: SimState) -> RunReport {
                 if t >= s.cfg.duration_s {
                     break;
                 }
-                dispatch(&mut s, &mut heap, &mut seq, &mut inflight);
+                dispatch(&mut s, &mut q, &mut inflight);
             }
             EventKind::PoolDone(_) => {
                 let still_running = {
@@ -177,9 +210,31 @@ pub(super) fn run_event(mut s: SimState) -> RunReport {
                 if s.clock >= s.cfg.duration_s {
                     break;
                 }
-                dispatch(&mut s, &mut heap, &mut seq, &mut inflight);
+                dispatch(&mut s, &mut q, &mut inflight);
             }
         }
     }
     s.into_report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_pops_in_time_then_schedule_order() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.push(2.0, 20);
+        q.push(1.0, 10);
+        q.push(1.0, 11); // same instant: pushed later, pops later
+        q.push(0.0, 0);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.pushes(), 4);
+        assert_eq!(q.pop(), Some((0.0, 0)));
+        assert_eq!(q.pop(), Some((1.0, 10)));
+        assert_eq!(q.pop(), Some((1.0, 11)));
+        assert_eq!(q.pop(), Some((2.0, 20)));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
 }

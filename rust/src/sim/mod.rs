@@ -21,6 +21,7 @@
 
 pub mod cli;
 pub mod event;
+pub mod multimodel;
 pub mod sweep;
 
 use std::time::Instant;

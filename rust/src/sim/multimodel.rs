@@ -1,0 +1,558 @@
+//! Multi-model serverless colocation simulator (ServerlessLLM-style).
+//!
+//! Many models share few GPUs: requests arrive per catalog model
+//! ([`ModelCatalog`] Zipf-skewed streams), each served by a whole-model
+//! instance on one device. The first-class cost is *checkpoint loading*
+//! (`serverless::loading`): a request whose model is not HBM-warm on its
+//! device pays the tier cost (DRAM cache or NVMe) as a cold-start latency
+//! event on the event heap before its prefill starts. Placement is
+//! [`Placer::place_model_instance`] — ServerlessLLM's start-time-optimized
+//! rule (`locality: true`, minimize queue wait + load cost, so warm
+//! devices win until their queues exceed one reload) against the
+//! locality-oblivious baseline (minimize wait alone) the regressions
+//! measure it against. Serving models are pinned in the warm ledger
+//! (LRU-by-bytes eviction picks among the unpinned), and every lane's
+//! goodput / cold-start p99 / dollars land in [`RunReport::per_model`].
+//!
+//! Instance-granularity on purpose: the single-model core simulates
+//! *inside* one model (continuous batching, KV pressure, chunking); this
+//! layer simulates *between* models, where the load/evict/place dynamics
+//! dominate. Each device serves its queue FIFO (an eager `gpu_free_s`
+//! ledger), and a request's service time is its token count over the
+//! device's effective throughput at a fixed MFU — deliberately simple so
+//! every latency delta in the regressions is attributable to loading and
+//! placement.
+//!
+//! Drivers, exactly like the single-model core: the default event driver
+//! runs on the shared [`EventQueue`]; the lockstep oracle replays the
+//! identical `(t_bits, push-seq)` order by linear scan over a pending
+//! list. Both call the same transition function, so their reports are
+//! bit-for-bit identical (`tests/event_equivalence.rs`). A catalog of one
+//! delegates to the single-model [`super::run`] verbatim — bit-for-bit
+//! the existing path, plus one derived accounting lane.
+//!
+//! Hot-path discipline (P1/D1/D2-linted): heap + `BTreeMap` ledger only,
+//! no positional `Vec` surgery, no wall clock (`wall_s` stays 0), no
+//! hash iteration.
+
+use crate::baselines::PolicyKind;
+use crate::config::{ClusterSpec, DatasetSpec};
+use crate::metrics::{ModelLane, RequestRecord, RunReport, SloSpec};
+use crate::placer::Placer;
+use crate::serverless::loading::{cold_start_s, Tier, WarmStore};
+use crate::workload::{MmRequest, ModelCatalog, Scenario};
+
+use super::event::EventQueue;
+use super::{DriverKind, SimConfig};
+
+/// Fraction of a device's peak bf16 throughput a whole-model instance
+/// sustains (prefill + decode blended). Fixed: the colocation layer
+/// attributes latency to loading/placement, not kernel efficiency.
+const MFU: f64 = 0.35;
+
+/// Everything one multi-model colocation run needs.
+#[derive(Clone, Debug)]
+pub struct MmConfig {
+    pub catalog: ModelCatalog,
+    pub dataset: DatasetSpec,
+    pub cluster: ClusterSpec,
+    /// Arrival process applied per model at `base_rps × weight`.
+    pub scenario: Scenario,
+    pub duration_s: f64,
+    /// Aggregate mean arrivals/s across the whole catalog.
+    pub base_rps: f64,
+    pub seed: u64,
+    /// Start-time-optimized placement (wait + load) vs the oblivious
+    /// baseline (wait only) — the regression's A/B switch.
+    pub locality: bool,
+    pub slo: SloSpec,
+    pub driver: DriverKind,
+}
+
+impl MmConfig {
+    pub fn new(catalog: ModelCatalog, dataset: DatasetSpec) -> MmConfig {
+        MmConfig {
+            catalog,
+            dataset,
+            cluster: ClusterSpec::a6000_x8(),
+            scenario: Scenario::poisson(),
+            duration_s: 120.0,
+            base_rps: 6.0,
+            seed: 42,
+            locality: true,
+            slo: SloSpec::default(),
+            driver: DriverKind::Event,
+        }
+    }
+}
+
+/// One heap event of the colocation run. Unique push sequence numbers
+/// mean ordering never reaches the kind; the derive keeps the tuple key
+/// total for the heap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum MmEvent {
+    /// Trace slot `i` arrives.
+    Arrival(u32),
+    /// Trace slot `i`'s checkpoint finished staging onto its device (the
+    /// cold-start latency event; warm starts never schedule one).
+    LoadDone(u32),
+    /// Trace slot `i` emitted its last token.
+    Done(u32),
+}
+
+/// A placed request's committed schedule, written at arrival, consumed at
+/// its `Done` event.
+#[derive(Clone, Copy, Debug)]
+struct Flight {
+    gpu: u32,
+    first_token_s: f64,
+    finish_s: f64,
+}
+
+/// All mutable state of one colocation run. Both drivers call
+/// [`MmSim::on_event`] with identical `(t, event)` sequences, so every
+/// number below is driver-independent by construction.
+struct MmSim<'a> {
+    cfg: &'a MmConfig,
+    trace: &'a [MmRequest],
+    placer: Placer,
+    warm: WarmStore,
+    /// Eager per-device FIFO ledger: the instant each GPU next falls idle
+    /// given everything scheduled so far.
+    gpu_free_s: Vec<f64>,
+    flights: Vec<Option<Flight>>,
+    lanes: Vec<ModelLane>,
+    /// Checkpoint footprint per catalog model (GB).
+    model_gb: Vec<f64>,
+    /// Seconds per routed token, `[model][gpu]`.
+    tok_s: Vec<Vec<f64>>,
+    gpu_tokens: Vec<f64>,
+    gpu_busy_ms: Vec<f64>,
+    requests: Vec<RequestRecord>,
+    ttft_ms: Vec<f64>,
+    e2e_ms: Vec<f64>,
+    completed: u64,
+    /// Cold-start latency events retired (== total cold starts at drain).
+    loads_done: u64,
+    clock: f64,
+    wait_scratch: Vec<f64>,
+    load_scratch: Vec<f64>,
+}
+
+impl<'a> MmSim<'a> {
+    fn new(cfg: &'a MmConfig, trace: &'a [MmRequest]) -> MmSim<'a> {
+        let n_gpus = cfg.cluster.n_gpus();
+        let weights = cfg.catalog.weights();
+        let lanes = cfg
+            .catalog
+            .entries
+            .iter()
+            .zip(weights.iter())
+            .map(|(e, &w)| ModelLane {
+                model: e.model.name.clone(),
+                weight: w,
+                weights_gb: e.model.total_model_gb(),
+                ..ModelLane::default()
+            })
+            .collect();
+        let model_gb: Vec<f64> =
+            cfg.catalog.entries.iter().map(|e| e.model.total_model_gb()).collect();
+        // One routed token's forward work: every layer routes it through
+        // `top_k` experts.
+        let tok_s = cfg
+            .catalog
+            .entries
+            .iter()
+            .map(|e| {
+                let flops = e.model.n_layers as f64
+                    * e.model.top_k as f64
+                    * e.model.expert_flops_per_token();
+                cfg.cluster
+                    .gpus
+                    .iter()
+                    .map(|g| flops / (g.tflops * 1e12 * MFU))
+                    .collect()
+            })
+            .collect();
+        MmSim {
+            cfg,
+            trace,
+            placer: Placer,
+            warm: WarmStore::new(&cfg.cluster),
+            gpu_free_s: vec![0.0; n_gpus],
+            flights: vec![None; trace.len()],
+            lanes,
+            model_gb,
+            tok_s,
+            gpu_tokens: vec![0.0; n_gpus],
+            gpu_busy_ms: vec![0.0; n_gpus],
+            requests: Vec::new(),
+            ttft_ms: Vec::new(),
+            e2e_ms: Vec::new(),
+            completed: 0,
+            loads_done: 0,
+            clock: 0.0,
+            wait_scratch: Vec::with_capacity(n_gpus),
+            load_scratch: Vec::with_capacity(n_gpus),
+        }
+    }
+
+    /// The shared transition function: advance to `t`, apply `ev`, push
+    /// follow-up events into `out` (drained into the driver's queue in
+    /// order — the push order IS the tie-break order).
+    fn on_event(&mut self, t: f64, ev: MmEvent, out: &mut Vec<(f64, MmEvent)>) {
+        self.clock = t;
+        match ev {
+            MmEvent::Arrival(i) => self.on_arrival(i as usize, out),
+            MmEvent::LoadDone(_) => self.loads_done += 1,
+            MmEvent::Done(i) => self.on_done(i as usize),
+        }
+    }
+
+    fn on_arrival(&mut self, i: usize, out: &mut Vec<(f64, MmEvent)>) {
+        let mm = self.trace[i];
+        let m = mm.model as usize;
+        let t = mm.req.arrival_s;
+        self.lanes[m].arrivals += 1;
+        let gb = self.model_gb[m];
+        self.wait_scratch.clear();
+        self.load_scratch.clear();
+        for g in 0..self.gpu_free_s.len() {
+            self.wait_scratch.push((self.gpu_free_s[g] - t).max(0.0));
+            let tier = self.warm.tier_for(g, mm.model);
+            self.load_scratch.push(cold_start_s(gb, tier, &self.cfg.cluster.gpus[g]));
+        }
+        let placed = self.placer.place_model_instance(
+            &self.wait_scratch,
+            &self.load_scratch,
+            self.cfg.locality,
+        );
+        let Some(g) = placed else {
+            self.lanes[m].rejected += 1;
+            return;
+        };
+        let tier = self.warm.tier_for(g, mm.model);
+        // Admission: the weights must fit the device after LRU-evicting
+        // unpinned residents; a refusal (all pinned by queued requests,
+        // or an oversized checkpoint) rejects the request — counted,
+        // never silently lost.
+        if !self.warm.admit(g, mm.model, gb) {
+            self.lanes[m].rejected += 1;
+            return;
+        }
+        self.warm.pin(g, mm.model);
+        if tier != Tier::Hbm {
+            // Any load passes through the host cache: NVMe reads populate
+            // it, DRAM-tier loads refresh its recency.
+            self.warm.stage_dram(mm.model, gb);
+        }
+        let gpu = &self.cfg.cluster.gpus[g];
+        let cold_s = cold_start_s(gb, tier, gpu);
+        let tok_s = self.tok_s[m][g];
+        let prefill_s = mm.req.prompt_tokens as f64 * tok_s;
+        let decode_s = mm.req.output_tokens as f64 * tok_s;
+        let start = self.gpu_free_s[g].max(t);
+        let first_token_s = start + cold_s + prefill_s;
+        let finish_s = start + cold_s + prefill_s + decode_s;
+        self.gpu_free_s[g] = finish_s;
+        self.flights[i] = Some(Flight { gpu: g as u32, first_token_s, finish_s });
+        let lane = &mut self.lanes[m];
+        lane.cold_wait_ms.push(cold_s * 1e3);
+        if tier == Tier::Hbm {
+            lane.warm_starts += 1;
+        } else {
+            lane.cold_starts += 1;
+            out.push((start + cold_s, MmEvent::LoadDone(i as u32)));
+        }
+        // Billed for its whole device occupancy (load included), at the
+        // device's rate — the per-lane dollar view.
+        lane.dollar_cost += (finish_s - start) / 3600.0 * gpu.cost_per_hour;
+        self.gpu_tokens[g] += (mm.req.prompt_tokens + mm.req.output_tokens) as f64;
+        self.gpu_busy_ms[g] += (prefill_s + decode_s) * 1e3;
+        out.push((finish_s, MmEvent::Done(i as u32)));
+    }
+
+    fn on_done(&mut self, i: usize) {
+        let fl = crate::util::fail::expect_invariant(
+            self.flights[i].take(),
+            "Done event for a request that was never placed",
+        );
+        let mm = self.trace[i];
+        let m = mm.model as usize;
+        self.warm.unpin(fl.gpu as usize, mm.model);
+        let rec = RequestRecord {
+            id: i as u64,
+            arrival_s: mm.req.arrival_s,
+            first_token_s: fl.first_token_s,
+            finish_s: fl.finish_s,
+            prompt_tokens: mm.req.prompt_tokens,
+            output_tokens: mm.req.output_tokens,
+            preemptions: 0,
+            chunks: 1,
+        };
+        let lane = &mut self.lanes[m];
+        lane.completed += 1;
+        if self.cfg.slo.met(&rec) {
+            lane.slo_good += 1;
+        }
+        self.ttft_ms.push(rec.ttft_ms());
+        self.e2e_ms.push(rec.e2e_ms());
+        self.requests.push(rec);
+        self.completed += 1;
+    }
+
+    fn into_report(self) -> RunReport {
+        debug_assert_eq!(
+            self.loads_done,
+            self.lanes.iter().map(|l| l.cold_starts).sum::<u64>(),
+            "every cold start must retire exactly one LoadDone event"
+        );
+        let cold: u64 = self.lanes.iter().map(|l| l.cold_starts).sum();
+        let warm: u64 = self.lanes.iter().map(|l| l.warm_starts).sum();
+        let started = cold + warm;
+        RunReport {
+            policy: if self.cfg.locality { "mm-locality" } else { "mm-oblivious" }.into(),
+            model: format!("catalog-{}", self.lanes.len()),
+            dataset: self.cfg.dataset.name.clone(),
+            driver: self.cfg.driver.name(),
+            cold_starts: cold,
+            warm_fraction: if started > 0 { warm as f64 / started as f64 } else { 0.0 },
+            completed_requests: self.completed,
+            tokens_processed: self.gpu_tokens.iter().sum::<f64>() as u64,
+            rejected_requests: self.lanes.iter().map(|l| l.rejected).sum(),
+            ttft_ms: self.ttft_ms,
+            e2e_ms: self.e2e_ms,
+            requests: self.requests,
+            gpu_tokens: self.gpu_tokens,
+            gpu_busy_ms: self.gpu_busy_ms,
+            dollar_cost: self.lanes.iter().map(|l| l.dollar_cost).sum(),
+            // The instant the last event retired (>= the offered window);
+            // the per-lane goodput denominator. `wall_s` stays 0: this
+            // path is D2-linted and never reads a wall clock.
+            sim_duration_s: self.cfg.duration_s.max(self.clock),
+            per_model: self.lanes,
+            ..RunReport::default()
+        }
+    }
+}
+
+/// Run one multi-model colocation simulation.
+///
+/// A catalog of one is *defined* as the existing single-model simulation:
+/// it delegates to [`super::run`] with the equivalent [`SimConfig`]
+/// (MoEless policy, same cluster/scenario/duration/rps/seed/driver) and
+/// appends one accounting lane derived from that report — so single-model
+/// configs stay bit-for-bit identical to today under both drivers
+/// (pinned by `tests/event_equivalence.rs`).
+pub fn run_multimodel(cfg: &MmConfig) -> RunReport {
+    if cfg.catalog.len() == 1 {
+        let entry = &cfg.catalog.entries[0];
+        let mut sc =
+            SimConfig::new(entry.model.clone(), cfg.dataset.clone(), PolicyKind::Moeless);
+        sc.cluster = cfg.cluster.clone();
+        sc.scenario = cfg.scenario.clone();
+        sc.duration_s = cfg.duration_s;
+        sc.base_rps = cfg.base_rps;
+        sc.seed = cfg.seed;
+        sc.driver = cfg.driver;
+        let mut report = super::run(&sc);
+        report.per_model.push(ModelLane {
+            model: entry.model.name.clone(),
+            weight: 1.0,
+            weights_gb: entry.model.total_model_gb(),
+            arrivals: report.completed_requests + report.rejected_requests,
+            completed: report.completed_requests,
+            slo_good: report.requests.iter().filter(|r| cfg.slo.met(r)).count() as u64,
+            rejected: report.rejected_requests,
+            // Expert-instance cold starts (the single-model core's
+            // notion); the whole-model checkpoint never reloads, so the
+            // wait population is empty.
+            cold_starts: report.cold_starts,
+            dollar_cost: report.dollar_cost,
+            ..ModelLane::default()
+        });
+        return report;
+    }
+    let trace =
+        cfg.catalog.generate_trace(&cfg.scenario, &cfg.dataset, cfg.duration_s, cfg.base_rps, cfg.seed);
+    run_colocated(cfg, &trace)
+}
+
+/// Drive the colocation transition function under the configured driver.
+fn run_colocated(cfg: &MmConfig, trace: &[MmRequest]) -> RunReport {
+    let mut sim = MmSim::new(cfg, trace);
+    // Follow-up events staged here per transition, then drained into the
+    // driver's queue in push order (order defines the tie-break).
+    let mut out: Vec<(f64, MmEvent)> = Vec::new();
+    match cfg.driver {
+        DriverKind::Event => {
+            let mut q: EventQueue<MmEvent> = EventQueue::new();
+            for (i, r) in trace.iter().enumerate() {
+                q.push(r.req.arrival_s, MmEvent::Arrival(i as u32));
+            }
+            while let Some((t, ev)) = q.pop() {
+                sim.on_event(t, ev, &mut out);
+                for &(tt, e) in out.iter() {
+                    q.push(tt, e);
+                }
+                out.clear();
+            }
+        }
+        DriverKind::Lockstep => {
+            // The oracle: a flat pending list scanned linearly for the
+            // minimal `(t_bits, seq)` — the exact order the heap pops, by
+            // construction, since `seq` mirrors `EventQueue`'s push
+            // counter. Retired slots become `None` (no positional
+            // surgery); O(n²) and proud — it exists to pin the heap.
+            let mut pending: Vec<Option<(u64, u64, MmEvent)>> = Vec::new();
+            let mut seq: u64 = 0;
+            for (i, r) in trace.iter().enumerate() {
+                pending.push(Some((r.req.arrival_s.to_bits(), seq, MmEvent::Arrival(i as u32))));
+                seq += 1;
+            }
+            loop {
+                let mut best: Option<(usize, (u64, u64, MmEvent))> = None;
+                for (idx, slot) in pending.iter().enumerate() {
+                    if let Some(ev) = slot {
+                        let earlier = match &best {
+                            None => true,
+                            Some((_, b)) => (ev.0, ev.1) < (b.0, b.1),
+                        };
+                        if earlier {
+                            best = Some((idx, *ev));
+                        }
+                    }
+                }
+                let Some((idx, (t_bits, _, ev))) = best else { break };
+                pending[idx] = None;
+                sim.on_event(f64::from_bits(t_bits), ev, &mut out);
+                for &(tt, e) in out.iter() {
+                    pending.push(Some((tt.to_bits(), seq, e)));
+                    seq += 1;
+                }
+                out.clear();
+            }
+        }
+    }
+    sim.into_report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::workload::CatalogEntry;
+
+    /// A deterministic catalog of `n` equally-sized (`gb` GB) models with
+    /// rank-Zipf weights — the hand-checkable regression workload.
+    fn uniform_catalog(n: usize, gb: f64, skew: f64) -> ModelCatalog {
+        let entries = (0..n)
+            .map(|i| {
+                let base = ModelSpec::mixtral_8x7b();
+                let scale = gb / base.total_model_gb();
+                CatalogEntry {
+                    model: ModelSpec {
+                        name: format!("m{i:02}"),
+                        expert_mem_gb: base.expert_mem_gb * scale,
+                        misc_mem_gb: base.misc_mem_gb * scale,
+                        ..base
+                    },
+                    weight: 1.0 / ((i + 1) as f64).powf(skew),
+                }
+            })
+            .collect();
+        ModelCatalog { entries }
+    }
+
+    fn quick_cfg(n: usize) -> MmConfig {
+        let mut cfg = MmConfig::new(uniform_catalog(n, 6.0, 1.2), DatasetSpec::lmsys());
+        cfg.duration_s = 60.0;
+        cfg.base_rps = 4.0;
+        cfg.seed = 7;
+        cfg
+    }
+
+    #[test]
+    fn colocated_run_is_deterministic_and_accounts_every_arrival() {
+        let cfg = quick_cfg(8);
+        let a = run_multimodel(&cfg);
+        let b = run_multimodel(&cfg);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.per_model, b.per_model);
+        assert_eq!(a.policy, "mm-locality");
+        assert_eq!(a.model, "catalog-8");
+        assert!(a.completed_requests > 0);
+        for lane in &a.per_model {
+            assert_eq!(
+                lane.arrivals,
+                lane.completed + lane.rejected,
+                "{}: every arrival completes or is rejected (no horizon cut)",
+                lane.model
+            );
+            assert_eq!(lane.cold_wait_ms.len() as u64, lane.cold_starts + lane.warm_starts);
+        }
+        let lane_completed: u64 = a.per_model.iter().map(|l| l.completed).sum();
+        assert_eq!(lane_completed, a.completed_requests);
+        // Nothing is preloaded, so a model's first (non-rejected) start is
+        // necessarily cold — per lane, not just in aggregate.
+        for lane in &a.per_model {
+            if lane.completed > 0 {
+                assert!(lane.cold_starts >= 1, "{}: first start must be cold", lane.model);
+            }
+        }
+        assert!(a.cold_starts > 0);
+        assert!(a.dollar_cost > 0.0);
+        assert_eq!(a.wall_s, 0.0, "D2: the colocation path never reads a wall clock");
+    }
+
+    #[test]
+    fn event_and_lockstep_drivers_are_bit_identical() {
+        let mut cfg = quick_cfg(6);
+        let ev = run_multimodel(&cfg);
+        cfg.driver = DriverKind::Lockstep;
+        let ls = run_multimodel(&cfg);
+        assert_eq!(ev.requests, ls.requests);
+        assert_eq!(ev.per_model, ls.per_model);
+        assert_eq!(ev.dollar_cost.to_bits(), ls.dollar_cost.to_bits());
+        assert_eq!(ev.sim_duration_s.to_bits(), ls.sim_duration_s.to_bits());
+        assert_eq!(ev.driver, "event");
+        assert_eq!(ls.driver, "lockstep");
+    }
+
+    #[test]
+    fn warm_ledger_never_oversubscribes_and_locality_reduces_colds() {
+        // Small fleet, catalog bigger than its HBM: contention guaranteed.
+        let mut cfg = quick_cfg(10);
+        cfg.cluster = ClusterSpec::a6000_x8().with_n_gpus(2);
+        let loc = run_multimodel(&cfg);
+        cfg.locality = false;
+        let obl = run_multimodel(&cfg);
+        assert!(
+            loc.cold_starts < obl.cold_starts,
+            "start-time-optimized placement must reload less: {} vs {}",
+            loc.cold_starts,
+            obl.cold_starts
+        );
+        // Both policies keep every lane's arrivals conserved.
+        for r in [&loc, &obl] {
+            let arrivals: u64 = r.per_model.iter().map(|l| l.arrivals).sum();
+            assert_eq!(arrivals, r.completed_requests + r.rejected_requests);
+        }
+    }
+
+    #[test]
+    fn catalog_of_one_delegates_with_a_derived_lane() {
+        let model = ModelSpec::mixtral_8x7b();
+        let mut cfg = MmConfig::new(ModelCatalog::single(model.clone()), DatasetSpec::lmsys());
+        cfg.duration_s = 20.0;
+        cfg.base_rps = 2.0;
+        let r = run_multimodel(&cfg);
+        assert_eq!(r.policy, "moeless", "catalog-of-one IS the single-model path");
+        assert_eq!(r.per_model.len(), 1);
+        let lane = &r.per_model[0];
+        assert_eq!(lane.model, "mixtral-8x7b");
+        assert_eq!(lane.completed, r.completed_requests);
+        assert_eq!(lane.weight, 1.0);
+        assert!(lane.cold_wait_ms.is_empty());
+    }
+}

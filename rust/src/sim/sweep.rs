@@ -147,6 +147,97 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepCell> {
         .collect()
 }
 
+/// The multi-model colocation sweep grid: catalog sizes × placement
+/// policies × seeds on one (dataset, cluster, scenario). Every cell runs
+/// [`run_multimodel`](crate::sim::multimodel::run_multimodel) on its own
+/// Zipf catalog (`zipf(n, skew, seed)` — catalogs are seed-deterministic,
+/// so cells are reproducible standalone).
+#[derive(Clone, Debug)]
+pub struct MmSweepSpec {
+    pub dataset: DatasetSpec,
+    pub cluster: ClusterSpec,
+    pub scenario: Scenario,
+    pub catalog_sizes: Vec<usize>,
+    /// Zipf popularity skew of every generated catalog.
+    pub skew: f64,
+    /// Placement policies to A/B (`true` = locality-aware).
+    pub localities: Vec<bool>,
+    pub seeds: Vec<u64>,
+    pub duration_s: f64,
+    pub base_rps: f64,
+    /// Worker threads the runs are sharded across (1 = sequential).
+    pub threads: usize,
+}
+
+impl MmSweepSpec {
+    pub fn new(dataset: DatasetSpec) -> MmSweepSpec {
+        MmSweepSpec {
+            dataset,
+            cluster: ClusterSpec::a6000_x8(),
+            scenario: Scenario::poisson(),
+            catalog_sizes: vec![10, 20, 40],
+            skew: 1.2,
+            localities: vec![true, false],
+            seeds: vec![42],
+            duration_s: 30.0,
+            base_rps: 6.0,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+
+    /// The grid, catalog-size-major: every (n_models, locality, seed) cell.
+    pub fn cells(&self) -> Vec<(usize, bool, u64)> {
+        let mut out = Vec::new();
+        for &n in &self.catalog_sizes {
+            for &locality in &self.localities {
+                for &seed in &self.seeds {
+                    out.push((n, locality, seed));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One completed multi-model sweep cell.
+#[derive(Clone, Debug)]
+pub struct MmSweepCell {
+    pub n_models: usize,
+    pub locality: bool,
+    pub seed: u64,
+    pub report: RunReport,
+}
+
+/// Run every cell of the multi-model grid, sharded like [`run_sweep`].
+/// Deterministic and thread-count-independent: each cell's catalog, trace
+/// and placement derive only from its own (n_models, locality, seed).
+pub fn run_multimodel_sweep(spec: &MmSweepSpec) -> Vec<MmSweepCell> {
+    use crate::sim::multimodel::{run_multimodel, MmConfig};
+    use crate::workload::ModelCatalog;
+    let jobs = spec.cells();
+    let reports = scoped_map(&jobs, spec.threads.max(1), |job| {
+        let (n, locality, seed) = *job;
+        let mut cfg =
+            MmConfig::new(ModelCatalog::zipf(n, spec.skew, seed), spec.dataset.clone());
+        cfg.cluster = spec.cluster.clone();
+        cfg.scenario = spec.scenario.clone();
+        cfg.duration_s = spec.duration_s;
+        cfg.base_rps = spec.base_rps;
+        cfg.seed = seed;
+        cfg.locality = locality;
+        run_multimodel(&cfg)
+    });
+    jobs.into_iter()
+        .zip(reports)
+        .map(|((n_models, locality, seed), report)| MmSweepCell {
+            n_models,
+            locality,
+            seed,
+            report,
+        })
+        .collect()
+}
+
 /// Request-level summary of one (scenario, policy) group, pooled across
 /// seeds: TTFT/TPOT p50/p95/p99 over every completed request, plus mean
 /// goodput under the SLO.
@@ -424,6 +515,31 @@ mod tests {
         let second = summarize(&run_sweep(&spec), &SloSpec::default());
         assert_eq!(first, second);
         assert!(!first.is_empty());
+    }
+
+    #[test]
+    fn multimodel_sweep_covers_the_grid_and_is_thread_independent() {
+        let mut spec = MmSweepSpec::new(DatasetSpec::lmsys());
+        spec.catalog_sizes = vec![4, 8];
+        spec.seeds = vec![7];
+        spec.duration_s = 12.0;
+        spec.base_rps = 3.0;
+        spec.threads = 4;
+        let par = run_multimodel_sweep(&spec);
+        assert_eq!(par.len(), 2 * 2 * 1, "catalog sizes x localities x seeds");
+        let mut seq_spec = spec.clone();
+        seq_spec.threads = 1;
+        let seq = run_multimodel_sweep(&seq_spec);
+        for (a, b) in par.iter().zip(&seq) {
+            assert_eq!((a.n_models, a.locality, a.seed), (b.n_models, b.locality, b.seed));
+            assert_eq!(a.report.requests, b.report.requests);
+            assert_eq!(a.report.per_model, b.report.per_model);
+        }
+        for c in &par {
+            assert_eq!(c.report.per_model.len(), c.n_models);
+            let expected = if c.locality { "mm-locality" } else { "mm-oblivious" };
+            assert_eq!(c.report.policy, expected);
+        }
     }
 
     #[test]

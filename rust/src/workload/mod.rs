@@ -3,9 +3,11 @@
 //! models, and the Tier-B expert routing generator.
 
 pub mod arrivals;
+pub mod catalog;
 pub mod routing;
 pub mod trace;
 
 pub use arrivals::{ArrivalKind, Scenario};
+pub use catalog::{CatalogEntry, MmRequest, ModelCatalog};
 pub use routing::RoutingModel;
 pub use trace::{azure_like_trace, burst_trace, interference_trace, TraceRequest};

@@ -19,10 +19,12 @@
 //! Idle jumps reuse the shared `idle_wakeup` decision function verbatim.
 
 use moeless::baselines::PolicyKind;
-use moeless::config::{DatasetSpec, DisaggSpec, ModelSpec};
+use moeless::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec};
 use moeless::metrics::RunReport;
+use moeless::sim::multimodel::{run_multimodel, MmConfig};
 use moeless::sim::{run, DriverKind, SimConfig};
 use moeless::util::quickcheck::property;
+use moeless::workload::ModelCatalog;
 
 fn base_cfg(policy: PolicyKind) -> SimConfig {
     let mut cfg = SimConfig::new(ModelSpec::mixtral_8x7b(), DatasetSpec::lmsys(), policy);
@@ -161,6 +163,127 @@ fn serverless_policy_event_matches_lockstep() {
     // instants; async-EP covers the serverful no-barrier path.
     let (ev, lock) = run_both(&base_cfg(PolicyKind::AsyncEp));
     assert_bit_identical("async-ep", &ev, &lock);
+}
+
+// ---------------------------------------------------------------------------
+// Multi-model colocation (PR 8): the colocation layer runs on the same
+// generic event queue, with its own lockstep oracle replaying the heap's
+// `(t_bits, seq)` order by linear scan — same bit-for-bit bar.
+// ---------------------------------------------------------------------------
+
+fn mm_cfg(n_models: usize, seed: u64) -> MmConfig {
+    let mut cfg =
+        MmConfig::new(ModelCatalog::zipf(n_models, 1.2, seed), DatasetSpec::lmsys());
+    cfg.duration_s = 20.0;
+    cfg.base_rps = 4.0;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Run one colocation configuration under both drivers.
+fn run_mm_both(cfg: &MmConfig) -> (RunReport, RunReport) {
+    let mut ev_cfg = cfg.clone();
+    ev_cfg.driver = DriverKind::Event;
+    let mut lock_cfg = cfg.clone();
+    lock_cfg.driver = DriverKind::Lockstep;
+    (run_multimodel(&ev_cfg), run_multimodel(&lock_cfg))
+}
+
+/// Colocation reports add per-model lanes on top of the single-model
+/// fields; compare those too (every lane f64 is an exact event-time
+/// derivative, so `ModelLane` equality is exact).
+fn assert_mm_bit_identical(label: &str, ev: &RunReport, lock: &RunReport) {
+    assert_bit_identical(label, ev, lock);
+    assert_eq!(ev.per_model, lock.per_model, "{label}: per-model lanes diverged");
+}
+
+#[test]
+fn multimodel_event_matches_lockstep() {
+    let (ev, lock) = run_mm_both(&mm_cfg(8, 7));
+    assert!(ev.completed_requests > 0, "multimodel: run must do work");
+    assert!(ev.cold_starts > 0, "multimodel: catalog must cold-start");
+    assert_mm_bit_identical("multimodel", &ev, &lock);
+}
+
+#[test]
+fn multimodel_contended_event_matches_lockstep() {
+    // HBM contention: a 2-GPU fleet under a 10-model catalog forces the
+    // LRU eviction and rejection paths under both drivers.
+    let mut cfg = mm_cfg(10, 11);
+    cfg.cluster = ClusterSpec::a6000_x8().with_n_gpus(2).with_mem_per_gpu(12.0);
+    cfg.base_rps = 6.0;
+    let (ev, lock) = run_mm_both(&cfg);
+    assert!(ev.cold_starts > 0, "contended: reloads must happen");
+    assert_mm_bit_identical("multimodel-contended", &ev, &lock);
+}
+
+#[test]
+fn multimodel_oblivious_event_matches_lockstep() {
+    // The A/B ablation leg must be driver-equivalent too, or the
+    // regression comparison would be comparing drivers, not policies.
+    let mut cfg = mm_cfg(8, 13);
+    cfg.locality = false;
+    let (ev, lock) = run_mm_both(&cfg);
+    assert_mm_bit_identical("multimodel-oblivious", &ev, &lock);
+}
+
+#[test]
+fn catalog_of_one_is_bit_for_bit_the_single_model_path() {
+    // The tentpole no-op guarantee: a catalog of one IS the existing
+    // single-model simulation under both drivers — same frozen numbers
+    // the rest of this suite pins, plus exactly one derived lane.
+    for driver in [DriverKind::Event, DriverKind::Lockstep] {
+        let mut single = base_cfg(PolicyKind::Moeless);
+        single.driver = driver;
+        let baseline = run(&single);
+
+        let mut cfg =
+            MmConfig::new(ModelCatalog::single(single.model.clone()), single.dataset.clone());
+        cfg.cluster = single.cluster.clone();
+        cfg.scenario = single.scenario.clone();
+        cfg.duration_s = single.duration_s;
+        cfg.base_rps = single.base_rps;
+        cfg.seed = single.seed;
+        cfg.driver = driver;
+        let mm = run_multimodel(&cfg);
+
+        // Every single-model field bit-identical to today's path...
+        assert_eq!(mm.requests, baseline.requests, "{driver:?}: requests diverged");
+        assert_eq!(mm.layer_forward, baseline.layer_forward, "{driver:?}");
+        assert_eq!(mm.iterations, baseline.iterations, "{driver:?}");
+        assert_eq!(mm.dollar_cost.to_bits(), baseline.dollar_cost.to_bits(), "{driver:?}");
+        assert_eq!(mm.cost_gb_s.to_bits(), baseline.cost_gb_s.to_bits(), "{driver:?}");
+        assert_eq!(
+            mm.sim_duration_s.to_bits(),
+            baseline.sim_duration_s.to_bits(),
+            "{driver:?}"
+        );
+        assert_eq!(mm.gpu_tokens, baseline.gpu_tokens, "{driver:?}");
+        assert_eq!(mm.policy, baseline.policy, "{driver:?}: same policy label");
+        // ...plus the one additive lane.
+        assert!(baseline.per_model.is_empty(), "single-model runs carry no lanes");
+        assert_eq!(mm.per_model.len(), 1, "{driver:?}: catalog-of-one adds one lane");
+        assert_eq!(mm.per_model[0].completed, baseline.completed_requests, "{driver:?}");
+    }
+}
+
+#[test]
+fn randomized_multimodel_differential_event_matches_lockstep() {
+    // Fixed-seed randomized sweep over catalog size × skew × load ×
+    // placement policy × fleet size. Short traces: the lockstep oracle is
+    // O(n²) by design (it exists to pin the heap).
+    property(20, |g| {
+        let mut cfg = mm_cfg(g.usize_in(2, 12), g.usize_in(0, 1000) as u64);
+        cfg.catalog = ModelCatalog::zipf(cfg.catalog.len(), g.f64_in(0.5, 2.0), cfg.seed);
+        cfg.duration_s = g.f64_in(4.0, 12.0);
+        cfg.base_rps = g.f64_in(1.0, 6.0);
+        cfg.locality = g.bool();
+        if g.bool() {
+            cfg.cluster = ClusterSpec::a6000_x8().with_n_gpus(g.usize_in(1, 4));
+        }
+        let (ev, lock) = run_mm_both(&cfg);
+        assert_mm_bit_identical("multimodel-randomized", &ev, &lock);
+    });
 }
 
 #[test]

@@ -222,6 +222,8 @@ fn random_hetero_spec(g: &mut moeless::util::quickcheck::Gen) -> ClusterSpec {
             tflops: g.f64_in(50.0, 1200.0),
             hbm_gbps: g.f64_in(100.0, 4000.0),
             cost_per_hour: g.f64_in(0.1, 5.0),
+            nvme_gbps: g.f64_in(1.0, 10.0),
+            dram_gbps: g.f64_in(8.0, 64.0),
         };
     }
     spec
@@ -667,5 +669,98 @@ fn prop_tiny_cluster_never_panics() {
         cfg.seed = g.seed;
         let r = run(&cfg);
         assert!(r.layer_forward.mean().is_finite() && r.layer_forward.max().is_finite());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint-loading model (serverless::loading) laws.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cold_start_monotone_in_model_size_and_bandwidth() {
+    use moeless::config::GpuSpec;
+    use moeless::serverless::loading::{cold_start_s, Tier};
+    property(200, |g| {
+        let mut gpu = GpuSpec::a6000();
+        gpu.nvme_gbps = g.f64_in(0.5, 50.0);
+        gpu.dram_gbps = g.f64_in(1.0, 200.0);
+        let gb_a = g.f64_in(0.1, 200.0);
+        let gb_b = g.f64_in(0.1, 200.0);
+        let (small, big) = if gb_a <= gb_b { (gb_a, gb_b) } else { (gb_b, gb_a) };
+        for tier in [Tier::Hbm, Tier::Dram, Tier::Nvme] {
+            // Monotone nondecreasing in checkpoint size.
+            assert!(cold_start_s(small, tier, &gpu) <= cold_start_s(big, tier, &gpu));
+            // Warm-resident is free; every colder tier costs at least as much.
+            assert!(cold_start_s(small, Tier::Hbm, &gpu) == 0.0);
+            assert!(cold_start_s(small, tier, &gpu) >= 0.0);
+        }
+        // Deeper tiers never beat shallower ones on the same hardware.
+        assert!(cold_start_s(big, Tier::Dram, &gpu) <= cold_start_s(big, Tier::Nvme, &gpu));
+        // Nonincreasing in each tier bandwidth, the other held fixed.
+        let mut faster_nvme = gpu.clone();
+        faster_nvme.nvme_gbps = gpu.nvme_gbps * g.f64_in(1.0, 8.0);
+        assert!(cold_start_s(big, Tier::Nvme, &faster_nvme) <= cold_start_s(big, Tier::Nvme, &gpu));
+        let mut faster_dram = gpu.clone();
+        faster_dram.dram_gbps = gpu.dram_gbps * g.f64_in(1.0, 8.0);
+        assert!(cold_start_s(big, Tier::Dram, &faster_dram) <= cold_start_s(big, Tier::Dram, &gpu));
+        assert!(cold_start_s(big, Tier::Nvme, &faster_dram) <= cold_start_s(big, Tier::Nvme, &gpu));
+    });
+}
+
+#[test]
+fn prop_warm_ledger_never_oversubscribes_any_device() {
+    use moeless::serverless::loading::WarmStore;
+    property(150, |g| {
+        let n_gpus = g.usize_in(1, 4);
+        let hbm_gb = g.f64_in(4.0, 32.0);
+        let dram_gb = g.f64_in(0.0, 48.0);
+        let mut spec = ClusterSpec::a6000_x8().with_n_gpus(n_gpus).with_mem_per_gpu(hbm_gb);
+        spec.dram_cache_gb = dram_gb;
+        let mut store = WarmStore::new(&spec);
+        let n_models = g.usize_in(1, 12);
+        let sizes: Vec<f64> = (0..n_models).map(|_| g.f64_in(0.5, 20.0)).collect();
+        let mut pins = vec![vec![0u32; n_models]; n_gpus];
+        for _ in 0..g.usize_in(1, 120) {
+            let gpu = g.usize_in(0, n_gpus - 1);
+            let m = g.usize_in(0, n_models - 1) as u32;
+            match g.usize_in(0, 5) {
+                0 | 1 => {
+                    // Admission either fits (possibly after LRU eviction of
+                    // unpinned residents) or refuses outright.
+                    store.admit(gpu, m, sizes[m as usize]);
+                }
+                2 => {
+                    store.evict(gpu, m);
+                }
+                3 => {
+                    // Only pin what a real arrival pins: an admitted model.
+                    if store.is_warm(gpu, m) {
+                        store.pin(gpu, m);
+                        pins[gpu][m as usize] += 1;
+                    }
+                }
+                4 => {
+                    if pins[gpu][m as usize] > 0 {
+                        store.unpin(gpu, m);
+                        pins[gpu][m as usize] -= 1;
+                    }
+                }
+                _ => {
+                    store.stage_dram(m, sizes[m as usize]);
+                    store.touch(gpu, m);
+                }
+            }
+            // The invariant: no device ledger ever exceeds its capacity,
+            // regardless of the admit/evict/pin/touch interleaving.
+            for dev in 0..n_gpus {
+                assert!(
+                    store.used_gb(dev) <= store.capacity_gb(dev) + 1e-9,
+                    "device {dev}: {} GB used of {} GB",
+                    store.used_gb(dev),
+                    store.capacity_gb(dev)
+                );
+            }
+            assert!(store.dram_used_gb() <= dram_gb + 1e-9);
+        }
     });
 }

@@ -36,8 +36,9 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "D1",
         title: "no HashMap/HashSet iteration in deterministic sim-core modules",
-        scope: "rust/src/{router,sim,placer,scaler,engine,workload,metrics} \
-                (router/reference.rs included); keyed lookup/insert/remove is fine",
+        scope: "rust/src/{router,sim,placer,scaler,engine,workload,metrics,serverless} \
+                (router/reference.rs and the multi-model catalog/loading modules \
+                included); keyed lookup/insert/remove is fine",
         rationale: "std hash iteration order is randomized per process; any sim-path \
                     decision derived from it breaks bit-for-bit golden equivalence and \
                     multi-seed reproducibility silently.",
@@ -82,7 +83,8 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "P1",
         title: "no Vec::remove/swap_remove/insert(0, _) on batcher/placer hot paths",
-        scope: "rust/src/router/mod.rs, rust/src/placer/, and rust/src/sim/event.rs \
+        scope: "rust/src/router/mod.rs, rust/src/placer/, rust/src/sim/event.rs, \
+                rust/src/sim/multimodel.rs and rust/src/serverless/loading.rs \
                 (router/reference.rs is excluded by design: it is the frozen pre-PR4 \
                 core that golden equivalence measures against; the frozen lockstep \
                 driver in sim/mod.rs is excluded for the same reason)",
@@ -125,7 +127,7 @@ pub struct FileClass {
 }
 
 const SIM_CORE_MODULES: &[&str] =
-    &["router", "sim", "placer", "scaler", "engine", "workload", "metrics"];
+    &["router", "sim", "placer", "scaler", "engine", "workload", "metrics", "serverless"];
 
 /// Classify a file by its repo-relative path, then apply any
 /// `pallas-lint: treat-as(...)` directive (used by the test fixtures).
@@ -136,8 +138,11 @@ pub fn classify(rel_path: &str, comments: &[Comment]) -> FileClass {
         let tail = &rel[idx + "rust/src/".len()..];
         let top = tail.split('/').next().unwrap_or("").trim_end_matches(".rs");
         class.sim_core = SIM_CORE_MODULES.contains(&top);
-        class.hot_path =
-            tail == "router/mod.rs" || tail.starts_with("placer/") || tail == "sim/event.rs";
+        class.hot_path = tail == "router/mod.rs"
+            || tail.starts_with("placer/")
+            || tail == "sim/event.rs"
+            || tail == "sim/multimodel.rs"
+            || tail == "serverless/loading.rs";
         class.library = tail != "main.rs";
         if tail == "router/reference.rs" {
             // Frozen pre-PR4 core: held to the determinism rules (golden

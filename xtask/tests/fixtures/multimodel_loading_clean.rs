@@ -1,0 +1,28 @@
+// pallas-lint: treat-as(hot-path,sim-core)
+//! Negative fixture for the multi-model loading/colocation scope
+//! (`serverless/loading.rs`, `sim/multimodel.rs`): the warm-ledger shape
+//! those modules use — a `BTreeMap` LRU keyed by `(stamp, model)` with
+//! keyed remove/insert (D1/P1-safe), `Option::take` instead of positional
+//! `Vec` surgery, and no wall clock anywhere (D2-safe).
+
+use std::collections::BTreeMap;
+
+pub struct WarmLedger {
+    pub by_stamp: BTreeMap<(u64, u32), f64>,
+    pub stamp_of: BTreeMap<u32, u64>,
+}
+
+/// Keyed LRU touch: remove by key, reinsert at the new stamp — no
+/// iteration order consumed, no positional shift.
+pub fn touch(ledger: &mut WarmLedger, model: u32, now_stamp: u64) {
+    if let Some(old) = ledger.stamp_of.insert(model, now_stamp) {
+        if let Some(gb) = ledger.by_stamp.remove(&(old, model)) {
+            ledger.by_stamp.insert((now_stamp, model), gb);
+        }
+    }
+}
+
+/// Retiring an in-flight slot: `Option::take`, not `Vec::remove`.
+pub fn retire(flights: &mut [Option<u32>], idx: usize) -> Option<u32> {
+    flights[idx].take()
+}

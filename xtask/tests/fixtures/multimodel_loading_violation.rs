@@ -1,0 +1,32 @@
+// pallas-lint: treat-as(hot-path,sim-core)
+//! Positive fixture for the multi-model loading/colocation scope: a warm
+//! ledger that (a) evicts by iterating a `HashMap` (D1 — the victim
+//! depends on randomized hash order), (b) timestamps recency off the wall
+//! clock (D2 — two identical runs diverge), and (c) retires queue slots
+//! with positional `Vec` surgery (P1 — O(n) shifts on the hot path).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct WarmLedger {
+    pub resident: HashMap<u32, f64>,
+}
+
+/// D1: the eviction victim is whatever the hash iterator yields first.
+pub fn evict_any(ledger: &mut WarmLedger) -> Option<u32> {
+    let victim = ledger.resident.iter().next().map(|(m, _)| *m);
+    if let Some(m) = victim {
+        ledger.resident.remove(&m);
+    }
+    victim
+}
+
+/// D2: recency stamped from the host clock instead of the sim clock.
+pub fn stamp() -> Instant {
+    Instant::now()
+}
+
+/// P1: positional surgery on the pending-request queue.
+pub fn retire(pending: &mut Vec<u32>, idx: usize) -> u32 {
+    pending.remove(idx)
+}

@@ -110,6 +110,51 @@ fn p1_scope_covers_the_event_driver_module() {
 }
 
 #[test]
+fn multimodel_scope_flags_the_loading_antipatterns() {
+    // The PR-8 scope extension: hash-order eviction (D1), wall-clock
+    // recency stamps (D2) and positional queue surgery (P1) in one
+    // warm-ledger fixture shaped like the colocation modules.
+    let report = lint_fixture("multimodel_loading_violation.rs");
+    let ids = rule_ids(&report);
+    assert!(ids.contains(&"D1"), "hash-order eviction must flag D1: {:?}", report.violations);
+    assert!(ids.contains(&"D2"), "wall-clock stamp must flag D2: {:?}", report.violations);
+    assert!(ids.contains(&"P1"), "positional retire must flag P1: {:?}", report.violations);
+}
+
+#[test]
+fn multimodel_scope_permits_the_keyed_ledger_shape() {
+    // The shape serverless/loading.rs and sim/multimodel.rs actually use:
+    // BTreeMap LRU keyed by (stamp, model), Option::take for in-flight
+    // slots — clean under the same directives.
+    let report = lint_fixture("multimodel_loading_clean.rs");
+    assert!(report.clean(), "unexpected: {:?}", report.violations);
+}
+
+#[test]
+fn lint_scope_covers_the_multimodel_modules() {
+    // Path classification, no directives: the colocation sim and the
+    // checkpoint-loading ledger are hot-path + sim-core; the catalog is
+    // sim-core (workload); serverless is a sim-core module now.
+    for path in ["rust/src/sim/multimodel.rs", "rust/src/serverless/loading.rs"] {
+        let class = xtask::rules::classify(path, &[]);
+        assert!(class.hot_path, "{path} must be under P1");
+        assert!(class.sim_core, "{path} must be under D1/D2");
+    }
+    let catalog = xtask::rules::classify("rust/src/workload/catalog.rs", &[]);
+    assert!(catalog.sim_core, "the catalog trace generator must be under D1/D2");
+    assert!(!catalog.hot_path, "the catalog is generation-time, not a hot path");
+    let manager = xtask::rules::classify("rust/src/serverless/mod.rs", &[]);
+    assert!(manager.sim_core, "serverless/ joined the sim-core scope");
+    assert!(!manager.hot_path, "only loading.rs carries the hot-path bar");
+    // And the real files pass the bar they are now held to.
+    for rel in ["../rust/src/sim/multimodel.rs", "../rust/src/serverless/loading.rs"] {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel);
+        let report = xtask::lint_paths(&[path]).expect("multimodel module should lint");
+        assert!(report.clean(), "{rel} must stay lint-clean: {:?}", report.violations);
+    }
+}
+
+#[test]
 fn allow_suppresses_exactly_its_named_rule() {
     let report = lint_fixture("allow_scoped.rs");
     // The R1 allow on the unwrap line suppresses it and shows up in the
