@@ -43,8 +43,21 @@
 //!   ≥10⁶-requests-per-run target, and `tests/perf_trajectory.rs`'s ≥2×
 //!   acceptance gate.
 //!
+//! On top of the driver duel, v3 adds two duels for the PR-9 scaling
+//! work:
+//! * **soa** — the SoA-arena core ([`router::Batcher`]) against the
+//!   frozen PR-4 AoS core ([`router::pr4::Batcher`]) on the identical
+//!   drain, at the quick and saturated scales plus the 10⁶-request
+//!   `driver-mega` sparse trace. Outcomes are asserted identical before
+//!   any number is reported; `tests/perf_trajectory.rs` gates the
+//!   saturated speedup at ≥1.5×.
+//! * **shard** — the identical end-to-end disaggregated sim run with
+//!   `shard_threads = 1` (the exact sequential path) and
+//!   `shard_threads = 2`, request records and cost asserted bit-identical
+//!   before the wall clocks are compared.
+//!
 //! Schema of `BENCH_sim.json` (documented in the README):
-//! `{schema: "moeless.simperf/v2", build, machine: {host, cpus, os, arch},
+//! `{schema: "moeless.simperf/v3", build, machine: {host, cpus, os, arch},
 //! unix_time_s, scales: {<scale>: {drain: {requests,
 //! iterations, preemptions, baseline: {wall_s, requests_per_s,
 //! iterations_per_s}, current: {...}, speedup}, sim?: {completed_requests,
@@ -52,9 +65,15 @@
 //! peak_report_bytes, legacy_report_bytes, truncated}}},
 //! drivers: {<scale>: {requests, iterations, preemptions,
 //! lockstep: {wall_s, requests_per_s, iterations_per_s}, event: {...},
-//! speedup}}}`. The `scales` section carries the v1 fields unchanged, so
-//! v1 files stay comparable scale-for-scale; `drivers` (and the schema
-//! tag) are what v2 adds.
+//! speedup}},
+//! soa: {<scale>: {requests, iterations, preemptions,
+//! pr4: {wall_s, requests_per_s, iterations_per_s}, arena: {...},
+//! speedup}},
+//! shard: {<scale>: {threads, completed_requests,
+//! sequential: {wall_s}, sharded: {wall_s}, speedup}}}`. The `scales`
+//! section carries the v1 fields unchanged and `drivers` the v2 fields,
+//! so older files stay comparable scale-for-scale; `soa` and `shard` (and
+//! the schema tag) are what v3 adds.
 
 use std::time::Instant;
 
@@ -251,6 +270,12 @@ pub fn drain_reference(cfg: &DrainConfig) -> DrainOutcome {
     drain_core!(reference::Batcher::with_limits(cfg.limits), cfg)
 }
 
+/// Drain `cfg` through the frozen PR-4 AoS core — the arena duel's
+/// baseline (the SoA arena re-indexed exactly this scheduler).
+pub fn drain_pr4(cfg: &DrainConfig) -> DrainOutcome {
+    drain_core!(crate::router::pr4::Batcher::with_limits(cfg.limits), cfg)
+}
+
 /// Measure one scale: baseline drain, current drain (outcomes asserted
 /// identical — the standing equivalence smoke), and the end-to-end sim
 /// where the scale defines one.
@@ -432,6 +457,119 @@ pub fn measure_driver_scale(scale: &'static str) -> DriverReport {
     DriverReport { scale, lockstep, event }
 }
 
+/// Wall-clock comparison of the SoA-arena core against the frozen PR-4
+/// AoS core on one drain (v3).
+pub struct SoaReport {
+    pub scale: &'static str,
+    pub pr4: DrainOutcome,
+    pub arena: DrainOutcome,
+}
+
+impl SoaReport {
+    /// Wall-clock speedup of the arena core over the frozen PR-4 core on
+    /// the identical drain.
+    pub fn speedup(&self) -> f64 {
+        self.pr4.wall_s / self.arena.wall_s.max(1e-9)
+    }
+}
+
+/// The arena-duel scale names, cheapest first. `saturated` is the
+/// perf-trajectory acceptance configuration; `driver-mega` is the
+/// 10⁶-request sparse trace.
+pub fn soa_scale_names() -> [&'static str; 3] {
+    ["quick", "saturated", "driver-mega"]
+}
+
+/// The drain configuration of an arena-duel scale (reuses the core and
+/// driver-duel tables — one source of truth per trace).
+pub fn soa_drain_config(scale: &'static str) -> DrainConfig {
+    match scale {
+        "driver-mega" => driver_drain_config(scale),
+        other => drain_config(other),
+    }
+}
+
+/// Measure one arena-duel scale: warm-up (untimed), PR-4 core, arena
+/// core, outcomes asserted identical.
+pub fn measure_soa_scale(scale: &'static str) -> SoaReport {
+    let cfg = soa_drain_config(scale);
+    let _ = drain_current(&cfg);
+    let pr4 = drain_pr4(&cfg);
+    let arena = drain_current(&cfg);
+    assert_eq!(
+        (pr4.completed, pr4.preemptions, pr4.iterations),
+        (arena.completed, arena.preemptions, arena.iterations),
+        "simperf {scale}: arena core diverged from the frozen PR-4 core"
+    );
+    SoaReport { scale, pr4, arena }
+}
+
+/// Sequential-vs-sharded end-to-end duel at one scale (v3): the identical
+/// `SimConfig` run with `shard_threads = 1` (the exact sequential path)
+/// and `shard_threads = threads`, outcomes asserted bit-identical before
+/// the wall clocks are compared.
+pub struct ShardReport {
+    pub scale: &'static str,
+    pub threads: usize,
+    pub completed: u64,
+    pub seq_wall_s: f64,
+    pub shard_wall_s: f64,
+}
+
+impl ShardReport {
+    /// Wall-clock speedup of the sharded run over the sequential run.
+    pub fn speedup(&self) -> f64 {
+        self.seq_wall_s / self.shard_wall_s.max(1e-9)
+    }
+}
+
+/// The shard-duel scale names, cheapest first.
+pub fn shard_scale_names() -> [&'static str; 2] {
+    ["quick", "medium"]
+}
+
+/// The shard-duel configuration of a scale: the end-to-end sim of the
+/// same scale with disaggregated prefill/decode pools — the configuration
+/// whose per-pool iterations `shard_threads` fans out.
+pub fn shard_e2e_config(scale: &str) -> Option<SimConfig> {
+    let mut cfg = e2e_config(scale)?;
+    cfg.disagg = Some(crate::config::DisaggSpec::even_split(&cfg.cluster));
+    Some(cfg)
+}
+
+/// Measure one shard-duel scale (`None` where the scale defines no
+/// end-to-end sim): sequential run, 2-thread sharded run, every request
+/// record and cost bit-asserted equal.
+pub fn measure_shard_scale(scale: &'static str) -> Option<ShardReport> {
+    let mut cfg = shard_e2e_config(scale)?;
+    cfg.shard_threads = 1;
+    let seq = run(&cfg);
+    cfg.shard_threads = 2;
+    let shard = run(&cfg);
+    assert_eq!(
+        seq.completed_requests, shard.completed_requests,
+        "simperf {scale}: sharded run diverged from sequential"
+    );
+    assert_eq!(seq.requests, shard.requests, "simperf {scale}: request records diverged");
+    assert_eq!(
+        seq.cost_gb_s.to_bits(),
+        shard.cost_gb_s.to_bits(),
+        "simperf {scale}: cost diverged"
+    );
+    assert_eq!(
+        seq.sim_duration_s.to_bits(),
+        shard.sim_duration_s.to_bits(),
+        "simperf {scale}: sim duration diverged"
+    );
+    Some(ShardReport {
+        scale,
+        threads: 2,
+        completed: seq.completed_requests,
+        seq_wall_s: seq.wall_s,
+        shard_wall_s: shard.wall_s,
+    })
+}
+
 /// The machine tag: host, logical CPU count, OS and arch — so a committed
 /// `BENCH_sim.json` baseline says which hardware produced it and absolute
 /// numbers are never compared across different machines by accident.
@@ -463,9 +601,14 @@ fn outcome_json(o: &DrainOutcome) -> Json {
     j
 }
 
-/// Serialize the scale and driver-duel reports into the `BENCH_sim.json`
-/// document.
-pub fn to_json(reports: &[ScaleReport], drivers: &[DriverReport]) -> Json {
+/// Serialize the scale, driver-duel, arena-duel and shard-duel reports
+/// into the `BENCH_sim.json` document.
+pub fn to_json(
+    reports: &[ScaleReport],
+    drivers: &[DriverReport],
+    soa: &[SoaReport],
+    shards: &[ShardReport],
+) -> Json {
     let mut scales = Json::obj();
     for r in reports {
         let mut drain = Json::obj();
@@ -503,8 +646,33 @@ pub fn to_json(reports: &[ScaleReport], drivers: &[DriverReport]) -> Json {
             .set("speedup", Json::Num(d.speedup()));
         driver_scales.set(d.scale, duel);
     }
+    let mut soa_scales = Json::obj();
+    for s in soa {
+        let mut duel = Json::obj();
+        duel.set("requests", Json::Num(s.arena.completed as f64))
+            .set("iterations", Json::Num(s.arena.iterations as f64))
+            .set("preemptions", Json::Num(s.arena.preemptions as f64))
+            .set("pr4", outcome_json(&s.pr4))
+            .set("arena", outcome_json(&s.arena))
+            .set("speedup", Json::Num(s.speedup()));
+        soa_scales.set(s.scale, duel);
+    }
+    let mut shard_scales = Json::obj();
+    for s in shards {
+        let mut seq = Json::obj();
+        seq.set("wall_s", Json::Num(s.seq_wall_s));
+        let mut sharded = Json::obj();
+        sharded.set("wall_s", Json::Num(s.shard_wall_s));
+        let mut duel = Json::obj();
+        duel.set("threads", Json::Num(s.threads as f64))
+            .set("completed_requests", Json::Num(s.completed as f64))
+            .set("sequential", seq)
+            .set("sharded", sharded)
+            .set("speedup", Json::Num(s.speedup()));
+        shard_scales.set(s.scale, duel);
+    }
     let mut doc = Json::obj();
-    doc.set("schema", Json::Str("moeless.simperf/v2".into()))
+    doc.set("schema", Json::Str("moeless.simperf/v3".into()))
         .set(
             "build",
             Json::Str(if cfg!(debug_assertions) { "debug".into() } else { "release".into() }),
@@ -520,7 +688,9 @@ pub fn to_json(reports: &[ScaleReport], drivers: &[DriverReport]) -> Json {
             ),
         )
         .set("scales", scales)
-        .set("drivers", driver_scales);
+        .set("drivers", driver_scales)
+        .set("soa", soa_scales)
+        .set("shard", shard_scales);
     doc
 }
 
@@ -529,9 +699,11 @@ pub fn write_bench_json(
     path: &std::path::Path,
     reports: &[ScaleReport],
     drivers: &[DriverReport],
+    soa: &[SoaReport],
+    shards: &[ShardReport],
 ) -> anyhow::Result<()> {
     use anyhow::Context;
-    let doc = to_json(reports, drivers);
+    let doc = to_json(reports, drivers, soa, shards);
     std::fs::write(path, doc.to_string()).with_context(|| format!("write {}", path.display()))
 }
 
@@ -584,6 +756,32 @@ pub fn driver_report_line(d: &DriverReport) -> String {
     )
 }
 
+/// One greppable line per arena-duel scale.
+pub fn soa_report_line(s: &SoaReport) -> String {
+    format!(
+        "simperf {:<12} soa:   reqs={} iters={} preempt={} | pr4 {:.3}s ({:.0} req/s) \
+         -> arena {:.3}s ({:.0} req/s) | speedup {:.2}x",
+        s.scale,
+        s.arena.completed,
+        s.arena.iterations,
+        s.arena.preemptions,
+        s.pr4.wall_s,
+        s.pr4.requests_per_s(),
+        s.arena.wall_s,
+        s.arena.requests_per_s(),
+        s.speedup(),
+    )
+}
+
+/// One greppable line per shard-duel scale.
+pub fn shard_report_line(s: &ShardReport) -> String {
+    format!(
+        "simperf {:<12} shard: reqs={} threads={} | sequential {:.3}s -> sharded {:.3}s \
+         | speedup {:.2}x",
+        s.scale, s.completed, s.threads, s.seq_wall_s, s.shard_wall_s, s.speedup(),
+    )
+}
+
 /// CLI entry: `moeless bench --exp simperf [--quick] [--floor-rps F]
 /// [--out PATH]`. `--quick` runs only the quick scale (the CI smoke);
 /// `--floor-rps` fails the process when the quick end-to-end
@@ -613,13 +811,34 @@ pub fn run_from_args(args: &Args) -> anyhow::Result<()> {
         println!("{}", driver_report_line(&d));
         drivers.push(d);
     }
+    // Arena duel (v3): the CI smoke runs the quick duel; the full bench
+    // adds the saturated acceptance configuration and the 10⁶-request
+    // mega trace.
+    let soa_names: Vec<&'static str> =
+        if args.flag("quick") { vec!["quick"] } else { soa_scale_names().to_vec() };
+    let mut soa = Vec::new();
+    for name in soa_names {
+        let s = measure_soa_scale(name);
+        println!("{}", soa_report_line(&s));
+        soa.push(s);
+    }
+    // Shard duel (v3): sequential vs 2-thread sharded end-to-end sims.
+    let shard_names: Vec<&'static str> =
+        if args.flag("quick") { vec!["quick"] } else { shard_scale_names().to_vec() };
+    let mut shards = Vec::new();
+    for name in shard_names {
+        if let Some(s) = measure_shard_scale(name) {
+            println!("{}", shard_report_line(&s));
+            shards.push(s);
+        }
+    }
     // Precedence: an explicit --out beats the MOELESS_BENCH_PATH env var,
     // which beats the default.
     let path = std::path::PathBuf::from(match args.opt_str("out") {
         Some(p) => p.to_string(),
         None => std::env::var("MOELESS_BENCH_PATH").unwrap_or_else(|_| "BENCH_sim.json".into()),
     });
-    write_bench_json(&path, &reports, &drivers)?;
+    write_bench_json(&path, &reports, &drivers, &soa, &shards)?;
     println!("simperf wrote {}", path.display());
 
     let floor = args.f64("floor-rps", 0.0);
@@ -653,8 +872,12 @@ mod tests {
         assert!(r.drain_current.completed > 100, "{}", r.drain_current.completed);
         let d = measure_driver_scale("driver-quick");
         assert_eq!(d.event.completed, 50 * 40, "every sparse-trace request drains");
-        let doc = to_json(&[r], &[d]);
-        assert_eq!(doc.get("schema").as_str(), "moeless.simperf/v2");
+        let s = measure_soa_scale("quick");
+        assert_eq!(s.arena.completed, s.pr4.completed);
+        let sh = measure_shard_scale("quick").expect("quick defines an e2e sim");
+        assert_eq!(sh.threads, 2);
+        let doc = to_json(&[r], &[d], &[s], &[sh]);
+        assert_eq!(doc.get("schema").as_str(), "moeless.simperf/v3");
         // Machine-tagged: host/cpus/os/arch identify the producing box.
         let machine = doc.get("machine");
         assert!(!machine.get("host").as_str().is_empty());
@@ -666,8 +889,17 @@ mod tests {
         assert!(duel.get("speedup").as_f64() > 0.0);
         assert!(duel.get("lockstep").get("wall_s").as_f64() > 0.0);
         assert!(duel.get("event").get("wall_s").as_f64() > 0.0);
+        // v3 blocks: the arena duel and the shard duel.
+        let soa = doc.get("soa").get("quick");
+        assert!(soa.get("speedup").as_f64() > 0.0);
+        assert!(soa.get("pr4").get("wall_s").as_f64() > 0.0);
+        assert!(soa.get("arena").get("wall_s").as_f64() > 0.0);
+        let shard = doc.get("shard").get("quick");
+        assert_eq!(shard.get("threads").as_f64(), 2.0);
+        assert!(shard.get("sequential").get("wall_s").as_f64() > 0.0);
+        assert!(shard.get("sharded").get("wall_s").as_f64() > 0.0);
         // Round-trips through the parser.
         let parsed = Json::parse(&doc.to_string()).unwrap();
-        assert_eq!(parsed.get("schema").as_str(), "moeless.simperf/v2");
+        assert_eq!(parsed.get("schema").as_str(), "moeless.simperf/v3");
     }
 }

@@ -172,9 +172,17 @@ pub struct RunReport {
     pub replicas_per_layer: MeanAcc,
     pub pred_accuracy: MeanAcc,
     /// Request-level SLO metrics: time-to-first-token and end-to-end
-    /// latency per completed request (ms).
+    /// latency per completed request (ms). Empty in streaming-records
+    /// mode (`--no-records`), where only the sketches below are kept.
     pub ttft_ms: Vec<f64>,
     pub e2e_ms: Vec<f64>,
+    /// O(1) streaming TTFT / e2e-latency distributions, maintained in
+    /// both records modes by the identical add sequence — the only
+    /// request-latency view that survives streaming-records mode, and
+    /// bit-identical to the full-records run's sketch (pinned by the
+    /// randomized streaming-vs-full differential).
+    pub ttft_sketch: QuantileSketch,
+    pub e2e_sketch: QuantileSketch,
     /// Full per-request records of completed requests (TTFT/TPOT/goodput
     /// inputs; `ttft_ms` above also counts requests still in flight at
     /// shutdown).
@@ -446,6 +454,8 @@ impl RunReport {
                 + self.gpu_busy_ms.capacity())
                 * size_of::<f64>()
             + self.layer_forward.heap_bytes()
+            + self.ttft_sketch.heap_bytes()
+            + self.e2e_sketch.heap_bytes()
             + self.policy.capacity()
             + self.model.capacity()
             + self.dataset.capacity()) as u64

@@ -1,0 +1,281 @@
+//! Struct-of-arrays sequence arena: the PR-9 storage substrate of the
+//! continuous batcher.
+//!
+//! The PR-4 batcher kept four `BTreeMap<_, Active>` copies of a ~112-byte
+//! per-sequence struct (`active`, `fresh`, `requeued`, plus the
+//! `transferring` buffer); every admission, preemption, resume and phase
+//! handoff *moved* the whole struct between maps, and every decode tick
+//! walked B-tree nodes fat with cold fields. This module flips the layout:
+//! each per-sequence field lives in its own column [`Vec`], indexed by a
+//! `u32` **slot** that stays put for the sequence's whole lifetime —
+//! preemption, resume and handoff move only the 4-byte slot between
+//! ordered index-sets, and the decode tick's two hot columns
+//! (`kv_tokens`, `remaining_out`) stream through cache untouched by the
+//! eleven cold ones.
+//!
+//! Slots are recycled through a free list at retirement
+//! ([`release`](SeqArena::release)), so arena capacity is the *peak
+//! in-flight* population, not the trace length — the memory half of the
+//! million-request story (the other half is the batcher's
+//! streaming-records mode). Aliasing discipline: [`alloc`](SeqArena::alloc)
+//! only ever hands out a slot that is not live, and every column of a
+//! reused slot is overwritten before the slot is visible — pinned by the
+//! slot-reuse proptest in `tests/proptests.rs` and, transitively, by the
+//! golden-equivalence suite (a stale column would change admissions).
+
+/// Age-ordering key: `(arrival_s.to_bits(), id)`. For finite non-negative
+/// floats the IEEE-754 bit pattern orders exactly like the number, so the
+/// tuple orders by arrival time with the id as tie-break — precisely the
+/// `(arrival_s, id)` preemption/resume order, but `Ord` (no
+/// `partial_cmp().unwrap()` on the hot path). `Batcher::enqueue` enforces
+/// the domain (finite, >= 0, -0.0 normalized).
+pub type SeqKey = (u64, u64);
+
+/// Admission-time identity + sizing of a new sequence; every other column
+/// starts at its fresh-request value (no KV, nothing landed, no output).
+#[derive(Clone, Copy, Debug)]
+pub struct SeqSeed {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// The columnar sequence store. One `Vec` per field, all the same length;
+/// a slot is an index valid in every column. Fields are `pub(crate)`: the
+/// batcher addresses columns directly (that is the point of SoA), while
+/// external consumers (tests) go through the read accessors.
+#[derive(Debug, Default)]
+pub struct SeqArena {
+    pub(crate) id: Vec<u64>,
+    pub(crate) arrival_s: Vec<f64>,
+    /// Set when the last prefill chunk completes (first token emitted).
+    pub(crate) first_token_s: Vec<f64>,
+    /// First token already emitted (survives preemption: TTFT is recorded
+    /// once, on the original prefill completion).
+    pub(crate) started: Vec<bool>,
+    pub(crate) prompt_tokens: Vec<usize>,
+    pub(crate) output_tokens: Vec<usize>,
+    pub(crate) remaining_out: Vec<usize>,
+    /// KV-cache entries currently materialized for this sequence (landed
+    /// prefill chunks + generated tokens; dropped to 0 on preemption).
+    pub(crate) kv_tokens: Vec<usize>,
+    /// When the phase-handoff KV transfer completes (disaggregated mode);
+    /// the sequence joins decode no earlier than this.
+    pub(crate) ready_s: Vec<f64>,
+    /// Tokens this prefill pass must materialize before the sequence
+    /// (re)joins decode: the prompt, plus — on resume — every previously
+    /// emitted token.
+    pub(crate) prefill_target: Vec<usize>,
+    /// High-water mark of tokens ever processed for this sequence. On
+    /// (re)prefill, tokens below the mark count as *recomputed*; tokens
+    /// above it are first-time prompt work.
+    pub(crate) processed_hwm: Vec<usize>,
+    /// First-time prompt tokens landed so far (conservation: equals
+    /// `prompt_tokens` exactly at retirement).
+    pub(crate) prompt_landed: Vec<usize>,
+    /// Prefill chunks this sequence consumed.
+    pub(crate) chunks: Vec<u32>,
+    /// Times this sequence was preempted (recompute-on-resume).
+    pub(crate) preemptions: Vec<u32>,
+    /// Slot occupancy (false = on the free list).
+    live: Vec<bool>,
+    /// Retired slots awaiting reuse (LIFO: the warmest slot first).
+    free: Vec<u32>,
+}
+
+impl SeqArena {
+    /// Claim a slot for a newly admitted sequence, reusing a retired slot
+    /// when one exists. Every column is (re)initialized here — a reused
+    /// slot carries nothing over from its previous occupant.
+    pub fn alloc(&mut self, seed: SeqSeed) -> u32 {
+        if let Some(slot) = self.free.pop() {
+            let s = slot as usize;
+            debug_assert!(!self.live[s], "free-list slot must not be live");
+            self.id[s] = seed.id;
+            self.arrival_s[s] = seed.arrival_s;
+            self.first_token_s[s] = 0.0;
+            self.started[s] = false;
+            self.prompt_tokens[s] = seed.prompt_tokens;
+            self.output_tokens[s] = seed.output_tokens;
+            self.remaining_out[s] = seed.output_tokens;
+            self.kv_tokens[s] = 0;
+            self.ready_s[s] = 0.0;
+            self.prefill_target[s] = seed.prompt_tokens;
+            self.processed_hwm[s] = 0;
+            self.prompt_landed[s] = 0;
+            self.chunks[s] = 0;
+            self.preemptions[s] = 0;
+            self.live[s] = true;
+            return slot;
+        }
+        let slot = self.id.len() as u32;
+        self.id.push(seed.id);
+        self.arrival_s.push(seed.arrival_s);
+        self.first_token_s.push(0.0);
+        self.started.push(false);
+        self.prompt_tokens.push(seed.prompt_tokens);
+        self.output_tokens.push(seed.output_tokens);
+        self.remaining_out.push(seed.output_tokens);
+        self.kv_tokens.push(0);
+        self.ready_s.push(0.0);
+        self.prefill_target.push(seed.prompt_tokens);
+        self.processed_hwm.push(0);
+        self.prompt_landed.push(0);
+        self.chunks.push(0);
+        self.preemptions.push(0);
+        self.live.push(true);
+        slot
+    }
+
+    /// Return a retired sequence's slot to the free list for reuse.
+    pub fn release(&mut self, slot: u32) {
+        let s = slot as usize;
+        debug_assert!(self.live[s], "released slot must be live (double release?)");
+        self.live[s] = false;
+        self.free.push(slot);
+    }
+
+    /// The `(arrival bits, id)` age-ordering key of a slot.
+    pub fn key(&self, slot: u32) -> SeqKey {
+        let s = slot as usize;
+        (self.arrival_s[s].to_bits(), self.id[s])
+    }
+
+    /// Output tokens emitted so far.
+    pub fn emitted(&self, slot: u32) -> usize {
+        let s = slot as usize;
+        self.output_tokens[s] - self.remaining_out[s]
+    }
+
+    /// Land `take` prefill tokens on a slot: KV materializes, the
+    /// high-water mark splits the chunk into (recomputed, first-time)
+    /// token counts.
+    pub fn land_chunk(&mut self, slot: u32, take: usize) -> (u64, u64) {
+        let s = slot as usize;
+        let off = self.kv_tokens[s];
+        let recomp = take.min(self.processed_hwm[s].saturating_sub(off));
+        self.kv_tokens[s] += take;
+        self.processed_hwm[s] = self.processed_hwm[s].max(self.kv_tokens[s]);
+        self.prompt_landed[s] += take - recomp;
+        self.chunks[s] += 1;
+        (recomp as u64, (take - recomp) as u64)
+    }
+
+    /// Whether a slot currently holds a live sequence.
+    pub fn is_live(&self, slot: u32) -> bool {
+        self.live[slot as usize]
+    }
+
+    /// Live sequences (allocated and not yet released).
+    pub fn live_slots(&self) -> usize {
+        self.id.len() - self.free.len()
+    }
+
+    /// Total slots ever grown — the peak in-flight population, not the
+    /// trace length (slot reuse is what keeps this O(in-flight)).
+    pub fn capacity_slots(&self) -> usize {
+        self.id.len()
+    }
+
+    /// Read accessors for external consumers (tests, diagnostics).
+    pub fn id_of(&self, slot: u32) -> u64 {
+        self.id[slot as usize]
+    }
+
+    pub fn kv_tokens_of(&self, slot: u32) -> usize {
+        self.kv_tokens[slot as usize]
+    }
+
+    pub fn remaining_out_of(&self, slot: u32) -> usize {
+        self.remaining_out[slot as usize]
+    }
+
+    pub fn prompt_tokens_of(&self, slot: u32) -> usize {
+        self.prompt_tokens[slot as usize]
+    }
+
+    /// Approximate resident bytes of the columns (capacity-based: what the
+    /// arena actually holds from the allocator).
+    pub fn approx_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.id.capacity() * size_of::<u64>()
+            + (self.arrival_s.capacity() + self.first_token_s.capacity()
+                + self.ready_s.capacity())
+                * size_of::<f64>()
+            + (self.prompt_tokens.capacity()
+                + self.output_tokens.capacity()
+                + self.remaining_out.capacity()
+                + self.kv_tokens.capacity()
+                + self.prefill_target.capacity()
+                + self.processed_hwm.capacity()
+                + self.prompt_landed.capacity())
+                * size_of::<usize>()
+            + (self.chunks.capacity() + self.preemptions.capacity()) * size_of::<u32>()
+            + self.started.capacity() * size_of::<bool>()
+            + self.live.capacity() * size_of::<bool>()
+            + self.free.capacity() * size_of::<u32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seed(id: u64) -> SeqSeed {
+        SeqSeed { id, arrival_s: id as f64 * 0.5, prompt_tokens: 10 + id as usize, output_tokens: 4 }
+    }
+
+    #[test]
+    fn alloc_grows_then_reuses() {
+        let mut a = SeqArena::default();
+        let s0 = a.alloc(seed(0));
+        let s1 = a.alloc(seed(1));
+        assert_eq!((s0, s1), (0, 1));
+        assert_eq!(a.live_slots(), 2);
+        a.release(s0);
+        assert_eq!(a.live_slots(), 1);
+        // LIFO reuse: the freed slot comes back, fully reinitialized.
+        let s2 = a.alloc(seed(2));
+        assert_eq!(s2, s0);
+        assert_eq!(a.id_of(s2), 2);
+        assert_eq!(a.kv_tokens_of(s2), 0);
+        assert_eq!(a.emitted(s2), 0);
+        assert_eq!(a.capacity_slots(), 2, "reuse must not grow the arena");
+    }
+
+    #[test]
+    fn land_chunk_tracks_hwm_and_conservation() {
+        let mut a = SeqArena::default();
+        let s = a.alloc(SeqSeed { id: 7, arrival_s: 1.0, prompt_tokens: 20, output_tokens: 3 });
+        let (r1, f1) = a.land_chunk(s, 8);
+        assert_eq!((r1, f1), (0, 8));
+        // Preemption drops KV but keeps the high-water mark: the next pass
+        // recomputes exactly the previously materialized tokens.
+        a.kv_tokens[s as usize] = 0;
+        let (r2, f2) = a.land_chunk(s, 12);
+        assert_eq!((r2, f2), (8, 4));
+        assert_eq!(a.prompt_landed[s as usize], 12);
+        assert_eq!(a.chunks[s as usize], 2);
+    }
+
+    #[test]
+    fn key_orders_by_arrival_then_id() {
+        let mut a = SeqArena::default();
+        let s0 = a.alloc(SeqSeed { id: 9, arrival_s: 1.0, prompt_tokens: 1, output_tokens: 1 });
+        let s1 = a.alloc(SeqSeed { id: 3, arrival_s: 2.0, prompt_tokens: 1, output_tokens: 1 });
+        let s2 = a.alloc(SeqSeed { id: 4, arrival_s: 2.0, prompt_tokens: 1, output_tokens: 1 });
+        assert!(a.key(s0) < a.key(s1) && a.key(s1) < a.key(s2));
+    }
+
+    #[test]
+    fn approx_bytes_tracks_capacity_not_trace_length() {
+        let mut a = SeqArena::default();
+        for i in 0..1000u64 {
+            let s = a.alloc(seed(i));
+            a.release(s);
+        }
+        assert_eq!(a.capacity_slots(), 1, "serial alloc/release reuses one slot");
+        assert!(a.approx_bytes() < 4096);
+    }
+}

@@ -58,37 +58,49 @@
 //! bytes accumulate in `kv_transfer_bytes`. The transfer overlaps with
 //! compute — it delays the transferring request, not the iteration clock.
 //!
-//! # Allocation-lean indexing (PR 4)
+//! # SoA sequence arena (PR 9, over the PR-4 indexing)
 //!
-//! The batcher is the request-path hot loop, so its bookkeeping is
-//! incremental rather than recomputed:
+//! The batcher is the request-path hot loop. PR 4 made its bookkeeping
+//! incremental (running KV ledger, ordered `(arrival_s, id)` indexes for
+//! preemption/resume, map-backed progress); PR 9 rewrote the *storage*:
 //!
-//! * **KV ledger**: `kv_tokens_in_use` is a running counter updated at
-//!   chunk-land / decode / preempt / retire, not a chain-sum over
-//!   `active ∪ fresh ∪ transferring` on every admission check.
-//! * **Ordered indexes**: decoding sequences live in a `BTreeMap` keyed by
-//!   `(arrival_s, id)` (bit-packed — valid because [`enqueue`]
-//!   (Batcher::enqueue) rejects non-finite/negative arrivals), so the
-//!   preemption victim is the last key, O(log n) instead of a linear
-//!   max-scan; mid-prefill sequences carry a monotone admission stamp
-//!   (FIFO chunk continuation) plus the same ordered side-index; the
-//!   resume queue is a `BTreeMap` in `(arrival_s, id)` order, replacing
-//!   the positional `Vec` insert.
-//! * **Map-backed progress**: `progress_of` / `prefill_progress_of`
-//!   resolve through a per-id locator map instead of scanning every
-//!   state set.
+//! * **Columnar state**: per-sequence fields live in a slab-indexed
+//!   [`arena::SeqArena`] — one column `Vec` per field, addressed by a
+//!   `u32` slot that never moves. `active`/`fresh`/`requeued` are ordered
+//!   index-sets over slots (`BTreeMap<_, u32>`), so scheduling moves
+//!   4-byte slots instead of ~112-byte structs, and the per-iteration
+//!   decode tick touches exactly two hot columns.
+//! * **Slot reuse**: retirement returns the slot to a free list; arena
+//!   capacity is the peak in-flight population, not the trace length.
+//! * **Bounded locator**: the per-id `loc` map tracks *in-flight* ids
+//!   only. Queued ids resolve by scan (diagnostics path); retired ids
+//!   compact into an interval set (`RetiredSet`) merging contiguous id
+//!   runs — O(in-flight + id-space gaps), where the PR-4 core kept one
+//!   `Loc::Finished` entry per request forever.
+//! * **Streaming records** ([`with_streaming_records`]
+//!   (Batcher::with_streaming_records), `--no-records`): retirement folds
+//!   TTFT/e2e into O(1) quantile sketches instead of growing
+//!   `ttft_ms`/`e2e_ms`/`finished`, so a 10⁶-request run holds
+//!   O(in-flight) request state (the sketches are always maintained; the
+//!   full-records vectors are what the flag turns off).
 //!
-//! The pre-PR-4 implementation is retained verbatim as [`reference`]; the
-//! golden-equivalence suite asserts the two produce identical outputs and
-//! `bench --exp simperf` measures them side by side.
+//! The pre-PR-4 implementation is retained verbatim as [`reference`], and
+//! the PR-4 core as [`pr4`]; the golden-equivalence suite asserts all
+//! three produce identical outputs and `bench --exp simperf` measures
+//! them side by side.
 
+pub mod arena;
+pub mod pr4;
 pub mod reference;
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use crate::metrics::RequestRecord;
 use crate::util::fail;
+use crate::util::stats::QuantileSketch;
 use crate::workload::TraceRequest;
+
+use self::arena::{SeqArena, SeqKey, SeqSeed};
 
 /// Admission limits: per-iteration token cap + KV-cache budget + the
 /// chunked-prefill budget.
@@ -146,82 +158,12 @@ impl IterationBatch {
     }
 }
 
-/// Age-ordering key: `(arrival_s.to_bits(), id)`. For finite non-negative
-/// floats the IEEE-754 bit pattern orders exactly like the number, so the
-/// tuple orders by arrival time with the id as tie-break — precisely the
-/// `(arrival_s, id)` preemption/resume order, but `Ord` (no
-/// `partial_cmp().unwrap()` on the hot path). [`Batcher::enqueue`]
-/// enforces the domain (finite, >= 0, -0.0 normalized).
-type SeqKey = (u64, u64);
-
-/// In-flight sequence state.
-#[derive(Clone, Copy, Debug)]
-struct Active {
-    id: u64,
-    arrival_s: f64,
-    /// Set when the last prefill chunk completes (first token emitted).
-    first_token_s: f64,
-    /// First token already emitted (survives preemption: TTFT is recorded
-    /// once, on the original prefill completion).
-    started: bool,
-    prompt_tokens: usize,
-    output_tokens: usize,
-    remaining_out: usize,
-    /// KV-cache entries currently materialized for this sequence
-    /// (landed prefill chunks + generated tokens; dropped to 0 on
-    /// preemption).
-    kv_tokens: usize,
-    /// When the phase-handoff KV transfer completes (disaggregated mode);
-    /// the sequence joins decode no earlier than this.
-    ready_s: f64,
-    /// Tokens this prefill pass must materialize before the sequence
-    /// (re)joins decode: the prompt, plus — on resume — every previously
-    /// emitted token.
-    prefill_target: usize,
-    /// High-water mark of tokens ever processed for this sequence. On
-    /// (re)prefill, tokens below the mark count as *recomputed*; tokens
-    /// above it are first-time prompt work. This is what lets a sequence
-    /// preempted mid-prefill resume from its last completed chunk instead
-    /// of being charged for the un-chunked prompt tail.
-    processed_hwm: usize,
-    /// First-time prompt tokens landed so far (conservation: equals
-    /// `prompt_tokens` exactly at retirement).
-    prompt_landed: usize,
-    /// Prefill chunks this sequence consumed (1 per iteration with prefill
-    /// work for it; 1 total under monolithic prefill per pass).
-    chunks: u32,
-    /// Times this sequence was preempted (recompute-on-resume).
-    preemptions: u32,
-}
-
-impl Active {
-    fn key(&self) -> SeqKey {
-        (self.arrival_s.to_bits(), self.id)
-    }
-
-    /// Output tokens emitted so far.
-    fn emitted(&self) -> usize {
-        self.output_tokens - self.remaining_out
-    }
-
-    /// Land `take` prefill tokens: KV materializes, the high-water mark
-    /// splits the chunk into (recomputed, first-time) token counts.
-    fn land_chunk(&mut self, take: usize) -> (u64, u64) {
-        let off = self.kv_tokens;
-        let recomp = take.min(self.processed_hwm.saturating_sub(off));
-        self.kv_tokens += take;
-        self.processed_hwm = self.processed_hwm.max(self.kv_tokens);
-        self.prompt_landed += take - recomp;
-        self.chunks += 1;
-        (recomp as u64, (take - recomp) as u64)
-    }
-}
-
-/// Where a known request id currently lives (the `progress_of` locator).
+/// Where an *in-flight* request id currently lives (the `progress_of`
+/// locator). Queued ids are not tracked here (resolved by scanning
+/// `pending` on the diagnostics path) and retired ids compact into
+/// [`RetiredSet`] — both were per-request map growth in the PR-4 core.
 #[derive(Clone, Copy, Debug)]
 enum Loc {
-    /// Queued, not yet admitted.
-    Pending,
     /// Prefill phase, keyed by its admission stamp in `fresh`.
     Fresh(u64),
     /// Decoding, keyed by `(arrival bits, id)` in `active`.
@@ -230,27 +172,75 @@ enum Loc {
     Requeued(SeqKey),
     /// KV handoff in flight (small set; resolved by scan).
     Transferring,
-    /// Retired with this many output tokens.
-    Finished(usize),
 }
 
-/// The continuous batcher: admission queue + in-flight set + KV ledger.
+/// Compact set of retired request ids: contiguous id runs collapse into
+/// `[start, end]` intervals, so a drained contiguous-id trace holds one
+/// entry no matter how many requests completed. Memory is O(id-space
+/// gaps), i.e. O(in-flight) while a run is draining — the fix for the
+/// PR-4 locator keeping a `Loc::Finished` entry per request forever.
+#[derive(Debug, Default)]
+struct RetiredSet {
+    /// Inclusive intervals: start -> end, non-overlapping, non-adjacent.
+    runs: BTreeMap<u64, u64>,
+}
+
+impl RetiredSet {
+    fn insert(&mut self, id: u64) {
+        let prev = self.runs.range(..=id).next_back().map(|(&s, &e)| (s, e));
+        if let Some((s, e)) = prev {
+            if id <= e {
+                return;
+            }
+            if e + 1 == id {
+                // Extend the left run; absorb a right run that now abuts.
+                let end = match id.checked_add(1).and_then(|n| self.runs.remove(&n)) {
+                    Some(ne) => ne,
+                    None => id,
+                };
+                self.runs.insert(s, end);
+                return;
+            }
+        }
+        match id.checked_add(1).and_then(|n| self.runs.remove(&n)) {
+            Some(ne) => {
+                self.runs.insert(id, ne);
+            }
+            None => {
+                self.runs.insert(id, id);
+            }
+        }
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.runs.range(..=id).next_back().map(|(_, &e)| id <= e).unwrap_or(false)
+    }
+
+    fn runs_len(&self) -> usize {
+        self.runs.len()
+    }
+}
+
+/// The continuous batcher: admission queue + in-flight set + KV ledger,
+/// stored columnar (SoA) with ordered index-sets over arena slots.
 #[derive(Debug, Default)]
 pub struct Batcher {
     limits: BatchLimits,
     pending: VecDeque<TraceRequest>,
+    /// Columnar per-sequence state; the maps below hold `u32` slots.
+    seqs: SeqArena,
     /// Preempted sequences awaiting re-admission, ordered by
     /// `(arrival_s, id)`; they re-enter ahead of `pending` (they arrived
     /// no later than anything still queued).
-    requeued: BTreeMap<SeqKey, Active>,
+    requeued: BTreeMap<SeqKey, u32>,
     /// Decoding sequences, ordered by `(arrival_s, id)` — the preemption
     /// victim is always the last key.
-    active: BTreeMap<SeqKey, Active>,
+    active: BTreeMap<SeqKey, u32>,
     /// Prefill-phase sequences keyed by a monotone admission stamp:
     /// iteration order is exactly the FIFO chunk-continuation order.
     /// Monolithic prefill drains this every iteration; chunked prefill
     /// keeps partially-landed sequences here across iterations.
-    fresh: BTreeMap<u64, Active>,
+    fresh: BTreeMap<u64, u32>,
     /// Age index over `fresh`: `(arrival_s, id)` -> admission stamp, for
     /// O(log n) youngest-victim lookup.
     fresh_index: BTreeMap<SeqKey, u64>,
@@ -259,13 +249,19 @@ pub struct Batcher {
     /// Sequences whose prefill completed but whose KV is still in flight
     /// to the decode pool (disaggregated mode): they hold cache but join
     /// decode only once `ready_s` passes.
-    transferring: Vec<Active>,
+    transferring: Vec<u32>,
     /// Running KV ledger: tokens materialized across
     /// `active ∪ fresh ∪ transferring`, updated incrementally at
     /// chunk-land / decode / preempt / retire.
     kv_tokens_held: usize,
-    /// Per-id locator for `progress_of` / `prefill_progress_of`.
+    /// Per-id locator for `progress_of` / `prefill_progress_of` —
+    /// in-flight ids only (O(in-flight), never O(total)).
     loc: HashMap<u64, Loc>,
+    /// Compacted retired ids (interval-merged).
+    retired: RetiredSet,
+    /// Streaming-records mode: retirement folds into the sketches only;
+    /// `ttft_ms`/`e2e_ms`/`finished` stay empty (O(in-flight) memory).
+    stream_records: bool,
     /// Scratch (reused across iterations, no per-iteration allocation).
     retire_keys: Vec<SeqKey>,
     fresh_done: Vec<u64>,
@@ -302,12 +298,21 @@ pub struct Batcher {
     /// tail), on top of `tokens_prefilled`.
     pub tokens_recomputed: u64,
     /// Per-request time-to-first-token (ms) — recorded when the last chunk
-    /// of the original prefill completes (SLO metric).
+    /// of the original prefill completes (SLO metric). Empty in
+    /// streaming-records mode (use `ttft_sketch`).
     pub ttft_ms: Vec<f64>,
-    /// Per-request end-to-end latency (ms) — arrival to last token.
+    /// Per-request end-to-end latency (ms) — arrival to last token. Empty
+    /// in streaming-records mode (use `e2e_sketch`).
     pub e2e_ms: Vec<f64>,
-    /// Full per-request records, emitted at retirement.
+    /// Full per-request records, emitted at retirement. Empty in
+    /// streaming-records mode.
     pub finished: Vec<RequestRecord>,
+    /// O(1) streaming TTFT distribution — maintained in *both* records
+    /// modes, fed by the identical add sequence (the randomized
+    /// streaming-vs-full differential pins the equality).
+    pub ttft_sketch: QuantileSketch,
+    /// O(1) streaming e2e-latency distribution (see `ttft_sketch`).
+    pub e2e_sketch: QuantileSketch,
 }
 
 impl Batcher {
@@ -335,6 +340,22 @@ impl Batcher {
         self
     }
 
+    /// Streaming-records mode: retirement folds TTFT/e2e into the O(1)
+    /// sketches and emits no per-request record, so a multi-hour
+    /// million-request trace holds O(in-flight) request state. Scalar
+    /// counters and both sketches are bit-identical to full-records mode;
+    /// what is lost is per-request recall (`finished`, `ttft_ms`,
+    /// `e2e_ms`, and `progress_of` on already-retired ids).
+    pub fn with_streaming_records(mut self) -> Batcher {
+        self.stream_records = true;
+        self
+    }
+
+    /// Whether this batcher folds records instead of retaining them.
+    pub fn streaming_records(&self) -> bool {
+        self.stream_records
+    }
+
     /// Queue requests (must be fed in arrival order). Degenerate
     /// zero-token prompts/outputs are clamped to one token: the iteration
     /// machinery treats "no prefill and no decode" as idle, so a 0-token
@@ -360,7 +381,6 @@ impl Batcher {
             // unchanged — this normalizes the sign of zero without a
             // float compare (the assert above already rejected NaN/inf).
             let arrival_s = r.arrival_s + 0.0;
-            self.loc.insert(r.id, Loc::Pending);
             self.pending.push_back(TraceRequest {
                 arrival_s,
                 prompt_tokens: r.prompt_tokens.max(1),
@@ -393,7 +413,7 @@ impl Batcher {
     /// driver's wake-up when a blocked (past-arrival) requeued sequence
     /// masks it in [`next_arrival`](Batcher::next_arrival).
     pub fn next_transfer_ready(&self) -> Option<f64> {
-        self.transferring.iter().map(|a| a.ready_s).reduce(f64::min)
+        self.transferring.iter().map(|&s| self.seqs.ready_s[s as usize]).reduce(f64::min)
     }
 
     /// Event-driver hook: does the wake-up instant `t` coincide with the
@@ -437,7 +457,7 @@ impl Batcher {
             .values()
             .chain(self.fresh.values())
             .chain(self.transferring.iter())
-            .map(|a| a.kv_tokens)
+            .map(|&s| self.seqs.kv_tokens[s as usize])
             .sum()
     }
 
@@ -459,17 +479,31 @@ impl Batcher {
     /// Output tokens emitted so far for request `id`: 0 while queued or
     /// prefilling, the full output once finished, `None` for unknown ids.
     /// Monotone over a request's lifetime — preemption never rolls
-    /// progress back. Map-backed: O(log n) via the per-id locator.
+    /// progress back. In-flight ids resolve through the locator map;
+    /// queued ids by scanning the admission queue (diagnostics path, not
+    /// the hot loop); retired ids through the compact interval set, with
+    /// the exact output read from the retained record. In
+    /// streaming-records mode retired records are folded, so retired ids
+    /// return `None` — the documented recall trade of that mode.
     pub fn progress_of(&self, id: u64) -> Option<usize> {
-        match self.loc.get(&id)? {
-            Loc::Pending => Some(0),
-            Loc::Fresh(stamp) => self.fresh.get(stamp).map(|a| a.emitted()),
-            Loc::Active(k) => self.active.get(k).map(|a| a.emitted()),
-            Loc::Requeued(k) => self.requeued.get(k).map(|a| a.emitted()),
-            Loc::Transferring => {
-                self.transferring.iter().find(|a| a.id == id).map(|a| a.emitted())
+        match self.loc.get(&id) {
+            Some(Loc::Fresh(stamp)) => self.fresh.get(stamp).map(|&s| self.seqs.emitted(s)),
+            Some(Loc::Active(k)) => self.active.get(k).map(|&s| self.seqs.emitted(s)),
+            Some(Loc::Requeued(k)) => self.requeued.get(k).map(|&s| self.seqs.emitted(s)),
+            Some(Loc::Transferring) => self
+                .transferring
+                .iter()
+                .find(|&&s| self.seqs.id[s as usize] == id)
+                .map(|&s| self.seqs.emitted(s)),
+            None => {
+                if self.pending.iter().any(|r| r.id == id) {
+                    Some(0)
+                } else if self.retired.contains(id) {
+                    self.finished.iter().rev().find(|r| r.id == id).map(|r| r.output_tokens)
+                } else {
+                    None
+                }
             }
-            Loc::Finished(out) => Some(*out),
         }
     }
 
@@ -479,7 +513,10 @@ impl Batcher {
     /// only moves forward between preemptions.
     pub fn prefill_progress_of(&self, id: u64) -> Option<(usize, usize)> {
         match self.loc.get(&id)? {
-            Loc::Fresh(stamp) => self.fresh.get(stamp).map(|a| (a.kv_tokens, a.prefill_target)),
+            Loc::Fresh(stamp) => self.fresh.get(stamp).map(|&slot| {
+                let s = slot as usize;
+                (self.seqs.kv_tokens[s], self.seqs.prefill_target[s])
+            }),
             _ => None,
         }
     }
@@ -491,7 +528,8 @@ impl Batcher {
     /// when nothing is running: a fully-preempted state cannot stall), and
     /// KV-transfer completion times of sequences mid-handoff.
     pub fn next_arrival(&self) -> Option<f64> {
-        let requeued = self.requeued.values().next().map(|a| a.arrival_s);
+        let requeued =
+            self.requeued.values().next().map(|&s| self.seqs.arrival_s[s as usize]);
         let pending = self.pending.front().map(|r| r.arrival_s);
         let ready = self.next_transfer_ready().unwrap_or(f64::INFINITY);
         let queued = match (requeued, pending) {
@@ -506,10 +544,55 @@ impl Batcher {
         }
     }
 
+    /// Live locator entries (in-flight ids only) — the memory observable
+    /// the bounded-locator unit test pins: O(in-flight), 0 after a drain.
+    pub fn locator_len(&self) -> usize {
+        self.loc.len()
+    }
+
+    /// Intervals in the compacted retired-id set (1 for a drained
+    /// contiguous-id trace).
+    pub fn retired_runs(&self) -> usize {
+        self.retired.runs_len()
+    }
+
+    /// Arena occupancy: (live sequences, total slots ever grown). The
+    /// second number is the peak in-flight population — slot reuse keeps
+    /// it independent of trace length.
+    pub fn arena_slots(&self) -> (usize, usize) {
+        (self.seqs.live_slots(), self.seqs.capacity_slots())
+    }
+
+    /// Approximate resident bytes of per-request state: arena columns,
+    /// index-sets, locator, retired-interval set, scratch and the
+    /// full-records vectors. Excludes the admission queue (`pending` holds
+    /// the not-yet-admitted input trace itself). The memory-accounting
+    /// observable for the 10⁶-request streaming-records test.
+    pub fn approx_state_bytes(&self) -> usize {
+        use std::mem::size_of;
+        // BTreeMap/HashMap per-entry overhead estimate (node headers,
+        // load-factor slack): coarse but stable across platforms.
+        const MAP_OVERHEAD: usize = 16;
+        self.seqs.approx_bytes()
+            + self.loc.len() * (size_of::<u64>() + size_of::<Loc>() + MAP_OVERHEAD)
+            + (self.active.len() + self.requeued.len())
+                * (size_of::<SeqKey>() + size_of::<u32>() + MAP_OVERHEAD)
+            + self.fresh.len() * (size_of::<u64>() + size_of::<u32>() + MAP_OVERHEAD)
+            + self.fresh_index.len() * (size_of::<SeqKey>() + size_of::<u64>() + MAP_OVERHEAD)
+            + self.retired.runs_len() * (2 * size_of::<u64>() + MAP_OVERHEAD)
+            + self.transferring.capacity() * size_of::<u32>()
+            + (self.retire_keys.capacity() * size_of::<SeqKey>())
+            + (self.fresh_done.capacity() * size_of::<u64>())
+            + self.ttft_ms.capacity() * size_of::<f64>()
+            + self.e2e_ms.capacity() * size_of::<f64>()
+            + self.finished.capacity() * size_of::<RequestRecord>()
+    }
+
     /// Preempt the youngest in-flight sequence (decode or mid-prefill),
     /// adjusting `projected` by the KV it frees. Returns false when no
     /// victim may be taken (the oldest survivor is never preempted).
-    /// O(log n): the victim is the last key of the age-ordered indexes.
+    /// O(log n): the victim is the last key of the age-ordered indexes;
+    /// the sequence itself never moves — only its slot changes sets.
     fn preempt_youngest(&mut self, projected: &mut usize) -> bool {
         if self.active.len() + self.fresh.len() <= 1 {
             return false;
@@ -521,39 +604,40 @@ impl Batcher {
             (None, Some(_)) => true,
             _ => false,
         };
-        let mut a = if from_fresh {
+        let (slot, k) = if from_fresh {
             let (kf, stamp) =
                 fail::expect_invariant(youngest_fresh, "from_fresh implies a youngest fresh entry");
             self.fresh_index.remove(&kf);
-            let a =
+            let slot =
                 fail::expect_invariant(self.fresh.remove(&stamp), "fresh_index in sync with fresh");
-            *projected -= a.kv_tokens;
-            a
+            *projected -= self.seqs.kv_tokens[slot as usize];
+            (slot, kf)
         } else {
             let ka = match youngest_active {
                 Some(k) => k,
                 None => return false,
             };
-            let a = fail::expect_invariant(self.active.remove(&ka), "key just observed");
-            *projected -= a.kv_tokens + 1;
-            a
+            let slot = fail::expect_invariant(self.active.remove(&ka), "key just observed");
+            *projected -= self.seqs.kv_tokens[slot as usize] + 1;
+            (slot, ka)
         };
+        let s = slot as usize;
         // The high-water mark is what the resume must recompute: a decoding
         // sequence reprocesses prompt + emitted (the last emitted token is
         // re-fed to produce the next); a mid-prefill one only its landed
         // chunks — the un-chunked tail is first-time work, not recompute.
-        a.processed_hwm = if from_fresh {
-            a.processed_hwm.max(a.kv_tokens)
+        let hwm = if from_fresh {
+            self.seqs.processed_hwm[s].max(self.seqs.kv_tokens[s])
         } else {
-            a.processed_hwm.max(a.prompt_tokens + a.emitted())
+            self.seqs.processed_hwm[s].max(self.seqs.prompt_tokens[s] + self.seqs.emitted(slot))
         };
-        self.kv_tokens_held -= a.kv_tokens;
-        a.kv_tokens = 0;
-        a.preemptions += 1;
+        self.seqs.processed_hwm[s] = hwm;
+        self.kv_tokens_held -= self.seqs.kv_tokens[s];
+        self.seqs.kv_tokens[s] = 0;
+        self.seqs.preemptions[s] += 1;
         self.preemptions += 1;
-        let k = a.key();
-        self.loc.insert(a.id, Loc::Requeued(k));
-        self.requeued.insert(k, a);
+        self.loc.insert(self.seqs.id[s], Loc::Requeued(k));
+        self.requeued.insert(k, slot);
         true
     }
 
@@ -576,12 +660,12 @@ impl Batcher {
         // join the decode set (disaggregated mode; no-op otherwise).
         let mut t = 0;
         while t < self.transferring.len() {
-            if self.transferring[t].ready_s <= now_s + 1e-12 {
+            if self.seqs.ready_s[self.transferring[t] as usize] <= now_s + 1e-12 {
                 // pallas-lint: allow(P1) — O(1) unordered removal: arrivals drain into the keyed age-ordered `active` index, so transfer-buffer order is immaterial (pinned by golden_equivalence)
-                let a = self.transferring.swap_remove(t);
-                let k = a.key();
-                self.loc.insert(a.id, Loc::Active(k));
-                self.active.insert(k, a);
+                let slot = self.transferring.swap_remove(t);
+                let k = self.seqs.key(slot);
+                self.loc.insert(self.seqs.id[slot as usize], Loc::Active(k));
+                self.active.insert(k, slot);
             } else {
                 t += 1;
             }
@@ -626,17 +710,20 @@ impl Batcher {
 
         // Continue in-progress prefills first (they already hold KV;
         // finishing them frees the phase pipeline), FIFO by admission
-        // stamp.
+        // stamp. Reads walk the stamp-ordered slot index; token state
+        // lives in the arena columns.
         if chunk > 0 {
             let mut recomputed = 0u64;
             let mut prefilled = 0u64;
             let mut landed = 0u64;
             let mut kv_added = 0usize;
-            for a in self.fresh.values_mut() {
+            for &slot in self.fresh.values() {
                 if chunk_left == 0 {
                     break;
                 }
-                let mut take = (a.prefill_target - a.kv_tokens).min(chunk_left);
+                let s = slot as usize;
+                let mut take =
+                    (self.seqs.prefill_target[s] - self.seqs.kv_tokens[s]).min(chunk_left);
                 if cap > 0 {
                     take = take.min(cap.saturating_sub(decode_share + prefill));
                 }
@@ -646,7 +733,7 @@ impl Batcher {
                 if take == 0 {
                     continue;
                 }
-                let (r, f) = a.land_chunk(take);
+                let (r, f) = self.seqs.land_chunk(slot, take);
                 recomputed += r;
                 prefilled += f;
                 landed += 1;
@@ -668,8 +755,8 @@ impl Batcher {
                 break;
             }
             let resume = !self.requeued.is_empty();
-            let need_tokens = if let Some(a) = self.requeued.values().next() {
-                a.prompt_tokens + a.emitted()
+            let need_tokens = if let Some(&slot) = self.requeued.values().next() {
+                self.seqs.prompt_tokens[slot as usize] + self.seqs.emitted(slot)
             } else if let Some(r) = self.pending.front() {
                 if r.arrival_s > now_s {
                     break;
@@ -677,9 +764,8 @@ impl Batcher {
                 // Peak KV demand (prompt + full output) can never fit:
                 // reject outright rather than deadlock the queue.
                 if kv_gated && ((r.prompt_tokens + r.output_tokens) as f64) * bpt > budget + 1e-9 {
-                    let dropped =
-                        fail::expect_invariant(self.pending.pop_front(), "front just observed");
-                    self.loc.remove(&dropped.id);
+                    // Never admitted: no locator entry to clean up.
+                    fail::expect_invariant(self.pending.pop_front(), "front just observed");
                     self.rejected += 1;
                     continue;
                 }
@@ -728,36 +814,28 @@ impl Batcher {
                 take
             };
 
-            let mut a = if resume {
+            let slot = if resume {
                 let k = *fail::expect_invariant(
                     self.requeued.keys().next(),
                     "resume checked non-empty",
                 );
-                let mut a = fail::expect_invariant(self.requeued.remove(&k), "key just observed");
-                a.prefill_target = a.prompt_tokens + a.emitted();
+                let slot = fail::expect_invariant(self.requeued.remove(&k), "key just observed");
+                let s = slot as usize;
+                let target = self.seqs.prompt_tokens[s] + self.seqs.emitted(slot);
+                self.seqs.prefill_target[s] = target;
                 self.resumes += 1;
-                a
+                slot
             } else {
                 let r = fail::expect_invariant(self.pending.pop_front(), "front just observed");
                 self.admitted += 1;
-                Active {
+                self.seqs.alloc(SeqSeed {
                     id: r.id,
                     arrival_s: r.arrival_s,
-                    first_token_s: 0.0,
-                    started: false,
                     prompt_tokens: r.prompt_tokens,
                     output_tokens: r.output_tokens,
-                    remaining_out: r.output_tokens,
-                    kv_tokens: 0,
-                    ready_s: 0.0,
-                    prefill_target: r.prompt_tokens,
-                    processed_hwm: 0,
-                    prompt_landed: 0,
-                    chunks: 0,
-                    preemptions: 0,
-                }
+                })
             };
-            let (r, f) = a.land_chunk(take);
+            let (r, f) = self.seqs.land_chunk(slot, take);
             self.tokens_recomputed += r;
             self.tokens_prefilled += f;
             self.chunks_landed += 1;
@@ -767,9 +845,10 @@ impl Batcher {
             chunk_left = chunk_left.saturating_sub(take);
             let stamp = self.admit_stamp;
             self.admit_stamp += 1;
-            self.loc.insert(a.id, Loc::Fresh(stamp));
-            self.fresh_index.insert(a.key(), stamp);
-            self.fresh.insert(stamp, a);
+            let key = self.seqs.key(slot);
+            self.loc.insert(self.seqs.id[slot as usize], Loc::Fresh(stamp));
+            self.fresh_index.insert(key, stamp);
+            self.fresh.insert(stamp, slot);
         }
 
         self.audit_ledger();
@@ -805,21 +884,24 @@ impl Batcher {
     /// sequences stay for the next iteration's chunks.
     pub fn complete_iteration(&mut self, now_s: f64) {
         // Decode: each active sequence appends one KV entry and emits one
-        // token; sequences reaching their output length retire.
+        // token; sequences reaching their output length retire. The walk
+        // reads the age-ordered slot index and bumps two hot arena
+        // columns — the SoA payoff on the per-iteration tick.
         self.kv_tokens_held += self.active.len();
         let mut retire_keys = std::mem::take(&mut self.retire_keys);
         retire_keys.clear();
-        for (k, a) in self.active.iter_mut() {
-            a.kv_tokens += 1;
-            a.remaining_out -= 1;
-            if a.remaining_out == 0 {
+        for (k, &slot) in self.active.iter() {
+            let s = slot as usize;
+            self.seqs.kv_tokens[s] += 1;
+            self.seqs.remaining_out[s] -= 1;
+            if self.seqs.remaining_out[s] == 0 {
                 retire_keys.push(*k);
             }
         }
         for k in &retire_keys {
-            let a = fail::expect_invariant(self.active.remove(k), "retire key just collected");
-            self.kv_tokens_held -= a.kv_tokens;
-            self.retire(a, now_s);
+            let slot = fail::expect_invariant(self.active.remove(k), "retire key just collected");
+            self.kv_tokens_held -= self.seqs.kv_tokens[slot as usize];
+            self.retire(slot, now_s);
         }
         retire_keys.clear();
         self.retire_keys = retire_keys;
@@ -828,48 +910,54 @@ impl Batcher {
         // pre-index drain order).
         let mut fresh_done = std::mem::take(&mut self.fresh_done);
         fresh_done.clear();
-        for (stamp, f) in self.fresh.iter() {
-            if f.kv_tokens >= f.prefill_target {
+        for (stamp, &slot) in self.fresh.iter() {
+            let s = slot as usize;
+            if self.seqs.kv_tokens[s] >= self.seqs.prefill_target[s] {
                 fresh_done.push(*stamp);
             }
         }
         for stamp in &fresh_done {
-            let mut f =
+            let slot =
                 fail::expect_invariant(self.fresh.remove(stamp), "done stamp just collected");
-            self.fresh_index.remove(&f.key());
+            let s = slot as usize;
+            self.fresh_index.remove(&self.seqs.key(slot));
             // The completing prefill emits one token (the first, or — on
             // resume — the next). Saturating: outputs are clamped >= 1 at
             // enqueue, so this only guards hand-built state.
-            f.remaining_out = f.remaining_out.saturating_sub(1);
+            self.seqs.remaining_out[s] = self.seqs.remaining_out[s].saturating_sub(1);
             // Phase handoff: only a sequence that proceeds to decode ships
             // its KV to the decode pool (a request retiring at prefill
             // never needs the cache there). The token counts when the KV
             // lands.
-            let t = if f.remaining_out > 0 && self.kv_transfer_s_per_byte > 0.0 {
-                let bytes = f.kv_tokens as f64 * self.limits.kv_bytes_per_token;
+            let t = if self.seqs.remaining_out[s] > 0 && self.kv_transfer_s_per_byte > 0.0 {
+                let bytes = self.seqs.kv_tokens[s] as f64 * self.limits.kv_bytes_per_token;
                 self.kv_transfer_bytes += bytes;
                 now_s + bytes * self.kv_transfer_s_per_byte
             } else {
                 now_s
             };
-            if !f.started {
-                f.started = true;
-                f.first_token_s = t;
-                self.ttft_ms.push((t - f.arrival_s).max(0.0) * 1e3);
+            if !self.seqs.started[s] {
+                self.seqs.started[s] = true;
+                self.seqs.first_token_s[s] = t;
+                let ttft = (t - self.seqs.arrival_s[s]).max(0.0) * 1e3;
+                self.ttft_sketch.add(ttft);
+                if !self.stream_records {
+                    self.ttft_ms.push(ttft);
+                }
             }
-            if f.remaining_out == 0 {
-                self.kv_tokens_held -= f.kv_tokens;
-                self.retire(f, t);
+            if self.seqs.remaining_out[s] == 0 {
+                self.kv_tokens_held -= self.seqs.kv_tokens[s];
+                self.retire(slot, t);
             } else if t > now_s {
                 // KV still in flight to the decode pool: hold the sequence
                 // out of decode until the transfer lands.
-                f.ready_s = t;
-                self.loc.insert(f.id, Loc::Transferring);
-                self.transferring.push(f);
+                self.seqs.ready_s[s] = t;
+                self.loc.insert(self.seqs.id[s], Loc::Transferring);
+                self.transferring.push(slot);
             } else {
-                let k = f.key();
-                self.loc.insert(f.id, Loc::Active(k));
-                self.active.insert(k, f);
+                let k = self.seqs.key(slot);
+                self.loc.insert(self.seqs.id[s], Loc::Active(k));
+                self.active.insert(k, slot);
             }
         }
         fresh_done.clear();
@@ -877,26 +965,34 @@ impl Batcher {
         self.audit_ledger();
     }
 
-    /// A request reached its EOS / length limit: record its metrics and
-    /// release its KV.
-    fn retire(&mut self, a: Active, now_s: f64) {
+    /// A request reached its EOS / length limit: record its metrics,
+    /// release its KV, compact its id into the retired set and return its
+    /// arena slot for reuse.
+    fn retire(&mut self, slot: u32, now_s: f64) {
+        let s = slot as usize;
         debug_assert_eq!(
-            a.prompt_landed, a.prompt_tokens,
+            self.seqs.prompt_landed[s], self.seqs.prompt_tokens[s],
             "chunk conservation: first-time chunk tokens must sum to the prompt"
         );
         self.completed += 1;
-        self.loc.insert(a.id, Loc::Finished(a.output_tokens));
-        self.e2e_ms.push((now_s - a.arrival_s).max(0.0) * 1e3);
-        self.finished.push(RequestRecord {
-            id: a.id,
-            arrival_s: a.arrival_s,
-            first_token_s: a.first_token_s,
-            finish_s: now_s,
-            prompt_tokens: a.prompt_tokens,
-            output_tokens: a.output_tokens,
-            preemptions: a.preemptions,
-            chunks: a.chunks,
-        });
+        self.loc.remove(&self.seqs.id[s]);
+        self.retired.insert(self.seqs.id[s]);
+        let e2e = (now_s - self.seqs.arrival_s[s]).max(0.0) * 1e3;
+        self.e2e_sketch.add(e2e);
+        if !self.stream_records {
+            self.e2e_ms.push(e2e);
+            self.finished.push(RequestRecord {
+                id: self.seqs.id[s],
+                arrival_s: self.seqs.arrival_s[s],
+                first_token_s: self.seqs.first_token_s[s],
+                finish_s: now_s,
+                prompt_tokens: self.seqs.prompt_tokens[s],
+                output_tokens: self.seqs.output_tokens[s],
+                preemptions: self.seqs.preemptions[s],
+                chunks: self.seqs.chunks[s],
+            });
+        }
+        self.seqs.release(slot);
     }
 }
 
@@ -1502,5 +1598,82 @@ mod tests {
         assert!(by_id(2).preemptions >= by_id(1).preemptions);
         // Every preemption resumed and finished.
         assert_eq!(b.resumes, b.preemptions);
+    }
+
+    #[test]
+    fn locator_stays_bounded_after_drain() {
+        let mut b = Batcher::with_limits(kv_limits(64));
+        let reqs: Vec<_> = (0..200).map(|i| req(i, i as f64 * 0.01, 8, 3)).collect();
+        b.enqueue(&reqs);
+        drain(&mut b, 0.0);
+        assert_eq!(b.completed, 200);
+        // The locator tracks in-flight ids only: empty after a drain, and
+        // the 200 contiguous retired ids compact into a single interval.
+        assert_eq!(b.locator_len(), 0);
+        assert_eq!(b.retired_runs(), 1);
+        // Slot reuse: arena capacity is the peak in-flight population, far
+        // below the trace length.
+        let (live, cap) = b.arena_slots();
+        assert_eq!(live, 0);
+        assert!(cap < 200, "arena grew with the trace (capacity {cap})");
+        // Retired ids still answer exactly in full-records mode; unknown
+        // ids stay None.
+        assert_eq!(b.progress_of(137), Some(3));
+        assert_eq!(b.progress_of(10_000), None);
+    }
+
+    #[test]
+    fn retired_set_merges_interval_runs() {
+        let mut r = RetiredSet::default();
+        for id in [5u64, 3, 9, 4, 8] {
+            r.insert(id);
+        }
+        // {3,4,5} and {8,9}: two runs.
+        assert_eq!(r.runs_len(), 2);
+        assert!(r.contains(3) && r.contains(5) && r.contains(9));
+        assert!(!r.contains(6) && !r.contains(2) && !r.contains(10));
+        // 6 and 7 bridge the gap: everything collapses into one run.
+        r.insert(7);
+        r.insert(6);
+        assert_eq!(r.runs_len(), 1);
+        assert!(r.contains(6) && r.contains(7));
+        // Duplicate inserts are no-ops.
+        r.insert(4);
+        assert_eq!(r.runs_len(), 1);
+        // The id-space endpoint must not overflow the merge probe.
+        r.insert(u64::MAX);
+        assert!(r.contains(u64::MAX));
+        assert_eq!(r.runs_len(), 2);
+    }
+
+    #[test]
+    fn streaming_records_folds_into_sketches() {
+        let reqs: Vec<_> = (0..50).map(|i| req(i, i as f64 * 0.1, 6, 4)).collect();
+        let mut full = Batcher::with_limits(kv_limits(48));
+        let mut lean = Batcher::with_limits(kv_limits(48)).with_streaming_records();
+        full.enqueue(&reqs);
+        lean.enqueue(&reqs);
+        drain(&mut full, 0.0);
+        drain(&mut lean, 0.0);
+        // Streaming mode keeps the per-request vectors empty (and never
+        // reserves capacity for them)...
+        assert!(lean.ttft_ms.is_empty() && lean.e2e_ms.is_empty() && lean.finished.is_empty());
+        assert_eq!(lean.ttft_ms.capacity(), 0);
+        assert_eq!(lean.finished.capacity(), 0);
+        // ...while the sketches and every scalar are bit-identical to the
+        // full-records twin (same add sequence on both paths).
+        assert_eq!(lean.completed, full.completed);
+        assert_eq!(lean.tokens_prefilled, full.tokens_prefilled);
+        assert_eq!(lean.tokens_decoded, full.tokens_decoded);
+        assert_eq!(lean.preemptions, full.preemptions);
+        assert_eq!(lean.ttft_sketch, full.ttft_sketch);
+        assert_eq!(lean.e2e_sketch, full.e2e_sketch);
+        assert_eq!(full.ttft_sketch.len() as u64, full.completed);
+        // The documented recall trade: retired ids resolve in full mode,
+        // fold to None in streaming mode.
+        assert_eq!(full.progress_of(7), Some(4));
+        assert_eq!(lean.progress_of(7), None);
+        // And the resident-state accounting reflects the fold.
+        assert!(lean.approx_state_bytes() < full.approx_state_bytes());
     }
 }

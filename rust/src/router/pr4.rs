@@ -1,0 +1,786 @@
+//! The PR-4 optimized continuous batcher (AoS `BTreeMap<_, Active>`
+//! core), kept as the **second frozen baseline**.
+//!
+//! PR 9 rewrote [`super::Batcher`] onto a struct-of-arrays sequence
+//! arena ([`super::arena::SeqArena`]): columnar per-sequence fields
+//! indexed by `u32` slots, with the age/stamp orderings kept as ordered
+//! index-sets over slots. The rewrite must be *behavior-preserving*:
+//! same admissions, same preemption victims, same iteration
+//! compositions, same per-request records, bit for bit. This module is
+//! the PR-4 core exactly as it shipped — incremental KV ledger, ordered
+//! `(arrival_s, id)` indexes, map-backed progress lookups — so the
+//! arena rewrite has an *optimized* baseline to beat, not just the
+//! naive [`super::reference`] core.
+//!
+//! Two consumers:
+//! * the golden-equivalence suite (`tests/golden_equivalence.rs`) drives
+//!   the arena core, this core and the reference core through identical
+//!   traces and asserts identical outputs;
+//! * `bench --exp simperf` (the `soa` block) and
+//!   `tests/perf_trajectory.rs` measure arena-vs-PR-4 on the same
+//!   machine — the ≥1.5× saturated-drain gate — so `BENCH_sim.json`
+//!   carries honest before/after numbers.
+//!
+//! Keep this file frozen: it changes only if the *intended semantics* of
+//! the batcher change, in which case all implementations move together.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::metrics::RequestRecord;
+use crate::util::fail;
+use crate::workload::TraceRequest;
+
+use super::{BatchLimits, IterationBatch};
+
+/// Age-ordering key: `(arrival_s.to_bits(), id)`. For finite non-negative
+/// floats the IEEE-754 bit pattern orders exactly like the number, so the
+/// tuple orders by arrival time with the id as tie-break — precisely the
+/// `(arrival_s, id)` preemption/resume order, but `Ord` (no
+/// `partial_cmp().unwrap()` on the hot path). [`Batcher::enqueue`]
+/// enforces the domain (finite, >= 0, -0.0 normalized).
+type SeqKey = (u64, u64);
+
+/// In-flight sequence state.
+#[derive(Clone, Copy, Debug)]
+struct Active {
+    id: u64,
+    arrival_s: f64,
+    /// Set when the last prefill chunk completes (first token emitted).
+    first_token_s: f64,
+    /// First token already emitted (survives preemption: TTFT is recorded
+    /// once, on the original prefill completion).
+    started: bool,
+    prompt_tokens: usize,
+    output_tokens: usize,
+    remaining_out: usize,
+    /// KV-cache entries currently materialized for this sequence
+    /// (landed prefill chunks + generated tokens; dropped to 0 on
+    /// preemption).
+    kv_tokens: usize,
+    /// When the phase-handoff KV transfer completes (disaggregated mode);
+    /// the sequence joins decode no earlier than this.
+    ready_s: f64,
+    /// Tokens this prefill pass must materialize before the sequence
+    /// (re)joins decode: the prompt, plus — on resume — every previously
+    /// emitted token.
+    prefill_target: usize,
+    /// High-water mark of tokens ever processed for this sequence. On
+    /// (re)prefill, tokens below the mark count as *recomputed*; tokens
+    /// above it are first-time prompt work. This is what lets a sequence
+    /// preempted mid-prefill resume from its last completed chunk instead
+    /// of being charged for the un-chunked prompt tail.
+    processed_hwm: usize,
+    /// First-time prompt tokens landed so far (conservation: equals
+    /// `prompt_tokens` exactly at retirement).
+    prompt_landed: usize,
+    /// Prefill chunks this sequence consumed (1 per iteration with prefill
+    /// work for it; 1 total under monolithic prefill per pass).
+    chunks: u32,
+    /// Times this sequence was preempted (recompute-on-resume).
+    preemptions: u32,
+}
+
+impl Active {
+    fn key(&self) -> SeqKey {
+        (self.arrival_s.to_bits(), self.id)
+    }
+
+    /// Output tokens emitted so far.
+    fn emitted(&self) -> usize {
+        self.output_tokens - self.remaining_out
+    }
+
+    /// Land `take` prefill tokens: KV materializes, the high-water mark
+    /// splits the chunk into (recomputed, first-time) token counts.
+    fn land_chunk(&mut self, take: usize) -> (u64, u64) {
+        let off = self.kv_tokens;
+        let recomp = take.min(self.processed_hwm.saturating_sub(off));
+        self.kv_tokens += take;
+        self.processed_hwm = self.processed_hwm.max(self.kv_tokens);
+        self.prompt_landed += take - recomp;
+        self.chunks += 1;
+        (recomp as u64, (take - recomp) as u64)
+    }
+}
+
+/// Where a known request id currently lives (the `progress_of` locator).
+#[derive(Clone, Copy, Debug)]
+enum Loc {
+    /// Queued, not yet admitted.
+    Pending,
+    /// Prefill phase, keyed by its admission stamp in `fresh`.
+    Fresh(u64),
+    /// Decoding, keyed by `(arrival bits, id)` in `active`.
+    Active(SeqKey),
+    /// Preempted, awaiting resume in `requeued`.
+    Requeued(SeqKey),
+    /// KV handoff in flight (small set; resolved by scan).
+    Transferring,
+    /// Retired with this many output tokens.
+    Finished(usize),
+}
+
+/// The continuous batcher: admission queue + in-flight set + KV ledger.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    limits: BatchLimits,
+    pending: VecDeque<TraceRequest>,
+    /// Preempted sequences awaiting re-admission, ordered by
+    /// `(arrival_s, id)`; they re-enter ahead of `pending` (they arrived
+    /// no later than anything still queued).
+    requeued: BTreeMap<SeqKey, Active>,
+    /// Decoding sequences, ordered by `(arrival_s, id)` — the preemption
+    /// victim is always the last key.
+    active: BTreeMap<SeqKey, Active>,
+    /// Prefill-phase sequences keyed by a monotone admission stamp:
+    /// iteration order is exactly the FIFO chunk-continuation order.
+    /// Monolithic prefill drains this every iteration; chunked prefill
+    /// keeps partially-landed sequences here across iterations.
+    fresh: BTreeMap<u64, Active>,
+    /// Age index over `fresh`: `(arrival_s, id)` -> admission stamp, for
+    /// O(log n) youngest-victim lookup.
+    fresh_index: BTreeMap<SeqKey, u64>,
+    /// Next admission stamp (monotone across the run).
+    admit_stamp: u64,
+    /// Sequences whose prefill completed but whose KV is still in flight
+    /// to the decode pool (disaggregated mode): they hold cache but join
+    /// decode only once `ready_s` passes.
+    transferring: Vec<Active>,
+    /// Running KV ledger: tokens materialized across
+    /// `active ∪ fresh ∪ transferring`, updated incrementally at
+    /// chunk-land / decode / preempt / retire.
+    kv_tokens_held: usize,
+    /// Per-id locator for `progress_of` / `prefill_progress_of`.
+    loc: HashMap<u64, Loc>,
+    /// Scratch (reused across iterations, no per-iteration allocation).
+    retire_keys: Vec<SeqKey>,
+    fresh_done: Vec<u64>,
+    /// Debug-build ledger-audit counter (the O(n) recount cross-check runs
+    /// on a 1-in-64 sample so debug perf measurements stay meaningful).
+    ledger_audit_tick: u64,
+    /// Seconds to ship one KV byte from the prefill pool to the decode
+    /// pool at phase handoff (0 = colocated, no transfer).
+    kv_transfer_s_per_byte: f64,
+    pub admitted: u64,
+    pub completed: u64,
+    /// Requests whose peak KV demand can never fit the budget, dropped at
+    /// admission time (the "rejected" half of rejected-vs-delayed).
+    pub rejected: u64,
+    /// Iterations in which an arrived request was deferred by the token
+    /// cap or missing KV headroom (the "delayed" half). Waiting for the
+    /// chunk budget is scheduling, not delay, and is not counted.
+    pub delayed_admissions: u64,
+    /// Preemption events (KV dropped, sequence requeued).
+    pub preemptions: u64,
+    /// Re-admissions of preempted sequences (each pays a recompute
+    /// prefill).
+    pub resumes: u64,
+    /// Prefill chunks landed across all sequences (== admissions + resumes
+    /// under monolithic prefill).
+    pub chunks_landed: u64,
+    /// KV bytes shipped prefill→decode at phase handoffs (disaggregated
+    /// mode; 0 when colocated).
+    pub kv_transfer_bytes: f64,
+    pub tokens_prefilled: u64,
+    pub tokens_decoded: u64,
+    /// Prefill tokens spent recomputing preempted sequences' context
+    /// (previously materialized tokens only — never the un-chunked prompt
+    /// tail), on top of `tokens_prefilled`.
+    pub tokens_recomputed: u64,
+    /// Per-request time-to-first-token (ms) — recorded when the last chunk
+    /// of the original prefill completes (SLO metric).
+    pub ttft_ms: Vec<f64>,
+    /// Per-request end-to-end latency (ms) — arrival to last token.
+    pub e2e_ms: Vec<f64>,
+    /// Full per-request records, emitted at retirement.
+    pub finished: Vec<RequestRecord>,
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher::default()
+    }
+
+    /// A batcher gated by the given token cap, KV budget and chunk budget.
+    pub fn with_limits(limits: BatchLimits) -> Batcher {
+        Batcher { limits, ..Batcher::default() }
+    }
+
+    /// Model the disaggregated phase handoff: a sequence completing
+    /// prefill that proceeds to decode ships its KV over a `link_gbps`
+    /// GB/s link before its first token counts (TTFT includes the
+    /// transfer; the clock does not — transfers overlap with compute; a
+    /// request retiring at prefill ships nothing). The link must be a
+    /// positive finite bandwidth — a free link is colocation.
+    pub fn with_transfer_link(mut self, link_gbps: f64) -> Batcher {
+        assert!(
+            link_gbps.is_finite() && link_gbps > 0.0,
+            "transfer link must be a positive finite GB/s (got {link_gbps})"
+        );
+        self.kv_transfer_s_per_byte = 1.0 / (link_gbps * 1e9);
+        self
+    }
+
+    /// Queue requests (must be fed in arrival order). Degenerate
+    /// zero-token prompts/outputs are clamped to one token: the iteration
+    /// machinery treats "no prefill and no decode" as idle, so a 0-token
+    /// phase could never complete (the workload generators already clamp
+    /// to >= 1).
+    ///
+    /// Arrivals are validated here: a NaN, infinite or negative
+    /// `arrival_s` poisons every age-ordered structure downstream (the
+    /// preemption and resume orders), so a malformed trace is rejected at
+    /// the door with a panic naming the offending request instead of
+    /// corrupting scheduling order later. `-0.0` is normalized to `+0.0`
+    /// so the bit-packed ordering key agrees with numeric order.
+    pub fn enqueue(&mut self, reqs: &[TraceRequest]) {
+        for r in reqs {
+            assert!(
+                r.arrival_s.is_finite() && r.arrival_s >= 0.0,
+                "Batcher::enqueue: request {} has arrival_s = {} — arrivals must be \
+                 finite and non-negative (poisoned trace rejected)",
+                r.id,
+                r.arrival_s
+            );
+            // IEEE: `-0.0 + 0.0 == +0.0`, and every other finite value is
+            // unchanged — this normalizes the sign of zero without a
+            // float compare (the assert above already rejected NaN/inf).
+            let arrival_s = r.arrival_s + 0.0;
+            self.loc.insert(r.id, Loc::Pending);
+            self.pending.push_back(TraceRequest {
+                arrival_s,
+                prompt_tokens: r.prompt_tokens.max(1),
+                output_tokens: r.output_tokens.max(1),
+                ..*r
+            });
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Preempted sequences awaiting re-admission.
+    pub fn requeued_len(&self) -> usize {
+        self.requeued.len()
+    }
+
+    /// Admission-queue depth: new arrivals + preempted awaiting resume.
+    pub fn queue_depth(&self) -> usize {
+        self.pending.len() + self.requeued.len()
+    }
+
+    /// Sequences whose KV handoff is still in flight (disaggregated mode).
+    pub fn transferring_len(&self) -> usize {
+        self.transferring.len()
+    }
+
+    /// Earliest completion time of an in-flight KV handoff — the clock
+    /// driver's wake-up when a blocked (past-arrival) requeued sequence
+    /// masks it in [`next_arrival`](Batcher::next_arrival).
+    pub fn next_transfer_ready(&self) -> Option<f64> {
+        self.transferring.iter().map(|a| a.ready_s).reduce(f64::min)
+    }
+
+    /// Event-driver hook: does the wake-up instant `t` coincide with the
+    /// earliest in-flight KV-handoff completion? Classifies an idle
+    /// wake-up as transfer-complete vs request-arrival for the event
+    /// heap's taxonomy. Bitwise comparison on purpose: the driver passes
+    /// back the exact `f64` [`idle_wakeup`](crate::sim) selected, so
+    /// identity — not tolerance — is the contract.
+    pub fn is_transfer_instant(&self, t: f64) -> bool {
+        self.next_transfer_ready().map(|r| r.to_bits() == t.to_bits()).unwrap_or(false)
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.active.len() + self.fresh.len() + self.transferring.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.pending.is_empty()
+            && self.requeued.is_empty()
+            && self.active.is_empty()
+            && self.fresh.is_empty()
+            && self.transferring.is_empty()
+    }
+
+    /// KV-cache entries currently materialized across in-flight sequences
+    /// (in-transit phase-handoff KV counts once). O(1): a running counter,
+    /// not a chain-sum (`recount_kv` cross-checks it in debug builds).
+    pub fn kv_tokens_in_use(&self) -> usize {
+        self.kv_tokens_held
+    }
+
+    /// KV-cache bytes currently materialized.
+    pub fn kv_bytes_in_use(&self) -> f64 {
+        self.kv_tokens_held as f64 * self.limits.kv_bytes_per_token
+    }
+
+    /// The O(n) recount the incremental ledger replaced — audit use only
+    /// (sampled debug cross-check + the ledger unit test).
+    fn recount_kv(&self) -> usize {
+        self.active
+            .values()
+            .chain(self.fresh.values())
+            .chain(self.transferring.iter())
+            .map(|a| a.kv_tokens)
+            .sum()
+    }
+
+    /// Debug-build ledger audit: cross-check the running counter against
+    /// the O(n) recount on a 1-in-64 sample of calls. Sampled so that
+    /// debug-build perf measurements (the tier-1 `perf_trajectory` gate)
+    /// are not dominated by the audit itself; the per-step exactness is
+    /// separately pinned by `kv_ledger_matches_recount_under_churn` and
+    /// the golden-equivalence lockstep. Compiled out of release builds.
+    fn audit_ledger(&mut self) {
+        if cfg!(debug_assertions) {
+            self.ledger_audit_tick = self.ledger_audit_tick.wrapping_add(1);
+            if self.ledger_audit_tick & 63 == 0 {
+                assert_eq!(self.kv_tokens_held, self.recount_kv(), "KV ledger out of sync");
+            }
+        }
+    }
+
+    /// Output tokens emitted so far for request `id`: 0 while queued or
+    /// prefilling, the full output once finished, `None` for unknown ids.
+    /// Monotone over a request's lifetime — preemption never rolls
+    /// progress back. Map-backed: O(log n) via the per-id locator.
+    pub fn progress_of(&self, id: u64) -> Option<usize> {
+        match self.loc.get(&id)? {
+            Loc::Pending => Some(0),
+            Loc::Fresh(stamp) => self.fresh.get(stamp).map(|a| a.emitted()),
+            Loc::Active(k) => self.active.get(k).map(|a| a.emitted()),
+            Loc::Requeued(k) => self.requeued.get(k).map(|a| a.emitted()),
+            Loc::Transferring => {
+                self.transferring.iter().find(|a| a.id == id).map(|a| a.emitted())
+            }
+            Loc::Finished(out) => Some(*out),
+        }
+    }
+
+    /// Prefill progress of request `id`: `(kv tokens landed, prefill
+    /// target)` while it is in the prefill phase; `None` otherwise. The
+    /// chunk-conservation observable: landed never exceeds the target and
+    /// only moves forward between preemptions.
+    pub fn prefill_progress_of(&self, id: u64) -> Option<(usize, usize)> {
+        match self.loc.get(&id)? {
+            Loc::Fresh(stamp) => self.fresh.get(stamp).map(|a| (a.kv_tokens, a.prefill_target)),
+            _ => None,
+        }
+    }
+
+    /// Earliest instant new work becomes available (for clock jumps when
+    /// idle). Includes preempted-requeued sequences — whose arrivals are
+    /// in the past — so a caller jumping the clock can never skip over
+    /// them (see `next_iteration`, which always re-admits such a sequence
+    /// when nothing is running: a fully-preempted state cannot stall), and
+    /// KV-transfer completion times of sequences mid-handoff.
+    pub fn next_arrival(&self) -> Option<f64> {
+        let requeued = self.requeued.values().next().map(|a| a.arrival_s);
+        let pending = self.pending.front().map(|r| r.arrival_s);
+        let ready = self.next_transfer_ready().unwrap_or(f64::INFINITY);
+        let queued = match (requeued, pending) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, None) => a,
+            (None, b) => b,
+        };
+        match queued {
+            Some(t) => Some(t.min(ready)),
+            None if ready.is_finite() => Some(ready),
+            None => None,
+        }
+    }
+
+    /// Preempt the youngest in-flight sequence (decode or mid-prefill),
+    /// adjusting `projected` by the KV it frees. Returns false when no
+    /// victim may be taken (the oldest survivor is never preempted).
+    /// O(log n): the victim is the last key of the age-ordered indexes.
+    fn preempt_youngest(&mut self, projected: &mut usize) -> bool {
+        if self.active.len() + self.fresh.len() <= 1 {
+            return false;
+        }
+        let youngest_active = self.active.keys().next_back().copied();
+        let youngest_fresh = self.fresh_index.iter().next_back().map(|(k, s)| (*k, *s));
+        let from_fresh = match (youngest_active, youngest_fresh) {
+            (Some(ka), Some((kf, _))) => kf > ka,
+            (None, Some(_)) => true,
+            _ => false,
+        };
+        let mut a = if from_fresh {
+            let (kf, stamp) =
+                fail::expect_invariant(youngest_fresh, "from_fresh implies a youngest fresh entry");
+            self.fresh_index.remove(&kf);
+            let a =
+                fail::expect_invariant(self.fresh.remove(&stamp), "fresh_index in sync with fresh");
+            *projected -= a.kv_tokens;
+            a
+        } else {
+            let ka = match youngest_active {
+                Some(k) => k,
+                None => return false,
+            };
+            let a = fail::expect_invariant(self.active.remove(&ka), "key just observed");
+            *projected -= a.kv_tokens + 1;
+            a
+        };
+        // The high-water mark is what the resume must recompute: a decoding
+        // sequence reprocesses prompt + emitted (the last emitted token is
+        // re-fed to produce the next); a mid-prefill one only its landed
+        // chunks — the un-chunked tail is first-time work, not recompute.
+        a.processed_hwm = if from_fresh {
+            a.processed_hwm.max(a.kv_tokens)
+        } else {
+            a.processed_hwm.max(a.prompt_tokens + a.emitted())
+        };
+        self.kv_tokens_held -= a.kv_tokens;
+        a.kv_tokens = 0;
+        a.preemptions += 1;
+        self.preemptions += 1;
+        let k = a.key();
+        self.loc.insert(a.id, Loc::Requeued(k));
+        self.requeued.insert(k, a);
+        true
+    }
+
+    /// Form the next iteration at virtual time `now`: preempt if decode
+    /// growth (or a headroom-starved prefill) exhausts the KV budget, then
+    /// pack decode first and fill the remainder with prefill chunks —
+    /// in-progress prefills continue before resumed and new admissions,
+    /// all FIFO. Returns `None` only when there is no decode work and
+    /// nothing admissible yet.
+    pub fn next_iteration(&mut self, now_s: f64) -> Option<IterationBatch> {
+        let BatchLimits {
+            max_batch_tokens: cap,
+            kv_budget_bytes: budget,
+            kv_bytes_per_token: bpt,
+            prefill_chunk_tokens: chunk,
+        } = self.limits;
+        let kv_gated = budget.is_finite() && bpt > 0.0;
+
+        // Phase-handoff arrivals: sequences whose KV transfer finished
+        // join the decode set (disaggregated mode; no-op otherwise).
+        let mut t = 0;
+        while t < self.transferring.len() {
+            if self.transferring[t].ready_s <= now_s + 1e-12 {
+                let a = self.transferring.swap_remove(t);
+                let k = a.key();
+                self.loc.insert(a.id, Loc::Active(k));
+                self.active.insert(k, a);
+            } else {
+                t += 1;
+            }
+        }
+
+        // Decode growth: each decoding sequence appends one token's KV this
+        // iteration, on top of the KV held by mid-prefill sequences. The
+        // running ledger makes the projection O(1): held tokens + one per
+        // decoding sequence. If the total exceeds the budget, preempt the
+        // youngest sequences (never the oldest — forward progress is
+        // guaranteed). When nothing is decoding but chunked prefills are
+        // parked on zero headroom, demand one spare token of room so the
+        // oldest prefill can always land a chunk (two half-prefilled
+        // prompts jointly filling the budget would otherwise deadlock).
+        let mut preempted = 0usize;
+        let mut kv_projected: usize = self.kv_tokens_held + self.active.len();
+        if kv_gated {
+            loop {
+                let min_room = usize::from(self.active.is_empty() && !self.fresh.is_empty());
+                if ((kv_projected + min_room) as f64) * bpt <= budget + 1e-9 {
+                    break;
+                }
+                if !self.preempt_youngest(&mut kv_projected) {
+                    break;
+                }
+                preempted += 1;
+            }
+        }
+
+        let decode = self.active.len();
+        let mut prefill = 0usize;
+        // Stall-free packing: decode tokens claim the chunk budget (and
+        // the token cap) first, prefill chunks fill the remainder. In
+        // disaggregated mode (transfer link configured) decode runs on its
+        // own pool and does not throttle the prefill pool's budgets.
+        let decode_share = if self.kv_transfer_s_per_byte > 0.0 { 0 } else { decode };
+        let mut chunk_left =
+            if chunk == 0 { usize::MAX } else { chunk.saturating_sub(decode_share) };
+        let headroom = |kv_projected: usize| -> usize {
+            (((budget + 1e-9) / bpt) as usize).saturating_sub(kv_projected)
+        };
+
+        // Continue in-progress prefills first (they already hold KV;
+        // finishing them frees the phase pipeline), FIFO by admission
+        // stamp.
+        if chunk > 0 {
+            let mut recomputed = 0u64;
+            let mut prefilled = 0u64;
+            let mut landed = 0u64;
+            let mut kv_added = 0usize;
+            for a in self.fresh.values_mut() {
+                if chunk_left == 0 {
+                    break;
+                }
+                let mut take = (a.prefill_target - a.kv_tokens).min(chunk_left);
+                if cap > 0 {
+                    take = take.min(cap.saturating_sub(decode_share + prefill));
+                }
+                if kv_gated {
+                    take = take.min(headroom(kv_projected));
+                }
+                if take == 0 {
+                    continue;
+                }
+                let (r, f) = a.land_chunk(take);
+                recomputed += r;
+                prefilled += f;
+                landed += 1;
+                kv_added += take;
+                prefill += take;
+                kv_projected += take;
+                chunk_left -= take;
+            }
+            self.tokens_recomputed += recomputed;
+            self.tokens_prefilled += prefilled;
+            self.chunks_landed += landed;
+            self.kv_tokens_held += kv_added;
+        }
+
+        // Admission: resumed sequences first (they arrived no later than
+        // anything still pending), then new arrivals, FIFO.
+        loop {
+            if chunk_left == 0 {
+                break;
+            }
+            let resume = !self.requeued.is_empty();
+            let need_tokens = if let Some(a) = self.requeued.values().next() {
+                a.prompt_tokens + a.emitted()
+            } else if let Some(r) = self.pending.front() {
+                if r.arrival_s > now_s {
+                    break;
+                }
+                // Peak KV demand (prompt + full output) can never fit:
+                // reject outright rather than deadlock the queue.
+                if kv_gated && ((r.prompt_tokens + r.output_tokens) as f64) * bpt > budget + 1e-9 {
+                    let dropped =
+                        fail::expect_invariant(self.pending.pop_front(), "front just observed");
+                    self.loc.remove(&dropped.id);
+                    self.rejected += 1;
+                    continue;
+                }
+                r.prompt_tokens
+            } else {
+                break;
+            };
+
+            // First-chunk size: monolithic mode must land the whole target
+            // at once (the pre-chunking contract); chunked mode lands
+            // whatever the budgets allow, down to — but never — zero.
+            let take = if chunk == 0 {
+                let nothing_running = decode == 0 && prefill == 0;
+                let over_cap = cap > 0 && decode_share + prefill + need_tokens > cap;
+                let over_kv =
+                    kv_gated && ((kv_projected + need_tokens) as f64) * bpt > budget + 1e-9;
+                // The oversized-alone override must not fire when KV in
+                // transit (disaggregated handoffs) still holds the budget:
+                // there the wake-up is the transfer completing, and
+                // admitting anyway would overshoot the occupancy
+                // invariant. Colocated, nothing_running implies
+                // kv_projected == 0, so this is the old behavior exactly.
+                let admit_alone = nothing_running && !(over_kv && kv_projected > 0);
+                if (over_cap || over_kv) && !admit_alone {
+                    // Head-of-line wait: the queue is FIFO, so later
+                    // requests wait behind the blocked head (delayed, not
+                    // rejected).
+                    self.delayed_admissions += 1;
+                    break;
+                }
+                need_tokens
+            } else {
+                let mut take = need_tokens.min(chunk_left);
+                if cap > 0 {
+                    take = take.min(cap.saturating_sub(decode_share + prefill));
+                }
+                if kv_gated {
+                    take = take.min(headroom(kv_projected));
+                }
+                if take == 0 {
+                    // Blocked by the token cap or KV headroom (the chunk
+                    // budget still had room — that case breaks above).
+                    self.delayed_admissions += 1;
+                    break;
+                }
+                take
+            };
+
+            let mut a = if resume {
+                let k = *fail::expect_invariant(
+                    self.requeued.keys().next(),
+                    "resume checked non-empty",
+                );
+                let mut a = fail::expect_invariant(self.requeued.remove(&k), "key just observed");
+                a.prefill_target = a.prompt_tokens + a.emitted();
+                self.resumes += 1;
+                a
+            } else {
+                let r = fail::expect_invariant(self.pending.pop_front(), "front just observed");
+                self.admitted += 1;
+                Active {
+                    id: r.id,
+                    arrival_s: r.arrival_s,
+                    first_token_s: 0.0,
+                    started: false,
+                    prompt_tokens: r.prompt_tokens,
+                    output_tokens: r.output_tokens,
+                    remaining_out: r.output_tokens,
+                    kv_tokens: 0,
+                    ready_s: 0.0,
+                    prefill_target: r.prompt_tokens,
+                    processed_hwm: 0,
+                    prompt_landed: 0,
+                    chunks: 0,
+                    preemptions: 0,
+                }
+            };
+            let (r, f) = a.land_chunk(take);
+            self.tokens_recomputed += r;
+            self.tokens_prefilled += f;
+            self.chunks_landed += 1;
+            self.kv_tokens_held += take;
+            prefill += take;
+            kv_projected += take;
+            chunk_left = chunk_left.saturating_sub(take);
+            let stamp = self.admit_stamp;
+            self.admit_stamp += 1;
+            self.loc.insert(a.id, Loc::Fresh(stamp));
+            self.fresh_index.insert(a.key(), stamp);
+            self.fresh.insert(stamp, a);
+        }
+
+        self.audit_ledger();
+        if prefill == 0 && decode == 0 {
+            // No prefill and nothing decoding. Chunked mid-prefill
+            // sequences cannot be parked here: the preemption pass
+            // guarantees one token of headroom when nothing decodes, so
+            // the oldest always lands a chunk; monolithic fresh is drained
+            // by complete_iteration; and a non-empty requeue with nothing
+            // running always admits (the nothing_running override above).
+            // The one exception: KV in transit (disaggregated mode) may
+            // hold the headroom — then the pending transfer itself wakes
+            // the clock (`next_arrival` reports its completion).
+            debug_assert!(
+                self.fresh.is_empty() || !self.transferring.is_empty(),
+                "a parked prefill with no pending wake-up would stall the clock"
+            );
+            return None;
+        }
+        self.tokens_decoded += decode as u64;
+        Some(IterationBatch {
+            prefill_tokens: prefill,
+            decode_seqs: decode,
+            preempted_seqs: preempted,
+        })
+    }
+
+    /// Commit the iteration at virtual time `now_s`: every decoding
+    /// sequence produced one token (its KV grows by one entry); prefill
+    /// sequences whose last chunk landed emit their first token (TTFT,
+    /// unless resumed; delayed by the KV phase handoff when a transfer
+    /// link is configured) and join the decode set. Partially-prefilled
+    /// sequences stay for the next iteration's chunks.
+    pub fn complete_iteration(&mut self, now_s: f64) {
+        // Decode: each active sequence appends one KV entry and emits one
+        // token; sequences reaching their output length retire.
+        self.kv_tokens_held += self.active.len();
+        let mut retire_keys = std::mem::take(&mut self.retire_keys);
+        retire_keys.clear();
+        for (k, a) in self.active.iter_mut() {
+            a.kv_tokens += 1;
+            a.remaining_out -= 1;
+            if a.remaining_out == 0 {
+                retire_keys.push(*k);
+            }
+        }
+        for k in &retire_keys {
+            let a = fail::expect_invariant(self.active.remove(k), "retire key just collected");
+            self.kv_tokens_held -= a.kv_tokens;
+            self.retire(a, now_s);
+        }
+        retire_keys.clear();
+        self.retire_keys = retire_keys;
+
+        // Prefill completions, FIFO by admission stamp (identical to the
+        // pre-index drain order).
+        let mut fresh_done = std::mem::take(&mut self.fresh_done);
+        fresh_done.clear();
+        for (stamp, f) in self.fresh.iter() {
+            if f.kv_tokens >= f.prefill_target {
+                fresh_done.push(*stamp);
+            }
+        }
+        for stamp in &fresh_done {
+            let mut f =
+                fail::expect_invariant(self.fresh.remove(stamp), "done stamp just collected");
+            self.fresh_index.remove(&f.key());
+            // The completing prefill emits one token (the first, or — on
+            // resume — the next). Saturating: outputs are clamped >= 1 at
+            // enqueue, so this only guards hand-built state.
+            f.remaining_out = f.remaining_out.saturating_sub(1);
+            // Phase handoff: only a sequence that proceeds to decode ships
+            // its KV to the decode pool (a request retiring at prefill
+            // never needs the cache there). The token counts when the KV
+            // lands.
+            let t = if f.remaining_out > 0 && self.kv_transfer_s_per_byte > 0.0 {
+                let bytes = f.kv_tokens as f64 * self.limits.kv_bytes_per_token;
+                self.kv_transfer_bytes += bytes;
+                now_s + bytes * self.kv_transfer_s_per_byte
+            } else {
+                now_s
+            };
+            if !f.started {
+                f.started = true;
+                f.first_token_s = t;
+                self.ttft_ms.push((t - f.arrival_s).max(0.0) * 1e3);
+            }
+            if f.remaining_out == 0 {
+                self.kv_tokens_held -= f.kv_tokens;
+                self.retire(f, t);
+            } else if t > now_s {
+                // KV still in flight to the decode pool: hold the sequence
+                // out of decode until the transfer lands.
+                f.ready_s = t;
+                self.loc.insert(f.id, Loc::Transferring);
+                self.transferring.push(f);
+            } else {
+                let k = f.key();
+                self.loc.insert(f.id, Loc::Active(k));
+                self.active.insert(k, f);
+            }
+        }
+        fresh_done.clear();
+        self.fresh_done = fresh_done;
+        self.audit_ledger();
+    }
+
+    /// A request reached its EOS / length limit: record its metrics and
+    /// release its KV.
+    fn retire(&mut self, a: Active, now_s: f64) {
+        debug_assert_eq!(
+            a.prompt_landed, a.prompt_tokens,
+            "chunk conservation: first-time chunk tokens must sum to the prompt"
+        );
+        self.completed += 1;
+        self.loc.insert(a.id, Loc::Finished(a.output_tokens));
+        self.e2e_ms.push((now_s - a.arrival_s).max(0.0) * 1e3);
+        self.finished.push(RequestRecord {
+            id: a.id,
+            arrival_s: a.arrival_s,
+            first_token_s: a.first_token_s,
+            finish_s: now_s,
+            prompt_tokens: a.prompt_tokens,
+            output_tokens: a.output_tokens,
+            preemptions: a.preemptions,
+            chunks: a.chunks,
+        });
+    }
+}

@@ -52,6 +52,13 @@ pub fn replay(args: &Args) -> anyhow::Result<()> {
     // it outright; `--max-batch-tokens` caps per-iteration admission.
     cfg.kv_frac = args.f64("kv-frac", 1.0);
     cfg.max_batch_tokens = args.usize("max-batch-tokens", 0);
+    // Intra-run sharding: `--shard-threads N` fans per-pool iterations and
+    // per-layer load finishing across N workers (1 = the exact sequential
+    // path, bit-for-bit). `--no-records` streams retired requests into
+    // O(1) sketches instead of per-request vectors, so multi-hour traces
+    // hold O(in-flight) memory.
+    cfg.shard_threads = args.usize("shard-threads", 1).max(1);
+    cfg.stream_records = args.flag("no-records");
     if args.opts.contains_key("kv-budget-gb") {
         cfg.kv_budget_override_gb = Some(args.f64("kv-budget-gb", 0.0));
     }
@@ -98,6 +105,7 @@ pub fn replay(args: &Args) -> anyhow::Result<()> {
         mm.seed = cfg.seed;
         mm.driver = cfg.driver;
         mm.locality = !args.flag("oblivious");
+        mm.shard_threads = cfg.shard_threads;
         let report = crate::sim::multimodel::run_multimodel(&mm);
         println!("{}", report.summary_line());
         println!("{}", report.request_slo_line(&mm.slo));

@@ -32,7 +32,8 @@ use crate::config::{ClusterSpec, DatasetSpec, DisaggSpec, ModelSpec, MoelessPara
 use crate::engine::Policy;
 use crate::metrics::RunReport;
 use crate::router::{BatchLimits, Batcher, IterationBatch};
-use crate::workload::{RoutingModel, Scenario, TraceRequest};
+use crate::util::threadpool;
+use crate::workload::{routing, RoutingModel, Scenario, TraceRequest};
 
 /// Which clock driver advances a run. Both produce bit-for-bit identical
 /// reports (pinned by `tests/event_equivalence.rs`); they differ only in
@@ -109,6 +110,19 @@ pub struct SimConfig {
     /// Clock driver ([`DriverKind::Event`] unless a test or the CLI's
     /// `--driver lockstep` pins the frozen baseline).
     pub driver: DriverKind,
+    /// Intra-run parallelism (`--shard-threads N`): with `N > 1` the
+    /// disaggregated prefill/decode pools run their layer loops on two
+    /// scoped threads and per-layer load normalization fans out across
+    /// `N` workers, with RNG draws kept strictly sequential and a
+    /// deterministic ordered merge — bit-for-bit identical to `1`, the
+    /// exact sequential path (pinned by `tests/event_equivalence.rs`).
+    pub shard_threads: usize,
+    /// Streaming-records mode (`--no-records`): the batcher folds retired
+    /// requests into O(1) quantile sketches instead of growing
+    /// `ttft_ms`/`e2e_ms`/`requests`, so a 10⁶-request run holds
+    /// O(in-flight) request state. Scalars and sketches stay
+    /// bit-identical to full-records mode.
+    pub stream_records: bool,
 }
 
 impl SimConfig {
@@ -133,6 +147,8 @@ impl SimConfig {
             prefill_chunk_tokens: 0,
             disagg: None,
             driver: DriverKind::Event,
+            shard_threads: 1,
+            stream_records: false,
         }
     }
 
@@ -196,14 +212,40 @@ impl Pool {
         report: &mut RunReport,
     ) -> (f64, f64, f64) {
         routing.layer_loads_into(layer, tokens, &mut self.loads);
+        let loads = std::mem::take(&mut self.loads);
+        let (fwd, replicas, acc, cost_gb_s, cold_starts) =
+            self.run_layer_preloaded(layer, &loads, clock);
+        self.loads = loads;
+        // Serverless expert cost is reported as 0.0 for serverful policies,
+        // and `x + 0.0 == x` bitwise for the non-negative accumulator — the
+        // unconditional add matches the old serverless-gated one exactly.
+        report.cost_gb_s += cost_gb_s;
+        report.cold_starts += cold_starts;
+        (fwd, replicas, acc)
+    }
+
+    /// [`run_layer`](Pool::run_layer) with the routing loads already drawn
+    /// and finished: touches only pool-local state (policy, cluster, cost
+    /// model), so the disaggregated pools can run their layer loops on two
+    /// scoped threads. Returns `(forward ms, replicas, prediction
+    /// accuracy, serverless expert cost GB·s, cold starts)`; the caller
+    /// merges the last two into the report in the sequential order.
+    fn run_layer_preloaded(
+        &mut self,
+        layer: usize,
+        loads: &[f64],
+        clock: f64,
+    ) -> (f64, f64, f64, f64, u64) {
         self.cluster.reset_loads();
-        let out = self.policy.run_layer(layer, &self.loads, &mut self.cluster, &self.cm, clock);
-        if self.policy.resident_model_mem_gb(&self.cm).is_none() {
+        let out = self.policy.run_layer(layer, loads, &mut self.cluster, &self.cm, clock);
+        let cost_gb_s = if self.policy.resident_model_mem_gb(&self.cm).is_none() {
             // Serverless: pay per active instance per layer forward.
-            report.cost_gb_s += out.cost.expert_cost_gb_s();
-        }
-        report.cold_starts += out.cold_starts as u64;
-        (out.cost.forward_ms(), out.replicas as f64, out.pred_accuracy)
+            out.cost.expert_cost_gb_s()
+        } else {
+            0.0
+        };
+        let cold_starts = out.cold_starts as u64;
+        (out.cost.forward_ms(), out.replicas as f64, out.pred_accuracy, cost_gb_s, cold_starts)
     }
 
     /// Serverful residency + misc memory billed over the iteration wall
@@ -338,6 +380,12 @@ struct SimState<'a> {
     /// iteration path (cleared per iteration, never reallocated).
     pre_layers: Vec<f64>,
     dec_layers: Vec<f64>,
+    /// Sharded-mode per-layer load buffers (one per pool): draws land here
+    /// sequentially, the pure normalization finishes on worker threads,
+    /// and the pool layer loops consume them read-only. Inner vectors are
+    /// reused across iterations. Empty when `shard_threads == 1`.
+    pre_loads: Vec<Vec<f64>>,
+    dec_loads: Vec<Vec<f64>>,
 }
 
 impl<'a> SimState<'a> {
@@ -368,6 +416,9 @@ impl<'a> SimState<'a> {
         if let Some(d) = cfg.disagg {
             batcher = batcher.with_transfer_link(d.link_gbps);
         }
+        if cfg.stream_records {
+            batcher = batcher.with_streaming_records();
+        }
         batcher.enqueue(trace);
 
         let report = RunReport {
@@ -394,6 +445,147 @@ impl<'a> SimState<'a> {
             last_clock: 0.0,
             pre_layers: Vec::with_capacity(cfg.model.n_layers),
             dec_layers: Vec::with_capacity(cfg.model.n_layers),
+            pre_loads: Vec::new(),
+            dec_loads: Vec::new(),
+        }
+    }
+
+    /// Sharded-mode load precompute: consume the shared routing RNG in
+    /// exactly the fused sequential order (per layer: prefill pool first,
+    /// then decode pool), then run the pure normalization+rounding finish
+    /// across `shard_threads` workers. After this, every
+    /// `pre_loads[l]`/`dec_loads[l]` holds bit-identical loads to what the
+    /// sequential path's `run_layer` would have drawn at that point.
+    fn draw_loads_sharded(&mut self, pre_tokens: usize, dec_tokens: usize) {
+        let n_layers = self.cfg.model.n_layers;
+        self.pre_loads.resize_with(n_layers, Vec::new);
+        self.dec_loads.resize_with(n_layers, Vec::new);
+        for layer in 0..n_layers {
+            if pre_tokens > 0 {
+                self.routing.draw_layer_noise(layer, &mut self.pre_loads[layer]);
+            }
+            if dec_tokens > 0 {
+                self.routing.draw_layer_noise(layer, &mut self.dec_loads[layer]);
+            }
+        }
+        let top_k = self.routing.top_k as f64;
+        let pre_routed = pre_tokens as f64 * top_k;
+        let dec_routed = dec_tokens as f64 * top_k;
+        let mut jobs: Vec<(&mut Vec<f64>, f64)> = Vec::with_capacity(2 * n_layers);
+        if pre_tokens > 0 {
+            jobs.extend(self.pre_loads.iter_mut().map(|b| (b, pre_routed)));
+        }
+        if dec_tokens > 0 {
+            jobs.extend(self.dec_loads.iter_mut().map(|b| (b, dec_routed)));
+        }
+        threadpool::scoped_map_mut(&mut jobs, self.cfg.shard_threads, |_, (buf, n_routed)| {
+            // Worker-local rounding scratch: `finish_layer_loads` clears it
+            // before use, so a fresh one is arithmetic-identical to the
+            // sequential path's reused scratch.
+            let mut rema = Vec::with_capacity(buf.len());
+            routing::finish_layer_loads(buf, *n_routed, &mut rema);
+        });
+    }
+
+    /// The `--shard-threads N>1` iteration body: same work as the
+    /// sequential arm of [`run_iteration_engine`], with the disaggregated
+    /// pools' layer loops on two scoped threads and the load finish fanned
+    /// out. Every floating-point accumulation into the report replays the
+    /// sequential add order, so the outputs are bit-for-bit identical
+    /// (pinned by `tests/event_equivalence.rs`).
+    fn run_iteration_sharded(&mut self, iter: &IterationBatch) -> (f64, f64, f64) {
+        let n_layers = self.cfg.model.n_layers;
+        let clock = self.clock;
+        if self.decode_pool.is_some() {
+            let (pre_tokens, dec_tokens) = (iter.prefill_tokens, iter.decode_seqs);
+            self.draw_loads_sharded(pre_tokens, dec_tokens);
+            let pre_loads = &self.pre_loads;
+            let dec_loads = &self.dec_loads;
+            let main = &mut self.main_pool;
+            let dec = crate::util::fail::expect_invariant(
+                self.decode_pool.as_mut(),
+                "disagg pool presence just checked",
+            );
+            let (pre_out, dec_out) = threadpool::join2(
+                move || {
+                    (0..n_layers)
+                        .map(|l| {
+                            (pre_tokens > 0).then(|| {
+                                main.run_layer_preloaded(l, &pre_loads[l], clock)
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                },
+                move || {
+                    (0..n_layers)
+                        .map(|l| {
+                            (dec_tokens > 0).then(|| {
+                                dec.run_layer_preloaded(l, &dec_loads[l], clock)
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                },
+            );
+            // Deterministic ordered merge: fold each pool's buffered
+            // outputs into the report in exactly the sequential
+            // interleave (per layer: prefill cost/cold-starts, decode
+            // cost/cold-starts, then the cluster-wide gauges).
+            let mut pre_ms = 0.0f64;
+            let mut dec_ms = 0.0f64;
+            self.pre_layers.clear();
+            self.dec_layers.clear();
+            for layer in 0..n_layers {
+                let pre = pre_out[layer];
+                let dco = dec_out[layer];
+                if let Some((_, _, _, cost, colds)) = pre {
+                    self.report.cost_gb_s += cost;
+                    self.report.cold_starts += colds;
+                }
+                if let Some((_, _, _, cost, colds)) = dco {
+                    self.report.cost_gb_s += cost;
+                    self.report.cold_starts += colds;
+                }
+                let (pf, pr, pa) = pre.map(|(f, r, a, _, _)| (f, r, a)).unwrap_or((0.0, 0.0, 0.0));
+                let (df, dr, da) = dco.map(|(f, r, a, _, _)| (f, r, a)).unwrap_or((0.0, 0.0, 0.0));
+                pre_ms += pf;
+                dec_ms += df;
+                self.pre_layers.push(pf);
+                self.dec_layers.push(df);
+                self.report.replicas_per_layer.add(pr + dr);
+                let pools_ran = usize::from(pre.is_some()) + usize::from(dco.is_some());
+                self.report.pred_accuracy.add((pa + da) / pools_ran.max(1) as f64);
+            }
+            for &fwd in if pre_ms >= dec_ms { &self.pre_layers } else { &self.dec_layers } {
+                self.report.layer_forward.add(fwd);
+            }
+            let iter_ms = pre_ms.max(dec_ms);
+            self.main_pool.busy_s += pre_ms / 1e3;
+            if let Some(dec) = self.decode_pool.as_mut() {
+                dec.busy_s += dec_ms / 1e3;
+            }
+            self.main_pool.bill_resident(iter_ms, &mut self.report);
+            if let Some(dec) = self.decode_pool.as_ref() {
+                dec.bill_resident(iter_ms, &mut self.report);
+            }
+            (pre_ms, dec_ms, iter_ms)
+        } else {
+            // Colocated: one pool, so only the per-layer load finish fans
+            // out; the pool's layer loop replays the sequential order.
+            self.draw_loads_sharded(iter.total_tokens(), 0);
+            let mut iter_ms = 0.0f64;
+            for layer in 0..n_layers {
+                let (fwd, replicas, acc, cost, colds) =
+                    self.main_pool.run_layer_preloaded(layer, &self.pre_loads[layer], clock);
+                self.report.cost_gb_s += cost;
+                self.report.cold_starts += colds;
+                iter_ms += fwd;
+                self.report.layer_forward.add(fwd);
+                self.report.replicas_per_layer.add(replicas);
+                self.report.pred_accuracy.add(acc);
+            }
+            self.main_pool.busy_s += iter_ms / 1e3;
+            self.main_pool.bill_resident(iter_ms, &mut self.report);
+            (iter_ms, 0.0, iter_ms)
         }
     }
 
@@ -408,6 +600,10 @@ impl<'a> SimState<'a> {
         // Popularity drifts with virtual time.
         self.routing.step(self.clock - self.last_clock);
         self.last_clock = self.clock;
+
+        if cfg.shard_threads > 1 {
+            return self.run_iteration_sharded(iter);
+        }
 
         if let Some(dec) = self.decode_pool.as_mut() {
             // Disaggregated: the prefill pool chews the prompt chunks while
@@ -572,6 +768,10 @@ impl<'a> SimState<'a> {
         self.report.ttft_ms = std::mem::take(&mut self.batcher.ttft_ms);
         self.report.e2e_ms = std::mem::take(&mut self.batcher.e2e_ms);
         self.report.requests = std::mem::take(&mut self.batcher.finished);
+        // The O(1) latency sketches are maintained in both records modes
+        // (and are all that survives streaming-records mode).
+        self.report.ttft_sketch = std::mem::take(&mut self.batcher.ttft_sketch);
+        self.report.e2e_sketch = std::mem::take(&mut self.batcher.e2e_sketch);
         self.report.sim_duration_s = clock;
         self.report.wall_s = self.wall_start.elapsed().as_secs_f64();
         self.report
@@ -1010,6 +1210,66 @@ mod tests {
         let again = run(&cfg);
         assert_eq!(r.requests, again.requests);
         assert!((r.kv_transfer_gb - again.kv_transfer_gb).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_threads_match_sequential_bitwise() {
+        use crate::config::DisaggSpec;
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.duration_s = 15.0;
+        cfg.base_rps = 3.0;
+        cfg.seed = 11;
+        cfg.prefill_chunk_tokens = 256;
+        cfg.disagg = Some(DisaggSpec::even_split(&cfg.cluster));
+        let seq = run(&cfg);
+        cfg.shard_threads = 3;
+        let par = run(&cfg);
+        // Same RNG draw order, ordered merge: bit-for-bit identical.
+        assert_eq!(seq.requests, par.requests);
+        assert_eq!(seq.cost_gb_s.to_bits(), par.cost_gb_s.to_bits());
+        assert_eq!(seq.dollar_cost.to_bits(), par.dollar_cost.to_bits());
+        assert_eq!(seq.sim_duration_s.to_bits(), par.sim_duration_s.to_bits());
+        assert_eq!(seq.layer_forward, par.layer_forward);
+        assert_eq!(seq.cold_starts, par.cold_starts);
+        // Colocated sharding (load-finish fan-out only) is covered too.
+        cfg.disagg = None;
+        cfg.shard_threads = 1;
+        let seq_co = run(&cfg);
+        cfg.shard_threads = 4;
+        let par_co = run(&cfg);
+        assert_eq!(seq_co.requests, par_co.requests);
+        assert_eq!(seq_co.cost_gb_s.to_bits(), par_co.cost_gb_s.to_bits());
+        assert_eq!(seq_co.layer_forward, par_co.layer_forward);
+    }
+
+    #[test]
+    fn streaming_records_drops_vectors_keeps_sketches() {
+        let mut cfg = SimConfig::new(
+            ModelSpec::mixtral_8x7b(),
+            DatasetSpec::lmsys(),
+            PolicyKind::Moeless,
+        );
+        cfg.duration_s = 15.0;
+        cfg.base_rps = 3.0;
+        cfg.seed = 11;
+        let full = run(&cfg);
+        cfg.stream_records = true;
+        let lean = run(&cfg);
+        assert!(lean.requests.is_empty() && lean.ttft_ms.is_empty() && lean.e2e_ms.is_empty());
+        assert!(!full.requests.is_empty());
+        // Scalars and both sketches are bit-identical across modes.
+        assert_eq!(lean.completed_requests, full.completed_requests);
+        assert_eq!(lean.iterations, full.iterations);
+        assert_eq!(lean.cost_gb_s.to_bits(), full.cost_gb_s.to_bits());
+        assert_eq!(lean.ttft_sketch, full.ttft_sketch);
+        assert_eq!(lean.e2e_sketch, full.e2e_sketch);
+        assert_eq!(full.ttft_sketch.len(), full.ttft_ms.len());
+        // And the report itself is lighter without the per-request state.
+        assert!(lean.approx_bytes() < full.approx_bytes());
     }
 
     #[test]

@@ -67,6 +67,11 @@ pub struct MmConfig {
     pub locality: bool,
     pub slo: SloSpec,
     pub driver: DriverKind,
+    /// Intra-run parallelism (`--shard-threads N`): with `N > 1` the
+    /// per-GPU placement evaluation at each arrival (wait + cold-start
+    /// cost per device — pure reads) fans out across workers with an
+    /// order-preserving merge; `1` is the exact sequential path.
+    pub shard_threads: usize,
 }
 
 impl MmConfig {
@@ -82,6 +87,7 @@ impl MmConfig {
             locality: true,
             slo: SloSpec::default(),
             driver: DriverKind::Event,
+            shard_threads: 1,
         }
     }
 }
@@ -137,6 +143,9 @@ struct MmSim<'a> {
     clock: f64,
     wait_scratch: Vec<f64>,
     load_scratch: Vec<f64>,
+    /// Device indices 0..n, built once — the sharded placement
+    /// evaluation's work list (`scoped_map` chunks it across workers).
+    gpu_idx: Vec<usize>,
 }
 
 impl<'a> MmSim<'a> {
@@ -194,6 +203,7 @@ impl<'a> MmSim<'a> {
             clock: 0.0,
             wait_scratch: Vec::with_capacity(n_gpus),
             load_scratch: Vec::with_capacity(n_gpus),
+            gpu_idx: (0..n_gpus).collect(),
         }
     }
 
@@ -217,10 +227,28 @@ impl<'a> MmSim<'a> {
         let gb = self.model_gb[m];
         self.wait_scratch.clear();
         self.load_scratch.clear();
-        for g in 0..self.gpu_free_s.len() {
-            self.wait_scratch.push((self.gpu_free_s[g] - t).max(0.0));
-            let tier = self.warm.tier_for(g, mm.model);
-            self.load_scratch.push(cold_start_s(gb, tier, &self.cfg.cluster.gpus[g]));
+        if self.cfg.shard_threads > 1 {
+            // Per-device serving evaluation is pure reads (FIFO ledger,
+            // warm tiers, device specs): fan it across workers and merge
+            // in device order — value-identical to the sequential loop.
+            let gpu_free_s = &self.gpu_free_s;
+            let warm = &self.warm;
+            let gpus = &self.cfg.cluster.gpus;
+            let pairs =
+                crate::util::threadpool::scoped_map(&self.gpu_idx, self.cfg.shard_threads, |&g| {
+                    let tier = warm.tier_for(g, mm.model);
+                    ((gpu_free_s[g] - t).max(0.0), cold_start_s(gb, tier, &gpus[g]))
+                });
+            for (wait, load) in pairs {
+                self.wait_scratch.push(wait);
+                self.load_scratch.push(load);
+            }
+        } else {
+            for g in 0..self.gpu_free_s.len() {
+                self.wait_scratch.push((self.gpu_free_s[g] - t).max(0.0));
+                let tier = self.warm.tier_for(g, mm.model);
+                self.load_scratch.push(cold_start_s(gb, tier, &self.cfg.cluster.gpus[g]));
+            }
         }
         let placed = self.placer.place_model_instance(
             &self.wait_scratch,
@@ -355,6 +383,7 @@ pub fn run_multimodel(cfg: &MmConfig) -> RunReport {
         sc.base_rps = cfg.base_rps;
         sc.seed = cfg.seed;
         sc.driver = cfg.driver;
+        sc.shard_threads = cfg.shard_threads;
         let mut report = super::run(&sc);
         report.per_model.push(ModelLane {
             model: entry.model.name.clone(),
@@ -517,6 +546,19 @@ mod tests {
         assert_eq!(ev.sim_duration_s.to_bits(), ls.sim_duration_s.to_bits());
         assert_eq!(ev.driver, "event");
         assert_eq!(ls.driver, "lockstep");
+    }
+
+    #[test]
+    fn sharded_placement_evaluation_is_bit_identical() {
+        let mut cfg = quick_cfg(6);
+        let seq = run_multimodel(&cfg);
+        cfg.shard_threads = 3;
+        let par = run_multimodel(&cfg);
+        assert_eq!(seq.requests, par.requests);
+        assert_eq!(seq.per_model, par.per_model);
+        assert_eq!(seq.cold_starts, par.cold_starts);
+        assert_eq!(seq.dollar_cost.to_bits(), par.dollar_cost.to_bits());
+        assert_eq!(seq.sim_duration_s.to_bits(), par.sim_duration_s.to_bits());
     }
 
     #[test]

@@ -41,6 +41,16 @@ pub struct SweepSpec {
     pub prefill_chunk_tokens: usize,
     /// Prefill/decode disaggregation forwarded to every cell.
     pub disagg: Option<DisaggSpec>,
+    /// Intra-run worker threads forwarded to every cell
+    /// ([`SimConfig::shard_threads`]). The sweep's outer width is clamped
+    /// by [`outer_threads`] so sweep shards × intra-run threads never
+    /// oversubscribe the host.
+    pub shard_threads: usize,
+    /// Streaming-records mode forwarded to every cell
+    /// ([`SimConfig::stream_records`]): per-request vectors are folded
+    /// into O(1) sketches, keeping long sweep cells at O(in-flight)
+    /// memory.
+    pub stream_records: bool,
 }
 
 impl SweepSpec {
@@ -59,6 +69,8 @@ impl SweepSpec {
             max_batch_tokens: 0,
             prefill_chunk_tokens: 0,
             disagg: None,
+            shard_threads: 1,
+            stream_records: false,
         }
     }
 
@@ -88,8 +100,21 @@ impl SweepSpec {
         cfg.max_batch_tokens = self.max_batch_tokens;
         cfg.prefill_chunk_tokens = self.prefill_chunk_tokens;
         cfg.disagg = self.disagg;
+        cfg.shard_threads = self.shard_threads.max(1);
+        cfg.stream_records = self.stream_records;
         cfg
     }
+}
+
+/// Effective outer sweep width once intra-run sharding nests inside it:
+/// the product `outer × shard_threads` is clamped against the host's
+/// `available_parallelism` (each sweep worker spawns `shard_threads`
+/// threads of its own), never below 1 and never above the requested
+/// width. With `shard_threads <= 1` this is the plain `threads.max(1)`
+/// the sweep always used.
+pub fn outer_threads(threads: usize, shard_threads: usize) -> usize {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    threads.max(1).min((host / shard_threads.max(1)).max(1))
 }
 
 /// One completed sweep cell.
@@ -131,7 +156,7 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepCell> {
             }
         }
     }
-    let reports = scoped_map(&jobs, spec.threads.max(1), |job| {
+    let reports = scoped_map(&jobs, outer_threads(spec.threads, spec.shard_threads), |job| {
         let (policy, si, seed) = *job;
         let cfg = spec.config_for(policy, seed);
         run_with_trace(&cfg, traces[&(si, seed)].as_slice())
@@ -167,6 +192,10 @@ pub struct MmSweepSpec {
     pub base_rps: f64,
     /// Worker threads the runs are sharded across (1 = sequential).
     pub threads: usize,
+    /// Intra-run worker threads forwarded to every cell
+    /// ([`MmConfig::shard_threads`](crate::sim::multimodel::MmConfig));
+    /// clamped against the outer width like [`SweepSpec::shard_threads`].
+    pub shard_threads: usize,
 }
 
 impl MmSweepSpec {
@@ -182,6 +211,7 @@ impl MmSweepSpec {
             duration_s: 30.0,
             base_rps: 6.0,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            shard_threads: 1,
         }
     }
 
@@ -215,7 +245,7 @@ pub fn run_multimodel_sweep(spec: &MmSweepSpec) -> Vec<MmSweepCell> {
     use crate::sim::multimodel::{run_multimodel, MmConfig};
     use crate::workload::ModelCatalog;
     let jobs = spec.cells();
-    let reports = scoped_map(&jobs, spec.threads.max(1), |job| {
+    let reports = scoped_map(&jobs, outer_threads(spec.threads, spec.shard_threads), |job| {
         let (n, locality, seed) = *job;
         let mut cfg =
             MmConfig::new(ModelCatalog::zipf(n, spec.skew, seed), spec.dataset.clone());
@@ -225,6 +255,7 @@ pub fn run_multimodel_sweep(spec: &MmSweepSpec) -> Vec<MmSweepCell> {
         cfg.base_rps = spec.base_rps;
         cfg.seed = seed;
         cfg.locality = locality;
+        cfg.shard_threads = spec.shard_threads.max(1);
         run_multimodel(&cfg)
     });
     jobs.into_iter()
@@ -539,6 +570,48 @@ mod tests {
             assert_eq!(c.report.per_model.len(), c.n_models);
             let expected = if c.locality { "mm-locality" } else { "mm-oblivious" };
             assert_eq!(c.report.policy, expected);
+        }
+    }
+
+    #[test]
+    fn shard_and_streaming_knobs_forward_into_cells() {
+        // Nested parallelism must not change any cell: a sweep whose cells
+        // each shard across 2 intra-run workers, with streaming records
+        // on, produces the same scalar outcomes as the plain sweep — only
+        // the per-request vectors are folded away.
+        let mut spec = small_spec();
+        spec.threads = 2;
+        let plain = run_sweep(&spec);
+        let mut lean_spec = small_spec();
+        lean_spec.threads = 2;
+        lean_spec.shard_threads = 2;
+        lean_spec.stream_records = true;
+        let lean = run_sweep(&lean_spec);
+        assert_eq!(plain.len(), lean.len());
+        for (a, b) in plain.iter().zip(&lean) {
+            assert_eq!((a.scenario.as_str(), a.seed), (b.scenario.as_str(), b.seed));
+            assert_eq!(a.report.completed_requests, b.report.completed_requests);
+            assert_eq!(a.report.layer_forward, b.report.layer_forward);
+            assert_eq!(a.report.cost_gb_s.to_bits(), b.report.cost_gb_s.to_bits());
+            assert!(b.report.requests.is_empty(), "streaming cells drop request records");
+            assert!(!a.report.requests.is_empty());
+            assert_eq!(a.report.ttft_sketch.len(), b.report.ttft_sketch.len());
+        }
+    }
+
+    #[test]
+    fn outer_threads_clamps_nested_parallelism() {
+        let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        // No intra-run sharding: the requested width passes through (up
+        // to the host's own core count).
+        assert_eq!(outer_threads(3, 1), 3.min(host));
+        assert_eq!(outer_threads(0, 0), 1, "degenerate requests clamp to 1");
+        // Oversubscription guard: outer x shard never exceeds the host
+        // (unless that would force outer below 1).
+        for shard in [1usize, 2, 3, host, host + 5] {
+            let outer = outer_threads(host * 4, shard);
+            assert!(outer >= 1);
+            assert!(outer * shard <= host.max(shard), "outer={outer} shard={shard} host={host}");
         }
     }
 

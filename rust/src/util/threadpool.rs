@@ -126,6 +126,55 @@ pub fn scoped_map<T: Sync, R: Send>(
     out.into_iter().map(|o| fail::expect_invariant(o, "scoped_map slot filled")).collect()
 }
 
+/// In-place parallel map: applies `f(index, &mut item)` to every element,
+/// chunked across `threads` scoped workers, order and placement untouched.
+/// The intra-run sharding primitive for pure "finish" passes over
+/// pre-drawn state (e.g. normalizing per-layer expert loads after the RNG
+/// draws happened sequentially): each element is visited exactly once by
+/// exactly one worker, so with a pure `f` the result is bit-identical to
+/// the sequential loop.
+pub fn scoped_map_mut<T: Send>(items: &mut [T], threads: usize, f: impl Fn(usize, &mut T) + Sync) {
+    if items.is_empty() {
+        return;
+    }
+    let threads = threads.clamp(1, items.len());
+    if threads == 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = items.len().div_ceil(threads);
+    thread::scope(|s| {
+        for (c, slice) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (i, item) in slice.iter_mut().enumerate() {
+                    f(c * chunk + i, item);
+                }
+            });
+        }
+    });
+}
+
+/// Run two independent closures on two scoped threads and return both
+/// results — the disaggregated prefill/decode pool fan-out (each pool's
+/// iteration reads disjoint state; the caller merges their outputs in the
+/// sequential order afterwards).
+pub fn join2<A: Send, B: Send>(
+    fa: impl FnOnce() -> A + Send,
+    fb: impl FnOnce() -> B + Send,
+) -> (A, B) {
+    thread::scope(|s| {
+        let hb = s.spawn(fb);
+        let a = fa();
+        let b = hb
+            .join()
+            .unwrap_or_else(|_| fail::unrecoverable("join2: second branch panicked"));
+        (a, b)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +209,30 @@ mod tests {
         assert_eq!(scoped_map(&[5u32], 8, |x| x + 1), vec![6]);
         let empty: Vec<u32> = vec![];
         assert!(scoped_map(&empty, 4, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn scoped_map_mut_matches_sequential() {
+        let mut par: Vec<f64> = (0..103).map(|i| i as f64 * 0.37).collect();
+        let mut seq = par.clone();
+        let finish = |i: usize, x: &mut f64| *x = (*x * 1.5 + i as f64).sqrt();
+        scoped_map_mut(&mut par, 4, finish);
+        for (i, x) in seq.iter_mut().enumerate() {
+            finish(i, x);
+        }
+        // Pure per-element work: the parallel pass is bit-identical.
+        for (a, b) in par.iter().zip(seq.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut empty: Vec<f64> = vec![];
+        scoped_map_mut(&mut empty, 4, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn join2_returns_both_branches() {
+        let xs: Vec<u64> = (0..100).collect();
+        let (a, b) = join2(|| xs.iter().sum::<u64>(), || xs.len());
+        assert_eq!((a, b), (4950, 100));
     }
 
     #[test]

@@ -81,17 +81,22 @@ impl RoutingModel {
     /// RNG consumption) to `layer_loads`, so results are bit-for-bit the
     /// same.
     pub fn layer_loads_into(&mut self, layer: usize, n_tokens: f64, out: &mut Vec<f64>) {
-        let n_routed = n_tokens * self.top_k as f64;
+        self.draw_layer_noise(layer, out);
+        finish_layer_loads(out, n_tokens * self.top_k as f64, &mut self.rema);
+    }
+
+    /// RNG phase of [`layer_loads_into`](RoutingModel::layer_loads_into):
+    /// fills `out` (cleared first) with popularity × batch noise — one
+    /// lognormal draw per expert, consumed in expert order. Split out so
+    /// intra-run sharding can keep the draw sequence strictly sequential
+    /// (RNG order is part of the deterministic contract) while the pure
+    /// [`finish_layer_loads`] normalization runs on worker threads.
+    pub fn draw_layer_noise(&mut self, layer: usize, out: &mut Vec<f64>) {
         out.clear();
-        // Batch-level multiplicative noise, renormalized; then integer-ish
-        // loads by largest-remainder rounding to keep the total exact.
         let pop = &self.pops[layer];
         let rng = &mut self.rng;
         let sigma = self.batch_sigma;
         out.extend(pop.iter().map(|&p| p * rng.lognormal(0.0, sigma)));
-        let total: f64 = out.iter().sum();
-        out.iter_mut().for_each(|x| *x = *x / total * n_routed);
-        round_preserving_sum(out, &mut self.rema);
     }
 
     /// Loads for every layer of an iteration.
@@ -113,6 +118,17 @@ impl RoutingModel {
     pub fn popularity(&self, layer: usize) -> &[f64] {
         &self.pops[layer]
     }
+}
+
+/// Pure finish of a drawn layer: renormalize the noisy weights to
+/// `n_routed` total tokens and round with largest remainders. No RNG, no
+/// `RoutingModel` state beyond the caller's rounding scratch — safe to run
+/// on any thread; composed with [`RoutingModel::draw_layer_noise`] it is
+/// arithmetic-identical to [`RoutingModel::layer_loads_into`].
+pub fn finish_layer_loads(w: &mut [f64], n_routed: f64, rema: &mut Vec<(usize, f64)>) {
+    let total: f64 = w.iter().sum();
+    w.iter_mut().for_each(|x| *x = *x / total * n_routed);
+    round_preserving_sum(w, rema);
 }
 
 /// Round entries to integers while preserving the (integral) total —
@@ -227,6 +243,31 @@ mod tests {
             b.layer_loads_into(layer, tokens, &mut buf);
             assert_eq!(via_alloc, buf, "layer={layer} tokens={tokens}");
         }
+    }
+
+    #[test]
+    fn draw_then_finish_matches_fused_path() {
+        // The sharded path draws noise sequentially and finishes on worker
+        // threads with private scratch; composed, it must be bit-identical
+        // to the fused `layer_loads_into`.
+        let mut fused = RoutingModel::new(&model(), 13);
+        let mut split = RoutingModel::new(&model(), 13);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let mut scratch = Vec::new();
+        for (layer, tokens) in [(0usize, 50.0), (5, 700.0), (2, 1.0)] {
+            fused.layer_loads_into(layer, tokens, &mut a);
+            let n_routed = tokens * split.top_k as f64;
+            split.draw_layer_noise(layer, &mut b);
+            finish_layer_loads(&mut b, n_routed, &mut scratch);
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "layer={layer} tokens={tokens}"
+            );
+        }
+        // And the two models' RNG streams stay in lockstep afterwards.
+        assert_eq!(fused.layer_loads(1, 10.0), split.layer_loads(1, 10.0));
     }
 
     #[test]

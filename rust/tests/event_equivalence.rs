@@ -10,6 +10,13 @@
 //! disaggregated shapes (plus the `max_iterations` cap and a randomized
 //! differential sweep) and asserts full-report equality.
 //!
+//! PR 9 adds a second equivalence axis on the same reports: intra-run
+//! sharding (`shard_threads > 1`) fans the disaggregated pools and the
+//! per-layer load finishing across scoped workers, with RNG draws kept
+//! sequential and pool outputs merged in the sequential order — so a
+//! sharded run must be bit-identical to the `shard_threads = 1` run, for
+//! every shape and thread count (the `sharded_*` tests below).
+//!
 //! Why bit-for-bit is achievable and not merely approximate: the event
 //! driver commits an iteration at `clock + pre_ms.max(dec_ms) / 1e3` by
 //! popping the later of two per-pool completion events pushed at
@@ -48,6 +55,13 @@ fn run_both(cfg: &SimConfig) -> (RunReport, RunReport) {
 fn assert_bit_identical(label: &str, ev: &RunReport, lock: &RunReport) {
     assert_eq!(ev.driver, "event", "{label}");
     assert_eq!(lock.driver, "lockstep", "{label}");
+    assert_outcomes_bit_identical(label, ev, lock);
+}
+
+/// The driver-agnostic core of [`assert_bit_identical`]: every outcome
+/// field bit-equal (also used by the PR-9 sharded-vs-sequential leg,
+/// where both reports come from the same driver).
+fn assert_outcomes_bit_identical(label: &str, ev: &RunReport, lock: &RunReport) {
     // Per-request records carry every TTFT/TPOT/e2e timestamp: this is
     // the strongest single assertion.
     assert_eq!(ev.requests, lock.requests, "{label}: per-request records diverged");
@@ -283,6 +297,107 @@ fn randomized_multimodel_differential_event_matches_lockstep() {
         }
         let (ev, lock) = run_mm_both(&cfg);
         assert_mm_bit_identical("multimodel-randomized", &ev, &lock);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Intra-run sharding (PR 9): `shard_threads = 1` is the exact sequential
+// path; any other count must reproduce it bit for bit.
+// ---------------------------------------------------------------------------
+
+/// Run one configuration sharded across `threads` workers and
+/// sequentially; returns (sharded, sequential).
+fn run_sharded_both(cfg: &SimConfig, threads: usize) -> (RunReport, RunReport) {
+    let mut sh_cfg = cfg.clone();
+    sh_cfg.shard_threads = threads;
+    let mut seq_cfg = cfg.clone();
+    seq_cfg.shard_threads = 1;
+    (run(&sh_cfg), run(&seq_cfg))
+}
+
+#[test]
+fn sharded_colocated_matches_sequential() {
+    let (sh, seq) = run_sharded_both(&base_cfg(PolicyKind::Moeless), 3);
+    assert!(sh.completed_requests > 0, "sharded-colocated: run must do work");
+    assert_outcomes_bit_identical("sharded-colocated", &sh, &seq);
+}
+
+#[test]
+fn sharded_kv_pressure_matches_sequential() {
+    let mut cfg = base_cfg(PolicyKind::Moeless);
+    cfg.base_rps = 6.0;
+    cfg.kv_budget_override_gb = Some(2.0);
+    let (sh, seq) = run_sharded_both(&cfg, 2);
+    assert!(
+        sh.preemptions > 0 || sh.delayed_admissions > 0,
+        "sharded-kv-pressure: config must create pressure"
+    );
+    assert_outcomes_bit_identical("sharded-kv-pressure", &sh, &seq);
+}
+
+#[test]
+fn sharded_chunked_matches_sequential() {
+    let mut cfg = base_cfg(PolicyKind::Moeless);
+    cfg.prefill_chunk_tokens = 256;
+    let (sh, seq) = run_sharded_both(&cfg, 4);
+    assert!(sh.prefill_chunks > 0, "sharded-chunked: chunks must land");
+    assert_outcomes_bit_identical("sharded-chunked", &sh, &seq);
+}
+
+#[test]
+fn sharded_disaggregated_matches_sequential() {
+    // The join2 fan-out proper: both pools run concurrently, outputs
+    // merged in the sequential interleave order afterwards.
+    let mut cfg = base_cfg(PolicyKind::Moeless);
+    cfg.prefill_chunk_tokens = 128;
+    cfg.kv_budget_override_gb = Some(1.5);
+    cfg.disagg = Some(DisaggSpec { link_gbps: 0.05, ..DisaggSpec::even_split(&cfg.cluster) });
+    for threads in [2usize, 4] {
+        let (sh, seq) = run_sharded_both(&cfg, threads);
+        assert!(sh.kv_transfer_gb > 0.0, "sharded-disagg: handoffs must move KV");
+        assert_outcomes_bit_identical(&format!("sharded-disagg x{threads}"), &sh, &seq);
+    }
+}
+
+#[test]
+fn sharded_multimodel_matches_sequential() {
+    // Per-GPU placement evaluation fans out in `on_arrival`; the scores
+    // land back in GPU order, so placement is thread-count-invariant.
+    let mut sh_cfg = mm_cfg(8, 7);
+    sh_cfg.shard_threads = 3;
+    let sh = run_multimodel(&sh_cfg);
+    let seq = run_multimodel(&mm_cfg(8, 7));
+    assert!(sh.cold_starts > 0, "sharded-multimodel: catalog must cold-start");
+    assert_outcomes_bit_identical("sharded-multimodel", &sh, &seq);
+    assert_eq!(sh.per_model, seq.per_model, "sharded-multimodel: lanes diverged");
+}
+
+#[test]
+fn randomized_sharded_differential_matches_sequential() {
+    // Fixed-seed randomized sweep over policy × load × chunking × KV
+    // budget × disaggregation × thread count: the sharded run must always
+    // be the sequential run, bit for bit.
+    property(20, |g| {
+        let policy =
+            *g.pick(&[PolicyKind::Moeless, PolicyKind::Megatron, PolicyKind::AsyncEp]);
+        let mut cfg = base_cfg(policy);
+        cfg.duration_s = g.f64_in(4.0, 10.0);
+        cfg.base_rps = g.f64_in(1.0, 6.0);
+        cfg.seed = g.usize_in(0, 1000) as u64;
+        cfg.prefill_chunk_tokens = *g.pick(&[0usize, 128, 256]);
+        cfg.driver = *g.pick(&[DriverKind::Event, DriverKind::Lockstep]);
+        if g.bool() {
+            cfg.kv_budget_override_gb = Some(g.f64_in(1.0, 4.0));
+        }
+        if g.bool() {
+            cfg.disagg = Some(DisaggSpec {
+                link_gbps: g.f64_in(0.02, 1.0),
+                ..DisaggSpec::even_split(&cfg.cluster)
+            });
+        }
+        let threads = g.usize_in(2, 5);
+        let (sh, seq) = run_sharded_both(&cfg, threads);
+        assert_outcomes_bit_identical(&format!("sharded-randomized x{threads}"), &sh, &seq);
     });
 }
 

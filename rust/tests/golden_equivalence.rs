@@ -4,10 +4,16 @@
 //! *behavior-preserving*: identical admissions, identical preemption
 //! victims, identical iteration compositions, identical per-request
 //! records — bit for bit — against the pre-PR-4 implementation, which is
-//! kept frozen as `router::reference`. This suite drives both cores in
-//! lockstep over fixed-seed traces for the colocated, chunked and
-//! disaggregated configurations (plus KV-pressure variants and a
-//! randomized differential sweep) and asserts equality at every step.
+//! kept frozen as `router::reference`. PR 9 re-indexed the batcher's
+//! sequence state into a SoA slab arena (`router::arena`) with the PR-4
+//! AoS core frozen verbatim as `router::pr4` — so the suite now drives
+//! **three** cores in lockstep over fixed-seed traces for the colocated,
+//! chunked and disaggregated configurations (plus KV-pressure variants
+//! and a randomized differential sweep) and asserts equality at every
+//! step. Against the reference, per-iteration retirement order is
+//! representation-defined (multiset compare); against the frozen PR-4
+//! core the arena is an exact re-indexing, so every record sequence must
+//! match order included.
 //!
 //! Why this implies RunReport golden equivalence: the simulator's clock
 //! advances only by per-layer forward times of the iteration
@@ -19,7 +25,7 @@
 //! inputs.
 
 use moeless::config::DatasetSpec;
-use moeless::router::{reference, BatchLimits, Batcher};
+use moeless::router::{pr4, reference, BatchLimits, Batcher};
 use moeless::util::quickcheck::property;
 use moeless::workload::{burst_trace, interference_trace, Scenario, TraceRequest};
 
@@ -33,40 +39,52 @@ fn assert_equivalent(
     iter_s: f64,
 ) {
     let mut new_b = Batcher::with_limits(limits);
+    let mut pr4_b = pr4::Batcher::with_limits(limits);
     let mut old_b = reference::Batcher::with_limits(limits);
     if let Some(l) = link_gbps {
         new_b = new_b.with_transfer_link(l);
+        pr4_b = pr4_b.with_transfer_link(l);
         old_b = old_b.with_transfer_link(l);
     }
     new_b.enqueue(trace);
+    pr4_b.enqueue(trace);
     old_b.enqueue(trace);
 
     let mut clock = 0.0f64;
     let mut guard = 0u64;
     loop {
         assert_eq!(new_b.idle(), old_b.idle(), "{label}: idle diverged at t={clock}");
+        assert_eq!(new_b.idle(), pr4_b.idle(), "{label}: idle diverged from pr4 at t={clock}");
         if new_b.idle() {
             break;
         }
         let a = new_b.next_iteration(clock);
+        let p = pr4_b.next_iteration(clock);
         let b = old_b.next_iteration(clock);
         assert_eq!(a, b, "{label}: iteration batch diverged at t={clock}");
+        assert_eq!(a, p, "{label}: iteration batch diverged from pr4 at t={clock}");
         assert_eq!(
             new_b.kv_tokens_in_use(),
             old_b.kv_tokens_in_use(),
             "{label}: KV ledger diverged at t={clock}"
         );
+        assert_eq!(new_b.kv_tokens_in_use(), pr4_b.kv_tokens_in_use(), "{label}: t={clock}");
         assert_eq!(new_b.queue_depth(), old_b.queue_depth(), "{label}: t={clock}");
+        assert_eq!(new_b.queue_depth(), pr4_b.queue_depth(), "{label}: t={clock}");
         assert_eq!(new_b.in_flight(), old_b.in_flight(), "{label}: t={clock}");
+        assert_eq!(new_b.in_flight(), pr4_b.in_flight(), "{label}: t={clock}");
         assert_eq!(new_b.transferring_len(), old_b.transferring_len(), "{label}: t={clock}");
+        assert_eq!(new_b.transferring_len(), pr4_b.transferring_len(), "{label}: t={clock}");
         match a {
             Some(_) => {
                 new_b.complete_iteration(clock + iter_s);
+                pr4_b.complete_iteration(clock + iter_s);
                 old_b.complete_iteration(clock + iter_s);
             }
             None => {
                 let (na, oa) = (new_b.next_arrival(), old_b.next_arrival());
                 assert_eq!(na, oa, "{label}: next_arrival diverged at t={clock}");
+                assert_eq!(na, pr4_b.next_arrival(), "{label}: next_arrival pr4 t={clock}");
                 clock = na.unwrap_or(clock).max(clock);
             }
         }
@@ -74,6 +92,20 @@ fn assert_equivalent(
         guard += 1;
         assert!(guard < 1_000_000, "{label}: drain must terminate");
     }
+
+    // The arena is an exact re-indexing of the frozen PR-4 core: every
+    // counter and every record sequence matches order included.
+    assert_eq!(new_b.admitted, pr4_b.admitted, "{label} vs pr4");
+    assert_eq!(new_b.completed, pr4_b.completed, "{label} vs pr4");
+    assert_eq!(new_b.rejected, pr4_b.rejected, "{label} vs pr4");
+    assert_eq!(new_b.delayed_admissions, pr4_b.delayed_admissions, "{label} vs pr4");
+    assert_eq!(new_b.preemptions, pr4_b.preemptions, "{label} vs pr4");
+    assert_eq!(new_b.resumes, pr4_b.resumes, "{label} vs pr4");
+    assert_eq!(new_b.tokens_recomputed, pr4_b.tokens_recomputed, "{label} vs pr4");
+    assert_eq!(new_b.kv_transfer_bytes, pr4_b.kv_transfer_bytes, "{label} vs pr4");
+    assert_eq!(new_b.ttft_ms, pr4_b.ttft_ms, "{label} vs pr4");
+    assert_eq!(new_b.e2e_ms, pr4_b.e2e_ms, "{label} vs pr4: retirement order");
+    assert_eq!(new_b.finished, pr4_b.finished, "{label} vs pr4: per-request records");
 
     // Terminal counters: exact.
     assert_eq!(new_b.admitted, old_b.admitted, "{label}");

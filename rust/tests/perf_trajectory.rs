@@ -5,16 +5,19 @@
 //! asserts the optimized core wins on the saturated drain, runs the
 //! driver duel (fixed-cadence lockstep stepper vs event/jump driver) on
 //! the 10⁶-request sparse mega drain and asserts the event driver wins
-//! ≥2×, and records the numbers to `BENCH_sim.json`
-//! (`moeless.simperf/v2`) at the repository root — so every tier-1 run
-//! leaves a fresh before/after perf record behind.
+//! ≥2×, runs the PR-9 arena duel (SoA arena vs the frozen PR-4 AoS core)
+//! and asserts the arena wins ≥1.5× on the saturated drain, measures the
+//! sequential-vs-sharded end-to-end duel, and records everything to
+//! `BENCH_sim.json` (`moeless.simperf/v3`) at the repository root — so
+//! every tier-1 run leaves a fresh before/after perf record behind.
 //! `cargo run --release -- bench --exp simperf` produces the release
 //! version of the same file (CI uploads it as an artifact); this test's
 //! record is tagged `"build": "debug"` under `cargo test`.
 //!
-//! The speedup floor here is deliberately conservative (the measured gap
-//! on the saturated configuration is the quadratic-vs-log regime, well
-//! above it); set `MOELESS_SKIP_PERF=1` to skip on constrained machines.
+//! The speedup floors here are deliberately conservative (the measured
+//! gaps are regime changes — quadratic-vs-log scans, O(total)-vs-
+//! O(in-flight) maps — well above them); set `MOELESS_SKIP_PERF=1` to
+//! skip on constrained machines.
 
 use moeless::experiments::simperf;
 
@@ -65,16 +68,100 @@ fn perf_trajectory_beats_reference_and_records_bench_sim_json() {
         mega.event.wall_s,
     );
 
+    // Arena duel (PR 9): the SoA arena against the frozen PR-4 AoS core
+    // on the same saturated churn drain. The PR-4 core carries every
+    // retired request in its locator map and moves whole sequence
+    // structs through its index maps; the arena's maps are O(in-flight)
+    // over u32 slots. Outcomes asserted identical inside
+    // measure_soa_scale.
+    let soa_quick = simperf::measure_soa_scale("quick");
+    let soa_saturated = simperf::measure_soa_scale("saturated");
+    let soa_mega = simperf::measure_soa_scale("driver-mega");
+    assert_eq!(soa_mega.arena.completed, 1_000_000, "every mega request drains via arena");
+    let arena_speedup = soa_saturated.speedup();
+    assert!(
+        arena_speedup >= 1.5,
+        "arena core must beat the frozen PR-4 core on the saturated drain \
+         (pr4 {:.3}s vs arena {:.3}s = {arena_speedup:.2}x)",
+        soa_saturated.pr4.wall_s,
+        soa_saturated.arena.wall_s,
+    );
+
+    // Shard duel (PR 9): sequential vs 2-thread sharded end-to-end
+    // disaggregated sims, outcomes bit-asserted inside
+    // measure_shard_scale. The quick sim is too small for a wall-clock
+    // win to be reliable under `cargo test`, so only equivalence is
+    // gated here; the release bench records the honest speedups.
+    let shards: Vec<_> = ["quick", "medium"]
+        .into_iter()
+        .filter_map(simperf::measure_shard_scale)
+        .collect();
+    assert!(!shards.is_empty(), "at least one shard-duel scale must run");
+
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim.json");
-    simperf::write_bench_json(&path, &[quick, saturated], &[mega]).unwrap();
+    simperf::write_bench_json(
+        &path,
+        &[quick, saturated],
+        &[mega],
+        &[soa_quick, soa_saturated, soa_mega],
+        &shards,
+    )
+    .unwrap();
     eprintln!(
-        "perf_trajectory: saturated speedup {speedup:.2}x \
-         (baseline {:.3}s -> current {:.3}s); driver duel {duel_speedup:.2}x \
-         (lockstep {:.3}s -> event {:.3}s); recorded {}",
-        saturated.drain_baseline.wall_s,
-        saturated.drain_current.wall_s,
-        mega.lockstep.wall_s,
-        mega.event.wall_s,
+        "perf_trajectory: saturated speedup {speedup:.2}x; driver duel {duel_speedup:.2}x; \
+         arena duel {arena_speedup:.2}x (pr4 {:.3}s -> arena {:.3}s); recorded {}",
+        soa_saturated.pr4.wall_s,
+        soa_saturated.arena.wall_s,
         path.display()
     );
+}
+
+#[test]
+fn million_request_streaming_run_stays_in_flight_bounded() {
+    // The PR-9 memory claim, asserted directly: a 10⁶-request drain in
+    // streaming-records mode holds O(in-flight) state — no per-request
+    // vectors, a drained locator, a slot arena sized to the in-flight
+    // peak, and the retired-id set folded into one interval.
+    if std::env::var("MOELESS_SKIP_PERF").is_ok() {
+        eprintln!("streaming memory test skipped (MOELESS_SKIP_PERF set)");
+        return;
+    }
+    use moeless::router::Batcher;
+    let cfg = simperf::driver_drain_config("driver-mega");
+    let mut b = Batcher::with_limits(cfg.limits).with_streaming_records();
+    b.enqueue(&cfg.trace);
+    let mut clock = 0.0f64;
+    let mut guard = 0u64;
+    while !b.idle() {
+        match b.next_iteration(clock) {
+            Some(_) => {
+                b.complete_iteration(clock + cfg.iter_s);
+                clock += cfg.iter_s;
+            }
+            None => {
+                let next = b.next_arrival().unwrap_or(clock);
+                clock = if next > clock { next } else { clock + cfg.iter_s };
+            }
+        }
+        guard += 1;
+        assert!(guard < 200_000_000, "streaming mega drain stopped making progress");
+    }
+    assert_eq!(b.completed, 1_000_000, "every request drains");
+    // No per-request vector was ever materialized (capacity, not just
+    // length: a push-then-clear would leave the allocation behind).
+    assert!(b.finished.is_empty() && b.finished.capacity() == 0);
+    assert!(b.ttft_ms.is_empty() && b.ttft_ms.capacity() == 0);
+    assert!(b.e2e_ms.is_empty() && b.e2e_ms.capacity() == 0);
+    // The locator holds only live sequences: zero after drain.
+    assert_eq!(b.locator_len(), 0, "locator must be O(in-flight)");
+    // Contiguous ids retire into a single merged interval run.
+    assert_eq!(b.retired_runs(), 1, "retired set must fold into one run");
+    // The slot arena is sized to the in-flight peak, not the trace.
+    let (live, capacity) = b.arena_slots();
+    assert_eq!(live, 0);
+    assert!(capacity < 5000, "arena capacity {capacity} is not O(in-flight)");
+    // The sketches carried all 10⁶ retirements in O(1) space.
+    assert_eq!(b.e2e_sketch.len(), 1_000_000);
+    let bytes = b.approx_state_bytes();
+    assert!(bytes < 2_000_000, "terminal state {bytes} B is not O(in-flight)");
 }

@@ -609,6 +609,129 @@ fn prop_chunked_prefill_conservation() {
 }
 
 // ---------------------------------------------------------------------------
+// SoA sequence arena (PR 9) laws.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_arena_slot_reuse_never_aliases_live_sequences() {
+    // For any interleaving of allocations and releases: a reused slot
+    // never collides with a live sequence, every column of a fresh slot
+    // carries the new occupant's values (nothing leaks from the previous
+    // tenant), and capacity equals the peak number of simultaneously live
+    // sequences — the O(in-flight) memory bound.
+    use moeless::router::arena::{SeqArena, SeqSeed};
+    use std::collections::BTreeMap;
+    property(150, |g| {
+        let mut arena = SeqArena::default();
+        let mut live: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut next_id = 0u64;
+        let mut peak = 0usize;
+        for _ in 0..g.usize_in(1, 200) {
+            if live.is_empty() || g.bool() {
+                let seed = SeqSeed {
+                    id: next_id,
+                    arrival_s: g.f64_in(0.0, 50.0),
+                    prompt_tokens: g.usize_in(1, 64),
+                    output_tokens: g.usize_in(1, 16),
+                };
+                next_id += 1;
+                let slot = arena.alloc(seed);
+                assert!(!live.contains_key(&slot), "slot {slot} aliased a live sequence");
+                assert!(arena.is_live(slot));
+                assert_eq!(arena.id_of(slot), seed.id);
+                assert_eq!(arena.kv_tokens_of(slot), 0, "reused slot leaked KV");
+                assert_eq!(arena.remaining_out_of(slot), seed.output_tokens);
+                assert_eq!(arena.prompt_tokens_of(slot), seed.prompt_tokens);
+                assert_eq!(arena.emitted(slot), 0, "reused slot leaked emitted tokens");
+                live.insert(slot, seed.id);
+            } else {
+                let keys: Vec<u32> = live.keys().copied().collect();
+                let slot = *g.pick(&keys);
+                live.remove(&slot);
+                arena.release(slot);
+                assert!(!arena.is_live(slot));
+            }
+            peak = peak.max(live.len());
+            assert_eq!(arena.live_slots(), live.len());
+        }
+        // Capacity grows only when no retired slot is reusable, so it
+        // lands exactly on the peak live count.
+        assert_eq!(arena.capacity_slots(), peak);
+        // Survivors are untouched by any interleaved reuse.
+        for (&slot, &id) in &live {
+            assert_eq!(arena.id_of(slot), id);
+        }
+    });
+}
+
+#[test]
+fn prop_streaming_records_match_full_mode() {
+    // Streaming-records mode gates only the per-request record pushes:
+    // for any trace and any limits, a streaming drain must make the
+    // identical scheduling decisions and land the identical scalar
+    // counters and quantile sketches as the full-records drain.
+    property(60, |g| {
+        let n = g.usize_in(1, 30);
+        let mut reqs = Vec::new();
+        for i in 0..n {
+            reqs.push(TraceRequest {
+                id: i as u64,
+                arrival_s: g.f64_in(0.0, 8.0),
+                prompt_tokens: g.usize_in(1, 80),
+                output_tokens: g.usize_in(1, 40),
+            });
+        }
+        reqs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let limits = BatchLimits {
+            max_batch_tokens: *g.pick(&[0usize, 64, 256]),
+            kv_budget_bytes: if g.bool() { g.usize_in(50, 400) as f64 } else { f64::INFINITY },
+            kv_bytes_per_token: 1.0,
+            prefill_chunk_tokens: *g.pick(&[0usize, 16, 64]),
+        };
+        let mut full = Batcher::with_limits(limits);
+        let mut lean = Batcher::with_limits(limits).with_streaming_records();
+        full.enqueue(&reqs);
+        lean.enqueue(&reqs);
+        let mut clock = 0.0f64;
+        let mut guard = 0u64;
+        loop {
+            assert_eq!(full.idle(), lean.idle(), "streaming mode changed idleness");
+            if full.idle() {
+                break;
+            }
+            let a = full.next_iteration(clock);
+            let b = lean.next_iteration(clock);
+            assert_eq!(a, b, "streaming mode changed scheduling at t={clock}");
+            match a {
+                Some(_) => {
+                    full.complete_iteration(clock + 0.02);
+                    lean.complete_iteration(clock + 0.02);
+                }
+                None => clock = full.next_arrival().unwrap_or(clock).max(clock),
+            }
+            clock += 0.05;
+            guard += 1;
+            assert!(guard < 500_000, "streaming differential must drain");
+        }
+        assert_eq!(full.admitted, lean.admitted);
+        assert_eq!(full.completed, lean.completed);
+        assert_eq!(full.rejected, lean.rejected);
+        assert_eq!(full.preemptions, lean.preemptions);
+        assert_eq!(full.resumes, lean.resumes);
+        assert_eq!(full.tokens_prefilled, lean.tokens_prefilled);
+        assert_eq!(full.tokens_decoded, lean.tokens_decoded);
+        assert_eq!(full.tokens_recomputed, lean.tokens_recomputed);
+        // Sketches are fed at the identical sites in both modes.
+        assert!(full.ttft_sketch == lean.ttft_sketch, "ttft sketches diverged");
+        assert!(full.e2e_sketch == lean.e2e_sketch, "e2e sketches diverged");
+        assert_eq!(full.ttft_sketch.len(), full.ttft_ms.len());
+        assert_eq!(full.e2e_sketch.len(), full.finished.len());
+        // The records themselves are the one difference.
+        assert!(lean.ttft_ms.is_empty() && lean.e2e_ms.is_empty() && lean.finished.is_empty());
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Predictor invariants.
 // ---------------------------------------------------------------------------
 

@@ -83,10 +83,11 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "P1",
         title: "no Vec::remove/swap_remove/insert(0, _) on batcher/placer hot paths",
-        scope: "rust/src/router/mod.rs, rust/src/placer/, rust/src/sim/event.rs, \
-                rust/src/sim/multimodel.rs and rust/src/serverless/loading.rs \
-                (router/reference.rs is excluded by design: it is the frozen pre-PR4 \
-                core that golden equivalence measures against; the frozen lockstep \
+        scope: "rust/src/router/mod.rs, rust/src/router/arena.rs, rust/src/placer/, \
+                rust/src/sim/event.rs, rust/src/sim/multimodel.rs and \
+                rust/src/serverless/loading.rs (router/reference.rs and \
+                router/pr4.rs are excluded by design: they are the frozen baseline \
+                cores that golden equivalence measures against; the frozen lockstep \
                 driver in sim/mod.rs is excluded for the same reason)",
         rationale: "PR 4 de-quadraticized these paths with keyed BTreeMap indices; a \
                     positional remove/insert reintroduces O(n) shifts (or an \
@@ -139,6 +140,7 @@ pub fn classify(rel_path: &str, comments: &[Comment]) -> FileClass {
         let top = tail.split('/').next().unwrap_or("").trim_end_matches(".rs");
         class.sim_core = SIM_CORE_MODULES.contains(&top);
         class.hot_path = tail == "router/mod.rs"
+            || tail == "router/arena.rs"
             || tail.starts_with("placer/")
             || tail == "sim/event.rs"
             || tail == "sim/multimodel.rs"

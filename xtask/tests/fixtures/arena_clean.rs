@@ -1,0 +1,29 @@
+// pallas-lint: treat-as(hot-path)
+//! Arena negative fixture: the PR-9 SoA shapes — ordered index-sets over
+//! u32 slots and a LIFO free-list driven by back-of-Vec push/pop. All
+//! keyed or amortized-O(1); nothing positional.
+
+use std::collections::BTreeSet;
+
+pub fn admit(running: &mut BTreeSet<(u64, u32)>, key: u64, slot: u32) {
+    running.insert((key, slot));
+}
+
+pub fn retire(running: &mut BTreeSet<(u64, u32)>, key: u64, slot: u32) -> bool {
+    running.remove(&(key, slot))
+}
+
+pub fn alloc_slot(free: &mut Vec<u32>, next: &mut u32) -> u32 {
+    match free.pop() {
+        Some(slot) => slot,
+        None => {
+            let slot = *next;
+            *next += 1;
+            slot
+        }
+    }
+}
+
+pub fn release_slot(free: &mut Vec<u32>, slot: u32) {
+    free.push(slot);
+}

@@ -1,0 +1,9 @@
+// pallas-lint: treat-as(hot-path)
+//! Arena positive fixture: positional column surgery — the AoS habit the
+//! slot arena exists to kill. Removing a retired sequence by shifting a
+//! column Vec is O(live) per retirement and invalidates every slot index
+//! behind it.
+
+pub fn retire_by_position(kv_tokens: &mut Vec<u64>, pos: usize) -> u64 {
+    kv_tokens.remove(pos)
+}

@@ -155,6 +155,41 @@ fn lint_scope_covers_the_multimodel_modules() {
 }
 
 #[test]
+fn arena_scope_flags_positional_column_surgery() {
+    // The PR-9 scope extension: the SoA arena's column Vecs are hot-path,
+    // so shifting `Vec::remove` retirement is flagged…
+    let report = lint_fixture("arena_violation.rs");
+    assert_eq!(rule_ids(&report), vec!["P1"], "{:?}", report.violations);
+}
+
+#[test]
+fn arena_scope_permits_index_sets_and_free_list_ops() {
+    // …while the shapes the arena actually uses — BTreeSet index-set
+    // insert/remove keyed by (key, slot) and LIFO free-list push/pop —
+    // stay clean under the same classification.
+    let report = lint_fixture("arena_clean.rs");
+    assert!(report.clean(), "unexpected: {:?}", report.violations);
+}
+
+#[test]
+fn lint_scope_covers_the_arena_but_not_the_frozen_cores() {
+    // Path classification, no directives: the arena joined the P1 scope;
+    // the frozen baseline cores (pre-PR-4 reference, PR-4 AoS) stay out —
+    // they are what golden equivalence measures against, not hot paths.
+    let arena = xtask::rules::classify("rust/src/router/arena.rs", &[]);
+    assert!(arena.hot_path, "router/arena.rs must be under P1");
+    assert!(arena.sim_core, "router/arena.rs must be under D1/D2");
+    for frozen in ["rust/src/router/reference.rs", "rust/src/router/pr4.rs"] {
+        let class = xtask::rules::classify(frozen, &[]);
+        assert!(!class.hot_path, "{frozen} is a frozen baseline, not a hot path");
+    }
+    // And the real arena passes the bar it is now held to.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../rust/src/router/arena.rs");
+    let report = xtask::lint_paths(&[path]).expect("arena module should lint");
+    assert!(report.clean(), "router/arena.rs must stay lint-clean: {:?}", report.violations);
+}
+
+#[test]
 fn allow_suppresses_exactly_its_named_rule() {
     let report = lint_fixture("allow_scoped.rs");
     // The R1 allow on the unwrap line suppresses it and shows up in the
