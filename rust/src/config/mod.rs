@@ -787,6 +787,18 @@ pub struct MoelessParams {
     pub prewarm: bool,
     /// Layer-aware fine-tuning accuracy threshold h (§4.1).
     pub finetune_threshold: f64,
+    /// Fraction of the model's full expert set the fleet's HBM may hold
+    /// (expert-offloading tier, fMoE-style). `1.0` disables offloading —
+    /// every expert is HBM-resident and the store is never built; `< 1.0`
+    /// spills cold experts to host DRAM / NVMe with predictor-driven
+    /// prefetch and a miss-stall when prediction fails.
+    pub expert_hbm_frac: f64,
+    /// Prefetch lookahead K: a predicted expert's fetch is modeled as
+    /// issued K layers ahead, overlapping the interleaving compute.
+    pub prefetch_lookahead: usize,
+    /// Ablation: ignore the predictor and demand-fetch every non-resident
+    /// expert at layer start (serialized into the critical path).
+    pub demand_fetch: bool,
 }
 
 impl Default for MoelessParams {
@@ -798,6 +810,9 @@ impl Default for MoelessParams {
             keep_alive_s: 10.0,
             prewarm: true,
             finetune_threshold: 0.8,
+            expert_hbm_frac: 1.0,
+            prefetch_lookahead: 2,
+            demand_fetch: false,
         }
     }
 }

@@ -86,6 +86,15 @@ pub trait Policy: Send {
     fn residency_gb_s_by_gpu(&self) -> Option<&[f64]> {
         None
     }
+
+    /// Expert-offloading prefetch/stall accounting, when the policy runs
+    /// an [`crate::serverless::offload::ExpertStore`] (i.e. MoEless with
+    /// `expert_hbm_frac < 1.0`). `None` for every other policy and
+    /// whenever offloading is disabled — the report's offload fields stay
+    /// at their zero defaults.
+    fn offload_stats(&self) -> Option<&crate::serverless::offload::OffloadStats> {
+        None
+    }
 }
 
 /// Helper shared by serverful baselines: evaluate the §3.3 terms for a

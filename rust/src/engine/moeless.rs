@@ -45,6 +45,27 @@ pub struct MoelessPolicy {
     /// cluster's decision speeds each layer; stays empty — and
     /// unallocated — on uniform fleets).
     speeds_scratch: Vec<f64>,
+    /// Expert-offloading residency hierarchy — built only when
+    /// `expert_hbm_frac < 1.0`. `None` means every expert is HBM-resident
+    /// and the serve path below is bit-identical to the pre-offload
+    /// policy (zero extra calls, zero extra cost terms).
+    store: Option<crate::serverless::offload::ExpertStore>,
+    /// Virtual intra-iteration clock (ms): the sim clock does not advance
+    /// between the layers of one iteration, so prefetch overlap is
+    /// modeled against the forward time of the layers already run.
+    iter_elapsed_ms: f64,
+    /// Ring of the last K layers' forward times (seconds) — the window a
+    /// predicted expert's fetch is modeled to overlap.
+    fwd_hist: std::collections::VecDeque<f64>,
+    /// Scratch (offload only): per-expert prediction support, captured
+    /// from the *raw* predictor output before the scale-to-zero
+    /// threshold — an Oracle-predicted expert with sub-token load is
+    /// still covered, it just gets no planned replica.
+    pred_support: Vec<bool>,
+    /// Scratch (offload only): the layer's deduped (expert, gpu) serve
+    /// pairs and their coverage flags, handed to the store.
+    serve_pairs: Vec<(usize, usize)>,
+    serve_covered: Vec<bool>,
 }
 
 impl MoelessPolicy {
@@ -70,6 +91,11 @@ impl MoelessPolicy {
         predictor: Box<dyn LoadPredictor>,
     ) -> MoelessPolicy {
         let max_slots = (model.n_experts as f64 * params.mem_cap_factor).round() as usize;
+        let store = if params.expert_hbm_frac < 1.0 {
+            Some(crate::serverless::offload::ExpertStore::new(model, cluster_spec, &params))
+        } else {
+            None
+        };
         MoelessPolicy {
             predictor,
             scaler: Scaler::new(params.cv_threshold, max_slots),
@@ -91,6 +117,12 @@ impl MoelessPolicy {
             tuner: None,
             rr_counter: 0,
             speeds_scratch: Vec::new(),
+            store,
+            iter_elapsed_ms: 0.0,
+            fwd_hist: std::collections::VecDeque::new(),
+            pred_support: Vec::new(),
+            serve_pairs: Vec::new(),
+            serve_covered: Vec::new(),
         }
     }
 
@@ -131,6 +163,18 @@ impl Policy for MoelessPolicy {
             .predict(layer, self.params.prediction_distance, actual, now_s);
         self.predictor.observe(layer, actual, now_s);
 
+        // Offloading: the raw prediction (pre scale-to-zero threshold) is
+        // the prefetch set — any expert the predictor gave mass to had
+        // its fetch issued K layers ahead. Layers run 0..n in order, so
+        // layer 0 starts a fresh iteration's virtual clock.
+        if self.store.is_some() {
+            if layer == 0 {
+                self.iter_elapsed_ms = 0.0;
+            }
+            self.pred_support.clear();
+            self.pred_support.extend(pred.loads.iter().map(|&w| w > 0.0));
+        }
+
         // Step 2: scale. Predicted loads below one token round to zero —
         // the serverless scale-to-zero that serverful EP cannot do. On a
         // mixed fleet the capacity-weighted scaler balances wall-clock
@@ -153,6 +197,18 @@ impl Policy for MoelessPolicy {
         // Step 3: place (warm-start reuse against live instances).
         let mut previous: Vec<Vec<usize>> =
             (0..self.n_experts).map(|e| self.manager.live_on(layer, e)).collect();
+        // Offload locality: devices whose expert-HBM shard already holds
+        // the weights join the warm-candidate list (deduped against the
+        // live instances) — placing there skips the fetch entirely. An
+        // instance still has to start on such a device; that cost is
+        // accounted honestly by `apply_layer` below.
+        if let Some(store) = &self.store {
+            for (e, prev) in previous.iter_mut().enumerate() {
+                if pred_loads[e] > 0.0 {
+                    store.hbm_gpus_into(layer, e, prev);
+                }
+            }
+        }
         let placement = if self.ablate_placement {
             // Round-robin without locality/JSQ.
             let mut p = crate::placer::PlacePlan::default();
@@ -235,9 +291,63 @@ impl Policy for MoelessPolicy {
         }
 
         let total_replicas: usize = replicas.iter().sum();
-        let lc = cost.layer(max_rep, max_gpu, total_replicas, repair.critical_cold_ms);
+
+        // Offloading: every (expert, gpu) pair that served tokens needs
+        // its weights in device HBM. Predicted pairs were prefetched —
+        // modeled as issued up to K layers of forward time ago, so the
+        // transfer overlapped the interleaving compute; unpredicted pairs
+        // demand-fetch at layer start. Whatever completes late is a
+        // miss-stall on the layer's critical path, additive with the
+        // repair cold starts (both serialize ahead of the forward). When
+        // the store is disabled this whole block is skipped and the cost
+        // call below is bit-identical to the pre-offload policy.
+        let mut stall_ms = 0.0;
+        if self.store.is_some() {
+            self.serve_pairs.clear();
+            for p in &placement.placements {
+                if actual[p.expert] > 0.0 {
+                    self.serve_pairs.push((p.expert, p.gpu));
+                }
+            }
+            for &(e, gpu) in &repair_pairs {
+                self.serve_pairs.push((e, gpu));
+            }
+            self.serve_pairs.sort_unstable();
+            self.serve_pairs.dedup();
+            self.serve_covered.clear();
+            for &(e, _) in self.serve_pairs.iter() {
+                self.serve_covered.push(self.pred_support.get(e).copied().unwrap_or(false));
+            }
+            if let Some(store) = &mut self.store {
+                let vnow_s = now_s + self.iter_elapsed_ms / 1e3;
+                let overlap_s: f64 = self.fwd_hist.iter().sum();
+                stall_ms = store.serve(
+                    layer,
+                    &self.serve_pairs,
+                    &self.serve_covered,
+                    vnow_s - overlap_s,
+                    vnow_s,
+                );
+            }
+        }
+        let critical_ms = if stall_ms > 0.0 {
+            repair.critical_cold_ms + stall_ms
+        } else {
+            repair.critical_cold_ms
+        };
+
+        let lc = cost.layer(max_rep, max_gpu, total_replicas, critical_ms);
+        if self.store.is_some() {
+            // Advance the virtual clock and the K-layer overlap window by
+            // this layer's realized forward time.
+            self.iter_elapsed_ms += lc.forward_ms();
+            self.fwd_hist.push_back(lc.forward_ms() / 1e3);
+            while self.fwd_hist.len() > self.params.prefetch_lookahead {
+                self.fwd_hist.pop_front();
+            }
+        }
         if let Some(t) = &mut self.tuner {
-            t.observe_layer(lc.expert_ms, lc.forward_ms(), repair.critical_cold_ms > 0.0);
+            t.observe_layer(lc.expert_ms, lc.forward_ms(), critical_ms > 0.0);
         }
         let acc = crate::predictor::accuracy::topk_overlap(&pred_loads, actual, self.top_k.max(2));
         LayerOutcome {
@@ -262,6 +372,10 @@ impl Policy for MoelessPolicy {
 
     fn finish(&mut self, cluster: &mut Cluster, now_s: f64) {
         self.manager.drain(cluster, now_s);
+        if let Some(store) = &mut self.store {
+            // Close the per-tier residency integral at run end.
+            store.advance(now_s);
+        }
     }
 
     fn residency_gb_s(&self) -> f64 {
@@ -274,6 +388,10 @@ impl Policy for MoelessPolicy {
 
     fn residency_gb_s_by_gpu(&self) -> Option<&[f64]> {
         Some(&self.manager.residency_gb_s_by_gpu)
+    }
+
+    fn offload_stats(&self) -> Option<&crate::serverless::offload::OffloadStats> {
+        self.store.as_ref().map(|s| &s.stats)
     }
 }
 
@@ -335,6 +453,65 @@ mod tests {
         // Per-GPU residency is tracked and consistent with the total.
         let by_gpu: f64 = p.residency_gb_s_by_gpu().unwrap().iter().sum();
         assert!((by_gpu - p.residency_gb_s()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn offload_disabled_exposes_no_store() {
+        let (p, _, _) = setup();
+        assert!(p.offload_stats().is_none(), "frac 1.0 must not build a store");
+    }
+
+    #[test]
+    fn offload_enabled_counts_fetches_and_charges_stalls() {
+        let model = ModelSpec::mixtral_8x7b();
+        let spec = ClusterSpec::a6000_x8();
+        let params = MoelessParams { expert_hbm_frac: 0.25, ..Default::default() };
+        let mut p = MoelessPolicy::new(&model, &spec, params, 7);
+        let cm = CostModel::new(&model, &spec);
+        let mut cluster = Cluster::new(spec);
+        let loads = vec![500.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0];
+        for t in 0..4 {
+            for layer in 0..4 {
+                p.run_layer(layer, &loads, &mut cluster, &cm, t as f64);
+            }
+            p.end_iteration(&mut cluster, t as f64);
+        }
+        p.finish(&mut cluster, 4.0);
+        let stats = p.offload_stats().expect("store must be live at frac 0.25");
+        assert!(stats.prefetch_hits + stats.prefetch_misses > 0, "no fetch accounting");
+        assert!(stats.stall_ms > 0.0, "first-touch demand fetches must stall");
+        assert!(stats.hbm_gb_s > 0.0 && stats.nvme_gb_s > 0.0, "residency must accrue");
+    }
+
+    #[test]
+    fn oracle_prefetch_never_misses() {
+        // The pinned structural property: the Oracle's raw prediction
+        // equals the actual loads, so every served expert is in the
+        // prefetch support — zero demand fetches, whatever the capacity.
+        let model = ModelSpec::mixtral_8x7b();
+        let spec = ClusterSpec::a6000_x8();
+        let params = MoelessParams { expert_hbm_frac: 0.25, ..Default::default() };
+        let mut p = MoelessPolicy::with_predictor(
+            &model,
+            &spec,
+            params,
+            Box::new(crate::predictor::OraclePredictor),
+        );
+        let cm = CostModel::new(&model, &spec);
+        let mut cluster = Cluster::new(spec);
+        // Include a sub-threshold load (0.3 < the 0.5 scale-to-zero cut):
+        // it draws no planned replica, goes through repair, and must still
+        // count as covered.
+        let loads = vec![500.0, 0.3, 100.0, 100.0, 90.0, 80.0, 70.0, 60.0];
+        for t in 0..5 {
+            for layer in 0..4 {
+                p.run_layer(layer, &loads, &mut cluster, &cm, t as f64);
+            }
+            p.end_iteration(&mut cluster, t as f64);
+        }
+        let stats = p.offload_stats().expect("store must be live");
+        assert_eq!(stats.prefetch_misses, 0, "oracle coverage must be total");
+        assert!(stats.prefetch_hits > 0);
     }
 
     #[test]

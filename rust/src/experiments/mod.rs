@@ -68,6 +68,12 @@ pub fn run_from_cli(args: &Args) -> anyhow::Result<()> {
         // (--quick/--floor-rps/--out) and writes BENCH_sim.json.
         return simperf::run_from_args(args);
     }
+    if exp == "offload" {
+        // Standalone prefetch-vs-demand duel on the HBM-oversubscribed
+        // fleet (the same block `--exp simperf` records in
+        // BENCH_sim.json).
+        return simperf::run_offload_from_args(args);
+    }
     run_experiment(&exp, scale);
     Ok(())
 }

@@ -56,8 +56,19 @@
 //!   `shard_threads = 2`, request records and cost asserted bit-identical
 //!   before the wall clocks are compared.
 //!
+//! v4 adds the **offload** duel for the PR-10 expert-residency
+//! hierarchy: the identical end-to-end sim on an HBM-oversubscribed
+//! fleet (`expert_hbm_frac = 0.5` — half the expert set fits in HBM, the
+//! rest spills to DRAM/NVMe), run once with predictor-driven prefetch
+//! (lookahead 2) and once with the demand-fetch ablation (every served
+//! expert fetched at layer start). The p99 TTFT gap between the two arms
+//! is the modeled value of prediction-overlapped fetches;
+//! `tests/offload_regression.rs` pins prefetch ≤ demand on p99 TTFT at
+//! equal goodput. It is also runnable standalone as
+//! `moeless bench --exp offload`.
+//!
 //! Schema of `BENCH_sim.json` (documented in the README):
-//! `{schema: "moeless.simperf/v3", build, machine: {host, cpus, os, arch},
+//! `{schema: "moeless.simperf/v4", build, machine: {host, cpus, os, arch},
 //! unix_time_s, scales: {<scale>: {drain: {requests,
 //! iterations, preemptions, baseline: {wall_s, requests_per_s,
 //! iterations_per_s}, current: {...}, speedup}, sim?: {completed_requests,
@@ -70,10 +81,14 @@
 //! pr4: {wall_s, requests_per_s, iterations_per_s}, arena: {...},
 //! speedup}},
 //! shard: {<scale>: {threads, completed_requests,
-//! sequential: {wall_s}, sharded: {wall_s}, speedup}}}`. The `scales`
-//! section carries the v1 fields unchanged and `drivers` the v2 fields,
-//! so older files stay comparable scale-for-scale; `soa` and `shard` (and
-//! the schema tag) are what v3 adds.
+//! sequential: {wall_s}, sharded: {wall_s}, speedup}},
+//! offload: {<scale>: {expert_hbm_frac, prefetch_lookahead,
+//! prefetch: {completed_requests, goodput_rps, ttft_p99_ms, stall_ms,
+//! prefetch_hits, prefetch_misses, wall_s}, demand: {...},
+//! ttft_p99_gain}}}`. The `scales` section carries the v1 fields
+//! unchanged, `drivers` the v2 fields and `soa`/`shard` the v3 fields, so
+//! older files stay comparable scale-for-scale; `offload` (and the schema
+//! tag) is what v4 adds.
 
 use std::time::Instant;
 
@@ -570,6 +585,86 @@ pub fn measure_shard_scale(scale: &'static str) -> Option<ShardReport> {
     })
 }
 
+/// One arm of the offload duel: the serving outcome of an end-to-end sim
+/// on the HBM-oversubscribed fleet under one fetch discipline.
+#[derive(Clone, Copy, Debug)]
+pub struct OffloadArm {
+    pub completed: u64,
+    pub goodput_rps: f64,
+    pub ttft_p99_ms: f64,
+    pub stall_ms: f64,
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    pub wall_s: f64,
+}
+
+/// Prefetch-vs-demand-fetch duel at one scale (v4): the identical
+/// end-to-end sim with the expert-residency hierarchy engaged, run once
+/// with predictor-driven prefetch and once with the demand-fetch
+/// ablation.
+pub struct OffloadReport {
+    pub scale: &'static str,
+    pub expert_hbm_frac: f64,
+    pub lookahead: usize,
+    pub prefetch: OffloadArm,
+    pub demand: OffloadArm,
+}
+
+impl OffloadReport {
+    /// p99-TTFT advantage of prefetch over demand fetch (> 1 means the
+    /// prediction-overlapped fetches beat layer-start fetching).
+    pub fn ttft_p99_gain(&self) -> f64 {
+        self.demand.ttft_p99_ms / self.prefetch.ttft_p99_ms.max(1e-9)
+    }
+}
+
+/// The offload-duel scale names, cheapest first.
+pub fn offload_scale_names() -> [&'static str; 2] {
+    ["quick", "medium"]
+}
+
+/// The offload-duel configuration of a scale (`None` where the scale
+/// defines no end-to-end sim): the scale's e2e sim with the fleet's
+/// expert HBM capped at half the expert set.
+pub fn offload_e2e_config(scale: &str) -> Option<SimConfig> {
+    let mut cfg = e2e_config(scale)?;
+    cfg.params.expert_hbm_frac = 0.5;
+    cfg.params.prefetch_lookahead = 2;
+    Some(cfg)
+}
+
+fn offload_arm(cfg: &SimConfig) -> OffloadArm {
+    let r = run(cfg);
+    OffloadArm {
+        completed: r.completed_requests,
+        goodput_rps: r.goodput_rps(&crate::metrics::SloSpec::default()),
+        ttft_p99_ms: r.ttft_sketch.p(99.0),
+        stall_ms: r.offload_stall_ms,
+        prefetch_hits: r.prefetch_hits,
+        prefetch_misses: r.prefetch_misses,
+        wall_s: r.wall_s,
+    }
+}
+
+/// Measure one offload-duel scale: the identical HBM-oversubscribed sim
+/// with prefetch on, then with the demand-fetch ablation. Both arms
+/// replay the same seeded trace, so the serving-side numbers differ only
+/// through the fetch discipline.
+pub fn measure_offload_scale(scale: &'static str) -> Option<OffloadReport> {
+    let mut cfg = offload_e2e_config(scale)?;
+    cfg.params.demand_fetch = false;
+    let prefetch = offload_arm(&cfg);
+    cfg.params.demand_fetch = true;
+    let demand = offload_arm(&cfg);
+    Some(OffloadReport {
+        scale,
+        expert_hbm_frac: cfg.params.expert_hbm_frac,
+        lookahead: cfg.params.prefetch_lookahead,
+        prefetch,
+        demand,
+    })
+}
+
 /// The machine tag: host, logical CPU count, OS and arch — so a committed
 /// `BENCH_sim.json` baseline says which hardware produced it and absolute
 /// numbers are never compared across different machines by accident.
@@ -601,13 +696,26 @@ fn outcome_json(o: &DrainOutcome) -> Json {
     j
 }
 
-/// Serialize the scale, driver-duel, arena-duel and shard-duel reports
-/// into the `BENCH_sim.json` document.
+fn offload_arm_json(a: &OffloadArm) -> Json {
+    let mut j = Json::obj();
+    j.set("completed_requests", Json::Num(a.completed as f64))
+        .set("goodput_rps", Json::Num(a.goodput_rps))
+        .set("ttft_p99_ms", Json::Num(a.ttft_p99_ms))
+        .set("stall_ms", Json::Num(a.stall_ms))
+        .set("prefetch_hits", Json::Num(a.prefetch_hits as f64))
+        .set("prefetch_misses", Json::Num(a.prefetch_misses as f64))
+        .set("wall_s", Json::Num(a.wall_s));
+    j
+}
+
+/// Serialize the scale, driver-duel, arena-duel, shard-duel and
+/// offload-duel reports into the `BENCH_sim.json` document.
 pub fn to_json(
     reports: &[ScaleReport],
     drivers: &[DriverReport],
     soa: &[SoaReport],
     shards: &[ShardReport],
+    offloads: &[OffloadReport],
 ) -> Json {
     let mut scales = Json::obj();
     for r in reports {
@@ -671,8 +779,18 @@ pub fn to_json(
             .set("speedup", Json::Num(s.speedup()));
         shard_scales.set(s.scale, duel);
     }
+    let mut offload_scales = Json::obj();
+    for o in offloads {
+        let mut duel = Json::obj();
+        duel.set("expert_hbm_frac", Json::Num(o.expert_hbm_frac))
+            .set("prefetch_lookahead", Json::Num(o.lookahead as f64))
+            .set("prefetch", offload_arm_json(&o.prefetch))
+            .set("demand", offload_arm_json(&o.demand))
+            .set("ttft_p99_gain", Json::Num(o.ttft_p99_gain()));
+        offload_scales.set(o.scale, duel);
+    }
     let mut doc = Json::obj();
-    doc.set("schema", Json::Str("moeless.simperf/v3".into()))
+    doc.set("schema", Json::Str("moeless.simperf/v4".into()))
         .set(
             "build",
             Json::Str(if cfg!(debug_assertions) { "debug".into() } else { "release".into() }),
@@ -690,7 +808,8 @@ pub fn to_json(
         .set("scales", scales)
         .set("drivers", driver_scales)
         .set("soa", soa_scales)
-        .set("shard", shard_scales);
+        .set("shard", shard_scales)
+        .set("offload", offload_scales);
     doc
 }
 
@@ -701,9 +820,10 @@ pub fn write_bench_json(
     drivers: &[DriverReport],
     soa: &[SoaReport],
     shards: &[ShardReport],
+    offloads: &[OffloadReport],
 ) -> anyhow::Result<()> {
     use anyhow::Context;
-    let doc = to_json(reports, drivers, soa, shards);
+    let doc = to_json(reports, drivers, soa, shards, offloads);
     std::fs::write(path, doc.to_string()).with_context(|| format!("write {}", path.display()))
 }
 
@@ -782,6 +902,25 @@ pub fn shard_report_line(s: &ShardReport) -> String {
     )
 }
 
+/// One greppable line per offload-duel scale.
+pub fn offload_report_line(o: &OffloadReport) -> String {
+    format!(
+        "simperf {:<9} offload: hbm_frac={:.2} lookahead={} | prefetch ttft_p99={:.0}ms \
+         stall={:.0}ms hit_rate={:.3} -> demand ttft_p99={:.0}ms stall={:.0}ms \
+         | p99 gain {:.2}x",
+        o.scale,
+        o.expert_hbm_frac,
+        o.lookahead,
+        o.prefetch.ttft_p99_ms,
+        o.prefetch.stall_ms,
+        o.prefetch.prefetch_hits as f64
+            / ((o.prefetch.prefetch_hits + o.prefetch.prefetch_misses).max(1) as f64),
+        o.demand.ttft_p99_ms,
+        o.demand.stall_ms,
+        o.ttft_p99_gain(),
+    )
+}
+
 /// CLI entry: `moeless bench --exp simperf [--quick] [--floor-rps F]
 /// [--out PATH]`. `--quick` runs only the quick scale (the CI smoke);
 /// `--floor-rps` fails the process when the quick end-to-end
@@ -832,13 +971,24 @@ pub fn run_from_args(args: &Args) -> anyhow::Result<()> {
             shards.push(s);
         }
     }
+    // Offload duel (v4): the CI smoke runs the quick duel; the full bench
+    // adds the medium scale.
+    let offload_names: Vec<&'static str> =
+        if args.flag("quick") { vec!["quick"] } else { offload_scale_names().to_vec() };
+    let mut offloads = Vec::new();
+    for name in offload_names {
+        if let Some(o) = measure_offload_scale(name) {
+            println!("{}", offload_report_line(&o));
+            offloads.push(o);
+        }
+    }
     // Precedence: an explicit --out beats the MOELESS_BENCH_PATH env var,
     // which beats the default.
     let path = std::path::PathBuf::from(match args.opt_str("out") {
         Some(p) => p.to_string(),
         None => std::env::var("MOELESS_BENCH_PATH").unwrap_or_else(|_| "BENCH_sim.json".into()),
     });
-    write_bench_json(&path, &reports, &drivers, &soa, &shards)?;
+    write_bench_json(&path, &reports, &drivers, &soa, &shards, &offloads)?;
     println!("simperf wrote {}", path.display());
 
     let floor = args.f64("floor-rps", 0.0);
@@ -860,6 +1010,36 @@ pub fn run_from_args(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// CLI entry: `moeless bench --exp offload [--quick] [--out PATH]` — the
+/// standalone prefetch-vs-demand duel. It prints the duel lines without
+/// touching `BENCH_sim.json` (that document is the full perf trajectory,
+/// written by `--exp simperf` with the offload block included); an
+/// explicit `--out` writes a v4 document carrying just the offload
+/// section, so a duel can be recorded without re-running the whole
+/// trajectory.
+pub fn run_offload_from_args(args: &Args) -> anyhow::Result<()> {
+    crate::util::benchkit::fig_header(
+        "PERF offload",
+        "expert-residency hierarchy — predictor-driven prefetch vs demand fetch, \
+         HBM capped at half the expert set",
+    );
+    let names: Vec<&'static str> =
+        if args.flag("quick") { vec!["quick"] } else { offload_scale_names().to_vec() };
+    let mut offloads = Vec::new();
+    for name in names {
+        if let Some(o) = measure_offload_scale(name) {
+            println!("{}", offload_report_line(&o));
+            offloads.push(o);
+        }
+    }
+    if let Some(p) = args.opt_str("out") {
+        let path = std::path::PathBuf::from(p.to_string());
+        write_bench_json(&path, &[], &[], &[], &[], &offloads)?;
+        println!("offload wrote {}", path.display());
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -876,8 +1056,10 @@ mod tests {
         assert_eq!(s.arena.completed, s.pr4.completed);
         let sh = measure_shard_scale("quick").expect("quick defines an e2e sim");
         assert_eq!(sh.threads, 2);
-        let doc = to_json(&[r], &[d], &[s], &[sh]);
-        assert_eq!(doc.get("schema").as_str(), "moeless.simperf/v3");
+        let off = measure_offload_scale("quick").expect("quick defines an e2e sim");
+        assert!(off.prefetch.prefetch_hits + off.prefetch.prefetch_misses > 0);
+        let doc = to_json(&[r], &[d], &[s], &[sh], &[off]);
+        assert_eq!(doc.get("schema").as_str(), "moeless.simperf/v4");
         // Machine-tagged: host/cpus/os/arch identify the producing box.
         let machine = doc.get("machine");
         assert!(!machine.get("host").as_str().is_empty());
@@ -898,8 +1080,17 @@ mod tests {
         assert_eq!(shard.get("threads").as_f64(), 2.0);
         assert!(shard.get("sequential").get("wall_s").as_f64() > 0.0);
         assert!(shard.get("sharded").get("wall_s").as_f64() > 0.0);
+        // v4 block: the offload duel's two arms on the oversubscribed
+        // fleet — both arms fetched experts, both served requests.
+        let offload = doc.get("offload").get("quick");
+        assert_eq!(offload.get("expert_hbm_frac").as_f64(), 0.5);
+        assert_eq!(offload.get("prefetch_lookahead").as_f64(), 2.0);
+        assert!(offload.get("prefetch").get("completed_requests").as_f64() > 0.0);
+        assert!(offload.get("demand").get("completed_requests").as_f64() > 0.0);
+        assert!(offload.get("demand").get("stall_ms").as_f64() > 0.0);
+        assert!(offload.get("ttft_p99_gain").as_f64() > 0.0);
         // Round-trips through the parser.
         let parsed = Json::parse(&doc.to_string()).unwrap();
-        assert_eq!(parsed.get("schema").as_str(), "moeless.simperf/v3");
+        assert_eq!(parsed.get("schema").as_str(), "moeless.simperf/v4");
     }
 }

@@ -64,15 +64,22 @@ fn main() {
                           Zipf-skewed N-model serverless catalog on the fleet\n\
                           and prints per-model lanes — --catalog spec.json\n\
                           loads an explicit catalog, --oblivious ablates the\n\
-                          locality-aware placement)\n\
+                          locality-aware placement;\n\
+                          --expert-hbm-frac F caps expert HBM at F of the\n\
+                          expert set (cold experts spill to DRAM/NVMe with\n\
+                          predictor-driven prefetch), --prefetch-lookahead K\n\
+                          overlaps fetches with up to K layers' compute,\n\
+                          --demand-fetch ablates the predictor)\n\
                  bench   run one paper experiment (--exp fig1|fig3|...|table2,\n\
                          --exp hetero for the mixed-fleet section,\n\
-                         --exp multimodel for the serverless colocation A/B)\n\
+                         --exp multimodel for the serverless colocation A/B,\n\
+                         --exp offload for the prefetch-vs-demand-fetch duel)\n\
                          or the perf-trajectory harness (--exp simperf\n\
                          [--quick] [--floor-rps F] [--out PATH] — measures\n\
                          the pre-PR4 reference core vs the optimized core,\n\
-                         plus the event-heap vs fixed-cadence drivers, and\n\
-                         writes BENCH_sim.json, schema moeless.simperf/v2)\n\
+                         the event-heap vs fixed-cadence drivers, the SoA\n\
+                         arena, sharding, and the expert-offload duel, and\n\
+                         writes BENCH_sim.json, schema moeless.simperf/v4)\n\
                  report  print model/cluster inventory (Table 1)"
             );
             std::process::exit(2);

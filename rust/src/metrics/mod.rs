@@ -251,6 +251,21 @@ pub struct RunReport {
     /// Per-model accounting lanes of a multi-model colocation run, in
     /// catalog order (empty for single-model runs).
     pub per_model: Vec<ModelLane>,
+    /// Expert-offloading signals (all zero when `expert_hbm_frac = 1.0` —
+    /// additive defaults, so pre-offload reports are untouched
+    /// bit-for-bit). Served (layer, expert, device) triples the predictor
+    /// covered (prefetched ahead) vs missed (demand-fetched on the
+    /// critical path).
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    /// Total fetch-stall milliseconds charged to layer critical paths.
+    pub offload_stall_ms: f64,
+    /// p99 of the per-layer fetch stall (ms).
+    pub offload_stall_p99_ms: f64,
+    /// Expert-weight residency per tier (GB·s over the run).
+    pub hbm_residency_gb_s: f64,
+    pub dram_residency_gb_s: f64,
+    pub nvme_residency_gb_s: f64,
 }
 
 impl RunReport {
@@ -515,6 +530,35 @@ impl RunReport {
         )
     }
 
+    /// Fraction of served expert fetches the predictor covered (1.0 when
+    /// nothing was fetched — no offloading, or everything stayed warm).
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        let total = self.prefetch_hits + self.prefetch_misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.prefetch_hits as f64 / total as f64
+        }
+    }
+
+    /// One-line expert-offloading summary: prefetch coverage, the stall
+    /// landing on layer critical paths, and the per-tier residency bill.
+    pub fn offload_line(&self) -> String {
+        format!(
+            "off policy={:<16} hits={} misses={} hit_rate={:.3} stall={:.1}ms \
+             stall_p99={:.2}ms | residency hbm={:.1}GBs dram={:.1}GBs nvme={:.1}GBs",
+            self.policy,
+            self.prefetch_hits,
+            self.prefetch_misses,
+            self.prefetch_hit_rate(),
+            self.offload_stall_ms,
+            self.offload_stall_p99_ms,
+            self.hbm_residency_gb_s,
+            self.dram_residency_gb_s,
+            self.nvme_residency_gb_s,
+        )
+    }
+
     /// Simulated serving throughput (tokens per simulated second).
     pub fn tokens_per_s(&self) -> f64 {
         if self.sim_duration_s > 0.0 {
@@ -644,6 +688,29 @@ mod tests {
         let empty = RunReport::default();
         assert_eq!(empty.cold_p99_ms(), 0.0);
         assert_eq!(empty.lanes_goodput_rps(), 0.0);
+    }
+
+    #[test]
+    fn offload_signals_summarized() {
+        let r = RunReport {
+            policy: "x".into(),
+            prefetch_hits: 90,
+            prefetch_misses: 10,
+            offload_stall_ms: 420.5,
+            offload_stall_p99_ms: 12.25,
+            hbm_residency_gb_s: 5.0,
+            dram_residency_gb_s: 20.0,
+            nvme_residency_gb_s: 60.0,
+            ..Default::default()
+        };
+        assert!((r.prefetch_hit_rate() - 0.9).abs() < 1e-12);
+        let line = r.offload_line();
+        assert!(line.contains("hits=90") && line.contains("misses=10"), "{line}");
+        assert!(line.contains("stall=420.5ms"), "{line}");
+        // No offloading: hit rate degrades to 1.0, fields stay zero.
+        let empty = RunReport::default();
+        assert_eq!(empty.prefetch_hit_rate(), 1.0);
+        assert_eq!(empty.offload_stall_ms, 0.0);
     }
 
     #[test]

@@ -203,6 +203,9 @@ pub struct HistoricalPredictor {
     /// Per layer: ring of (time, loads).
     history: Vec<Vec<(f64, Vec<f64>)>>,
     n_experts: usize,
+    /// Reused by `predict` so the per-layer hot path does not allocate a
+    /// fresh average vector every layer of every iteration.
+    avg_scratch: Vec<f64>,
 }
 
 impl HistoricalPredictor {
@@ -211,30 +214,39 @@ impl HistoricalPredictor {
             window_s,
             history: vec![Vec::new(); n_layers],
             n_experts,
+            avg_scratch: Vec::new(),
         }
     }
 
     pub fn average(&self, layer: usize, now_s: f64) -> Vec<f64> {
-        let mut sum = vec![0.0; self.n_experts];
+        let mut out = Vec::new();
+        self.average_into(layer, now_s, &mut out);
+        out
+    }
+
+    /// Allocation-free [`HistoricalPredictor::average`]: fills `out`
+    /// (cleared and resized to `n_experts`) with the windowed mean.
+    pub fn average_into(&self, layer: usize, now_s: f64, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.n_experts, 0.0);
         // Out-of-range layers (callers probing beyond the model depth)
         // yield the empty-history shape instead of panicking.
         let Some(h) = self.history.get(layer) else {
-            return sum;
+            return;
         };
         let mut count = 0usize;
         for (t, loads) in h.iter().rev() {
             if now_s - t > self.window_s {
                 break;
             }
-            for (s, &w) in sum.iter_mut().zip(loads) {
+            for (s, &w) in out.iter_mut().zip(loads) {
                 *s += w;
             }
             count += 1;
         }
         if count > 0 {
-            sum.iter_mut().for_each(|s| *s /= count as f64);
+            out.iter_mut().for_each(|s| *s /= count as f64);
         }
-        sum
     }
 }
 
@@ -250,7 +262,10 @@ impl LoadPredictor for HistoricalPredictor {
         actual_future: &[f64],
         now_s: f64,
     ) -> Prediction {
-        let avg = self.average(layer, now_s);
+        // Scratch-buffer hot path: the windowed average lands in the
+        // reused buffer, and only the returned `loads` Vec is allocated.
+        let mut avg = std::mem::take(&mut self.avg_scratch);
+        self.average_into(layer, now_s, &mut avg);
         // Scale the historical shape to the current batch volume (EPLB
         // knows the incoming token count, not its routing).
         let total_now: f64 = actual_future.iter().sum();
@@ -260,6 +275,7 @@ impl LoadPredictor for HistoricalPredictor {
         } else {
             vec![total_now / self.n_experts as f64; self.n_experts]
         };
+        self.avg_scratch = avg;
         let acc = accuracy::topk_overlap(&loads, actual_future, 2);
         Prediction { loads, accuracy: acc }
     }
@@ -419,6 +435,22 @@ mod tests {
         // Shape from history (80/20), volume from the batch (100).
         assert!((p.loads[0] - 80.0).abs() < 1e-9);
         assert!((p.loads[1] - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn average_into_matches_average() {
+        // The scratch-buffer variant is the hot path; the allocating
+        // `average` delegates to it, and a dirty oversized buffer must not
+        // leak stale entries into the result.
+        let mut h = HistoricalPredictor::new(2, 4, 10.0);
+        h.observe(0, &[10.0, 0.0, 4.0, 0.0], 0.0);
+        h.observe(0, &[0.0, 10.0, 4.0, 0.0], 5.0);
+        for (layer, now) in [(0usize, 6.0), (0, 20.0), (1, 6.0), (7, 6.0)] {
+            let mut buf = vec![99.0; 16];
+            h.average_into(layer, now, &mut buf);
+            assert_eq!(buf, h.average(layer, now), "layer {layer} now {now}");
+            assert_eq!(buf.len(), 4);
+        }
     }
 
     #[test]

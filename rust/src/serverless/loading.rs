@@ -50,27 +50,30 @@ pub fn cold_start_s(model_gb: f64, tier: Tier, gpu: &GpuSpec) -> f64 {
     }
 }
 
-/// One LRU-by-bytes cache of model checkpoints (a device's HBM, or the
-/// node's DRAM tier). Recency lives in `by_stamp`: the first key whose
-/// model is unpinned is the LRU victim.
+/// One LRU-by-bytes cache of checkpoints or expert shards (a device's
+/// HBM, or the node's DRAM tier). Recency lives in `by_stamp`: the first
+/// key whose entry is unpinned is the LRU victim. The key is an opaque
+/// `u32` — the model-level [`WarmStore`] uses model ids, the per-expert
+/// [`super::offload::ExpertStore`] packs `(layer, expert)` pairs — the
+/// ledger itself is agnostic.
 #[derive(Clone, Debug, Default)]
-struct DeviceCache {
-    capacity_gb: f64,
-    used_gb: f64,
-    /// `(last-use stamp, model) → resident GB`, ascending stamp = LRU→MRU.
+pub(crate) struct DeviceCache {
+    pub(crate) capacity_gb: f64,
+    pub(crate) used_gb: f64,
+    /// `(last-use stamp, key) → resident GB`, ascending stamp = LRU→MRU.
     by_stamp: BTreeMap<(u64, u32), f64>,
-    /// Current stamp per resident model (the `by_stamp` back-pointer).
+    /// Current stamp per resident key (the `by_stamp` back-pointer).
     stamp_of: BTreeMap<u32, u64>,
-    /// Pin counts: a pinned model is never evicted (it is serving).
+    /// Pin counts: a pinned entry is never evicted (it is serving).
     pins: BTreeMap<u32, u32>,
 }
 
 impl DeviceCache {
-    fn new(capacity_gb: f64) -> DeviceCache {
+    pub(crate) fn new(capacity_gb: f64) -> DeviceCache {
         DeviceCache { capacity_gb, ..DeviceCache::default() }
     }
 
-    fn contains(&self, model: u32) -> bool {
+    pub(crate) fn contains(&self, model: u32) -> bool {
         self.stamp_of.contains_key(&model)
     }
 
@@ -78,8 +81,8 @@ impl DeviceCache {
         self.pins.get(&model).copied().unwrap_or(0) > 0
     }
 
-    /// Move a resident model to the MRU position. No-op if absent.
-    fn touch(&mut self, model: u32, stamp: u64) {
+    /// Move a resident entry to the MRU position. No-op if absent.
+    pub(crate) fn touch(&mut self, model: u32, stamp: u64) {
         let Some(&old) = self.stamp_of.get(&model) else { return };
         if let Some(gb) = self.by_stamp.remove(&(old, model)) {
             self.by_stamp.insert((stamp, model), gb);
@@ -90,7 +93,22 @@ impl DeviceCache {
     /// Admit `model` at `gb` bytes, evicting LRU unpinned residents as
     /// needed. Returns false — state untouched — when even evicting every
     /// unpinned resident can't make room.
-    fn admit(&mut self, model: u32, gb: f64, stamp: u64) -> bool {
+    pub(crate) fn admit(&mut self, model: u32, gb: f64, stamp: u64) -> bool {
+        self.admit_with(model, gb, stamp, |_| {})
+    }
+
+    /// [`DeviceCache::admit`] with an observer: `on_evict(key)` fires once
+    /// per victim, after its bytes are released. The expert store uses it
+    /// to invalidate fetch-completion bookkeeping for evicted shards; the
+    /// plain `admit` delegates here with a no-op closure, so model-level
+    /// behavior is bit-identical to the pre-callback ledger.
+    pub(crate) fn admit_with(
+        &mut self,
+        model: u32,
+        gb: f64,
+        stamp: u64,
+        mut on_evict: impl FnMut(u32),
+    ) -> bool {
         if self.contains(model) {
             self.touch(model, stamp);
             return true;
@@ -111,7 +129,10 @@ impl DeviceCache {
                 .find(|(_, m)| !self.pinned(*m))
                 .copied();
             match victim {
-                Some(key) => self.remove_entry(key),
+                Some(key) => {
+                    self.remove_entry(key);
+                    on_evict(key.1);
+                }
                 // Unreachable given the evictable check above; refuse
                 // rather than overflow if float drift ever disagrees.
                 None => return false,
@@ -130,17 +151,17 @@ impl DeviceCache {
         }
     }
 
-    fn evict(&mut self, model: u32) {
+    pub(crate) fn evict(&mut self, model: u32) {
         if let Some(&stamp) = self.stamp_of.get(&model) {
             self.remove_entry((stamp, model));
         }
     }
 
-    fn pin(&mut self, model: u32) {
+    pub(crate) fn pin(&mut self, model: u32) {
         *self.pins.entry(model).or_insert(0) += 1;
     }
 
-    fn unpin(&mut self, model: u32) {
+    pub(crate) fn unpin(&mut self, model: u32) {
         if let Some(c) = self.pins.get_mut(&model) {
             *c = c.saturating_sub(1);
             if *c == 0 {
@@ -309,6 +330,39 @@ mod tests {
         s.unpin(0, 1);
         assert!(s.admit(0, 5, 4.0));
         assert!(!s.is_warm(0, 1));
+    }
+
+    #[test]
+    fn admit_with_noop_observer_is_bit_identical_to_admit() {
+        // The satellite-2 pin: threading the eviction observer through
+        // `admit` must not perturb model-level ledger behavior. Replay the
+        // same mixed admit/touch/pin script against two caches — one via
+        // `admit`, one via `admit_with(no-op)` — and require identical
+        // outcomes and identical final state.
+        let mut a = DeviceCache::new(10.0);
+        let mut b = DeviceCache::new(10.0);
+        let script: &[(u32, f64)] = &[(1, 4.0), (2, 4.0), (3, 4.0), (1, 4.0), (4, 9.0), (5, 2.0)];
+        for (step, &(key, gb)) in script.iter().enumerate() {
+            let stamp = step as u64 + 1;
+            if step == 3 {
+                a.pin(2);
+                b.pin(2);
+            }
+            let ra = a.admit(key, gb, stamp);
+            let rb = b.admit_with(key, gb, stamp, |_| {});
+            assert_eq!(ra, rb, "step {step} diverged");
+        }
+        assert_eq!(a.used_gb.to_bits(), b.used_gb.to_bits());
+        for key in 1..=5u32 {
+            assert_eq!(a.contains(key), b.contains(key), "residency diverged for {key}");
+        }
+        // And the observer actually reports victims, in LRU order.
+        let mut c = DeviceCache::new(8.0);
+        assert!(c.admit(1, 4.0, 1));
+        assert!(c.admit(2, 4.0, 2));
+        let mut evicted = Vec::new();
+        assert!(c.admit_with(3, 8.0, 3, |k| evicted.push(k)));
+        assert_eq!(evicted, vec![1, 2]);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! the per-layer critical path and run O(replicas), allocation-free.
 
 pub mod loading;
+pub mod offload;
 
 use crate::cluster::Cluster;
 

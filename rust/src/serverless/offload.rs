@@ -1,0 +1,413 @@
+//! Expert-offloading memory hierarchy with predictor-driven prefetch.
+//!
+//! fMoE's observation (PAPERS.md): most experts are cold most of the
+//! time, so a fleet whose HBM cannot hold the full expert set can still
+//! serve the model by keeping cold experts in host DRAM / NVMe and
+//! prefetching the ones the layer-aware predictor expects — exactly the
+//! signal MoEless's §4 predictors already produce. ProMoE shows the
+//! fetch latency hides behind earlier-layer compute when the prediction
+//! is right; when it is wrong (or bandwidth saturates) the demand fetch
+//! serializes into the layer's critical path as a *miss-stall*.
+//!
+//! [`ExpertStore`] is that hierarchy for one served model:
+//!
+//! * **Tiers** — per-device HBM shards (capacity = the configured
+//!   fraction of the expert set, split by device memory share), one
+//!   node-wide DRAM staging cache (`ClusterSpec::dram_cache_gb`), and
+//!   NVMe as the infinite backing tier. Transfer times come from the
+//!   same [`super::loading::cold_start_s`] closed form the model-level
+//!   loader uses (satellite dedup: one `Tier` enum, one cost helper),
+//!   over the `dram_gbps`/`nvme_gbps` bandwidths in [`GpuSpec`].
+//! * **LRU-by-bytes eviction** — each tier is a
+//!   [`super::loading::DeviceCache`] keyed by the packed
+//!   `(layer, expert)` id, with pinning so a layer's serving shards are
+//!   never their own victims. NVMe fetches stage a copy through the
+//!   DRAM cache (the implicit demotion path: an HBM eviction falls back
+//!   to DRAM for as long as the staging cache retains the shard).
+//! * **Modeled prefetch** — the sim clock does not advance between the
+//!   layers of one iteration, so overlap is modeled with a virtual
+//!   intra-iteration clock the policy maintains: a predicted expert's
+//!   fetch is treated as issued `K` layers of forward time before the
+//!   layer starts; an unpredicted one is demand-fetched at layer start.
+//!   A per-device transfer engine serializes fetches (bandwidth
+//!   saturation), and whatever completes after layer start is the
+//!   layer's stall. With [`crate::predictor::OraclePredictor`] the
+//!   prediction support equals the served set, so misses are zero by
+//!   construction (the pinned regression).
+//!
+//! Hot-path discipline (P1/D1/D2-linted like the batcher and the model
+//! loader): `BTreeMap` recency and completion ledgers, no hash
+//! iteration, no wall clock, no positional `Vec` surgery.
+
+use std::collections::BTreeMap;
+
+use crate::config::{ClusterSpec, GpuSpec, ModelSpec, MoelessParams};
+use crate::serverless::loading::{cold_start_s, DeviceCache, Tier};
+use crate::util::stats::QuantileSketch;
+
+/// Pack a `(layer, expert)` pair into the `u32` key space the LRU ledger
+/// speaks. Layers and experts are both far below 2^16 in every model
+/// spec the repo ships.
+#[inline]
+pub fn expert_key(layer: usize, expert: usize) -> u32 {
+    ((layer as u32) << 16) | (expert as u32 & 0xffff)
+}
+
+/// Prefetch/stall accounting for one run (harvested into `RunReport`).
+#[derive(Clone, Debug, Default)]
+pub struct OffloadStats {
+    /// Served (layer, expert, device) triples covered by the predictor:
+    /// resident already, or prefetched ahead of the layer.
+    pub prefetch_hits: u64,
+    /// Served triples the predictor missed — demand-fetched at layer
+    /// start, serialized into the critical path.
+    pub prefetch_misses: u64,
+    /// Total miss-stall milliseconds charged to layer critical paths
+    /// (demand fetches plus late prefetches under bandwidth saturation).
+    pub stall_ms: f64,
+    /// Per-layer stall distribution (ms) — the p99 the report prints.
+    pub stall_sketch: QuantileSketch,
+    /// GB·s of expert bytes resident per tier (the residency bill).
+    pub hbm_gb_s: f64,
+    pub dram_gb_s: f64,
+    pub nvme_gb_s: f64,
+}
+
+/// The per-(layer, expert, device) residency hierarchy for one model.
+#[derive(Clone, Debug)]
+pub struct ExpertStore {
+    /// Bytes of one expert shard.
+    expert_gb: f64,
+    /// Full expert set size (the NVMe backing-tier residency base).
+    set_gb: f64,
+    /// Prefetch lookahead K (layers of forward time the policy overlaps).
+    pub lookahead: usize,
+    /// Ablation: treat every fetch as a demand fetch at layer start.
+    pub demand_fetch: bool,
+    /// Per-device HBM expert shards.
+    hbm: Vec<DeviceCache>,
+    /// Node-wide DRAM staging cache (shared across devices).
+    dram: DeviceCache,
+    gpus: Vec<GpuSpec>,
+    /// Per-device transfer engine: the instant its PCIe/NVMe path frees.
+    engine_free_s: Vec<f64>,
+    /// `(key, gpu) → fetch completion instant` for HBM-resident shards.
+    ready_s: BTreeMap<(u32, u32), f64>,
+    /// Global LRU recency stamp (total order, deterministic).
+    stamp: u64,
+    /// Residency-integral cursor.
+    last_accrue_s: f64,
+    pub stats: OffloadStats,
+}
+
+impl ExpertStore {
+    /// Capacities from the cluster: each device's expert-HBM shard is the
+    /// configured fraction of the full expert set, split by the device's
+    /// share of fleet memory (capped at the device's own HBM); DRAM
+    /// staging uses the node checkpoint cache; NVMe holds everything.
+    pub fn new(model: &ModelSpec, spec: &ClusterSpec, params: &MoelessParams) -> ExpertStore {
+        let set_gb = model.full_expert_set_gb();
+        let total_mem: f64 = spec.gpus.iter().map(|g| g.mem_gb).sum();
+        let hbm = spec
+            .gpus
+            .iter()
+            .map(|g| {
+                let share = if total_mem > 0.0 { g.mem_gb / total_mem } else { 0.0 };
+                DeviceCache::new((params.expert_hbm_frac * set_gb * share).min(g.mem_gb))
+            })
+            .collect();
+        ExpertStore {
+            expert_gb: model.expert_mem_gb,
+            set_gb,
+            lookahead: params.prefetch_lookahead,
+            demand_fetch: params.demand_fetch,
+            hbm,
+            dram: DeviceCache::new(spec.dram_cache_gb),
+            gpus: spec.gpus.clone(),
+            engine_free_s: vec![0.0; spec.gpus.len()],
+            ready_s: BTreeMap::new(),
+            stamp: 0,
+            last_accrue_s: 0.0,
+            stats: OffloadStats::default(),
+        }
+    }
+
+    /// Accrue per-tier residency GB·s up to `now_s`. Called at each layer
+    /// serve and once more at run teardown; idempotent for a fixed time.
+    pub fn advance(&mut self, now_s: f64) {
+        let dt = now_s - self.last_accrue_s;
+        if dt > 0.0 {
+            let hbm_used: f64 = self.hbm.iter().map(|d| d.used_gb).sum();
+            self.stats.hbm_gb_s += hbm_used * dt;
+            self.stats.dram_gb_s += self.dram.used_gb * dt;
+            self.stats.nvme_gb_s += (self.set_gb - self.dram.used_gb).max(0.0) * dt;
+            self.last_accrue_s = now_s;
+        }
+    }
+
+    /// Append (ascending, deduped against `out`) the devices already
+    /// holding `(layer, expert)` in expert HBM — the placement-locality
+    /// signal: a device with the weights resident skips the fetch.
+    pub fn hbm_gpus_into(&self, layer: usize, expert: usize, out: &mut Vec<usize>) {
+        let key = expert_key(layer, expert);
+        for (g, d) in self.hbm.iter().enumerate() {
+            if d.contains(key) && !out.contains(&g) {
+                out.push(g);
+            }
+        }
+    }
+
+    /// True when `(layer, expert)` is resident in `gpu`'s expert HBM.
+    pub fn is_resident(&self, layer: usize, expert: usize, gpu: usize) -> bool {
+        self.hbm.get(gpu).map(|d| d.contains(expert_key(layer, expert))).unwrap_or(false)
+    }
+
+    pub fn hbm_capacity_gb(&self, gpu: usize) -> f64 {
+        self.hbm.get(gpu).map(|d| d.capacity_gb).unwrap_or(0.0)
+    }
+
+    pub fn hbm_used_gb(&self, gpu: usize) -> f64 {
+        self.hbm.get(gpu).map(|d| d.used_gb).unwrap_or(0.0)
+    }
+
+    pub fn dram_used_gb(&self) -> f64 {
+        self.dram.used_gb
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.hbm.len()
+    }
+
+    /// Serve one layer: ensure every `(expert, gpu)` pair's shard reaches
+    /// device HBM, return the stall (ms) landing on the layer's critical
+    /// path. `prefetched[i]` marks pairs the predictor covered — their
+    /// fetches are modeled as issued at `issue_s` (K layers of forward
+    /// time ago); uncovered pairs demand-fetch at `vnow_s` (layer start).
+    /// Pairs must be unique; shards fetched for this layer are pinned for
+    /// the duration of the call so they never evict each other.
+    pub fn serve(
+        &mut self,
+        layer: usize,
+        pairs: &[(usize, usize)],
+        prefetched: &[bool],
+        issue_s: f64,
+        vnow_s: f64,
+    ) -> f64 {
+        self.advance(vnow_s);
+        let mut max_stall_s = 0.0_f64;
+        let mut pinned: Vec<(u32, usize)> = Vec::with_capacity(pairs.len());
+        for (i, &(expert, gpu)) in pairs.iter().enumerate() {
+            if gpu >= self.hbm.len() {
+                continue;
+            }
+            let key = expert_key(layer, expert);
+            let covered = prefetched.get(i).copied().unwrap_or(false) && !self.demand_fetch;
+            let start_s = if covered { issue_s.min(vnow_s) } else { vnow_s };
+            let (done_s, resident) = self.fetch(key, gpu, start_s);
+            if resident {
+                self.hbm[gpu].pin(key);
+                pinned.push((key, gpu));
+            }
+            let stall_s = (done_s - vnow_s).max(0.0);
+            if stall_s > max_stall_s {
+                max_stall_s = stall_s;
+            }
+            if covered {
+                self.stats.prefetch_hits += 1;
+            } else {
+                self.stats.prefetch_misses += 1;
+            }
+        }
+        for (key, gpu) in pinned {
+            self.hbm[gpu].unpin(key);
+        }
+        let stall_ms = max_stall_s * 1e3;
+        self.stats.stall_ms += stall_ms;
+        self.stats.stall_sketch.add(stall_ms);
+        stall_ms
+    }
+
+    /// Bring `key` into `gpu`'s expert HBM with a transfer starting no
+    /// earlier than `start_s`, serialized behind the device's in-flight
+    /// transfers. Returns `(completion instant, admitted)`; a refused
+    /// admission (capacity smaller than one shard, or everything pinned)
+    /// still pays the transfer — the shard streams through without
+    /// becoming resident.
+    fn fetch(&mut self, key: u32, gpu: usize, start_s: f64) -> (f64, bool) {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        if self.hbm[gpu].contains(key) {
+            self.hbm[gpu].touch(key, stamp);
+            // A still-in-flight prefetch bounds availability; a settled
+            // resident is free.
+            let done = self.ready_s.get(&(key, gpu as u32)).copied().unwrap_or(start_s);
+            return (done.max(start_s), true);
+        }
+        let tier = if self.dram.contains(key) { Tier::Dram } else { Tier::Nvme };
+        let transfer_s = cold_start_s(self.expert_gb, tier, &self.gpus[gpu]);
+        let begin = start_s.max(self.engine_free_s[gpu]);
+        let done = begin + transfer_s;
+        self.engine_free_s[gpu] = done;
+        if matches!(tier, Tier::Nvme) {
+            // NVMe reads stage through the DRAM cache (best effort): the
+            // demotion path for future HBM evictions of this shard.
+            self.dram.admit(key, self.expert_gb, stamp);
+        } else {
+            self.dram.touch(key, stamp);
+        }
+        let ready = &mut self.ready_s;
+        let gpu_u32 = gpu as u32;
+        let admitted = self.hbm[gpu].admit_with(key, self.expert_gb, stamp, |victim| {
+            ready.remove(&(victim, gpu_u32));
+        });
+        if admitted {
+            self.ready_s.insert((key, gpu_u32), done);
+        }
+        (done, admitted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mixtral() -> ModelSpec {
+        ModelSpec::mixtral_8x7b()
+    }
+
+    fn store(frac: f64) -> ExpertStore {
+        let spec = ClusterSpec::uniform(2, GpuSpec::a6000());
+        let params = MoelessParams { expert_hbm_frac: frac, ..Default::default() };
+        ExpertStore::new(&mixtral(), &spec, &params)
+    }
+
+    #[test]
+    fn capacities_split_by_memory_share_and_cap_at_device_hbm() {
+        let s = store(0.5);
+        let set = mixtral().full_expert_set_gb();
+        // Two identical devices: each holds half of the 50% HBM budget.
+        assert!((s.hbm_capacity_gb(0) - 0.5 * set / 2.0).abs() < 1e-9);
+        assert!((s.hbm_capacity_gb(0) - s.hbm_capacity_gb(1)).abs() < 1e-12);
+        // frac 1.0 wants the whole set per its share but clamps at mem_gb.
+        let full = store(1.0);
+        assert!(full.hbm_capacity_gb(0) <= GpuSpec::a6000().mem_gb + 1e-9);
+    }
+
+    #[test]
+    fn resident_shards_serve_with_zero_stall() {
+        let mut s = store(0.5);
+        let pairs = [(0usize, 0usize), (1, 0)];
+        // First serve demand-fetches both shards (nothing resident).
+        let stall = s.serve(0, &pairs, &[false, false], 0.0, 0.0);
+        assert!(stall > 0.0, "cold shards must stall a demand fetch");
+        assert_eq!(s.stats.prefetch_misses, 2);
+        // Second serve at a later instant: both resident, zero stall.
+        let stall = s.serve(0, &pairs, &[true, true], 5.0, 10.0);
+        assert_eq!(stall, 0.0);
+        assert_eq!(s.stats.prefetch_hits, 2);
+        assert!(s.is_resident(0, 0, 0) && s.is_resident(0, 1, 0));
+    }
+
+    #[test]
+    fn covered_fetches_with_enough_lookahead_and_bandwidth_never_stall() {
+        // The Oracle shape: every pair covered, issue far enough ahead of
+        // layer start that the staged NVMe transfer lands in time.
+        let mut s = store(0.5);
+        let pairs = [(0usize, 0usize), (1, 0), (2, 1)];
+        let stall = s.serve(3, &pairs, &[true, true, true], 0.0, 100.0);
+        assert_eq!(stall, 0.0, "prefetch with slack must be stall-free");
+        assert_eq!(s.stats.prefetch_hits, 3);
+        assert_eq!(s.stats.prefetch_misses, 0);
+        assert_eq!(s.stats.stall_sketch.p(99.0), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_saturation_stalls_even_covered_prefetches() {
+        // Two shards, one transfer engine, issue == layer start: the
+        // second transfer queues behind the first and completes late.
+        let mut s = store(0.5);
+        let pairs = [(0usize, 0usize), (1, 0)];
+        let stall = s.serve(0, &pairs, &[true, true], 0.0, 0.0);
+        let g = GpuSpec::a6000();
+        let one = cold_start_s(mixtral().expert_mem_gb, Tier::Nvme, &g);
+        assert!((stall / 1e3 - 2.0 * one).abs() < 1e-9, "stall {stall}ms vs 2×{one}s");
+        // Covered pairs count as hits even when the engine saturates —
+        // the stall is a bandwidth artifact, not a prediction miss.
+        assert_eq!((s.stats.prefetch_hits, s.stats.prefetch_misses), (2, 0));
+    }
+
+    #[test]
+    fn nvme_fetches_stage_through_dram_and_refetch_rides_the_faster_tier() {
+        let mut s = store(0.05); // tiny HBM: constant eviction churn
+        let g = GpuSpec::a6000();
+        let gb = mixtral().expert_mem_gb;
+        // Fill device 0's shard cache far past capacity so early keys fall
+        // out of HBM — but their staged DRAM copies survive.
+        let cap = s.hbm_capacity_gb(0);
+        let n = (cap / gb) as usize + 3;
+        for e in 0..n {
+            let pairs = [(e, 0usize)];
+            s.serve(0, &pairs, &[false], 0.0, 0.0);
+        }
+        assert!(s.hbm_used_gb(0) <= cap + 1e-9, "HBM oversubscribed");
+        assert!(!s.is_resident(0, 0, 0), "oldest shard must have evicted");
+        assert!(s.dram_used_gb() > 0.0, "NVMe fetches must stage into DRAM");
+        // Re-fetch of the evicted shard now starts from DRAM: cheaper by
+        // exactly the NVMe stage.
+        let free_before = s.engine_free_s[0];
+        let pairs = [(0usize, 0usize)];
+        s.serve(0, &pairs, &[false], 0.0, free_before);
+        let paid = s.engine_free_s[0] - free_before;
+        assert!((paid - cold_start_s(gb, Tier::Dram, &g)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admission_refusal_streams_without_residency() {
+        // A store whose per-device shard is smaller than one expert can
+        // never admit — every serve pays the transfer, nothing sticks.
+        let mut spec = ClusterSpec::uniform(1, GpuSpec::a6000());
+        spec.dram_cache_gb = 0.0;
+        let params = MoelessParams { expert_hbm_frac: 1e-6, ..Default::default() };
+        let mut s = ExpertStore::new(&mixtral(), &spec, &params);
+        let pairs = [(0usize, 0usize)];
+        let first = s.serve(0, &pairs, &[false], 0.0, 0.0);
+        assert!(first > 0.0);
+        assert!(!s.is_resident(0, 0, 0));
+        let second = s.serve(0, &pairs, &[false], 0.0, 0.0);
+        assert!(second > 0.0, "refused admission must keep paying the fetch");
+        assert!(s.hbm_used_gb(0) <= s.hbm_capacity_gb(0) + 1e-9);
+    }
+
+    #[test]
+    fn residency_integral_accrues_per_tier() {
+        let mut s = store(0.5);
+        let pairs = [(0usize, 0usize)];
+        s.serve(0, &pairs, &[false], 0.0, 0.0);
+        s.advance(10.0);
+        let gb = mixtral().expert_mem_gb;
+        assert!((s.stats.hbm_gb_s - gb * 10.0).abs() < 1e-9);
+        assert!((s.stats.dram_gb_s - gb * 10.0).abs() < 1e-9);
+        let set = mixtral().full_expert_set_gb();
+        assert!((s.stats.nvme_gb_s - (set - gb) * 10.0).abs() < 1e-6);
+        // Idempotent at a fixed instant; never accrues backwards.
+        let snap = s.stats.hbm_gb_s;
+        s.advance(10.0);
+        s.advance(5.0);
+        assert_eq!(s.stats.hbm_gb_s, snap);
+    }
+
+    #[test]
+    fn placement_signal_lists_resident_devices_once() {
+        let mut s = store(0.5);
+        s.serve(2, &[(4, 1)], &[false], 0.0, 0.0);
+        let mut out = vec![1usize];
+        s.hbm_gpus_into(2, 4, &mut out);
+        assert_eq!(out, vec![1], "already-listed device must not duplicate");
+        out.clear();
+        s.hbm_gpus_into(2, 4, &mut out);
+        assert_eq!(out, vec![1]);
+        out.clear();
+        s.hbm_gpus_into(2, 5, &mut out);
+        assert!(out.is_empty());
+    }
+}

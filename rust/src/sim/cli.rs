@@ -47,6 +47,18 @@ pub fn replay(args: &Args) -> anyhow::Result<()> {
     cfg.params.cv_threshold = args.f64("cv", 0.2);
     cfg.params.keep_alive_s = args.f64("keep-alive", 10.0);
     cfg.autotune = args.flag("autotune");
+    // Expert offloading: `--expert-hbm-frac 0.5` caps the fleet's expert
+    // HBM at half the model's expert set (cold experts spill to DRAM/NVMe
+    // with predictor-driven prefetch); `--prefetch-lookahead K` overlaps
+    // each predicted fetch with up to K earlier layers' compute;
+    // `--demand-fetch` ablates the predictor and fetches everything on
+    // demand at layer start. 1.0 (the default) disables the hierarchy.
+    cfg.params.expert_hbm_frac = args.f64("expert-hbm-frac", 1.0);
+    if !(cfg.params.expert_hbm_frac > 0.0 && cfg.params.expert_hbm_frac <= 1.0) {
+        bail!("--expert-hbm-frac expects a fraction in (0, 1]");
+    }
+    cfg.params.prefetch_lookahead = args.usize("prefetch-lookahead", 2);
+    cfg.params.demand_fetch = args.flag("demand-fetch");
     // KV-cache admission control: `--kv-frac 0.5` halves the derived
     // budget, `--kv-frac inf` disables gating, `--kv-budget-gb` overrides
     // it outright; `--max-batch-tokens` caps per-iteration admission.
@@ -152,6 +164,9 @@ pub fn replay(args: &Args) -> anyhow::Result<()> {
     println!("{}", report.pressure_line());
     println!("{}", report.phase_line());
     println!("{}", report.gpu_line());
+    if cfg.params.expert_hbm_frac < 1.0 {
+        println!("{}", report.offload_line());
+    }
     if args.flag("cdf") {
         let lat = report.layer_latency();
         for q in [1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {

@@ -266,6 +266,21 @@ impl Pool {
     }
 }
 
+/// Fold one pool's expert-offloading accounting into the report. Sums are
+/// additive across pools (a disaggregated run fetches in both); the p99
+/// stall takes the worse pool's tail. No-op — report fields stay at their
+/// zero defaults — for policies without a store (offloading disabled).
+fn harvest_offload(policy: &dyn Policy, report: &mut RunReport) {
+    let Some(stats) = policy.offload_stats() else { return };
+    report.prefetch_hits += stats.prefetch_hits;
+    report.prefetch_misses += stats.prefetch_misses;
+    report.offload_stall_ms += stats.stall_ms;
+    report.offload_stall_p99_ms = report.offload_stall_p99_ms.max(stats.stall_sketch.p(99.0));
+    report.hbm_residency_gb_s += stats.hbm_gb_s;
+    report.dram_residency_gb_s += stats.dram_gb_s;
+    report.nvme_residency_gb_s += stats.nvme_gb_s;
+}
+
 /// The serverless dollar bill of one pool: each device's keep-alive
 /// residency (GB·s) as a fraction of that device's memory, priced at the
 /// device's own `cost_per_hour` — pay-as-you-go on the hardware actually
@@ -721,6 +736,7 @@ impl<'a> SimState<'a> {
         self.report.warm_fraction = self.main_pool.policy.warm_fraction();
         self.report.dollar_cost +=
             bill_serverless_dollars(self.main_pool.policy.as_ref(), &self.main_pool.cluster.spec);
+        harvest_offload(self.main_pool.policy.as_ref(), &mut self.report);
         if let Some(dec) = self.decode_pool.as_mut() {
             dec.policy.finish(&mut dec.cluster, clock);
             self.report.residency_gb_s += dec.policy.residency_gb_s();
@@ -728,6 +744,7 @@ impl<'a> SimState<'a> {
                 0.5 * (self.report.warm_fraction + dec.policy.warm_fraction());
             self.report.dollar_cost +=
                 bill_serverless_dollars(dec.policy.as_ref(), &dec.cluster.spec);
+            harvest_offload(dec.policy.as_ref(), &mut self.report);
             if clock > 0.0 {
                 self.report.prefill_pool_util = self.main_pool.busy_s / clock;
                 self.report.decode_pool_util = dec.busy_s / clock;

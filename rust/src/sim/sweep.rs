@@ -51,6 +51,17 @@ pub struct SweepSpec {
     /// into O(1) sketches, keeping long sweep cells at O(in-flight)
     /// memory.
     pub stream_records: bool,
+    /// Expert-HBM fraction forwarded to every cell
+    /// ([`crate::config::MoelessParams::expert_hbm_frac`]): 1.0 keeps the
+    /// whole expert set HBM-resident (offloading disabled, bit-for-bit
+    /// with earlier sweeps), below 1.0 spills cold experts to DRAM/NVMe.
+    pub expert_hbm_frac: f64,
+    /// Prefetch lookahead (layers of compute each predicted fetch may
+    /// overlap) forwarded to every cell.
+    pub prefetch_lookahead: usize,
+    /// Demand-fetch ablation forwarded to every cell: ignore the
+    /// predictor and fetch every served expert at layer start.
+    pub demand_fetch: bool,
 }
 
 impl SweepSpec {
@@ -71,6 +82,9 @@ impl SweepSpec {
             disagg: None,
             shard_threads: 1,
             stream_records: false,
+            expert_hbm_frac: 1.0,
+            prefetch_lookahead: 2,
+            demand_fetch: false,
         }
     }
 
@@ -102,6 +116,9 @@ impl SweepSpec {
         cfg.disagg = self.disagg;
         cfg.shard_threads = self.shard_threads.max(1);
         cfg.stream_records = self.stream_records;
+        cfg.params.expert_hbm_frac = self.expert_hbm_frac;
+        cfg.params.prefetch_lookahead = self.prefetch_lookahead;
+        cfg.params.demand_fetch = self.demand_fetch;
         cfg
     }
 }
@@ -490,6 +507,25 @@ mod tests {
         assert!(rows[0].kv_transfer_gb > 0.0);
         assert!(rows[0].chunks_per_req >= 1.0);
         assert!(rows[0].line().contains("kvxfer="), "{}", rows[0].line());
+    }
+
+    #[test]
+    fn offload_knobs_forward_into_cells() {
+        let mut spec = small_spec();
+        spec.threads = 2;
+        spec.policies = vec![PolicyKind::Moeless];
+        spec.scenarios = vec![Scenario::poisson()];
+        spec.seeds = vec![1];
+        spec.expert_hbm_frac = 0.5;
+        spec.prefetch_lookahead = 2;
+        let cells = run_sweep(&spec);
+        for c in &cells {
+            // The residency hierarchy engaged: fetch traffic was counted
+            // and per-tier residency accrued under the halved HBM budget.
+            assert!(c.report.prefetch_hits + c.report.prefetch_misses > 0);
+            assert!(c.report.hbm_residency_gb_s > 0.0);
+            assert!(c.report.nvme_residency_gb_s > 0.0);
+        }
     }
 
     #[test]

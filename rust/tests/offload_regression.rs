@@ -1,0 +1,150 @@
+//! Deterministic regressions for the PR-10 expert-residency hierarchy:
+//! predictor-driven prefetch must beat the demand-fetch ablation on tail
+//! latency whenever expert HBM is oversubscribed, Oracle coverage must be
+//! structurally total, and a disabled hierarchy must leave zero trace in
+//! the report.
+//!
+//! Both duel arms replay the identical seeded trace through the identical
+//! store (residency and eviction decisions depend only on the fetch call
+//! sequence, never on the issue times), so every assertion here is exact
+//! — no tolerance windows, no timing flake.
+
+use moeless::baselines::PolicyKind;
+use moeless::cluster::{Cluster, CostModel};
+use moeless::config::{ClusterSpec, DatasetSpec, ModelSpec, MoelessParams};
+use moeless::engine::{MoelessPolicy, Policy};
+use moeless::metrics::SloSpec;
+use moeless::predictor::OraclePredictor;
+use moeless::sim::{run, SimConfig};
+use moeless::workload::Scenario;
+
+/// The HBM-oversubscribed duel fleet: half the expert set fits in HBM,
+/// the rest spills to DRAM/NVMe.
+fn oversubscribed(demand_fetch: bool) -> SimConfig {
+    let mut cfg = SimConfig::new(
+        ModelSpec::mixtral_8x7b(),
+        DatasetSpec::lmsys(),
+        PolicyKind::Moeless,
+    );
+    cfg.scenario = Scenario::bursty();
+    cfg.duration_s = 15.0;
+    cfg.base_rps = 6.0;
+    cfg.seed = 9;
+    cfg.params.expert_hbm_frac = 0.5;
+    cfg.params.prefetch_lookahead = 2;
+    cfg.params.demand_fetch = demand_fetch;
+    cfg
+}
+
+#[test]
+fn prefetch_beats_demand_fetch_on_p99_ttft_at_equal_goodput() {
+    let pre = run(&oversubscribed(false));
+    let dem = run(&oversubscribed(true));
+
+    // Same trace, same drain: the duel compares fetch disciplines, not
+    // admission behavior.
+    assert_eq!(pre.completed_requests, dem.completed_requests);
+    assert!(pre.completed_requests > 0);
+
+    // Prefetch covered fetches (the predictor's support is live); the
+    // ablation covered none and paid a stall on every non-resident pair.
+    assert!(pre.prefetch_hits > 0, "prefetch arm must cover fetches");
+    assert_eq!(dem.prefetch_hits, 0, "demand arm must cover nothing");
+    assert!(dem.prefetch_misses > 0);
+    assert!(dem.offload_stall_ms > 0.0, "demand fetches land on the critical path");
+
+    // The tentpole claim: overlapping predicted fetches with earlier
+    // layers' compute strictly cuts total stall, and the tail TTFT must
+    // never be worse at equal goodput.
+    assert!(
+        pre.offload_stall_ms < dem.offload_stall_ms,
+        "prefetch stall {:.1}ms must undercut demand stall {:.1}ms",
+        pre.offload_stall_ms,
+        dem.offload_stall_ms,
+    );
+    assert!(
+        pre.ttft_sketch.p(99.0) <= dem.ttft_sketch.p(99.0),
+        "prefetch p99 TTFT {:.1}ms must not exceed demand {:.1}ms",
+        pre.ttft_sketch.p(99.0),
+        dem.ttft_sketch.p(99.0),
+    );
+    let slo = SloSpec::default();
+    assert!(pre.goodput_rps(&slo) >= dem.goodput_rps(&slo));
+
+    // Both arms accrued residency in every tier of the oversubscribed
+    // hierarchy.
+    for r in [&pre, &dem] {
+        assert!(r.hbm_residency_gb_s > 0.0);
+        assert!(r.nvme_residency_gb_s > 0.0);
+    }
+}
+
+#[test]
+fn oracle_prefetch_yields_zero_miss_stalls() {
+    // OraclePredictor's raw prediction equals the actual loads, so the
+    // prefetch support covers every served expert — zero demand fetches,
+    // however tight the HBM capacity. (The sub-threshold 0.3 load draws
+    // no planned replica and is served through repair; it must still be
+    // covered.)
+    let model = ModelSpec::mixtral_8x7b();
+    let spec = ClusterSpec::a6000_x8();
+    let params = MoelessParams { expert_hbm_frac: 0.25, ..Default::default() };
+    let mut p = MoelessPolicy::with_predictor(&model, &spec, params, Box::new(OraclePredictor));
+    let cm = CostModel::new(&model, &spec);
+    let mut cluster = Cluster::new(spec);
+    let loads = vec![500.0, 0.3, 100.0, 100.0, 90.0, 80.0, 70.0, 60.0];
+    for t in 0..6 {
+        for layer in 0..4 {
+            p.run_layer(layer, &loads, &mut cluster, &cm, t as f64);
+        }
+        p.end_iteration(&mut cluster, t as f64);
+    }
+    let stats = p.offload_stats().expect("store must be live at frac 0.25");
+    assert_eq!(stats.prefetch_misses, 0, "oracle coverage must be total");
+    assert!(stats.prefetch_hits > 0);
+}
+
+#[test]
+fn infinite_fetch_bandwidth_eliminates_stalls_exactly() {
+    // With free transfers every fetch completes at its start instant, so
+    // the (done - now).max(0) stall is exactly 0.0 — pins that the store
+    // never manufactures stall out of bookkeeping alone.
+    let model = ModelSpec::mixtral_8x7b();
+    let mut spec = ClusterSpec::a6000_x8();
+    for g in &mut spec.gpus {
+        g.dram_gbps = f64::INFINITY;
+        g.nvme_gbps = f64::INFINITY;
+    }
+    let params = MoelessParams { expert_hbm_frac: 0.25, ..Default::default() };
+    let mut p = MoelessPolicy::with_predictor(&model, &spec, params, Box::new(OraclePredictor));
+    let cm = CostModel::new(&model, &spec);
+    let mut cluster = Cluster::new(spec);
+    let loads = vec![500.0, 200.0, 100.0, 100.0, 90.0, 80.0, 70.0, 60.0];
+    for t in 0..4 {
+        for layer in 0..4 {
+            p.run_layer(layer, &loads, &mut cluster, &cm, t as f64);
+        }
+        p.end_iteration(&mut cluster, t as f64);
+    }
+    let stats = p.offload_stats().expect("store must be live");
+    assert!(stats.prefetch_hits > 0);
+    assert_eq!(stats.stall_ms, 0.0, "free transfers must never stall");
+}
+
+#[test]
+fn disabled_hierarchy_reports_zero_offload_signals() {
+    // expert_hbm_frac = 1.0 (the default) never builds the store: the
+    // run must be the pre-PR-10 path with every offload field at its
+    // zero default.
+    let mut cfg = oversubscribed(false);
+    cfg.params.expert_hbm_frac = 1.0;
+    let r = run(&cfg);
+    assert!(r.completed_requests > 0);
+    assert_eq!(r.prefetch_hits, 0);
+    assert_eq!(r.prefetch_misses, 0);
+    assert_eq!(r.offload_stall_ms, 0.0);
+    assert_eq!(r.offload_stall_p99_ms, 0.0);
+    assert_eq!(r.hbm_residency_gb_s, 0.0);
+    assert_eq!(r.dram_residency_gb_s, 0.0);
+    assert_eq!(r.nvme_residency_gb_s, 0.0);
+}

@@ -7,8 +7,10 @@
 //! the 10⁶-request sparse mega drain and asserts the event driver wins
 //! ≥2×, runs the PR-9 arena duel (SoA arena vs the frozen PR-4 AoS core)
 //! and asserts the arena wins ≥1.5× on the saturated drain, measures the
-//! sequential-vs-sharded end-to-end duel, and records everything to
-//! `BENCH_sim.json` (`moeless.simperf/v3`) at the repository root — so
+//! sequential-vs-sharded end-to-end duel, runs the PR-10 offload duel
+//! (predictor-driven prefetch vs demand fetch on an HBM-oversubscribed
+//! fleet), and records everything to
+//! `BENCH_sim.json` (`moeless.simperf/v4`) at the repository root — so
 //! every tier-1 run leaves a fresh before/after perf record behind.
 //! `cargo run --release -- bench --exp simperf` produces the release
 //! version of the same file (CI uploads it as an artifact); this test's
@@ -98,6 +100,26 @@ fn perf_trajectory_beats_reference_and_records_bench_sim_json() {
         .collect();
     assert!(!shards.is_empty(), "at least one shard-duel scale must run");
 
+    // Offload duel (PR 10): prefetch vs demand fetch on the fleet with
+    // expert HBM capped at half the expert set. Both arms replay the
+    // identical trace; the demand arm must pay fetch stalls (nothing is
+    // overlapped), and prefetch must never stall *more*.
+    let offloads: Vec<_> = ["quick", "medium"]
+        .into_iter()
+        .filter_map(simperf::measure_offload_scale)
+        .collect();
+    assert!(!offloads.is_empty(), "at least one offload-duel scale must run");
+    for o in &offloads {
+        assert!(o.demand.stall_ms > 0.0, "{}: demand fetch must pay stalls", o.scale);
+        assert!(
+            o.prefetch.stall_ms <= o.demand.stall_ms,
+            "{}: prefetch stall {:.1}ms must not exceed demand stall {:.1}ms",
+            o.scale,
+            o.prefetch.stall_ms,
+            o.demand.stall_ms,
+        );
+    }
+
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim.json");
     simperf::write_bench_json(
         &path,
@@ -105,6 +127,7 @@ fn perf_trajectory_beats_reference_and_records_bench_sim_json() {
         &[mega],
         &[soa_quick, soa_saturated, soa_mega],
         &shards,
+        &offloads,
     )
     .unwrap();
     eprintln!(

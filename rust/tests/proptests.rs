@@ -887,3 +887,160 @@ fn prop_warm_ledger_never_oversubscribes_any_device() {
         }
     });
 }
+
+// ---------------------------------------------------------------------------
+// Expert-offloading residency hierarchy (PR 10) invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_expert_store_never_oversubscribes_any_tier() {
+    use moeless::config::{ModelSpec, MoelessParams};
+    use moeless::serverless::offload::ExpertStore;
+    property(120, |g| {
+        let n_gpus = g.usize_in(1, 4);
+        let mut spec = ClusterSpec::a6000_x8().with_n_gpus(n_gpus);
+        spec.dram_cache_gb = g.f64_in(0.0, 8.0);
+        let model = ModelSpec::mixtral_8x7b();
+        let params = MoelessParams {
+            expert_hbm_frac: g.f64_in(0.01, 0.9),
+            prefetch_lookahead: g.usize_in(0, 4),
+            demand_fetch: g.usize_in(0, 1) == 1,
+            ..Default::default()
+        };
+        let mut store = ExpertStore::new(&model, &spec, &params);
+        let mut vnow = 0.0f64;
+        for _ in 0..g.usize_in(1, 60) {
+            vnow += g.f64_in(0.0, 0.5);
+            let layer = g.usize_in(0, model.n_layers - 1);
+            let mut pairs: Vec<(usize, usize)> = Vec::new();
+            let mut covered = Vec::new();
+            for _ in 0..g.usize_in(1, 6) {
+                let pr = (g.usize_in(0, model.n_experts - 1), g.usize_in(0, n_gpus - 1));
+                if !pairs.contains(&pr) {
+                    pairs.push(pr);
+                    covered.push(g.usize_in(0, 1) == 1);
+                }
+            }
+            let issue = vnow - g.f64_in(0.0, 1.0);
+            store.serve(layer, &pairs, &covered, issue, vnow);
+            // The invariant: no tier's ledger ever exceeds its capacity,
+            // whatever the layer/pair/coverage interleaving.
+            for dev in 0..store.n_devices() {
+                assert!(
+                    store.hbm_used_gb(dev) <= store.hbm_capacity_gb(dev) + 1e-9,
+                    "device {dev}: {} GB used of {} GB",
+                    store.hbm_used_gb(dev),
+                    store.hbm_capacity_gb(dev)
+                );
+            }
+            assert!(store.dram_used_gb() <= spec.dram_cache_gb + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_covered_prefetch_with_slack_never_stalls() {
+    // The Oracle-with-headroom property at the store level: when every
+    // pair is predictor-covered and the issue instant leads the layer by
+    // more than the whole run's worst-case serialized transfer time, no
+    // fetch can land on the critical path — the stall is exactly 0.0.
+    use moeless::config::{ModelSpec, MoelessParams};
+    use moeless::serverless::offload::ExpertStore;
+    property(100, |g| {
+        let n_gpus = g.usize_in(1, 4);
+        let spec = ClusterSpec::a6000_x8().with_n_gpus(n_gpus);
+        let model = ModelSpec::mixtral_8x7b();
+        let params = MoelessParams {
+            expert_hbm_frac: g.f64_in(0.05, 0.9),
+            prefetch_lookahead: 2,
+            demand_fetch: false,
+            ..Default::default()
+        };
+        let mut store = ExpertStore::new(&model, &spec, &params);
+        let worst_transfer = spec
+            .gpus
+            .iter()
+            .map(|gp| model.expert_mem_gb / gp.nvme_gbps + model.expert_mem_gb / gp.dram_gbps)
+            .fold(0.0, f64::max);
+        let steps = g.usize_in(1, 40);
+        let slack = worst_transfer * (steps * 6) as f64 + 1.0;
+        let mut vnow = slack;
+        let mut total_stall_ms = 0.0;
+        for _ in 0..steps {
+            vnow += g.f64_in(0.01, 0.5);
+            let layer = g.usize_in(0, model.n_layers - 1);
+            let mut pairs: Vec<(usize, usize)> = Vec::new();
+            for _ in 0..g.usize_in(1, 6) {
+                let pr = (g.usize_in(0, model.n_experts - 1), g.usize_in(0, n_gpus - 1));
+                if !pairs.contains(&pr) {
+                    pairs.push(pr);
+                }
+            }
+            let covered = vec![true; pairs.len()];
+            total_stall_ms += store.serve(layer, &pairs, &covered, vnow - slack, vnow);
+        }
+        assert_eq!(total_stall_ms, 0.0, "slack-covered prefetch must never stall");
+        assert_eq!(store.stats.prefetch_misses, 0);
+    });
+}
+
+#[test]
+fn prop_stall_monotone_nonincreasing_in_fetch_bandwidth() {
+    // Residency and eviction decisions depend only on the fetch call
+    // sequence, never on the clock — so speeding up DRAM/NVMe transfers
+    // on the identical scripted serve sequence can only shrink stalls.
+    use moeless::config::{ModelSpec, MoelessParams};
+    use moeless::serverless::offload::ExpertStore;
+    property(100, |g| {
+        let n_gpus = g.usize_in(1, 4);
+        let mut slow = ClusterSpec::a6000_x8().with_n_gpus(n_gpus);
+        let mut fast = slow.clone();
+        for (s, f) in slow.gpus.iter_mut().zip(fast.gpus.iter_mut()) {
+            s.nvme_gbps = g.f64_in(0.5, 10.0);
+            s.dram_gbps = g.f64_in(1.0, 50.0);
+            f.nvme_gbps = s.nvme_gbps * g.f64_in(1.0, 8.0);
+            f.dram_gbps = s.dram_gbps * g.f64_in(1.0, 8.0);
+        }
+        let model = ModelSpec::mixtral_8x7b();
+        let params = MoelessParams {
+            expert_hbm_frac: g.f64_in(0.05, 0.9),
+            prefetch_lookahead: 2,
+            demand_fetch: false,
+            ..Default::default()
+        };
+        // Script the whole sequence first so both stores replay the
+        // identical calls (the generator is consulted only once).
+        let steps = g.usize_in(1, 40);
+        let mut script = Vec::with_capacity(steps);
+        let mut vnow = 0.0f64;
+        for _ in 0..steps {
+            vnow += g.f64_in(0.01, 0.5);
+            let layer = g.usize_in(0, model.n_layers - 1);
+            let mut pairs: Vec<(usize, usize)> = Vec::new();
+            let mut covered = Vec::new();
+            for _ in 0..g.usize_in(1, 6) {
+                let pr = (g.usize_in(0, model.n_experts - 1), g.usize_in(0, n_gpus - 1));
+                if !pairs.contains(&pr) {
+                    pairs.push(pr);
+                    covered.push(g.usize_in(0, 1) == 1);
+                }
+            }
+            let issue = vnow - g.f64_in(0.0, 2.0);
+            script.push((layer, pairs, covered, issue, vnow));
+        }
+        let mut replay = |spec: &ClusterSpec| -> f64 {
+            let mut store = ExpertStore::new(&model, spec, &params);
+            let mut total = 0.0;
+            for (layer, pairs, covered, issue, at) in &script {
+                total += store.serve(*layer, pairs, covered, *issue, *at);
+            }
+            total
+        };
+        let slow_stall = replay(&slow);
+        let fast_stall = replay(&fast);
+        assert!(
+            fast_stall <= slow_stall + 1e-9,
+            "faster tiers must not stall more: fast {fast_stall:.3}ms vs slow {slow_stall:.3}ms"
+        );
+    });
+}

@@ -84,8 +84,9 @@ pub const RULES: &[RuleInfo] = &[
         id: "P1",
         title: "no Vec::remove/swap_remove/insert(0, _) on batcher/placer hot paths",
         scope: "rust/src/router/mod.rs, rust/src/router/arena.rs, rust/src/placer/, \
-                rust/src/sim/event.rs, rust/src/sim/multimodel.rs and \
-                rust/src/serverless/loading.rs (router/reference.rs and \
+                rust/src/sim/event.rs, rust/src/sim/multimodel.rs, \
+                rust/src/serverless/loading.rs and \
+                rust/src/serverless/offload.rs (router/reference.rs and \
                 router/pr4.rs are excluded by design: they are the frozen baseline \
                 cores that golden equivalence measures against; the frozen lockstep \
                 driver in sim/mod.rs is excluded for the same reason)",
@@ -144,7 +145,8 @@ pub fn classify(rel_path: &str, comments: &[Comment]) -> FileClass {
             || tail.starts_with("placer/")
             || tail == "sim/event.rs"
             || tail == "sim/multimodel.rs"
-            || tail == "serverless/loading.rs";
+            || tail == "serverless/loading.rs"
+            || tail == "serverless/offload.rs";
         class.library = tail != "main.rs";
         if tail == "router/reference.rs" {
             // Frozen pre-PR4 core: held to the determinism rules (golden

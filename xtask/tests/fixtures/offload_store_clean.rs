@@ -1,0 +1,40 @@
+// pallas-lint: treat-as(hot-path,sim-core)
+//! Negative fixture for the expert-offloading store scope
+//! (`serverless/offload.rs`): the engine shape that module uses — a
+//! `BTreeMap` LRU keyed by `(stamp, shard)` with keyed remove/insert
+//! (D1/P1-safe), per-device transfer engines as plain busy-until floats
+//! advanced from the sim clock (D2-safe), and back-of-queue push/pop for
+//! scratch (P1-safe).
+
+use std::collections::BTreeMap;
+
+pub struct ShardCache {
+    pub by_stamp: BTreeMap<(u64, u32), f64>,
+    pub stamp_of: BTreeMap<u32, u64>,
+}
+
+/// Keyed LRU touch: remove by key, reinsert at the new stamp — no
+/// iteration order consumed, no positional shift.
+pub fn touch(cache: &mut ShardCache, shard: u32, stamp: u64) {
+    if let Some(old) = cache.stamp_of.insert(shard, stamp) {
+        if let Some(gb) = cache.by_stamp.remove(&(old, shard)) {
+            cache.by_stamp.insert((stamp, shard), gb);
+        }
+    }
+}
+
+/// Deterministic transfer serialization: the engine's busy-until instant
+/// comes from the sim clock the caller passes in.
+pub fn schedule_transfer(engine_free_s: &mut f64, start_s: f64, transfer_s: f64) -> f64 {
+    let begin = if start_s > *engine_free_s { start_s } else { *engine_free_s };
+    let done = begin + transfer_s;
+    *engine_free_s = done;
+    done
+}
+
+/// Scratch pins drain from the back: push/pop, never a positional remove.
+pub fn unpin_all(pinned: &mut Vec<u32>, unpin: &mut impl FnMut(u32)) {
+    while let Some(k) = pinned.pop() {
+        unpin(k);
+    }
+}

@@ -1,0 +1,34 @@
+// pallas-lint: treat-as(hot-path,sim-core)
+//! Positive fixture for the expert-offloading store scope
+//! (`serverless/offload.rs`): a residency cache that (a) picks its
+//! eviction victim by iterating a `HashMap` (D1 — the victim depends on
+//! randomized hash order), (b) stamps transfer-engine recency off the
+//! wall clock (D2 — two identical runs diverge), and (c) drains its
+//! pending-fetch queue with positional `Vec` surgery (P1 — O(n) shifts
+//! on the per-layer serve path).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct ShardCache {
+    pub resident: HashMap<u32, f64>,
+}
+
+/// D1: the eviction victim is whatever the hash iterator yields first.
+pub fn evict_any(cache: &mut ShardCache) -> Option<u32> {
+    let victim = cache.resident.iter().next().map(|(k, _)| *k);
+    if let Some(k) = victim {
+        cache.resident.remove(&k);
+    }
+    victim
+}
+
+/// D2: transfer recency stamped from the host clock, not the sim clock.
+pub fn engine_stamp() -> Instant {
+    Instant::now()
+}
+
+/// P1: FIFO via positional surgery on the pending-fetch queue.
+pub fn next_fetch(pending: &mut Vec<u32>) -> u32 {
+    pending.remove(0)
+}

@@ -145,13 +145,48 @@ fn lint_scope_covers_the_multimodel_modules() {
     assert!(!catalog.hot_path, "the catalog is generation-time, not a hot path");
     let manager = xtask::rules::classify("rust/src/serverless/mod.rs", &[]);
     assert!(manager.sim_core, "serverless/ joined the sim-core scope");
-    assert!(!manager.hot_path, "only loading.rs carries the hot-path bar");
+    assert!(!manager.hot_path, "only loading.rs and offload.rs carry the hot-path bar");
     // And the real files pass the bar they are now held to.
     for rel in ["../rust/src/sim/multimodel.rs", "../rust/src/serverless/loading.rs"] {
         let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel);
         let report = xtask::lint_paths(&[path]).expect("multimodel module should lint");
         assert!(report.clean(), "{rel} must stay lint-clean: {:?}", report.violations);
     }
+}
+
+#[test]
+fn offload_scope_flags_the_store_antipatterns() {
+    // The PR-10 scope extension: hash-order eviction (D1), wall-clock
+    // transfer stamps (D2) and positional fetch-queue surgery (P1) in one
+    // residency-cache fixture shaped like the expert store.
+    let report = lint_fixture("offload_store_violation.rs");
+    let ids = rule_ids(&report);
+    assert!(ids.contains(&"D1"), "hash-order eviction must flag D1: {:?}", report.violations);
+    assert!(ids.contains(&"D2"), "wall-clock stamp must flag D2: {:?}", report.violations);
+    assert!(ids.contains(&"P1"), "positional fetch queue must flag P1: {:?}", report.violations);
+}
+
+#[test]
+fn offload_scope_permits_the_engine_shape() {
+    // The shape serverless/offload.rs actually uses: BTreeMap LRU keyed
+    // by (stamp, shard), busy-until floats advanced from the sim clock,
+    // back-of-queue push/pop for the pin scratch — clean under the same
+    // directives.
+    let report = lint_fixture("offload_store_clean.rs");
+    assert!(report.clean(), "unexpected: {:?}", report.violations);
+}
+
+#[test]
+fn lint_scope_covers_the_offload_store() {
+    // Path classification, no directives: the expert store's per-layer
+    // serve path is hot-path + sim-core, like loading.rs before it.
+    let class = xtask::rules::classify("rust/src/serverless/offload.rs", &[]);
+    assert!(class.hot_path, "offload.rs must be under P1");
+    assert!(class.sim_core, "offload.rs must be under D1/D2");
+    // And the real file passes the bar it is now held to.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../rust/src/serverless/offload.rs");
+    let report = xtask::lint_paths(&[path]).expect("offload module should lint");
+    assert!(report.clean(), "offload.rs must stay lint-clean: {:?}", report.violations);
 }
 
 #[test]
